@@ -1,0 +1,59 @@
+//! Cost-model explorer (paper §3.5 + Fig 8 intuition): measure SQUASH's
+//! per-query cost live on a small deployment, then extrapolate daily
+//! cost across query volumes against System-X's read-unit tariff and
+//! provisioned servers, printing the crossover points.
+//!
+//!     cargo run --release --example cost_explorer -- [--profile test]
+
+use squash::bench::{measure_squash, Env, EnvOptions};
+use squash::cost::pricing::Pricing;
+use squash::cost::{server_daily_cost, system_x_query_cost};
+use squash::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap();
+    let opts = EnvOptions {
+        profile: Box::leak(args.get_or("profile", "test").to_string().into_boxed_str()),
+        n: args.get_usize("n", 3000).unwrap(),
+        n_queries: 100,
+        time_scale: 0.0, // cost accounting is exact without sleeping
+        ..Default::default()
+    };
+    let env = Env::setup(&opts);
+    // warm run for steady-state per-query cost (DRE active)
+    let _ = measure_squash(&env, "cold", 0);
+    let warm = measure_squash(&env, "warm", 0);
+    let pricing = Pricing::default();
+    let sx_per_q = system_x_query_cost(&pricing, env.ds.d(), 10);
+    let small = server_daily_cost(pricing.c7i_4xlarge_hourly, 2);
+    let large = server_daily_cost(pricing.c7i_16xlarge_hourly, 2);
+
+    println!("steady-state per-query cost (profile {}, d={}):", env.profile.name, env.ds.d());
+    println!("  squash   ${:.9}   (breakdown: {})", warm.cost_per_query, warm.cost);
+    println!("  system-x ${:.9}   ({:.1}x squash)", sx_per_q, sx_per_q / warm.cost_per_query);
+
+    println!("\ndaily cost by volume (uniform arrivals over 24h):");
+    println!(
+        "{:>12} {:>12} {:>12} {:>12} {:>12}",
+        "queries/day", "squash", "system-x", "2x c7i.4x", "2x c7i.16x"
+    );
+    for exp in 2..=8 {
+        let v = 10f64.powi(exp);
+        println!(
+            "{:>12.0} {:>12.2} {:>12.2} {:>12.2} {:>12.2}",
+            v,
+            warm.cost_per_query * v,
+            sx_per_q * v,
+            small,
+            large
+        );
+    }
+    let cross_small = small / warm.cost_per_query;
+    let cross_large = large / warm.cost_per_query;
+    println!(
+        "\nserverless is cheaper than the small server below {:.2}M queries/day, \
+         than the large server below {:.2}M (paper reports ~1M / ~3.5M on SIFT1M)",
+        cross_small / 1e6,
+        cross_large / 1e6
+    );
+}

@@ -1,0 +1,66 @@
+//! Rich hybrid filtering demo (paper §2.3): every operator, multiple
+//! attributes simultaneously, mixed numeric/categorical kinds, DNF
+//! disjunctions, and varying selectivity — all evaluated exactly against
+//! the ground-truth filter.
+//!
+//!     cargo run --release --example hybrid_filtering
+
+use std::sync::Arc;
+
+use squash::attrs::mask::naive_mask;
+use squash::attrs::predicate::parse_predicate;
+use squash::coordinator::{BuildOptions, SquashConfig, SquashSystem};
+use squash::data::ground_truth::{exact_top_k, recall_at_k};
+use squash::data::profiles::by_name;
+use squash::data::synthetic::generate;
+use squash::data::workload::Query;
+use squash::runtime::backend::NativeBackend;
+
+fn main() {
+    let profile = by_name("test").unwrap();
+    let ds = generate(profile, 8_000, 21);
+    let sys = SquashSystem::build_default(
+        &ds,
+        &BuildOptions::for_profile(profile),
+        SquashConfig::for_profile(profile),
+        Arc::new(NativeBackend),
+    );
+
+    // a tour of predicate shapes (a0..a2 numeric 0..=99, a3 categorical 0..=15)
+    let cases = [
+        ("equality", "a0 = 42"),
+        ("range", "a1 >= 80"),
+        ("between", "a2 between 10 30"),
+        ("categorical", "a3 = 7"),
+        ("conjunction x4 (~8% joint)", "a0<53 & a1<53 & a2 between 24 76 & a3 between 0 7"),
+        ("highly selective", "a0<5 & a1<5 & a2<5"),
+        ("disjunction (DNF)", "a0<10 | a0>90 & a1<50"),
+        ("mixed ops", "a0<=20 & a1>40 & a2 between 0 99 & a3 between 2 9"),
+    ];
+
+    println!(
+        "{:<30} {:>10} {:>9} {:>9} {:>8}",
+        "predicate", "passing", "sel(%)", "returned", "recall"
+    );
+    for (name, ptxt) in cases {
+        let predicate = parse_predicate(ptxt, ds.n_attrs()).unwrap();
+        let passing = naive_mask(&ds.attributes, &predicate).count_ones();
+        let q = Query { vector: ds.vectors.row(123).to_vec(), predicate, k: 10 };
+        let out = sys.run_batch(std::slice::from_ref(&q));
+        let truth = exact_top_k(&ds, &q);
+        let recall = recall_at_k(&truth, &out.results[0], 10);
+        // every returned id must satisfy the raw predicate
+        for &(id, _) in &out.results[0] {
+            assert!(q.predicate.eval(&ds.attributes[id as usize]), "filter violation!");
+        }
+        println!(
+            "{:<30} {:>10} {:>9.2} {:>9} {:>8.2}",
+            name,
+            passing,
+            100.0 * passing as f64 / ds.n() as f64,
+            out.results[0].len(),
+            recall
+        );
+    }
+    println!("\nall returned results satisfied their predicates exactly.");
+}

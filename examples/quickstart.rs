@@ -1,0 +1,67 @@
+//! Quickstart: build a SQUASH deployment over a small synthetic dataset
+//! and run a handful of hybrid queries.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! This is the 60-second tour: generate attributed vectors, build the
+//! OSQ indexes + partition layout, "deploy" to the simulated FaaS
+//! platform, and issue filtered top-k queries through the full
+//! CO → QA tree → QP pipeline.
+
+use std::sync::Arc;
+
+use squash::coordinator::{BuildOptions, SquashConfig, SquashSystem};
+use squash::data::ground_truth::exact_top_k;
+use squash::data::profiles::by_name;
+use squash::data::synthetic::generate;
+use squash::data::workload::Query;
+use squash::runtime::backend::NativeBackend;
+
+fn main() {
+    // 1. a small attributed dataset (test profile: d=16, A=4 attributes)
+    let profile = by_name("test").unwrap();
+    let ds = generate(profile, 5_000, 7);
+    println!("dataset: n={} d={} attrs={}", ds.n(), ds.d(), ds.n_attrs());
+
+    // 2. build + deploy (indexes land in the simulated object store)
+    let sys = SquashSystem::build_default(
+        &ds,
+        &BuildOptions::for_profile(profile),
+        SquashConfig::for_profile(profile),
+        Arc::new(NativeBackend),
+    );
+    println!(
+        "deployed: {} partitions, T = {:.3}, tree N_QA = {}",
+        sys.ctx.n_partitions,
+        sys.ctx.t,
+        sys.ctx.cfg.tree.n_qa()
+    );
+
+    // 3. hybrid queries: vector similarity + attribute predicates
+    let predicate = squash::attrs::predicate::parse_predicate(
+        "a0 between 20 70 & a1 < 60 & a3 >= 4",
+        ds.n_attrs(),
+    )
+    .unwrap();
+    let queries: Vec<Query> = (0..5)
+        .map(|i| Query {
+            vector: ds.vectors.row(i * 997).to_vec(),
+            predicate: predicate.clone(),
+            k: 5,
+        })
+        .collect();
+
+    let out = sys.run_batch(&queries);
+    for (qi, (q, res)) in queries.iter().zip(&out.results).enumerate() {
+        let truth = exact_top_k(&ds, q);
+        let gt: std::collections::HashSet<u64> = truth.iter().map(|&(i, _)| i).collect();
+        println!("\nquery {qi}: top-{} (✓ = true nearest neighbor)", q.k);
+        for (id, dist) in res {
+            let mark = if gt.contains(id) { "✓" } else { " " };
+            let attrs: Vec<String> =
+                ds.attributes[*id as usize].iter().map(|a| format!("{:.0}", a.as_f32())).collect();
+            println!("  {mark} id={id:<6} dist²={dist:<10.3} attrs=[{}]", attrs.join(","));
+        }
+    }
+    println!("\nbatch wall time: {:.1} ms", out.wall_s * 1e3);
+}

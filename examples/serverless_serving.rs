@@ -1,0 +1,71 @@
+//! END-TO-END DRIVER (the EXPERIMENTS.md §E2E run): load a realistic
+//! dataset profile, deploy the full serverless system, and serve a
+//! 1000-query batched hybrid workload, reporting latency, throughput,
+//! cost and recall — all three layers composing (Rust coordinator →
+//! PJRT-executed XLA artifacts from the JAX/Pallas compile path when
+//! `--backend xla` and artifacts exist).
+//!
+//!     cargo run --release --example serverless_serving -- \
+//!         [--profile sift] [--n 100000] [--queries 1000] [--n-qa 84] \
+//!         [--backend auto|native|xla] [--time-scale 1.0] [--gt 200]
+
+use squash::bench::{measure_squash, Env, EnvOptions};
+use squash::coordinator::tree::TreeConfig;
+use squash::data::ground_truth::{exact_batch, mean_recall};
+use squash::util::cli::Args;
+use squash::util::timer::Stopwatch;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap();
+    let opts = EnvOptions {
+        profile: Box::leak(args.get_or("profile", "sift").to_string().into_boxed_str()),
+        n: args.get_usize("n", 0).unwrap(),
+        n_queries: args.get_usize("queries", 1000).unwrap(),
+        selectivity: 0.08,
+        time_scale: args.get_f64("time-scale", 1.0).unwrap(),
+        dre: true,
+        backend: args.get_or("backend", "auto").to_string(),
+        seed: args.get_u64("seed", 42).unwrap(),
+    };
+    let n_qa = args.get_usize("n-qa", 84).unwrap();
+    let gt_queries = args.get_usize("gt", 200).unwrap();
+
+    println!("=== SQUASH end-to-end serving run ===");
+    let sw = Stopwatch::new();
+    let mut env = Env::setup(&opts);
+    env.with_config(|c| c.tree = TreeConfig::for_n_qa(n_qa).expect("valid n-qa"));
+    println!(
+        "built {}: n={} d={} partitions={} T={:.3} backend={} ({:.1}s)",
+        env.profile.name,
+        env.ds.n(),
+        env.ds.d(),
+        env.sys.ctx.n_partitions,
+        env.sys.ctx.t,
+        env.sys.ctx.backend.name(),
+        sw.secs()
+    );
+
+    // cold batch (fleet empty), then warm batch (containers + DRE)
+    let cold = measure_squash(&env, "cold batch", 0);
+    let warm = measure_squash(&env, "warm batch", 0);
+    println!("\n{}", squash::bench::RunStats::header());
+    println!("{cold}");
+    println!("{warm}");
+    println!("\ncold cost: {}", cold.cost);
+    println!("warm cost: {}", warm.cost);
+
+    // recall on a ground-truthed subset (brute force is O(n·d) per query)
+    let subset: Vec<_> = env.queries.iter().take(gt_queries).cloned().collect();
+    let truth = exact_batch(&env.ds, &subset, squash::util::threadpool::num_cpus());
+    let out = env.sys.run_batch(&subset);
+    let recall = mean_recall(&truth, &out.results, 10);
+    println!("\nrecall@10 over {} ground-truthed queries: {:.4}", subset.len(), recall);
+    println!(
+        "invocations: CO+QA+QP = {}  (cold starts {})  S3 GETs {}  EFS bytes {}",
+        warm.cost.invocations + cold.cost.invocations,
+        warm.cost.cold_starts + cold.cost.cold_starts,
+        warm.cost.s3_gets + cold.cost.s3_gets,
+        warm.cost.efs_bytes + cold.cost.efs_bytes,
+    );
+    println!("total wall: {:.1}s", sw.secs());
+}

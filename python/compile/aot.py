@@ -1,0 +1,154 @@
+"""AOT lowering: JAX/Pallas entry points -> HLO text artifacts + manifest.
+
+The interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids, which the xla crate's
+bundled xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+One artifact is emitted per (entry point, dataset-dimensionality) pair —
+HLO shapes are static, so the Rust runtime selects the artifact matching
+its dataset profile from ``manifest.json`` and pads candidate chunks to
+CHUNK rows.
+
+Incremental: a content hash of the compile-path sources is stored in the
+manifest; if it matches and all artifact files exist, this script is a
+no-op (``make artifacts`` stays cheap).
+
+Usage: cd python && python -m compile.aot [--out-dir ../artifacts] [--force]
+       [--dims 16,128]   # restrict configs (tests use the tiny d=16 one)
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (name, d) dataset profiles; mirrors rust/src/data/profiles.
+# d=16 is the tiny CI/test profile.
+DIM_CONFIGS = [
+    ("test", 16),
+    ("deep", 96),
+    ("sift", 128),
+    ("gist", 960),
+]
+
+CHUNK = 1024  # candidate rows per kernel call (multiple of pallas BLK=256)
+M1 = 257  # LUT rows: max 256 quantization cells + 1 (paper's M+1)
+M2 = M1 + 1  # boundary rows: cell k spans [B[k], B[k+1]]
+
+
+def words(d: int) -> int:
+    return (d + 31) // 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entry_specs(d: int):
+    """Static input ShapeDtypeStructs per entry point for dimensionality d."""
+    w = words(d)
+    f32, i32, u32 = jnp.float32, jnp.int32, jnp.uint32
+    s = jax.ShapeDtypeStruct
+    return {
+        "hamming": (model.hamming_stage, [s((1, w), u32), s((CHUNK, w), u32)]),
+        "lut": (model.lut_build, [s((d,), f32), s((M2, d), f32), s((d,), i32)]),
+        "lb": (model.lb_stage, [s((M1, d), f32), s((CHUNK, d), i32)]),
+        "scan": (
+            model.qp_scan,
+            [s((1, w), u32), s((CHUNK, w), u32), s((M1, d), f32), s((CHUNK, d), i32)],
+        ),
+    }
+
+
+def source_hash() -> str:
+    """Hash of every compile-path source file (skip logic)."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _dirnames, filenames in sorted(os.walk(root)):
+        if "__pycache__" in dirpath:
+            continue
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                with open(os.path.join(dirpath, fn), "rb") as f:
+                    h.update(fn.encode())
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def build(out_dir: str, dims: list[int] | None = None, force: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    src_hash = source_hash()
+    configs = [(n, d) for (n, d) in DIM_CONFIGS if dims is None or d in dims]
+
+    if not force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        have = {(e["entry"], e["d"]) for e in old.get("entries", [])}
+        want = {(e, d) for (_n, d) in configs for e in entry_specs(d)}
+        files_ok = all(
+            os.path.exists(os.path.join(out_dir, e["path"])) for e in old.get("entries", [])
+        )
+        if old.get("source_hash") == src_hash and want <= have and files_ok:
+            print(f"artifacts up to date ({len(old['entries'])} entries); skipping")
+            return old
+
+    entries = []
+    for name, d in configs:
+        for entry, (fn, specs) in entry_specs(d).items():
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = f"{entry}_d{d}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entries.append(
+                {
+                    "entry": entry,
+                    "profile": name,
+                    "d": d,
+                    "w": words(d),
+                    "chunk": CHUNK,
+                    "m1": M1,
+                    "m2": M2,
+                    "path": fname,
+                    "bytes": len(text),
+                }
+            )
+            print(f"lowered {entry:8s} d={d:4d} -> {fname} ({len(text)} chars)")
+
+    manifest = {"source_hash": src_hash, "chunk": CHUNK, "m1": M1, "m2": M2, "entries": entries}
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path} ({len(entries)} entries)")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--out", default=None, help="compat: path whose dirname is the out dir")
+    p.add_argument("--dims", default=None, help="comma-separated dims to lower (default: all)")
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    dims = [int(x) for x in args.dims.split(",")] if args.dims else None
+    build(out_dir, dims=dims, force=args.force)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

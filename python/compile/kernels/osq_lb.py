@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: ADC lookup-table lower-bound accumulation (paper §2.4.4).
+
+The paper replaces per-candidate boundary distance computations with a
+single per-query lookup table L of shape (M+1, d): L[k, j] is the squared
+distance from q[j] to the nearest edge of quantization cell k in dimension
+j. The fine-grained stage then reduces to a gather + row-sum over the
+quantized codes of the surviving candidates ("advanced indexing" in the
+paper's NumPy implementation).
+
+TPU adaptation: the LUT (<= 257 x 960 x 4 B ~ 1 MB) is pinned in VMEM for
+the whole grid; candidate code tiles of BLK rows stream through. The
+gather is VPU work (`take_along_axis` along the cell axis), with the f32
+row accumulation kept in-register. BlockSpec expresses the HBM<->VMEM
+schedule the CPU implementation got implicitly from its cache hierarchy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK = 256
+
+
+def _lb_kernel(lut_ref, codes_ref, out_ref):
+    """One block: out[i] = sum_j lut[codes[i, j], j]."""
+    lut = lut_ref[...]  # (M1, d) f32, VMEM-resident
+    codes = codes_ref[...]  # (BLK, d) i32
+    gathered = jnp.take_along_axis(lut, codes, axis=0)  # (BLK, d)
+    out_ref[...] = jnp.sum(gathered, axis=1, dtype=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lb_distances(lut: jax.Array, codes: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Squared lower-bound distances for CHUNK candidates via the ADC LUT.
+
+    lut: (M1, d) float32; codes: (CHUNK, d) int32 -> (CHUNK,) float32.
+    CHUNK must be a multiple of BLK (the Rust runtime pads candidates; the
+    pad rows carry code 0 and are discarded on the Rust side).
+    """
+    m1, d = lut.shape
+    chunk, d2 = codes.shape
+    if d != d2:
+        raise ValueError(f"lut d={d} != codes d={d2}")
+    if chunk % BLK != 0:
+        raise ValueError(f"CHUNK={chunk} must be a multiple of BLK={BLK}")
+    grid = (chunk // BLK,)
+    return pl.pallas_call(
+        _lb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m1, d), lambda i: (0, 0)),  # LUT pinned across blocks
+            pl.BlockSpec((BLK, d), lambda i: (i, 0)),  # stream code tiles
+        ],
+        out_specs=pl.BlockSpec((BLK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((chunk,), jnp.float32),
+        interpret=interpret,
+    )(lut, codes)

@@ -1,0 +1,94 @@
+"""Pure-jnp / numpy reference oracles for the SQUASH L1 kernels.
+
+These are the correctness ground truth for the Pallas kernels in this
+package. They intentionally use the most direct formulation possible —
+no tiling, no packing tricks — so a mismatch always indicts the kernel.
+
+Shapes / conventions (shared with the Rust runtime):
+  d       vector dimensionality
+  W       number of 32-bit words of a packed binary code, ceil(d / 32)
+  CHUNK   number of candidate rows processed per kernel call
+  M1      LUT rows = max quantization cells + 1 (paper's (M+1, d) table)
+  M2      boundary rows = M1 + 1 (cell k spans [B[k], B[k+1]])
+
+Bit packing convention: dimension j lives in word j // 32, bit j % 32
+(LSB first). Padding bits (j >= d) are zero in BOTH query and codes so
+they never contribute to Hamming distance.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def pack_bits_u32(bits: np.ndarray) -> np.ndarray:
+    """Pack a (n, d) 0/1 array into (n, ceil(d/32)) uint32 words, LSB first."""
+    bits = np.asarray(bits, dtype=np.uint32)
+    n, d = bits.shape
+    w = (d + 31) // 32
+    padded = np.zeros((n, w * 32), dtype=np.uint32)
+    padded[:, :d] = bits
+    words = padded.reshape(n, w, 32)
+    shifts = np.arange(32, dtype=np.uint32)
+    return (words << shifts).sum(axis=2, dtype=np.uint32)
+
+
+def unpack_bits_u32(words: np.ndarray, d: int) -> np.ndarray:
+    """Inverse of pack_bits_u32: (n, W) uint32 -> (n, d) 0/1 uint8."""
+    words = np.asarray(words, dtype=np.uint32)
+    n, w = words.shape
+    shifts = np.arange(32, dtype=np.uint32)
+    bits = (words[:, :, None] >> shifts) & np.uint32(1)
+    return bits.reshape(n, w * 32)[:, :d].astype(np.uint8)
+
+
+def hamming_ref(q_words: np.ndarray, code_words: np.ndarray) -> np.ndarray:
+    """Hamming distance between one packed query and CHUNK packed codes.
+
+    q_words: (W,) uint32; code_words: (CHUNK, W) uint32 -> (CHUNK,) uint32.
+    """
+    x = np.bitwise_xor(code_words, q_words[None, :])
+    # vectorized popcount via the 8-bit view
+    byte_view = x.view(np.uint8)
+    return np.unpackbits(byte_view, axis=1).sum(axis=1).astype(np.uint32)
+
+
+def lut_build_ref(q: np.ndarray, boundaries: np.ndarray, cells: np.ndarray) -> np.ndarray:
+    """ADC lookup table L of squared query->cell-edge distances (paper §2.4.4).
+
+    q: (d,) float32 — the un-quantized query.
+    boundaries: (M2, d) float32 — boundaries[k, j] is the left edge of cell
+      k in dimension j; rows beyond cells[j] replicate the last real
+      boundary (the Rust side pads identically).
+    cells: (d,) int32 — number of quantization cells C[j] per dimension.
+
+    Returns L: (M2 - 1, d) float32 where L[k, j] is the squared distance
+    from q[j] to the nearest edge of cell k (0 when q[j] falls inside
+    cell k). Rows k >= cells[j] are zero (codes never reference them).
+    """
+    m2, d = boundaries.shape
+    m1 = m2 - 1
+    left = boundaries[:-1, :]  # (M1, d) left edge of cell k
+    right = boundaries[1:, :]  # (M1, d) right edge of cell k
+    qe = q[None, :]
+    dist = np.where(qe < left, left - qe, np.where(qe > right, qe - right, 0.0))
+    valid = np.arange(m1)[:, None] < cells[None, :]
+    return np.where(valid, (dist * dist), 0.0).astype(np.float32)
+
+
+def lb_ref(lut: np.ndarray, codes: np.ndarray) -> np.ndarray:
+    """Row-wise ADC LUT accumulation: squared lower-bound distances.
+
+    lut: (M1, d) float32; codes: (CHUNK, d) int32 -> (CHUNK,) float32
+    out[i] = sum_j lut[codes[i, j], j].
+    """
+    chunk, d = codes.shape
+    return lut[codes, np.arange(d)[None, :]].sum(axis=1).astype(np.float32)
+
+
+def lb_bruteforce_ref(
+    q: np.ndarray, boundaries: np.ndarray, cells: np.ndarray, codes: np.ndarray
+) -> np.ndarray:
+    """End-to-end LB distance oracle that never builds a LUT (for L2 tests)."""
+    lut = lut_build_ref(q, boundaries, cells)
+    return lb_ref(lut, codes)

@@ -1,0 +1,71 @@
+"""L2: the QueryProcessor compute graph, authored in JAX.
+
+This module defines the jittable entry points that the Rust coordinator
+executes per partition on the request path (after AOT lowering by
+``aot.py``). Each entry point composes the L1 Pallas kernels with the
+surrounding pure-jnp glue so everything lowers into a single HLO module
+per entry point.
+
+Entry points (all shapes static; the Rust runtime pads to CHUNK):
+
+  hamming_stage(q_words, code_words)        -> (u32[CHUNK],)
+  lut_build(q, boundaries, cells)           -> (f32[M1, d],)
+  lb_stage(lut, codes)                      -> (f32[CHUNK],)
+  qp_scan(q_words, code_words, lut, codes)  -> (u32[CHUNK], f32[CHUNK])
+
+``qp_scan`` is the fused variant used when the attribute filter is not
+selective enough to make two-phase pruning worthwhile (ablation in
+EXPERIMENTS.md); it evaluates both stages over the same candidate set in
+one PJRT call.
+
+Python here is build-time only: lowered once, never on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import hamming as hamming_k
+from compile.kernels import osq_lb as lb_k
+
+
+def hamming_stage(q_words: jax.Array, code_words: jax.Array):
+    """Low-bit OSQ pruning stage (paper §2.4.3)."""
+    return (hamming_k.hamming(q_words, code_words),)
+
+
+def lut_build(q: jax.Array, boundaries: jax.Array, cells: jax.Array):
+    """Build the per-query ADC lookup table L (paper §2.4.4).
+
+    q: (d,) f32 un-quantized query (post-KLT, partition frame).
+    boundaries: (M2, d) f32 padded boundary matrix; boundaries[k, j] is the
+      left edge of cell k in dim j, rows >= cells[j] replicate the last
+      real boundary.
+    cells: (d,) i32 cell counts C[j].
+
+    Returns L: (M2-1, d) f32 with L[k, j] = squared distance from q[j] to
+    the nearest edge of cell k (0 inside the cell; 0 for invalid rows).
+    Building L needs only sum(C[j]) - 1 distance evaluations (paper),
+    realized here as one vectorized pass.
+    """
+    m2, d = boundaries.shape
+    m1 = m2 - 1
+    left = boundaries[:-1, :]
+    right = boundaries[1:, :]
+    qe = q[None, :]
+    dist = jnp.where(qe < left, left - qe, jnp.where(qe > right, qe - right, 0.0))
+    valid = jnp.arange(m1)[:, None] < cells[None, :]
+    return (jnp.where(valid, dist * dist, 0.0).astype(jnp.float32),)
+
+
+def lb_stage(lut: jax.Array, codes: jax.Array):
+    """Fine-grained LB distance stage over unpruned candidates."""
+    return (lb_k.lb_distances(lut, codes),)
+
+
+def qp_scan(q_words: jax.Array, code_words: jax.Array, lut: jax.Array, codes: jax.Array):
+    """Fused Hamming + LB scan over one candidate chunk (single PJRT call)."""
+    h = hamming_k.hamming(q_words, code_words)
+    lb = lb_k.lb_distances(lut, codes)
+    return (h, lb)

@@ -1,0 +1,60 @@
+"""AOT pipeline tests: artifact emission, manifest integrity, skip logic.
+
+Only the tiny d=16 profile is lowered here to keep the suite fast; the
+full profile set is exercised by `make artifacts`.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from compile import aot
+
+
+def test_words():
+    assert aot.words(1) == 1
+    assert aot.words(32) == 1
+    assert aot.words(33) == 2
+    assert aot.words(128) == 4
+    assert aot.words(960) == 30
+
+
+def test_build_tiny_and_skip(tmp_path):
+    out = str(tmp_path / "artifacts")
+    manifest = aot.build(out, dims=[16])
+    assert len(manifest["entries"]) == 4  # hamming, lut, lb, scan
+    names = {e["entry"] for e in manifest["entries"]}
+    assert names == {"hamming", "lut", "lb", "scan"}
+    for e in manifest["entries"]:
+        p = os.path.join(out, e["path"])
+        assert os.path.exists(p)
+        text = open(p).read()
+        assert text.startswith("HloModule"), text[:80]
+        assert e["bytes"] == len(text)
+        assert e["d"] == 16 and e["w"] == 1 and e["chunk"] == aot.CHUNK
+
+    # manifest on disk round-trips
+    with open(os.path.join(out, "manifest.json")) as f:
+        disk = json.load(f)
+    assert disk["source_hash"] == manifest["source_hash"]
+
+    # second build with unchanged sources is a no-op (same mtimes)
+    mtimes = {e["path"]: os.path.getmtime(os.path.join(out, e["path"])) for e in manifest["entries"]}
+    again = aot.build(out, dims=[16])
+    assert {e["path"] for e in again["entries"]} == set(mtimes)
+    for p, t in mtimes.items():
+        assert os.path.getmtime(os.path.join(out, p)) == t
+
+    # --force re-lowers
+    forced = aot.build(out, dims=[16], force=True)
+    assert len(forced["entries"]) == 4
+
+
+def test_hlo_text_entry_parameters(tmp_path):
+    """The lowered hamming module must expose the expected parameter shapes."""
+    out = str(tmp_path / "a")
+    aot.build(out, dims=[16])
+    text = open(os.path.join(out, "hamming_d16.hlo.txt")).read()
+    assert "u32[1,1]" in text  # query words (d=16 -> W=1)
+    assert "u32[1024,1]" in text  # code words at CHUNK=1024

@@ -1,0 +1,94 @@
+"""L2 model-graph tests: entry-point composition, shapes, and the LUT math."""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.hamming import BLK
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+@given(SEEDS, st.sampled_from([4, 16, 96]))
+@settings(max_examples=10, deadline=None)
+def test_lut_build_matches_ref(seed, d):
+    g = rng(seed)
+    m1 = 17
+    from tests.test_kernels import random_quantizer
+
+    boundaries, cells = random_quantizer(g, d, m1)
+    q = g.normal(size=d).astype(np.float32)
+    (lut,) = model.lut_build(jnp.asarray(q), jnp.asarray(boundaries), jnp.asarray(cells))
+    want = ref.lut_build_ref(q, boundaries, cells)
+    np.testing.assert_allclose(np.asarray(lut), want, rtol=1e-6, atol=1e-6)
+
+
+def test_lut_rows_beyond_cells_are_zero():
+    g = rng(1)
+    from tests.test_kernels import random_quantizer
+
+    d, m1 = 6, 9
+    boundaries, cells = random_quantizer(g, d, m1)
+    q = g.normal(size=d).astype(np.float32)
+    (lut,) = model.lut_build(jnp.asarray(q), jnp.asarray(boundaries), jnp.asarray(cells))
+    lut = np.asarray(lut)
+    for j in range(d):
+        assert (lut[cells[j] :, j] == 0).all()
+
+
+@given(SEEDS)
+@settings(max_examples=6, deadline=None)
+def test_qp_scan_equals_individual_stages(seed):
+    """The fused entry point must agree exactly with the two-stage path."""
+    g = rng(seed)
+    d, m1, chunk = 16, 17, BLK
+    from tests.test_kernels import random_quantizer
+
+    boundaries, cells = random_quantizer(g, d, m1)
+    q = g.normal(size=d).astype(np.float32)
+    (lut,) = model.lut_build(jnp.asarray(q), jnp.asarray(boundaries), jnp.asarray(cells))
+    codes = (g.integers(0, 1 << 30, size=(chunk, d)) % cells[None, :]).astype(np.int32)
+    qb = g.integers(0, 2, size=(1, d))
+    cb = g.integers(0, 2, size=(chunk, d))
+    qw, cw = ref.pack_bits_u32(qb), ref.pack_bits_u32(cb)
+
+    h_fused, lb_fused = model.qp_scan(
+        jnp.asarray(qw), jnp.asarray(cw), lut, jnp.asarray(codes)
+    )
+    (h_solo,) = model.hamming_stage(jnp.asarray(qw), jnp.asarray(cw))
+    (lb_solo,) = model.lb_stage(lut, jnp.asarray(codes))
+    np.testing.assert_array_equal(np.asarray(h_fused), np.asarray(h_solo))
+    np.testing.assert_allclose(np.asarray(lb_fused), np.asarray(lb_solo), rtol=1e-6)
+
+
+def test_hamming_ordering_correlates_with_euclidean():
+    """Sanity check of the paper's §2.4.3 observation on synthetic data:
+    binary-OSQ Hamming ordering approximates Euclidean ordering."""
+    g = rng(7)
+    n, d = 2048, 128
+    x = g.normal(size=(n, d)).astype(np.float32)
+    q = g.normal(size=d).astype(np.float32)
+    # standardize + threshold at 0 (the paper's binary quantization)
+    xb = (x > 0).astype(np.uint8)
+    qb = (q > 0).astype(np.uint8)[None, :]
+    (h,) = model.hamming_stage(
+        jnp.asarray(ref.pack_bits_u32(qb)), jnp.asarray(ref.pack_bits_u32(xb))
+    )
+    h = np.asarray(h).astype(np.float64)
+    eu = ((x - q[None, :]) ** 2).sum(axis=1)
+    # Spearman-ish check: top-10% by Euclidean should have much lower mean
+    # Hamming rank than the global average.
+    order = np.argsort(eu)
+    top = order[: n // 10]
+    hamming_rank = np.empty(n)
+    hamming_rank[np.argsort(h)] = np.arange(n)
+    assert hamming_rank[top].mean() < 0.35 * n

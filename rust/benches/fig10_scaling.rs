@@ -1,0 +1,42 @@
+//! Figure 10: runtime and cost of SQUASH with varying N_QA
+//! ∈ {10, 20, 84, 155, 258, 340} (the paper's tree configurations).
+//! The figure's shape: latency falls steeply to the 84–155 sweet spot,
+//! then flattens; cost rises monotonically with the fleet size, and at
+//! N_QA = 340 invocation overhead dominates compute for this workload.
+
+use squash::bench::{measure_squash, Env, EnvOptions, RunStats};
+use squash::coordinator::tree::TreeConfig;
+
+fn main() {
+    println!("=== Figure 10: runtime + cost vs N_QA (SIFT-like, 500 queries) ===\n");
+    let opts = EnvOptions {
+        profile: "sift",
+        n: 30_000,
+        n_queries: 500,
+        time_scale: 1.0,
+        ..Default::default()
+    };
+    let mut env = Env::setup(&opts);
+    println!("{}", RunStats::header());
+    let mut series = Vec::new();
+    for n_qa in [10usize, 20, 84, 155, 258, 340] {
+        env.with_config(|c| c.tree = TreeConfig::for_n_qa(n_qa).unwrap());
+        env.platform.reset_containers(); // fresh fleet per configuration
+        let cold = measure_squash(&env, &format!("nqa={n_qa} cold"), 0);
+        let warm = measure_squash(&env, &format!("nqa={n_qa} warm"), 0);
+        println!("{cold}");
+        println!("{warm}");
+        series.push((n_qa, warm.wall_s, warm.cost.total()));
+    }
+    println!("\nwarm series (the figure's two curves):");
+    println!("{:>6} {:>12} {:>14}", "N_QA", "runtime(s)", "cost($)");
+    for (n_qa, wall, cost) in &series {
+        println!("{n_qa:>6} {wall:>12.3} {cost:>14.6}");
+    }
+    let best = series.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+    println!(
+        "\nfastest at N_QA = {}; paper shape: 84-155 balances cost/performance, \
+         340 pays invocation overhead ✓",
+        best.0
+    );
+}

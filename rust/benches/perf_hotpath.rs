@@ -1,0 +1,115 @@
+//! §Perf: hot-path micro-benchmarks. Baselines and the optimization
+//! iteration log live in EXPERIMENTS.md §Perf. Measures the four QP/QA
+//! hot loops (Hamming scan, LB accumulate, dimensional extraction,
+//! filter-mask build), result merging, and the native-vs-XLA backend
+//! ablation on the same inputs.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use squash::attrs::mask::predicate_mask;
+use squash::attrs::predicate::parse_predicate;
+use squash::attrs::quantize::AttributeIndex;
+use squash::data::profiles::by_name;
+use squash::data::synthetic::generate;
+use squash::osq::quantizer::{OsqIndex, OsqOptions};
+use squash::runtime::backend::{ComputeBackend, NativeBackend, XlaBackend};
+use squash::runtime::Engine;
+use squash::util::rng::Rng;
+use squash::util::timer::{bench_fn, black_box};
+
+const T: Duration = Duration::from_millis(400);
+
+fn main() {
+    println!("=== §Perf hot-path micro-benchmarks ===\n");
+    let profile = by_name("sift").unwrap();
+    let n = 20_000;
+    let ds = generate(profile, n, 3);
+    let mut rng = Rng::new(4);
+    let idx = OsqIndex::build(&ds.vectors, &OsqOptions::default(), &mut rng);
+    let q = ds.vectors.row(17).to_vec();
+    let qf = idx.query_frame(&q);
+    let rows: Vec<usize> = (0..n).collect();
+
+    // 1. Hamming scan (vectors/s)
+    let qw = idx.binary.encode_query(&q);
+    let mut h = Vec::new();
+    let r = bench_fn("hamming scan (20k x 128d)", T, || {
+        idx.binary.hamming_scan(black_box(&qw), black_box(&rows), &mut h);
+        black_box(&h);
+    });
+    println!("{r}   => {:.1} Mvec/s", n as f64 * r.per_sec() / 1e6);
+
+    // 2. ADC LUT build
+    let r = bench_fn("ADC LUT build (257x128)", T, || {
+        black_box(idx.adc_table(black_box(&qf)));
+    });
+    println!("{r}");
+
+    // 3. LB accumulate over all rows
+    let lut = idx.adc_table(&qf);
+    let mut acc = Vec::new();
+    let r = bench_fn("LB scan fused-col (20k x 128d)", T, || {
+        idx.lb_sq_scan(black_box(&lut), black_box(&rows), &mut acc);
+        black_box(&acc);
+    });
+    println!("{r}   => {:.1} Mvec/s", n as f64 * r.per_sec() / 1e6);
+    let r = bench_fn("LB scan two-pass (20k x 128d)", T, || {
+        idx.lb_sq_scan_twopass(black_box(&lut), black_box(&rows), &mut acc);
+        black_box(&acc);
+    });
+    println!("{r}   => {:.1} Mvec/s (iter-2 baseline)", n as f64 * r.per_sec() / 1e6);
+    let r = bench_fn("LB scan rowmajor (20k x 128d)", T, || {
+        idx.lb_sq_scan_rowmajor(black_box(&lut), black_box(&rows), &mut acc);
+        black_box(&acc);
+    });
+    println!("{r}   => {:.1} Mvec/s (iter-1 ablation, reverted)", n as f64 * r.per_sec() / 1e6);
+
+    // 4. dimensional extraction (single column, all rows)
+    let mut col = Vec::new();
+    let r = bench_fn("extract 1 dim (20k rows)", T, || {
+        idx.layout.extract_dim_column(black_box(&idx.packed), black_box(&rows), 5, &mut col);
+        black_box(&col);
+    });
+    println!("{r}   => {:.1} Mrow/s", n as f64 * r.per_sec() / 1e6);
+
+    // 5. attribute filter mask
+    let attrs = AttributeIndex::build(&ds.attributes, 256);
+    let pred = parse_predicate("a0<53 & a1<53 & a2 between 24 76 & a3 between 0 7", 4).unwrap();
+    let r = bench_fn("filter mask (20k x 4 attrs)", T, || {
+        black_box(predicate_mask(black_box(&attrs), black_box(&pred)));
+    });
+    println!("{r}   => {:.1} Mrow/s", n as f64 * r.per_sec() / 1e6);
+
+    // 6. merge reduce
+    let lists: Vec<Vec<(u64, f32)>> = (0..10)
+        .map(|p| (0..10).map(|i| ((p * 100 + i) as u64, (p + i) as f32 * 0.1)).collect())
+        .collect();
+    let r = bench_fn("merge 10 partition lists (k=10)", T, || {
+        black_box(squash::coordinator::merge::merge_topk(black_box(&lists), 10));
+    });
+    println!("{r}");
+
+    // 7. backend ablation: native vs XLA on identical candidate sets
+    println!("\nbackend ablation (2048 candidates):");
+    let cand: Vec<usize> = (0..2048).collect();
+    let native = NativeBackend;
+    let r = bench_fn("native hamming+lb (2048)", T, || {
+        black_box(native.hamming_scan(&idx, &q, &cand));
+        black_box(native.lb_scan(&idx, &qf, &cand));
+    });
+    println!("{r}");
+    match Engine::load_default() {
+        Ok(engine) if engine.supports(idx.d) => {
+            let xla = XlaBackend::new(Arc::new(engine));
+            let r = bench_fn("xla    hamming+lb (2048)", T, || {
+                black_box(xla.hamming_scan(&idx, &q, &cand));
+                black_box(xla.lb_scan(&idx, &qf, &cand));
+            });
+            println!("{r}");
+            println!("(XLA path = Pallas interpret=True lowering on CPU PJRT — a correctness");
+            println!(" artifact, not a TPU performance proxy; see DESIGN.md §Hardware-Adaptation)");
+        }
+        _ => println!("xla backend: artifacts not found (run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,54 @@
+//! §5.3 calibration: every profile at its tuned operating point
+//! (T, H_perc, R) must reach the paper's 97% recall target at the 8%
+//! joint-selectivity hybrid workload. Also reports the ablation ladder
+//! (no prune / no refine / no KLT) backing the DESIGN.md choices.
+
+use std::sync::Arc;
+
+use squash::coordinator::{BuildOptions, SquashConfig, SquashSystem};
+use squash::data::ground_truth::{exact_batch, mean_recall};
+use squash::data::profiles::by_name;
+use squash::data::synthetic::generate;
+use squash::data::workload::{generate_workload, WorkloadOptions};
+use squash::runtime::backend::NativeBackend;
+
+fn main() {
+    println!("=== recall calibration at the paper operating points ===\n");
+    println!("{:>9} {:>7} {:>9} {:>9} {:>9} {:>9}", "profile", "n", "tuned", "noprune", "norefine", "noklt");
+    for (name, n, queries) in [
+        ("test", 4_000usize, 60usize),
+        ("sift", 30_000, 60),
+        ("gist", 6_000, 40),
+        ("deep", 40_000, 60),
+    ] {
+        let profile = by_name(name).unwrap();
+        let ds = generate(profile, n, 1);
+        let workload = generate_workload(
+            &ds,
+            &WorkloadOptions { n_queries: queries, ..Default::default() },
+            2,
+        )
+        .queries;
+        let truth = exact_batch(&ds, &workload, squash::util::threadpool::num_cpus());
+
+        let mut recalls = Vec::new();
+        for variant in ["tuned", "noprune", "norefine", "noklt"] {
+            let mut cfg = SquashConfig::for_profile(profile);
+            let mut build = BuildOptions::for_profile(profile);
+            match variant {
+                "noprune" => cfg.prune = false,
+                "norefine" => cfg.refine = false,
+                "noklt" => build.use_klt = false,
+                _ => {}
+            }
+            let sys = SquashSystem::build_default(&ds, &build, cfg, Arc::new(NativeBackend));
+            let out = sys.run_batch(&workload);
+            recalls.push(mean_recall(&truth, &out.results, 10));
+        }
+        println!(
+            "{:>9} {:>7} {:>9.4} {:>9.4} {:>9.4} {:>9.4}",
+            name, n, recalls[0], recalls[1], recalls[2], recalls[3]
+        );
+    }
+    println!("\ntarget: tuned >= 0.97 (the paper's calibration, §5.3)");
+}

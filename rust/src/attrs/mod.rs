@@ -1,0 +1,6 @@
+//! Hybrid-search attribute support (paper §2.3): attribute quantization,
+//! the predicate model, and bitwise filter-mask calculation.
+
+pub mod mask;
+pub mod predicate;
+pub mod quantize;

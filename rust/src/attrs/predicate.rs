@@ -1,0 +1,299 @@
+//! Query predicate model (paper §2.3, Def. 1).
+//!
+//! A hybrid query carries, per attribute, an optional operator from
+//! {<, ≤, =, >, ≥, BETWEEN} with one or two operands; attributes may be
+//! omitted. The default combination is conjunctive (AND over attributes);
+//! disjunctions are supported as a DNF — an OR over conjunctive clauses —
+//! exactly the extension the paper names in §2.3.2.
+
+use crate::attrs::quantize::AttrValue;
+
+/// One attribute's filter condition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Op {
+    Lt(f32),
+    Le(f32),
+    Eq(f32),
+    Gt(f32),
+    Ge(f32),
+    /// inclusive on both ends: x <= v <= y
+    Between(f32, f32),
+}
+
+impl Op {
+    /// Evaluate against a raw attribute value.
+    #[inline]
+    pub fn eval(&self, v: f32) -> bool {
+        match *self {
+            Op::Lt(x) => v < x,
+            Op::Le(x) => v <= x,
+            Op::Eq(x) => v == x,
+            Op::Gt(x) => v > x,
+            Op::Ge(x) => v >= x,
+            Op::Between(x, y) => x <= v && v <= y,
+        }
+    }
+
+    /// Evaluate against a *cell* `[lo, hi]`: true iff every value the cell
+    /// can contain satisfies the operator (the paper's R-array semantics —
+    /// see Figure 4 step 1, where cell boundaries align with operands).
+    #[inline]
+    pub fn eval_cell(&self, lo: f32, hi: f32) -> bool {
+        match *self {
+            Op::Lt(x) => hi < x,
+            Op::Le(x) => hi <= x,
+            Op::Eq(x) => lo == x && hi == x,
+            Op::Gt(x) => lo > x,
+            Op::Ge(x) => lo >= x,
+            Op::Between(x, y) => x <= lo && hi <= y,
+        }
+    }
+}
+
+/// A conjunction: one optional op per attribute (None = unconstrained).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Conjunction {
+    pub ops: Vec<Option<Op>>,
+}
+
+impl Conjunction {
+    pub fn all_pass(n_attrs: usize) -> Self {
+        Self { ops: vec![None; n_attrs] }
+    }
+
+    pub fn with(mut self, attr: usize, op: Op) -> Self {
+        if self.ops.len() <= attr {
+            self.ops.resize(attr + 1, None);
+        }
+        self.ops[attr] = Some(op);
+        self
+    }
+
+    /// Evaluate against raw attribute values (ground-truth path).
+    pub fn eval(&self, values: &[AttrValue]) -> bool {
+        self.ops.iter().enumerate().all(|(a, op)| match op {
+            None => true,
+            Some(op) => op.eval(values[a].as_f32()),
+        })
+    }
+}
+
+/// Disjunctive normal form: OR over conjunctive clauses. Single-clause
+/// predicates are the paper's evaluated configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Predicate {
+    pub clauses: Vec<Conjunction>,
+}
+
+impl Predicate {
+    /// The match-everything predicate (pure ANN query).
+    pub fn match_all(n_attrs: usize) -> Self {
+        Self { clauses: vec![Conjunction::all_pass(n_attrs)] }
+    }
+
+    pub fn single(c: Conjunction) -> Self {
+        Self { clauses: vec![c] }
+    }
+
+    pub fn or(clauses: Vec<Conjunction>) -> Self {
+        assert!(!clauses.is_empty(), "empty DNF");
+        Self { clauses }
+    }
+
+    pub fn n_attrs(&self) -> usize {
+        self.clauses.iter().map(|c| c.ops.len()).max().unwrap_or(0)
+    }
+
+    /// Ground-truth evaluation against raw values.
+    pub fn eval(&self, values: &[AttrValue]) -> bool {
+        self.clauses.iter().any(|c| c.eval(values))
+    }
+
+    /// True if no attribute is constrained.
+    pub fn is_match_all(&self) -> bool {
+        self.clauses.iter().any(|c| c.ops.iter().all(|o| o.is_none()))
+    }
+
+    /// Stable hash for result caching (§5.6).
+    pub fn cache_key(&self) -> u64 {
+        use crate::util::rng::mix64;
+        let mut h = 0xCAFE_F00Du64;
+        for c in &self.clauses {
+            h = mix64(h ^ 0x9E37);
+            for (a, op) in c.ops.iter().enumerate() {
+                if let Some(op) = op {
+                    let (tag, x, y) = match *op {
+                        Op::Lt(x) => (1u64, x, 0.0),
+                        Op::Le(x) => (2, x, 0.0),
+                        Op::Eq(x) => (3, x, 0.0),
+                        Op::Gt(x) => (4, x, 0.0),
+                        Op::Ge(x) => (5, x, 0.0),
+                        Op::Between(x, y) => (6, x, y),
+                    };
+                    h = mix64(h ^ (a as u64) ^ (tag << 8) ^ ((x.to_bits() as u64) << 16));
+                    h = mix64(h ^ (y.to_bits() as u64));
+                }
+            }
+        }
+        h
+    }
+}
+
+/// Parse a compact predicate syntax used by the CLI and examples:
+/// `"a0<15 & a2 between 3 7 & a3>=2.5"` (attribute index after `a`).
+/// Returns a single-conjunction predicate; `|` between clause groups
+/// builds a DNF: `"a0<5 | a0>95"`.
+pub fn parse_predicate(text: &str, n_attrs: usize) -> Result<Predicate, String> {
+    let mut clauses = Vec::new();
+    for clause_text in text.split('|') {
+        let mut c = Conjunction::all_pass(n_attrs);
+        for term in clause_text.split('&') {
+            let term = term.trim();
+            if term.is_empty() {
+                continue;
+            }
+            let (attr, rest) = parse_attr(term)?;
+            let op = parse_op(rest)?;
+            if attr >= n_attrs {
+                return Err(format!("attribute a{attr} out of range (A={n_attrs})"));
+            }
+            c.ops[attr] = Some(op);
+        }
+        clauses.push(c);
+    }
+    Ok(Predicate::or(clauses))
+}
+
+fn parse_attr(term: &str) -> Result<(usize, &str), String> {
+    let t = term.trim_start();
+    let t = t.strip_prefix('a').ok_or_else(|| format!("expected aN in '{term}'"))?;
+    let idx_end = t.find(|ch: char| !ch.is_ascii_digit()).unwrap_or(t.len());
+    let attr: usize = t[..idx_end].parse().map_err(|_| format!("bad attribute in '{term}'"))?;
+    Ok((attr, &t[idx_end..]))
+}
+
+fn parse_op(rest: &str) -> Result<Op, String> {
+    let r = rest.trim();
+    let num = |s: &str| -> Result<f32, String> {
+        s.trim().parse().map_err(|_| format!("bad number '{s}'"))
+    };
+    if let Some(v) = r.strip_prefix("<=") {
+        Ok(Op::Le(num(v)?))
+    } else if let Some(v) = r.strip_prefix(">=") {
+        Ok(Op::Ge(num(v)?))
+    } else if let Some(v) = r.strip_prefix('<') {
+        Ok(Op::Lt(num(v)?))
+    } else if let Some(v) = r.strip_prefix('>') {
+        Ok(Op::Gt(num(v)?))
+    } else if let Some(v) = r.strip_prefix('=') {
+        Ok(Op::Eq(num(v)?))
+    } else if let Some(v) = r.trim_start().strip_prefix("between") {
+        let parts: Vec<&str> = v.split_whitespace().collect();
+        if parts.len() != 2 {
+            return Err(format!("between needs two operands, got '{v}'"));
+        }
+        let (x, y) = (num(parts[0])?, num(parts[1])?);
+        if x > y {
+            return Err(format!("between bounds inverted: {x} > {y}"));
+        }
+        Ok(Op::Between(x, y))
+    } else {
+        Err(format!("unknown operator in '{rest}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attrs::quantize::AttrValue;
+
+    fn vals(xs: &[f32]) -> Vec<AttrValue> {
+        xs.iter().map(|&x| AttrValue::Num(x)).collect()
+    }
+
+    #[test]
+    fn op_eval() {
+        assert!(Op::Lt(5.0).eval(4.9));
+        assert!(!Op::Lt(5.0).eval(5.0));
+        assert!(Op::Le(5.0).eval(5.0));
+        assert!(Op::Eq(2.0).eval(2.0));
+        assert!(Op::Gt(1.0).eval(1.5));
+        assert!(Op::Ge(1.0).eval(1.0));
+        assert!(Op::Between(1.0, 3.0).eval(2.0));
+        assert!(Op::Between(1.0, 3.0).eval(1.0));
+        assert!(!Op::Between(1.0, 3.0).eval(3.1));
+    }
+
+    #[test]
+    fn op_eval_cell_whole_cell_semantics() {
+        // paper's example: V = [0,5,10,15,20], a < 15 => cells [1,1,1,0].
+        // eval_cell receives *inclusive* bounds; half-open cells [lo, hi)
+        // are passed as [lo, prev(hi)] (here: hi - 1 on an integer grid).
+        let edges = [0.0f32, 5.0, 10.0, 15.0, 20.0];
+        let passes: Vec<bool> =
+            edges.windows(2).map(|w| Op::Lt(15.0).eval_cell(w[0], w[1] - 1.0)).collect();
+        assert_eq!(passes, vec![true, true, true, false]);
+    }
+
+    #[test]
+    fn conjunction_and_semantics() {
+        let c = Conjunction::all_pass(3).with(0, Op::Lt(5.0)).with(2, Op::Ge(1.0));
+        assert!(c.eval(&vals(&[4.0, 100.0, 1.0])));
+        assert!(!c.eval(&vals(&[5.0, 100.0, 1.0])));
+        assert!(!c.eval(&vals(&[4.0, 100.0, 0.5])));
+    }
+
+    #[test]
+    fn dnf_or_semantics() {
+        let p = Predicate::or(vec![
+            Conjunction::all_pass(1).with(0, Op::Lt(2.0)),
+            Conjunction::all_pass(1).with(0, Op::Gt(8.0)),
+        ]);
+        assert!(p.eval(&vals(&[1.0])));
+        assert!(p.eval(&vals(&[9.0])));
+        assert!(!p.eval(&vals(&[5.0])));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let p = parse_predicate("a0<15 & a2 between 3 7 & a3>=2.5", 4).unwrap();
+        assert_eq!(p.clauses.len(), 1);
+        let c = &p.clauses[0];
+        assert_eq!(c.ops[0], Some(Op::Lt(15.0)));
+        assert_eq!(c.ops[1], None);
+        assert_eq!(c.ops[2], Some(Op::Between(3.0, 7.0)));
+        assert_eq!(c.ops[3], Some(Op::Ge(2.5)));
+    }
+
+    #[test]
+    fn parse_dnf() {
+        let p = parse_predicate("a0<5 | a0>95", 1).unwrap();
+        assert_eq!(p.clauses.len(), 2);
+        assert!(p.eval(&vals(&[1.0])) && p.eval(&vals(&[99.0])) && !p.eval(&vals(&[50.0])));
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse_predicate("b0<5", 4).is_err());
+        assert!(parse_predicate("a9<5", 4).is_err());
+        assert!(parse_predicate("a0 ~ 5", 4).is_err());
+        assert!(parse_predicate("a0 between 7 3", 4).is_err());
+    }
+
+    #[test]
+    fn cache_keys_distinguish() {
+        let a = parse_predicate("a0<5", 2).unwrap();
+        let b = parse_predicate("a0<6", 2).unwrap();
+        let c = parse_predicate("a1<5", 2).unwrap();
+        assert_ne!(a.cache_key(), b.cache_key());
+        assert_ne!(a.cache_key(), c.cache_key());
+        assert_eq!(a.cache_key(), parse_predicate("a0<5", 2).unwrap().cache_key());
+    }
+
+    #[test]
+    fn match_all() {
+        let p = Predicate::match_all(3);
+        assert!(p.is_match_all());
+        assert!(p.eval(&vals(&[1.0, 2.0, 3.0])));
+    }
+}

@@ -1,0 +1,396 @@
+//! Attribute quantization (paper §2.2 / §2.3).
+//!
+//! Numerical attributes are scalar-quantized like vector dimensions: the
+//! boundary array `V` (the paper's `(M+1, A)` matrix) holds per-attribute
+//! cell edges, and each vector stores the cell code of each attribute in
+//! the Attribute Q-Index. Categorical attributes keep an in-memory
+//! mapping from quantized cells to unique values (one cell per value).
+//!
+//! Cell semantics: a cell passes an operator iff *every* value in the
+//! cell satisfies it (Figure 4 step 1). When attribute values live on a
+//! discrete grid that coincides with cell edges — the evaluated
+//! configuration, e.g. integer-valued attributes — quantized filtering is
+//! exact. For continuous high-cardinality attributes the filter is
+//! conservative within the affected boundary cells; the workload
+//! generator (data::attributes) emits grid-valued attributes so recall
+//! accounting stays exact, matching the paper's uniform-attribute setup.
+
+use crate::attrs::predicate::{Conjunction, Op, Predicate};
+use crate::util::ser::{read_header, write_header, Reader, SerError, Writer};
+
+const MAGIC: u32 = 0x4154_5131; // "ATQ1"
+
+/// A raw attribute value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AttrValue {
+    Num(f32),
+    /// categorical id
+    Cat(u32),
+}
+
+impl AttrValue {
+    #[inline]
+    pub fn as_f32(&self) -> f32 {
+        match *self {
+            AttrValue::Num(x) => x,
+            AttrValue::Cat(c) => c as f32,
+        }
+    }
+}
+
+/// Per-attribute quantizer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AttrQuantizer {
+    /// Numeric: cell k spans [edges[k], edges[k+1]) with the final cell
+    /// closed on the right. `exact` marks the one-cell-per-distinct-value
+    /// fit, where each cell contains only its left-edge value (point
+    /// cells) and quantized filtering is exact for any operand.
+    Numeric { edges: Vec<f32>, exact: bool },
+    /// Categorical: one cell per distinct value id; `values[k]` is the
+    /// raw id mapped to cell k.
+    Categorical { values: Vec<u32> },
+}
+
+impl AttrQuantizer {
+    /// Fit a numeric quantizer over values: one cell per distinct value
+    /// when cardinality <= max_cells (exact filtering), else equi-depth
+    /// cells.
+    pub fn fit_numeric(values: &[f32], max_cells: usize) -> Self {
+        let mut sorted: Vec<f32> = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.dedup();
+        if sorted.len() <= max_cells {
+            // exact: edges at each distinct value, last edge duplicated end
+            let mut edges = sorted.clone();
+            edges.push(*sorted.last().unwrap_or(&0.0));
+            AttrQuantizer::Numeric { edges, exact: true }
+        } else {
+            // equi-depth on distinct values
+            let cells = max_cells;
+            let mut edges = Vec::with_capacity(cells + 1);
+            for k in 0..=cells {
+                let idx = (k * (sorted.len() - 1)) / cells;
+                edges.push(sorted[idx]);
+            }
+            edges.dedup();
+            if edges.len() < 2 {
+                edges.push(*edges.last().unwrap());
+            }
+            AttrQuantizer::Numeric { edges, exact: false }
+        }
+    }
+
+    pub fn fit_categorical(ids: &[u32]) -> Self {
+        let mut values: Vec<u32> = ids.to_vec();
+        values.sort_unstable();
+        values.dedup();
+        AttrQuantizer::Categorical { values }
+    }
+
+    pub fn cells(&self) -> usize {
+        match self {
+            AttrQuantizer::Numeric { edges, .. } => edges.len() - 1,
+            AttrQuantizer::Categorical { values } => values.len(),
+        }
+    }
+
+    /// Quantize a raw value to its cell code.
+    pub fn quantize(&self, v: AttrValue) -> u16 {
+        match self {
+            AttrQuantizer::Numeric { edges, .. } => {
+                let x = v.as_f32();
+                let interior = &edges[1..edges.len() - 1];
+                interior.partition_point(|&e| e <= x) as u16
+            }
+            AttrQuantizer::Categorical { values } => {
+                let id = match v {
+                    AttrValue::Cat(c) => c,
+                    AttrValue::Num(x) => x as u32,
+                };
+                values.binary_search(&id).unwrap_or(0) as u16
+            }
+        }
+    }
+
+    /// Cell bounds `[lo, hi]` of cell k for `Op::eval_cell`.
+    pub fn cell_bounds(&self, k: usize) -> (f32, f32) {
+        match self {
+            AttrQuantizer::Numeric { edges, exact } => {
+                if *exact {
+                    // point cell: only the left-edge value exists in it
+                    return (edges[k], edges[k]);
+                }
+                let lo = edges[k];
+                // half-open cells: the largest value strictly inside cell k
+                // is just below edges[k+1]; for grid-valued data the only
+                // value in the cell is `lo` itself unless it's the last cell
+                let hi = if k + 2 == edges.len() {
+                    edges[k + 1] // last cell closed on the right
+                } else {
+                    // previous representable value below the right edge
+                    f32_prev(edges[k + 1])
+                };
+                (lo, hi.max(lo))
+            }
+            AttrQuantizer::Categorical { values } => {
+                let v = values[k] as f32;
+                (v, v)
+            }
+        }
+    }
+
+    /// The paper's per-attribute R column: cell -> pass/fail for one op.
+    pub fn satisfaction(&self, op: &Op) -> Vec<bool> {
+        (0..self.cells())
+            .map(|k| {
+                let (lo, hi) = self.cell_bounds(k);
+                op.eval_cell(lo, hi)
+            })
+            .collect()
+    }
+}
+
+/// Largest f32 strictly below x.
+fn f32_prev(x: f32) -> f32 {
+    if x.is_nan() || x == f32::NEG_INFINITY {
+        return x;
+    }
+    let bits = x.to_bits();
+    let prev = if x > 0.0 {
+        bits - 1
+    } else if x == 0.0 {
+        (-f32::from_bits(1)).to_bits()
+    } else {
+        bits + 1
+    };
+    f32::from_bits(prev)
+}
+
+/// The Attribute Q-Index: quantizers + column-major quantized codes for
+/// all N vectors (held in memory by every QueryAllocator).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AttributeIndex {
+    pub n: usize,
+    pub quantizers: Vec<AttrQuantizer>,
+    /// `codes[a]` is the length-N code column of attribute a.
+    pub codes: Vec<Vec<u16>>,
+}
+
+impl AttributeIndex {
+    /// Build from raw per-vector attribute rows.
+    pub fn build(rows: &[Vec<AttrValue>], max_cells: usize) -> Self {
+        let n = rows.len();
+        assert!(n > 0);
+        let a = rows[0].len();
+        let mut quantizers = Vec::with_capacity(a);
+        let mut codes = Vec::with_capacity(a);
+        for attr in 0..a {
+            let q = match rows[0][attr] {
+                AttrValue::Num(_) => {
+                    let vals: Vec<f32> = rows.iter().map(|r| r[attr].as_f32()).collect();
+                    AttrQuantizer::fit_numeric(&vals, max_cells)
+                }
+                AttrValue::Cat(_) => {
+                    let ids: Vec<u32> = rows
+                        .iter()
+                        .map(|r| match r[attr] {
+                            AttrValue::Cat(c) => c,
+                            AttrValue::Num(x) => x as u32,
+                        })
+                        .collect();
+                    AttrQuantizer::fit_categorical(&ids)
+                }
+            };
+            let col: Vec<u16> = rows.iter().map(|r| q.quantize(r[attr])).collect();
+            quantizers.push(q);
+            codes.push(col);
+        }
+        Self { n, quantizers, codes }
+    }
+
+    pub fn n_attrs(&self) -> usize {
+        self.quantizers.len()
+    }
+
+    /// Build the R lookup (paper Fig 4 step 1) for one conjunction:
+    /// `r[a][k]` = does cell k of attribute a pass clause a (None ⇒ all
+    /// cells pass).
+    pub fn build_r(&self, c: &Conjunction) -> Vec<Option<Vec<bool>>> {
+        self.quantizers
+            .iter()
+            .enumerate()
+            .map(|(a, q)| c.ops.get(a).and_then(|o| o.as_ref()).map(|op| q.satisfaction(op)))
+            .collect()
+    }
+
+    /// Approximate selectivity of a predicate from the R arrays (used by
+    /// the QA to pick the fused-scan ablation path).
+    pub fn estimate_selectivity(&self, p: &Predicate) -> f64 {
+        let mut total = 0f64;
+        for c in &p.clauses {
+            let mut s = 1f64;
+            for (a, r) in self.build_r(c).iter().enumerate() {
+                if let Some(r) = r {
+                    // weight cells by their population
+                    let mut hist = vec![0usize; self.quantizers[a].cells()];
+                    for &code in &self.codes[a] {
+                        hist[code as usize] += 1;
+                    }
+                    let pass: usize =
+                        r.iter().zip(&hist).filter(|(ok, _)| **ok).map(|(_, h)| h).sum();
+                    s *= pass as f64 / self.n as f64;
+                }
+            }
+            total += s;
+        }
+        total.min(1.0)
+    }
+
+    /// Index size in bytes (codes only) — cost model input.
+    pub fn code_bytes(&self) -> usize {
+        self.codes.iter().map(|c| c.len() * 2).sum()
+    }
+
+    // ---------------- serialization ----------------
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        write_header(&mut w, MAGIC, 1);
+        w.usize(self.n);
+        w.usize(self.quantizers.len());
+        for q in &self.quantizers {
+            match q {
+                AttrQuantizer::Numeric { edges, exact } => {
+                    w.u8(if *exact { 2 } else { 0 });
+                    w.f32_slice(edges);
+                }
+                AttrQuantizer::Categorical { values } => {
+                    w.u8(1);
+                    w.u32_slice(values);
+                }
+            }
+        }
+        for col in &self.codes {
+            w.u16_slice(col);
+        }
+        w.into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, SerError> {
+        let mut r = Reader::new(bytes);
+        read_header(&mut r, MAGIC, 1)?;
+        let n = r.usize()?;
+        let a = r.usize()?;
+        let mut quantizers = Vec::with_capacity(a);
+        for _ in 0..a {
+            match r.u8()? {
+                0 => quantizers.push(AttrQuantizer::Numeric { edges: r.f32_vec()?, exact: false }),
+                2 => quantizers.push(AttrQuantizer::Numeric { edges: r.f32_vec()?, exact: true }),
+                _ => quantizers.push(AttrQuantizer::Categorical { values: r.u32_vec()? }),
+            }
+        }
+        let mut codes = Vec::with_capacity(a);
+        for _ in 0..a {
+            codes.push(r.u16_vec()?);
+        }
+        Ok(Self { n, quantizers, codes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_rows(n: usize) -> Vec<Vec<AttrValue>> {
+        // a0: integers 0..=9 cycling; a1: categorical 3 classes
+        (0..n)
+            .map(|i| vec![AttrValue::Num((i % 10) as f32), AttrValue::Cat((i % 3) as u32)])
+            .collect()
+    }
+
+    #[test]
+    fn numeric_exact_grid() {
+        let q = AttrQuantizer::fit_numeric(&[0.0, 1.0, 2.0, 3.0], 16);
+        assert_eq!(q.cells(), 4);
+        for v in 0..4 {
+            assert_eq!(q.quantize(AttrValue::Num(v as f32)) as usize, v);
+            let (lo, hi) = q.cell_bounds(v);
+            assert!(lo <= v as f32 && v as f32 <= hi);
+        }
+    }
+
+    #[test]
+    fn numeric_equidepth_when_high_cardinality() {
+        let vals: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let q = AttrQuantizer::fit_numeric(&vals, 8);
+        assert!(q.cells() <= 8);
+        // quantization is monotone
+        let mut prev = 0u16;
+        for &v in &vals {
+            let c = q.quantize(AttrValue::Num(v));
+            assert!(c >= prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn categorical_mapping() {
+        let q = AttrQuantizer::fit_categorical(&[7, 3, 7, 9, 3]);
+        assert_eq!(q.cells(), 3); // {3, 7, 9}
+        assert_eq!(q.quantize(AttrValue::Cat(3)), 0);
+        assert_eq!(q.quantize(AttrValue::Cat(7)), 1);
+        assert_eq!(q.quantize(AttrValue::Cat(9)), 2);
+        let s = q.satisfaction(&Op::Eq(7.0));
+        assert_eq!(s, vec![false, true, false]);
+    }
+
+    #[test]
+    fn satisfaction_matches_paper_example() {
+        // V[:,0] = [0,5,10,15,20] with integer grid values; a0 < 15
+        let q = AttrQuantizer::Numeric { edges: vec![0.0, 5.0, 10.0, 15.0, 20.0], exact: false };
+        let s = q.satisfaction(&Op::Lt(15.0));
+        assert_eq!(s, vec![true, true, true, false]);
+    }
+
+    #[test]
+    fn filter_on_cells_equals_filter_on_values_for_grid() {
+        let rows = grid_rows(200);
+        let idx = AttributeIndex::build(&rows, 64);
+        let ops = [
+            Op::Lt(5.0),
+            Op::Le(5.0),
+            Op::Eq(3.0),
+            Op::Gt(7.0),
+            Op::Ge(7.0),
+            Op::Between(2.0, 6.0),
+        ];
+        for op in ops {
+            let c = Conjunction::all_pass(2).with(0, op);
+            let r = idx.build_r(&c);
+            let r0 = r[0].as_ref().unwrap();
+            for (i, row) in rows.iter().enumerate() {
+                let via_cells = r0[idx.codes[0][i] as usize];
+                let via_values = op.eval(row[0].as_f32());
+                assert_eq!(via_cells, via_values, "op {op:?} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn selectivity_estimate() {
+        let rows = grid_rows(1000);
+        let idx = AttributeIndex::build(&rows, 64);
+        let p = Predicate::single(Conjunction::all_pass(2).with(0, Op::Lt(5.0)));
+        let est = idx.estimate_selectivity(&p);
+        assert!((est - 0.5).abs() < 0.01, "est={est}");
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let rows = grid_rows(50);
+        let idx = AttributeIndex::build(&rows, 64);
+        let bytes = idx.to_bytes();
+        let back = AttributeIndex::from_bytes(&bytes).unwrap();
+        assert_eq!(back, idx);
+    }
+}

@@ -1,0 +1,307 @@
+//! From-scratch HNSW (Malkov & Yashunin [37]) — the index underlying the
+//! Vexless baseline (§5.2/§5.6). Implemented here because no ANN library
+//! exists offline, and because the paper's comparison needs a faithful
+//! proximity-graph comparator: full-precision vectors as graph nodes
+//! (the memory-footprint point of Table 1), greedy layered search, and
+//! ef-controlled beam search at layer 0.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::util::matrix::{l2_sq, Matrix};
+use crate::util::rng::Rng;
+
+/// Max-heap entry ordered by distance (for result sets).
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Far(f32, u32);
+impl Eq for Far {}
+impl PartialOrd for Far {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Far {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.partial_cmp(&other.0).unwrap().then(self.1.cmp(&other.1))
+    }
+}
+
+/// Min-heap entry (candidate frontier) via reversed ordering.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Near(f32, u32);
+impl Eq for Near {}
+impl PartialOrd for Near {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Near {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.0.partial_cmp(&self.0).unwrap().then(other.1.cmp(&self.1))
+    }
+}
+
+/// Build/search parameters.
+#[derive(Clone, Debug)]
+pub struct HnswParams {
+    /// max connections per node per layer (M); layer 0 uses 2M
+    pub m: usize,
+    pub ef_construction: usize,
+    pub ef_search: usize,
+    pub seed: u64,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        Self { m: 16, ef_construction: 100, ef_search: 64, seed: 7 }
+    }
+}
+
+/// The HNSW index: full-precision vectors + layered adjacency.
+pub struct Hnsw {
+    data: Matrix,
+    params: HnswParams,
+    /// `layers[l][node]` -> neighbor ids (empty vec if node not on layer)
+    layers: Vec<Vec<Vec<u32>>>,
+    /// top layer of each node
+    node_level: Vec<u8>,
+    entry: u32,
+    max_level: usize,
+}
+
+impl Hnsw {
+    /// Insert-based construction.
+    pub fn build(data: Matrix, params: HnswParams) -> Self {
+        let n = data.n();
+        assert!(n > 0);
+        let mut rng = Rng::new(params.seed);
+        let level_mult = 1.0 / (params.m as f64).ln().max(0.1);
+        let mut node_level = vec![0u8; n];
+        for lv in node_level.iter_mut() {
+            // geometric level draw: floor(-ln(U) * mL)
+            let u = rng.f64().max(1e-12);
+            *lv = ((-u.ln() * level_mult) as usize).min(15) as u8;
+        }
+        let max_level = node_level.iter().copied().max().unwrap() as usize;
+        let mut layers: Vec<Vec<Vec<u32>>> =
+            (0..=max_level).map(|_| vec![Vec::new(); n]).collect();
+        // entry point: the first node reaching the top level
+        let entry = (0..n).find(|&i| node_level[i] as usize == max_level).unwrap() as u32;
+
+        let mut index = Self { data, params, layers, node_level, entry, max_level };
+
+        for i in 0..n as u32 {
+            if i == index.entry {
+                continue;
+            }
+            index.insert(i);
+        }
+        // take back ownership pattern not needed; built in place
+        layers = Vec::new();
+        let _ = layers;
+        index
+    }
+
+    fn insert(&mut self, node: u32) {
+        let node_lv = self.node_level[node as usize] as usize;
+        let q = self.data.row(node as usize).to_vec();
+        let mut ep = self.entry;
+        // descend through upper layers greedily
+        for l in ((node_lv + 1)..=self.max_level).rev() {
+            ep = self.greedy_closest(&q, ep, l);
+        }
+        // insert on layers node_lv..=0
+        for l in (0..=node_lv.min(self.max_level)).rev() {
+            let ef = self.params.ef_construction;
+            let found = self.search_layer(&q, ep, ef, l);
+            let m_max = if l == 0 { self.params.m * 2 } else { self.params.m };
+            // connect to the M nearest found
+            let neighbors: Vec<u32> =
+                found.iter().take(self.params.m).map(|&(_, id)| id).collect();
+            for &nb in &neighbors {
+                self.layers[l][node as usize].push(nb);
+                self.layers[l][nb as usize].push(node);
+                // prune overflowing adjacency to the m_max closest
+                if self.layers[l][nb as usize].len() > m_max {
+                    let base = self.data.row(nb as usize);
+                    let mut scored: Vec<(f32, u32)> = self.layers[l][nb as usize]
+                        .iter()
+                        .map(|&x| (l2_sq(base, self.data.row(x as usize)), x))
+                        .collect();
+                    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                    scored.truncate(m_max);
+                    self.layers[l][nb as usize] = scored.into_iter().map(|(_, x)| x).collect();
+                }
+            }
+            if let Some(&(_, best)) = found.first() {
+                ep = best;
+            }
+        }
+    }
+
+    /// Greedy descent on one layer: follow improving neighbors only.
+    fn greedy_closest(&self, q: &[f32], start: u32, layer: usize) -> u32 {
+        let mut cur = start;
+        let mut cur_d = l2_sq(q, self.data.row(cur as usize));
+        loop {
+            let mut improved = false;
+            for &nb in &self.layers[layer][cur as usize] {
+                let d = l2_sq(q, self.data.row(nb as usize));
+                if d < cur_d {
+                    cur_d = d;
+                    cur = nb;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return cur;
+            }
+        }
+    }
+
+    /// Beam search on one layer; returns up to `ef` (distance, id)
+    /// ascending.
+    fn search_layer(&self, q: &[f32], ep: u32, ef: usize, layer: usize) -> Vec<(f32, u32)> {
+        let mut visited = vec![false; self.data.n()];
+        visited[ep as usize] = true;
+        let d0 = l2_sq(q, self.data.row(ep as usize));
+        let mut frontier = BinaryHeap::new(); // min-heap of Near
+        let mut best: BinaryHeap<Far> = BinaryHeap::new(); // max-heap of results
+        frontier.push(Near(d0, ep));
+        best.push(Far(d0, ep));
+        while let Some(Near(d, node)) = frontier.pop() {
+            let worst = best.peek().map(|f| f.0).unwrap_or(f32::INFINITY);
+            if d > worst && best.len() >= ef {
+                break;
+            }
+            for &nb in &self.layers[layer][node as usize] {
+                if visited[nb as usize] {
+                    continue;
+                }
+                visited[nb as usize] = true;
+                let dn = l2_sq(q, self.data.row(nb as usize));
+                let worst = best.peek().map(|f| f.0).unwrap_or(f32::INFINITY);
+                if best.len() < ef || dn < worst {
+                    frontier.push(Near(dn, nb));
+                    best.push(Far(dn, nb));
+                    if best.len() > ef {
+                        best.pop();
+                    }
+                }
+            }
+        }
+        let mut out: Vec<(f32, u32)> = best.into_iter().map(|Far(d, id)| (d, id)).collect();
+        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        out
+    }
+
+    /// Top-k search (unfiltered — Vexless has no attribute support).
+    pub fn search(&self, q: &[f32], k: usize) -> Vec<(u64, f32)> {
+        let mut ep = self.entry;
+        for l in (1..=self.max_level).rev() {
+            ep = self.greedy_closest(q, ep, l);
+        }
+        let ef = self.params.ef_search.max(k);
+        let found = self.search_layer(q, ep, ef, 0);
+        found.into_iter().take(k).map(|(d, id)| (id as u64, d)).collect()
+    }
+
+    /// In-memory footprint: full-precision vectors + adjacency (the
+    /// Table 1 "high memory footprint" of PG methods).
+    pub fn memory_bytes(&self) -> usize {
+        let vectors = self.data.n() * self.data.d() * 4;
+        let edges: usize = self
+            .layers
+            .iter()
+            .map(|l| l.iter().map(|adj| adj.len() * 4).sum::<usize>())
+            .sum();
+        vectors + edges
+    }
+
+    pub fn n(&self) -> usize {
+        self.data.n()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::osq::distance::top_k_smallest;
+
+    fn blobs(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<f32>> =
+            (0..12).map(|_| (0..d).map(|_| rng.normal() * 4.0).collect()).collect();
+        Matrix::from_rows_fn(n, d, |i, row| {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = centers[i % 12][j] + rng.normal() * 0.4;
+            }
+        })
+    }
+
+    fn brute(data: &Matrix, q: &[f32], k: usize) -> Vec<(u64, f32)> {
+        top_k_smallest((0..data.n()).map(|i| (i as u64, l2_sq(q, data.row(i)))), k)
+    }
+
+    #[test]
+    fn high_recall_on_clustered_data() {
+        let data = blobs(3000, 24, 1);
+        let index = Hnsw::build(data.clone(), HnswParams::default());
+        let mut rng = Rng::new(2);
+        let mut hits = 0;
+        let total = 30 * 10;
+        for _ in 0..30 {
+            let q: Vec<f32> =
+                data.row(rng.gen_range(3000)).iter().map(|&v| v + rng.normal() * 0.05).collect();
+            let got = index.search(&q, 10);
+            let want: std::collections::HashSet<u64> =
+                brute(&data, &q, 10).into_iter().map(|(i, _)| i).collect();
+            hits += got.iter().filter(|(i, _)| want.contains(i)).count();
+        }
+        let recall = hits as f64 / total as f64;
+        assert!(recall >= 0.9, "hnsw recall@10 = {recall}");
+    }
+
+    #[test]
+    fn exact_match_is_found() {
+        let data = blobs(1000, 8, 3);
+        let index = Hnsw::build(data.clone(), HnswParams::default());
+        for i in (0..1000).step_by(97) {
+            let got = index.search(data.row(i), 1);
+            assert_eq!(got[0].0, i as u64, "self-query must return itself");
+            assert_eq!(got[0].1, 0.0);
+        }
+    }
+
+    #[test]
+    fn results_sorted_and_k_bounded() {
+        let data = blobs(500, 6, 4);
+        let index = Hnsw::build(data.clone(), HnswParams::default());
+        let got = index.search(data.row(0), 25);
+        assert!(got.len() <= 25);
+        for w in got.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn memory_footprint_exceeds_raw_vectors() {
+        // the Table-1 point: PG keeps full vectors + graph in memory
+        let data = blobs(800, 16, 5);
+        let raw = data.n() * data.d() * 4;
+        let index = Hnsw::build(data, HnswParams::default());
+        assert!(index.memory_bytes() > raw);
+    }
+
+    #[test]
+    fn single_node_and_tiny_graphs() {
+        let data = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let index = Hnsw::build(data, HnswParams::default());
+        assert_eq!(index.search(&[1.0, 2.0], 3), vec![(0, 0.0)]);
+
+        let data2 = Matrix::from_vec(3, 1, vec![0.0, 1.0, 5.0]);
+        let index2 = Hnsw::build(data2, HnswParams { m: 2, ..Default::default() });
+        let got = index2.search(&[0.9], 2);
+        assert_eq!(got[0].0, 1);
+    }
+}

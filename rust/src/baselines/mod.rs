@@ -1,0 +1,8 @@
+//! Baselines from the paper's evaluation (§5.2): System-X (commercial
+//! serverless vector DB, modeled), a Vexless-like FaaS HNSW system with
+//! result caching, and same-codebase server deployments.
+
+pub mod hnsw;
+pub mod server;
+pub mod system_x;
+pub mod vexless;

@@ -1,0 +1,213 @@
+//! Server-based baseline (§5.2/§5.3): "the same codebase as SQUASH...
+//! modified to run on a single machine (i.e., spawning separate
+//! processes rather than invoking parallel Lambda functions)".
+//!
+//! The full SQUASH pipeline — filter masks, Algorithm-1 selection,
+//! Hamming prune, ADC-LUT LB distances, refinement — executes on a
+//! bounded thread pool of `vcpus` workers (c7i.4xlarge = 16,
+//! c7i.16xlarge = 64). No FaaS/storage latencies: indexes are local.
+//! The paper's point reproduces naturally: QA-work and QP-work contend
+//! for the same fixed cores, capping throughput.
+
+use std::sync::Arc;
+
+use crate::attrs::mask::predicate_mask;
+use crate::attrs::quantize::AttributeIndex;
+use crate::coordinator::{PartitionFile, SquashConfig};
+use crate::data::workload::Query;
+use crate::data::Dataset;
+use crate::osq::binary::select_by_hamming_with_ties;
+use crate::osq::distance::top_k_smallest;
+use crate::osq::quantizer::OsqOptions;
+use crate::partition::kmeans::{balanced_kmeans, KMeansOptions};
+use crate::partition::selection::select_partitions;
+use crate::partition::{calibrate_threshold, PartitionLayout};
+use crate::util::matrix::l2_sq;
+use crate::util::rng::Rng;
+use crate::util::stats::LatencyRecorder;
+use crate::util::threadpool::parallel_map;
+use crate::util::timer::Stopwatch;
+
+/// Server instance shapes from §5.3.
+#[derive(Clone, Copy, Debug)]
+pub enum InstanceType {
+    /// c7i.4xlarge: 16 vCPU, 32 GB
+    C7i4xlarge,
+    /// c7i.16xlarge: 64 vCPU, 128 GB
+    C7i16xlarge,
+}
+
+impl InstanceType {
+    pub fn vcpus(&self) -> usize {
+        match self {
+            InstanceType::C7i4xlarge => 16,
+            InstanceType::C7i16xlarge => 64,
+        }
+    }
+
+    pub fn hourly_cost(&self, pricing: &crate::cost::pricing::Pricing) -> f64 {
+        match self {
+            InstanceType::C7i4xlarge => pricing.c7i_4xlarge_hourly,
+            InstanceType::C7i16xlarge => pricing.c7i_16xlarge_hourly,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InstanceType::C7i4xlarge => "c7i.4xlarge",
+            InstanceType::C7i16xlarge => "c7i.16xlarge",
+        }
+    }
+}
+
+/// The single-machine deployment.
+pub struct ServerRunner {
+    pub instance: InstanceType,
+    cfg: SquashConfig,
+    attrs: AttributeIndex,
+    layout: PartitionLayout,
+    partitions: Vec<Arc<PartitionFile>>,
+    vectors: crate::util::matrix::Matrix,
+    t: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServerOutput {
+    pub results: Vec<Vec<(u64, f32)>>,
+    pub wall_s: f64,
+    pub latency: LatencyRecorder,
+}
+
+impl ServerRunner {
+    /// Build the same indexes SQUASH uses, kept locally in memory.
+    pub fn build(ds: &Dataset, instance: InstanceType, cfg: SquashConfig, partitions: usize) -> Self {
+        let mut rng = Rng::new(0xC0FFEE);
+        let clustering =
+            balanced_kmeans(&ds.vectors, partitions, &KMeansOptions::default(), &mut rng);
+        let layout = PartitionLayout::from_clustering(&clustering);
+        let mut parts = Vec::with_capacity(layout.p);
+        for p in 0..layout.p {
+            let rows: Vec<usize> = layout.globals[p].iter().map(|&g| g as usize).collect();
+            let data = ds.vectors.select_rows(&rows);
+            let index = crate::osq::quantizer::OsqIndex::build(
+                &data,
+                &OsqOptions::default(),
+                &mut rng.fork(p as u64),
+            );
+            parts.push(Arc::new(PartitionFile { index, globals: layout.globals[p].clone() }));
+        }
+        let attrs = AttributeIndex::build(&ds.attributes, 256);
+        let t = if cfg.t_threshold > 0.0 {
+            cfg.t_threshold
+        } else {
+            calibrate_threshold(&ds.vectors, &layout, 0.001, 2000, &mut rng)
+        };
+        Self { instance, cfg, attrs, layout, partitions: parts, vectors: ds.vectors.clone(), t }
+    }
+
+    /// Process one query end-to-end on the calling worker thread.
+    fn serve_one(&self, q: &Query) -> Vec<(u64, f32)> {
+        let mask = predicate_mask(&self.attrs, &q.predicate);
+        let target = q.k * self.cfg.gather_factor.max(1);
+        let plan =
+            select_partitions(&self.layout, &[q.vector.clone()], &[mask], self.t, target);
+        let mut lists = Vec::new();
+        for (p, visits) in plan.visits.iter().enumerate() {
+            for v in visits {
+                let file = &self.partitions[p];
+                let idx = &file.index;
+                let rows: Vec<usize> = v.local_rows.iter().map(|&r| r as usize).collect();
+                if rows.is_empty() {
+                    continue;
+                }
+                let qf = idx.query_frame(&q.vector);
+                let prune_floor = (4 * q.k * self.cfg.refine_ratio).max(64);
+                let survivors: Vec<usize> =
+                    if self.cfg.prune && rows.len() > prune_floor {
+                        let qw = idx.binary.encode_query(&q.vector);
+                        let mut h = Vec::new();
+                        idx.binary.hamming_scan(&qw, &rows, &mut h);
+                        let keep = ((rows.len() as f64 * self.cfg.h_keep).ceil() as usize)
+                            .max(q.k * self.cfg.refine_ratio)
+                            .min(rows.len());
+                        select_by_hamming_with_ties(&h, idx.d, keep)
+                            .into_iter()
+                            .map(|i| rows[i])
+                            .collect()
+                    } else {
+                        rows
+                    };
+                let lut = idx.adc_table(&qf);
+                let mut lb = Vec::new();
+                idx.lb_sq_scan(&lut, &survivors, &mut lb);
+                let shortlist = top_k_smallest(
+                    lb.iter().enumerate().map(|(i, &d)| (file.globals[survivors[i]], d)),
+                    (q.k * self.cfg.refine_ratio).min(survivors.len()),
+                );
+                let local = if self.cfg.refine {
+                    top_k_smallest(
+                        shortlist
+                            .iter()
+                            .map(|&(id, _)| (id, l2_sq(&q.vector, self.vectors.row(id as usize)))),
+                        q.k,
+                    )
+                } else {
+                    let mut s = shortlist;
+                    s.truncate(q.k);
+                    s
+                };
+                lists.push(local);
+            }
+        }
+        crate::coordinator::merge::merge_topk(&lists, q.k)
+    }
+
+    /// Run a batch over the instance's vCPUs.
+    pub fn run_batch(&self, queries: &[Query]) -> ServerOutput {
+        let sw = Stopwatch::new();
+        let lat = std::sync::Mutex::new(LatencyRecorder::new());
+        let results = parallel_map(queries, self.instance.vcpus(), |_, q| {
+            let qsw = Stopwatch::new();
+            let r = self.serve_one(q);
+            lat.lock().unwrap().record(qsw.secs());
+            r
+        });
+        ServerOutput { results, wall_s: sw.secs(), latency: lat.into_inner().unwrap() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ground_truth::{exact_batch, mean_recall};
+    use crate::data::profiles::by_name;
+    use crate::data::synthetic::generate;
+    use crate::data::workload::{generate_workload, WorkloadOptions};
+
+    #[test]
+    fn server_matches_recall_of_serverless_pipeline() {
+        let profile = by_name("test").unwrap();
+        let ds = generate(profile, 3000, 1);
+        let cfg = SquashConfig::for_profile(profile);
+        let server = ServerRunner::build(&ds, InstanceType::C7i4xlarge, cfg, profile.partitions);
+        let w = generate_workload(&ds, &WorkloadOptions { n_queries: 25, ..Default::default() }, 2);
+        let out = server.run_batch(&w.queries);
+        let truth = exact_batch(&ds, &w.queries, 4);
+        let recall = mean_recall(&truth, &out.results, 10);
+        assert!(recall >= 0.9, "server recall@10 = {recall}");
+        // predicates hold
+        for (q, res) in w.queries.iter().zip(&out.results) {
+            for &(id, _) in res {
+                assert!(q.predicate.eval(&ds.attributes[id as usize]));
+            }
+        }
+    }
+
+    #[test]
+    fn instance_shapes() {
+        let p = crate::cost::pricing::Pricing::default();
+        assert_eq!(InstanceType::C7i4xlarge.vcpus(), 16);
+        assert_eq!(InstanceType::C7i16xlarge.vcpus(), 64);
+        assert!(InstanceType::C7i16xlarge.hourly_cost(&p) > InstanceType::C7i4xlarge.hourly_cost(&p));
+    }
+}

@@ -1,0 +1,292 @@
+//! Shared experiment harness: dataset/system setup, measured runs and
+//! report formatting used by `rust/benches/*` (one per paper
+//! table/figure), the examples, and the CLI.
+
+use std::sync::Arc;
+
+use crate::baselines::server::{InstanceType, ServerRunner};
+use crate::baselines::system_x::{SystemX, SystemXParams};
+use crate::coordinator::{BuildOptions, SquashConfig, SquashSystem};
+use crate::cost::pricing::Pricing;
+use crate::cost::{CostLedger, CostReport};
+use crate::data::ground_truth::{exact_batch, mean_recall};
+use crate::data::profiles::{by_name, Profile};
+use crate::data::synthetic::generate;
+use crate::data::workload::{generate_workload, Query, WorkloadOptions};
+use crate::data::Dataset;
+use crate::faas::{FaasConfig, Platform};
+use crate::runtime::backend::{select_backend, ComputeBackend};
+use crate::runtime::Engine;
+use crate::storage::{FileStore, ObjectStore, SimParams};
+use crate::util::stats::LatencySummary;
+
+/// Experiment environment parameters.
+#[derive(Clone, Debug)]
+pub struct EnvOptions {
+    pub profile: &'static str,
+    /// dataset size (0 = profile default)
+    pub n: usize,
+    pub n_queries: usize,
+    pub selectivity: f64,
+    /// latency fidelity: 1.0 = full modeled latencies (benches),
+    /// 0.0 = no sleeping (unit tests)
+    pub time_scale: f64,
+    pub dre: bool,
+    /// "native" | "xla" | "auto"
+    pub backend: String,
+    pub seed: u64,
+}
+
+impl Default for EnvOptions {
+    fn default() -> Self {
+        Self {
+            profile: "sift",
+            n: 0,
+            n_queries: 1000,
+            selectivity: 0.08,
+            time_scale: 1.0,
+            dre: true,
+            backend: "native".to_string(),
+            seed: 42,
+        }
+    }
+}
+
+/// A fully deployed experiment environment.
+pub struct Env {
+    pub profile: &'static Profile,
+    pub ds: Dataset,
+    pub sys: SquashSystem,
+    pub queries: Vec<Query>,
+    pub platform: Arc<Platform>,
+    pub ledger: Arc<CostLedger>,
+    pub pricing: Pricing,
+}
+
+impl Env {
+    /// Generate data, build + deploy SQUASH, generate the workload.
+    pub fn setup(opts: &EnvOptions) -> Env {
+        let profile = by_name(opts.profile).unwrap_or_else(|| panic!("profile {}", opts.profile));
+        let ds = generate(profile, opts.n, opts.seed);
+        let ledger = Arc::new(CostLedger::new());
+        let params = SimParams { time_scale: opts.time_scale, ..Default::default() };
+        let platform = Arc::new(Platform::new(
+            FaasConfig { dre_enabled: opts.dre, ..Default::default() },
+            params.clone(),
+            ledger.clone(),
+        ));
+        let s3 = Arc::new(ObjectStore::new(params.clone(), ledger.clone()));
+        let efs = Arc::new(FileStore::new(params, ledger.clone()));
+        let engine = Engine::load_default().ok().map(Arc::new);
+        let backend: Arc<dyn ComputeBackend> = select_backend(&opts.backend, engine, profile.d);
+        let cfg = SquashConfig::for_profile(profile);
+        let sys = SquashSystem::build(&ds, &BuildOptions::for_profile(profile), cfg, platform.clone(), s3, efs, backend);
+        let queries = generate_workload(
+            &ds,
+            &WorkloadOptions {
+                n_queries: opts.n_queries,
+                selectivity: opts.selectivity,
+                ..Default::default()
+            },
+            opts.seed + 1,
+        )
+        .queries;
+        Env { profile, ds, sys, queries, platform, ledger, pricing: Pricing::default() }
+    }
+
+    /// Reconfigure the query path (e.g. a different tree shape) in place.
+    pub fn with_config(&mut self, f: impl FnOnce(&mut SquashConfig)) {
+        // SystemCtx is shared behind an Arc; rebuild it with the new config
+        let mut ctx = (*self.sys.ctx).clone_shallow();
+        f(&mut ctx.cfg);
+        self.sys.ctx = Arc::new(ctx);
+    }
+}
+
+impl crate::coordinator::SystemCtx {
+    /// Shallow clone (all fields are Arcs or small values).
+    pub fn clone_shallow(&self) -> crate::coordinator::SystemCtx {
+        crate::coordinator::SystemCtx {
+            cfg: self.cfg.clone(),
+            platform: self.platform.clone(),
+            s3: self.s3.clone(),
+            efs: self.efs.clone(),
+            ledger: self.ledger.clone(),
+            backend: self.backend.clone(),
+            cache: self.cache.clone(),
+            ds_name: self.ds_name.clone(),
+            d: self.d,
+            n_partitions: self.n_partitions,
+            t: self.t,
+        }
+    }
+}
+
+/// One measured batch run.
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    pub label: String,
+    pub queries: usize,
+    pub wall_s: f64,
+    pub qps: f64,
+    pub latency: LatencySummary,
+    pub cost: CostReport,
+    pub cost_per_query: f64,
+    pub recall: f64,
+}
+
+impl RunStats {
+    pub fn header() -> String {
+        format!(
+            "{:<26} {:>7} {:>9} {:>9} {:>12} {:>14} {:>8}",
+            "run", "queries", "wall(s)", "QPS", "p50(ms)", "$/query", "recall"
+        )
+    }
+}
+
+impl std::fmt::Display for RunStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<26} {:>7} {:>9.3} {:>9.1} {:>12.2} {:>14.9} {:>8.4}",
+            self.label,
+            self.queries,
+            self.wall_s,
+            self.qps,
+            self.latency.p50 * 1e3,
+            self.cost_per_query,
+            self.recall
+        )
+    }
+}
+
+/// Run SQUASH on the env's workload and measure everything. `truth_k`
+/// of 0 skips ground truth (fast sweeps).
+pub fn measure_squash(env: &Env, label: &str, truth_k: usize) -> RunStats {
+    let before = env.ledger.report(&env.pricing);
+    let out = env.sys.run_batch(&env.queries);
+    let after = env.ledger.report(&env.pricing);
+    let cost = delta_report(&before, &after);
+    let recall = if truth_k > 0 {
+        let truth = exact_batch(&env.ds, &env.queries, crate::util::threadpool::num_cpus());
+        mean_recall(&truth, &out.results, truth_k)
+    } else {
+        f64::NAN
+    };
+    // batch latency: the whole batch shares one CO round trip; per-query
+    // p50 is approximated by the wall over concurrent waves
+    let mut lat = crate::util::stats::LatencyRecorder::new();
+    lat.record(out.wall_s);
+    RunStats {
+        label: label.to_string(),
+        queries: env.queries.len(),
+        wall_s: out.wall_s,
+        qps: env.queries.len() as f64 / out.wall_s.max(1e-9),
+        latency: lat.summary(),
+        cost,
+        cost_per_query: cost.total() / env.queries.len().max(1) as f64,
+        recall,
+    }
+}
+
+/// Itemized difference of two cumulative ledger snapshots.
+pub fn delta_report(before: &CostReport, after: &CostReport) -> CostReport {
+    CostReport {
+        invocations: after.invocations - before.invocations,
+        cold_starts: after.cold_starts - before.cold_starts,
+        mb_seconds: after.mb_seconds - before.mb_seconds,
+        s3_gets: after.s3_gets - before.s3_gets,
+        efs_bytes: after.efs_bytes - before.efs_bytes,
+        payload_bytes: after.payload_bytes - before.payload_bytes,
+        c_invoc: after.c_invoc - before.c_invoc,
+        c_run: after.c_run - before.c_run,
+        c_s3: after.c_s3 - before.c_s3,
+        c_efs: after.c_efs - before.c_efs,
+    }
+}
+
+/// Deploy + measure System-X on the same dataset/workload.
+pub fn measure_system_x(env: &Env, truth_k: usize) -> RunStats {
+    let sx = SystemX::upsert(&env.ds, SystemXParams::default(), env.pricing.clone());
+    let out = sx.run_batch(&env.queries);
+    let recall = if truth_k > 0 {
+        let truth = exact_batch(&env.ds, &env.queries, crate::util::threadpool::num_cpus());
+        mean_recall(&truth, &out.results, truth_k)
+    } else {
+        f64::NAN
+    };
+    RunStats {
+        label: "system-x".to_string(),
+        queries: env.queries.len(),
+        wall_s: out.wall_s,
+        qps: env.queries.len() as f64 / out.wall_s.max(1e-9),
+        latency: out.latency.summary(),
+        cost: CostReport::default(),
+        cost_per_query: out.total_cost / env.queries.len().max(1) as f64,
+        recall,
+    }
+}
+
+/// Build + measure a server baseline on the same dataset/workload.
+pub fn measure_server(env: &Env, instance: InstanceType, truth_k: usize) -> RunStats {
+    let cfg = SquashConfig::for_profile(env.profile);
+    let server = ServerRunner::build(&env.ds, instance, cfg, env.profile.partitions);
+    let out = server.run_batch(&env.queries);
+    let recall = if truth_k > 0 {
+        let truth = exact_batch(&env.ds, &env.queries, crate::util::threadpool::num_cpus());
+        mean_recall(&truth, &out.results, truth_k)
+    } else {
+        f64::NAN
+    };
+    // provisioned cost amortized over this batch at full utilization is
+    // not meaningful per query; Fig 8 uses the daily-cost model instead.
+    RunStats {
+        label: format!("server {}", instance.name()),
+        queries: env.queries.len(),
+        wall_s: out.wall_s,
+        qps: env.queries.len() as f64 / out.wall_s.max(1e-9),
+        latency: out.latency.summary(),
+        cost: CostReport::default(),
+        cost_per_query: 0.0,
+        recall,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_setup_and_measure() {
+        let opts = EnvOptions {
+            profile: "test",
+            n: 1500,
+            n_queries: 10,
+            time_scale: 0.0,
+            ..Default::default()
+        };
+        let env = Env::setup(&opts);
+        let stats = measure_squash(&env, "smoke", 10);
+        assert_eq!(stats.queries, 10);
+        assert!(stats.qps > 0.0);
+        assert!(stats.recall > 0.5, "recall {}", stats.recall);
+        assert!(stats.cost.invocations > 0);
+        assert!(stats.cost_per_query > 0.0);
+    }
+
+    #[test]
+    fn with_config_changes_tree() {
+        let opts = EnvOptions {
+            profile: "test",
+            n: 800,
+            n_queries: 4,
+            time_scale: 0.0,
+            ..Default::default()
+        };
+        let mut env = Env::setup(&opts);
+        env.with_config(|c| c.tree = crate::coordinator::tree::TreeConfig::new(10, 1));
+        let stats = measure_squash(&env, "tree10", 0);
+        assert!(stats.recall.is_nan());
+        assert!(stats.cost.invocations > 0);
+    }
+}

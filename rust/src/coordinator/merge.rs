@@ -1,0 +1,105 @@
+//! MPI-style result reduction (paper §2.4.5): per-partition local top-k
+//! lists are merged into the global top-k by merge-sorting the ascending
+//! result lists.
+
+use crate::coordinator::payload::QueryResult;
+
+/// Merge any number of ascending (id, distance) lists into the global
+/// ascending top-k. Deterministic tie-break on id.
+pub fn merge_topk(lists: &[QueryResult], k: usize) -> QueryResult {
+    // k-way merge via repeated best-head selection (lists are short — the
+    // per-partition k — so the simple O(total · lists) scan beats a heap)
+    let mut cursors = vec![0usize; lists.len()];
+    let mut out = Vec::with_capacity(k);
+    while out.len() < k {
+        let mut best: Option<(usize, u64, f32)> = None;
+        for (li, list) in lists.iter().enumerate() {
+            if let Some(&(id, dist)) = list.get(cursors[li]) {
+                let better = match best {
+                    None => true,
+                    Some((_, bid, bdist)) => {
+                        dist < bdist || (dist == bdist && id < bid)
+                    }
+                };
+                if better {
+                    best = Some((li, id, dist));
+                }
+            }
+        }
+        match best {
+            None => break, // all lists exhausted
+            Some((li, id, dist)) => {
+                cursors[li] += 1;
+                // the same vector can never arrive from two partitions
+                // (partitions are disjoint), so no dedup is needed; debug
+                // builds verify anyway.
+                debug_assert!(
+                    !out.iter().any(|&(oid, _)| oid == id),
+                    "duplicate id {id} across partitions"
+                );
+                out.push((id, dist));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn merges_sorted_lists() {
+        let a = vec![(1u64, 0.1f32), (3, 0.5), (5, 0.9)];
+        let b = vec![(2u64, 0.2f32), (4, 0.6)];
+        let got = merge_topk(&[a, b], 4);
+        assert_eq!(got, vec![(1, 0.1), (2, 0.2), (3, 0.5), (4, 0.6)]);
+    }
+
+    #[test]
+    fn short_inputs_and_empty() {
+        assert_eq!(merge_topk(&[], 5), vec![]);
+        assert_eq!(merge_topk(&[vec![]], 5), vec![]);
+        let single = vec![(9u64, 1.0f32)];
+        assert_eq!(merge_topk(&[single.clone()], 5), single);
+    }
+
+    #[test]
+    fn tie_break_on_id() {
+        let a = vec![(7u64, 0.5f32)];
+        let b = vec![(3u64, 0.5f32)];
+        assert_eq!(merge_topk(&[a, b], 2), vec![(3, 0.5), (7, 0.5)]);
+    }
+
+    #[test]
+    fn prop_matches_global_sort() {
+        prop::check("merge-equals-sort", 50, |g| {
+            let n_lists = g.usize_in(0, 6);
+            let k = g.usize_in(0, 25);
+            let mut all: Vec<(u64, f32)> = Vec::new();
+            let mut next_id = 0u64;
+            let lists: Vec<QueryResult> = (0..n_lists)
+                .map(|_| {
+                    let len = g.usize_in(0, 20);
+                    let mut l: Vec<(u64, f32)> = (0..len)
+                        .map(|_| {
+                            next_id += 1; // ids disjoint across lists
+                            (next_id, g.f32_in(0.0, 10.0))
+                        })
+                        .collect();
+                    l.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+                    all.extend_from_slice(&l);
+                    l
+                })
+                .collect();
+            let got = merge_topk(&lists, k);
+            all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            all.truncate(k);
+            if got != all {
+                return Err(format!("merge {got:?} != sort {all:?}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,420 @@
+//! The SQUASH run-time system (paper §3): Coordinator, QueryAllocators
+//! and QueryProcessors over the simulated FaaS platform, wired through
+//! the tree-based invocation scheme with synchronous request/response
+//! payloads.
+//!
+//! Build path ([`SquashSystem::build`]): balanced partitioning → per
+//! partition OSQ index (+ low-bit index) → attribute Q-index → all
+//! serialized into object storage; full-precision vectors into the file
+//! store. Query path ([`SquashSystem::run_batch`]): CO → QA tree →
+//! per-partition QPs → merge — Python never appears here; the QP
+//! hot-spot math runs through the `runtime::ComputeBackend` (XLA
+//! artifacts or native).
+
+pub mod merge;
+pub mod payload;
+pub mod qa;
+pub mod qp;
+pub mod result_cache;
+pub mod tree;
+
+use std::sync::Arc;
+
+use crate::attrs::quantize::AttributeIndex;
+use crate::cost::{CostLedger, Role};
+use crate::coordinator::payload::{QaRequest, QaResponse, QueryResult};
+use crate::coordinator::result_cache::ResultCache;
+use crate::coordinator::tree::TreeConfig;
+use crate::data::workload::Query;
+use crate::data::Dataset;
+use crate::faas::{FaasConfig, Platform};
+use crate::osq::quantizer::{OsqIndex, OsqOptions};
+use crate::partition::kmeans::{balanced_kmeans, KMeansOptions};
+use crate::partition::{calibrate_threshold, PartitionLayout};
+use crate::runtime::backend::ComputeBackend;
+use crate::storage::{index_files, FileStore, ObjectStore, SimParams};
+use crate::util::rng::Rng;
+use crate::util::ser::{Reader, SerError, Writer};
+use crate::util::timer::Stopwatch;
+
+/// Query-path configuration (paper §5.3 operating point by default).
+#[derive(Clone, Debug)]
+pub struct SquashConfig {
+    pub tree: TreeConfig,
+    /// centroid-distance threshold T (0 => calibrate via Eq 1)
+    pub t_threshold: f32,
+    /// fraction kept by the low-bit Hamming cut (H_perc = 10 => 0.10)
+    pub h_keep: f64,
+    /// low-bit pruning enabled (ablation switch)
+    pub prune: bool,
+    /// post-refinement on full-precision vectors (§2.4.5)
+    pub refine: bool,
+    /// fine-tuning ratio R: refine R·k candidates (paper: 2)
+    pub refine_ratio: usize,
+    /// task interleaving across QA sub-batches (§3.4)
+    pub interleave: bool,
+    /// sub-batches per QA (interleaving granularity)
+    pub qa_batches: usize,
+    /// optional batch balancing after Algorithm 1
+    pub rebalance: bool,
+    /// result caching (§5.6; off by default as in the paper)
+    pub use_cache: bool,
+    /// over-gathering factor: Algorithm 1 keeps visiting partitions until
+    /// `gather_factor * k` passing candidates are found (in addition to the
+    /// T-threshold condition). 1 = the paper's literal L7; >1 trades a few
+    /// extra visits for recall robustness under highly selective filters.
+    pub gather_factor: usize,
+}
+
+impl Default for SquashConfig {
+    fn default() -> Self {
+        Self {
+            tree: TreeConfig::new(4, 3), // N_QA = 84, the balanced choice
+            t_threshold: 0.0,
+            h_keep: 0.10,
+            prune: true,
+            refine: true,
+            refine_ratio: 2,
+            interleave: true,
+            qa_batches: 2,
+            rebalance: false,
+            use_cache: false,
+            gather_factor: 3,
+        }
+    }
+}
+
+impl SquashConfig {
+    /// The paper's per-dataset operating point (§5.3): tuned T and
+    /// H_perc from the profile, everything else at defaults.
+    pub fn for_profile(p: &crate::data::profiles::Profile) -> Self {
+        Self {
+            t_threshold: p.t_threshold,
+            h_keep: p.h_keep,
+            refine_ratio: p.refine_ratio,
+            ..Default::default()
+        }
+    }
+}
+
+impl BuildOptions {
+    /// Build options matching a dataset profile (partitions, bit budget).
+    pub fn for_profile(p: &crate::data::profiles::Profile) -> Self {
+        Self { partitions: p.partitions, bit_budget: p.bit_budget, ..Default::default() }
+    }
+}
+
+/// Everything the handlers need, shared across all simulated functions.
+pub struct SystemCtx {
+    pub cfg: SquashConfig,
+    pub platform: Arc<Platform>,
+    pub s3: Arc<ObjectStore>,
+    pub efs: Arc<FileStore>,
+    pub ledger: Arc<CostLedger>,
+    pub backend: Arc<dyn ComputeBackend>,
+    pub cache: Arc<ResultCache>,
+    pub ds_name: String,
+    pub d: usize,
+    pub n_partitions: usize,
+    /// resolved threshold T
+    pub t: f32,
+}
+
+/// Index build options.
+#[derive(Clone, Debug)]
+pub struct BuildOptions {
+    pub partitions: usize,
+    pub bit_budget: usize,
+    pub use_klt: bool,
+    pub beta: f64,
+    pub seed: u64,
+    pub kmeans: KMeansOptions,
+    pub osq: OsqOptions,
+}
+
+impl Default for BuildOptions {
+    fn default() -> Self {
+        Self {
+            partitions: 4,
+            bit_budget: 0,
+            use_klt: true,
+            beta: 0.001,
+            seed: 0xBEEF,
+            kmeans: KMeansOptions::default(),
+            osq: OsqOptions::default(),
+        }
+    }
+}
+
+/// A partition's on-storage bundle: the OSQ index + local→global ids.
+pub struct PartitionFile {
+    pub index: OsqIndex,
+    pub globals: Vec<u64>,
+}
+
+impl PartitionFile {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        let idx_bytes = self.index.to_bytes();
+        w.bytes(&idx_bytes);
+        w.u64_slice(&self.globals);
+        w.into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, SerError> {
+        let mut r = Reader::new(bytes);
+        let idx_bytes = r.bytes()?;
+        let index = OsqIndex::from_bytes(idx_bytes)?;
+        let globals = r.u64_vec()?;
+        Ok(Self { index, globals })
+    }
+}
+
+/// Batch execution output.
+#[derive(Clone, Debug)]
+pub struct BatchOutput {
+    /// per-query results, indexed like the input batch
+    pub results: Vec<QueryResult>,
+    /// end-to-end wall seconds (CO invocation round trip)
+    pub wall_s: f64,
+}
+
+/// The deployed system.
+pub struct SquashSystem {
+    pub ctx: Arc<SystemCtx>,
+}
+
+impl SquashSystem {
+    /// Build all indexes from a dataset and "deploy": upload index files
+    /// to the object store, vectors to the file store.
+    pub fn build(
+        ds: &Dataset,
+        build: &BuildOptions,
+        cfg: SquashConfig,
+        platform: Arc<Platform>,
+        s3: Arc<ObjectStore>,
+        efs: Arc<FileStore>,
+        backend: Arc<dyn ComputeBackend>,
+    ) -> Self {
+        let mut rng = Rng::new(build.seed);
+        let ledger = platform.ledger.clone();
+
+        // 1. coarse partitioning
+        let clustering = balanced_kmeans(&ds.vectors, build.partitions, &build.kmeans, &mut rng);
+        let layout = PartitionLayout::from_clustering(&clustering);
+
+        // 2. per-partition OSQ indexes
+        let osq_opts = OsqOptions {
+            bit_budget: build.bit_budget,
+            use_klt: build.use_klt,
+            ..build.osq.clone()
+        };
+        for p in 0..layout.p {
+            let rows: Vec<usize> = layout.globals[p].iter().map(|&g| g as usize).collect();
+            let part_data = ds.vectors.select_rows(&rows);
+            let index = OsqIndex::build(&part_data, &osq_opts, &mut rng.fork(p as u64));
+            let file = PartitionFile { index, globals: layout.globals[p].clone() };
+            s3.put(&index_files::partition_key(&ds.name, p), file.to_bytes());
+        }
+
+        // 3. attribute Q-index + partition layout
+        let attr_index = AttributeIndex::build(&ds.attributes, 256);
+        s3.put(&index_files::attrs_key(&ds.name), attr_index.to_bytes());
+        s3.put(&index_files::layout_key(&ds.name), index_files::layout_to_bytes(&layout));
+
+        // 4. full-precision vectors on the file store
+        efs.put(&index_files::vectors_key(&ds.name), index_files::vectors_to_bytes(&ds.vectors));
+
+        // 5. threshold calibration (Eq 1) unless pinned by config
+        let t = if cfg.t_threshold > 0.0 {
+            cfg.t_threshold
+        } else {
+            calibrate_threshold(&ds.vectors, &layout, build.beta, 2000, &mut rng)
+        };
+
+        let ctx = Arc::new(SystemCtx {
+            cfg,
+            platform,
+            s3,
+            efs,
+            ledger,
+            backend,
+            cache: Arc::new(ResultCache::new()),
+            ds_name: ds.name.clone(),
+            d: ds.d(),
+            n_partitions: layout.p,
+            t,
+        });
+        Self { ctx }
+    }
+
+    /// Convenience constructor: default simulated platform + stores.
+    pub fn build_default(ds: &Dataset, build: &BuildOptions, cfg: SquashConfig, backend: Arc<dyn ComputeBackend>) -> Self {
+        let ledger = Arc::new(CostLedger::new());
+        let params = SimParams::instant();
+        let platform =
+            Arc::new(Platform::new(FaasConfig::default(), params.clone(), ledger.clone()));
+        let s3 = Arc::new(ObjectStore::new(params.clone(), ledger.clone()));
+        let efs = Arc::new(FileStore::new(params, ledger.clone()));
+        Self::build(ds, build, cfg, platform, s3, efs, backend)
+    }
+
+    /// Execute a query batch end-to-end through the Coordinator function.
+    pub fn run_batch(&self, queries: &[Query]) -> BatchOutput {
+        let ctx = self.ctx.clone();
+        let sw = Stopwatch::new();
+
+        // result cache (disabled by default): answer hits up front
+        let mut cached: Vec<Option<QueryResult>> = vec![None; queries.len()];
+        let mut live_idx: Vec<usize> = Vec::with_capacity(queries.len());
+        if ctx.cfg.use_cache {
+            for (i, q) in queries.iter().enumerate() {
+                match ctx.cache.get(q) {
+                    Some(hit) => cached[i] = Some(hit),
+                    None => live_idx.push(i),
+                }
+            }
+        } else {
+            live_idx.extend(0..queries.len());
+        }
+
+        let mut results: Vec<QueryResult> = vec![Vec::new(); queries.len()];
+        if !live_idx.is_empty() {
+            // Chunk the live set so each CO request/response stays under
+            // the synchronous-invocation payload cap (waves, like any
+            // real client driving Lambda with large batches).
+            let per_query_bytes = self.ctx.d * 4 + 160; // vector + predicate + framing
+            let max_wave = (self.ctx.platform.config.max_payload_bytes / 2 / per_query_bytes)
+                .max(1)
+                .min(live_idx.len());
+            for wave in live_idx.chunks(max_wave) {
+                let live: Vec<Query> = wave.iter().map(|&i| queries[i].clone()).collect();
+                let response = self.invoke_coordinator(&live);
+                for (local_idx, res) in response.results {
+                    let global = wave[local_idx];
+                    if ctx.cfg.use_cache {
+                        ctx.cache.put(&queries[global], res.clone());
+                    }
+                    results[global] = res;
+                }
+            }
+        }
+        for (i, c) in cached.into_iter().enumerate() {
+            if let Some(c) = c {
+                results[i] = c;
+            }
+        }
+        BatchOutput { results, wall_s: sw.secs() }
+    }
+
+    /// The CO function: splits the batch over the QA tree (Algorithm 2,
+    /// id = −1 case) and gathers the root QAs' responses.
+    fn invoke_coordinator(&self, queries: &[Query]) -> QaResponse {
+        let ctx = self.ctx.clone();
+        let mut enc = Writer::new();
+        enc.usize(queries.len());
+        for q in queries {
+            payload::write_query(&mut enc, q);
+        }
+        let ctx2 = ctx.clone();
+        let queries_owned: Vec<Query> = queries.to_vec();
+        let out = ctx
+            .platform
+            .invoke("squash-coordinator", Role::Coordinator, &enc.into_bytes(), move |_ictx, _p| {
+                co_handler(&ctx2, &queries_owned).to_bytes()
+            })
+            .expect("coordinator invocation");
+        QaResponse::from_bytes(&out).expect("coordinator response decode")
+    }
+}
+
+/// CO handler body: launch the root QAs on threads, merge subtree
+/// responses.
+fn co_handler(ctx: &Arc<SystemCtx>, queries: &[Query]) -> QaResponse {
+    let tree = ctx.cfg.tree;
+    let q_total = queries.len();
+    let children = tree.children(-1, 0);
+    let mut all = QaResponse::default();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for &(cid, clevel) in &children {
+            let (qs, qe) = tree.subtree_query_range(q_total, cid, clevel);
+            if qs >= qe {
+                continue; // subtree owns no queries (small batches)
+            }
+            let req = QaRequest {
+                id: cid,
+                level: clevel,
+                q_total,
+                q_offset: qs,
+                queries: queries[qs..qe].to_vec(),
+            };
+            let ctx = ctx.clone();
+            handles.push(scope.spawn(move || qa::invoke_qa(&ctx, req)));
+        }
+        for h in handles {
+            let resp = h.join().expect("root QA thread");
+            all.results.extend(resp.results);
+        }
+    });
+    all.results.sort_by_key(|&(qi, _)| qi);
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::profiles::by_name;
+    use crate::data::synthetic::generate;
+    use crate::data::workload::{generate_workload, WorkloadOptions};
+    use crate::runtime::backend::NativeBackend;
+
+    #[test]
+    fn partition_file_roundtrip() {
+        let ds = generate(by_name("test").unwrap(), 300, 1);
+        let mut rng = Rng::new(2);
+        let index = OsqIndex::build(&ds.vectors, &OsqOptions::default(), &mut rng);
+        let file = PartitionFile { index, globals: (0..300).map(|i| i as u64 * 3).collect() };
+        let back = PartitionFile::from_bytes(&file.to_bytes()).unwrap();
+        assert_eq!(back.globals, file.globals);
+        assert_eq!(back.index.packed, file.index.packed);
+    }
+
+    #[test]
+    fn build_uploads_all_index_files() {
+        let ds = generate(by_name("test").unwrap(), 1000, 3);
+        let sys = SquashSystem::build_default(
+            &ds,
+            &BuildOptions::default(),
+            SquashConfig::default(),
+            Arc::new(NativeBackend),
+        );
+        let ctx = &sys.ctx;
+        assert!(ctx.s3.contains(&index_files::attrs_key("test")));
+        assert!(ctx.s3.contains(&index_files::layout_key("test")));
+        for p in 0..ctx.n_partitions {
+            assert!(ctx.s3.contains(&index_files::partition_key("test", p)));
+        }
+        assert!(ctx.t > 1.0, "calibrated T = {}", ctx.t);
+    }
+
+    #[test]
+    fn result_cache_short_circuits() {
+        let ds = generate(by_name("test").unwrap(), 800, 5);
+        let cfg = SquashConfig { use_cache: true, ..Default::default() };
+        let sys = SquashSystem::build_default(
+            &ds,
+            &BuildOptions::default(),
+            cfg,
+            Arc::new(NativeBackend),
+        );
+        let w = generate_workload(&ds, &WorkloadOptions { n_queries: 4, ..Default::default() }, 6);
+        let first = sys.run_batch(&w.queries);
+        let invocations_after_first = sys.ctx.ledger.total_invocations();
+        let second = sys.run_batch(&w.queries);
+        assert_eq!(first.results, second.results);
+        // second batch must be answered fully from cache: no new invocations
+        assert_eq!(sys.ctx.ledger.total_invocations(), invocations_after_first);
+        assert!(sys.ctx.cache.hit_rate() > 0.0);
+    }
+}

@@ -1,0 +1,351 @@
+//! Request/response payload encodings for the synchronous FaaS
+//! invocations (the "bi-directional data flow via request/response
+//! payloads" of §3.3). Everything crossing a function boundary is
+//! byte-encoded through `util::ser`, so payload sizes — which drive the
+//! modeled transfer latency and the 6 MB cap — are the real encoded
+//! sizes.
+
+use crate::attrs::predicate::{Conjunction, Op, Predicate};
+use crate::data::workload::Query;
+use crate::util::ser::{Reader, SerError, Writer};
+
+// ---------------------------------------------------------------------
+// predicate / query encoding
+// ---------------------------------------------------------------------
+
+fn write_op(w: &mut Writer, op: &Op) {
+    match *op {
+        Op::Lt(x) => {
+            w.u8(1);
+            w.f32(x);
+        }
+        Op::Le(x) => {
+            w.u8(2);
+            w.f32(x);
+        }
+        Op::Eq(x) => {
+            w.u8(3);
+            w.f32(x);
+        }
+        Op::Gt(x) => {
+            w.u8(4);
+            w.f32(x);
+        }
+        Op::Ge(x) => {
+            w.u8(5);
+            w.f32(x);
+        }
+        Op::Between(x, y) => {
+            w.u8(6);
+            w.f32(x);
+            w.f32(y);
+        }
+    }
+}
+
+#[allow(dead_code)] // kept for symmetry with write_op; decode is inlined below
+fn read_op(r: &mut Reader) -> Result<Op, SerError> {
+    Ok(match r.u8()? {
+        1 => Op::Lt(r.f32()?),
+        2 => Op::Le(r.f32()?),
+        3 => Op::Eq(r.f32()?),
+        4 => Op::Gt(r.f32()?),
+        5 => Op::Ge(r.f32()?),
+        _ => {
+            let x = r.f32()?;
+            let y = r.f32()?;
+            Op::Between(x, y)
+        }
+    })
+}
+
+pub fn write_predicate(w: &mut Writer, p: &Predicate) {
+    w.usize(p.clauses.len());
+    for c in &p.clauses {
+        w.usize(c.ops.len());
+        for op in &c.ops {
+            match op {
+                None => w.u8(0),
+                Some(op) => write_op(w, op),
+            }
+        }
+    }
+}
+
+pub fn read_predicate(r: &mut Reader) -> Result<Predicate, SerError> {
+    let n_clauses = r.usize()?;
+    let mut clauses = Vec::with_capacity(n_clauses);
+    for _ in 0..n_clauses {
+        let n_ops = r.usize()?;
+        let mut ops = Vec::with_capacity(n_ops);
+        for _ in 0..n_ops {
+            // peek tag: 0 = None, else rewind-free decode
+            let tag = r.u8()?;
+            if tag == 0 {
+                ops.push(None);
+            } else {
+                let op = match tag {
+                    1 => Op::Lt(r.f32()?),
+                    2 => Op::Le(r.f32()?),
+                    3 => Op::Eq(r.f32()?),
+                    4 => Op::Gt(r.f32()?),
+                    5 => Op::Ge(r.f32()?),
+                    _ => {
+                        let x = r.f32()?;
+                        let y = r.f32()?;
+                        Op::Between(x, y)
+                    }
+                };
+                ops.push(Some(op));
+            }
+        }
+        clauses.push(Conjunction { ops });
+    }
+    Ok(Predicate { clauses })
+}
+
+pub fn write_query(w: &mut Writer, q: &Query) {
+    w.f32_slice(&q.vector);
+    write_predicate(w, &q.predicate);
+    w.usize(q.k);
+}
+
+pub fn read_query(r: &mut Reader) -> Result<Query, SerError> {
+    let vector = r.f32_vec()?;
+    let predicate = read_predicate(r)?;
+    let k = r.usize()?;
+    Ok(Query { vector, predicate, k })
+}
+
+// ---------------------------------------------------------------------
+// QA request / response
+// ---------------------------------------------------------------------
+
+/// Request sent to a QueryAllocator: its identity in the tree plus the
+/// query slice of its whole subtree.
+#[derive(Clone, Debug)]
+pub struct QaRequest {
+    pub id: i64,
+    pub level: usize,
+    /// total queries in the global batch (for slice arithmetic)
+    pub q_total: usize,
+    /// global index of `queries[0]`
+    pub q_offset: usize,
+    pub queries: Vec<Query>,
+}
+
+impl QaRequest {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.id as u64);
+        w.usize(self.level);
+        w.usize(self.q_total);
+        w.usize(self.q_offset);
+        w.usize(self.queries.len());
+        for q in &self.queries {
+            write_query(&mut w, q);
+        }
+        w.into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, SerError> {
+        let mut r = Reader::new(bytes);
+        let id = r.u64()? as i64;
+        let level = r.usize()?;
+        let q_total = r.usize()?;
+        let q_offset = r.usize()?;
+        let n = r.usize()?;
+        let mut queries = Vec::with_capacity(n);
+        for _ in 0..n {
+            queries.push(read_query(&mut r)?);
+        }
+        Ok(Self { id, level, q_total, q_offset, queries })
+    }
+}
+
+/// Per-query result list: global vector ids + distances, ascending.
+pub type QueryResult = Vec<(u64, f32)>;
+
+/// Response from a QA: results for every query in its subtree.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QaResponse {
+    /// (global query index, top-k results)
+    pub results: Vec<(usize, QueryResult)>,
+}
+
+impl QaResponse {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.usize(self.results.len());
+        for (qi, res) in &self.results {
+            w.usize(*qi);
+            w.usize(res.len());
+            for &(id, dist) in res {
+                w.u64(id);
+                w.f32(dist);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, SerError> {
+        let mut r = Reader::new(bytes);
+        let n = r.usize()?;
+        let mut results = Vec::with_capacity(n);
+        for _ in 0..n {
+            let qi = r.usize()?;
+            let m = r.usize()?;
+            let mut res = Vec::with_capacity(m);
+            for _ in 0..m {
+                res.push((r.u64()?, r.f32()?));
+            }
+            results.push((qi, res));
+        }
+        Ok(Self { results })
+    }
+}
+
+// ---------------------------------------------------------------------
+// QP request / response
+// ---------------------------------------------------------------------
+
+/// One query's work item for a partition processor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QpItem {
+    /// global query index (for response correlation)
+    pub query_idx: usize,
+    pub vector: Vec<f32>,
+    /// filter-passing local rows in this partition
+    pub local_rows: Vec<u32>,
+    pub k: usize,
+}
+
+/// Request to a QueryProcessor: batched per-partition work (§3.1: "it
+/// batches together the relevant queries for each partition").
+#[derive(Clone, Debug, PartialEq)]
+pub struct QpRequest {
+    pub partition: usize,
+    pub items: Vec<QpItem>,
+}
+
+impl QpRequest {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.usize(self.partition);
+        w.usize(self.items.len());
+        for it in &self.items {
+            w.usize(it.query_idx);
+            w.f32_slice(&it.vector);
+            w.u32_slice(&it.local_rows);
+            w.usize(it.k);
+        }
+        w.into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, SerError> {
+        let mut r = Reader::new(bytes);
+        let partition = r.usize()?;
+        let n = r.usize()?;
+        let mut items = Vec::with_capacity(n);
+        for _ in 0..n {
+            items.push(QpItem {
+                query_idx: r.usize()?,
+                vector: r.f32_vec()?,
+                local_rows: r.u32_vec()?,
+                k: r.usize()?,
+            });
+        }
+        Ok(Self { partition, items })
+    }
+}
+
+/// Response from a QueryProcessor: per item local top-k (global ids).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QpResponse {
+    pub results: Vec<(usize, QueryResult)>,
+}
+
+impl QpResponse {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        QaResponse { results: self.results.clone() }.to_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, SerError> {
+        Ok(Self { results: QaResponse::from_bytes(bytes)?.results })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attrs::predicate::parse_predicate;
+
+    #[test]
+    fn query_roundtrip() {
+        let q = Query {
+            vector: vec![1.0, -2.5, 3.25],
+            predicate: parse_predicate("a0<15 & a2 between 3 7 | a1>=2", 4).unwrap(),
+            k: 10,
+        };
+        let mut w = Writer::new();
+        write_query(&mut w, &q);
+        let bytes = w.into_bytes();
+        let back = read_query(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(back.vector, q.vector);
+        assert_eq!(back.predicate, q.predicate);
+        assert_eq!(back.k, 10);
+    }
+
+    #[test]
+    fn qa_request_roundtrip() {
+        let req = QaRequest {
+            id: 6,
+            level: 2,
+            q_total: 1000,
+            q_offset: 60,
+            queries: vec![Query {
+                vector: vec![0.5; 4],
+                predicate: Predicate::match_all(2),
+                k: 5,
+            }],
+        };
+        let back = QaRequest::from_bytes(&req.to_bytes()).unwrap();
+        assert_eq!(back.id, 6);
+        assert_eq!(back.level, 2);
+        assert_eq!(back.q_total, 1000);
+        assert_eq!(back.q_offset, 60);
+        assert_eq!(back.queries.len(), 1);
+    }
+
+    #[test]
+    fn qa_response_roundtrip() {
+        let resp = QaResponse {
+            results: vec![(3, vec![(7, 0.5), (9, 1.5)]), (4, vec![])],
+        };
+        assert_eq!(QaResponse::from_bytes(&resp.to_bytes()).unwrap(), resp);
+    }
+
+    #[test]
+    fn qp_roundtrip() {
+        let req = QpRequest {
+            partition: 3,
+            items: vec![QpItem {
+                query_idx: 11,
+                vector: vec![1.0, 2.0],
+                local_rows: vec![0, 5, 9],
+                k: 2,
+            }],
+        };
+        assert_eq!(QpRequest::from_bytes(&req.to_bytes()).unwrap(), req);
+        let resp = QpResponse { results: vec![(11, vec![(100, 0.25)])] };
+        assert_eq!(QpResponse::from_bytes(&resp.to_bytes()).unwrap(), resp);
+    }
+
+    #[test]
+    fn empty_payloads() {
+        let resp = QaResponse::default();
+        assert_eq!(QaResponse::from_bytes(&resp.to_bytes()).unwrap(), resp);
+        let qp = QpRequest { partition: 0, items: vec![] };
+        assert_eq!(QpRequest::from_bytes(&qp.to_bytes()).unwrap(), qp);
+    }
+}

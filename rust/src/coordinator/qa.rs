@@ -1,0 +1,232 @@
+//! QueryAllocator (paper §3.1): the query-parallel middle tier.
+//!
+//! Each QA, upon invocation, (1) determines its tree role and launches
+//! its child QAs on background threads (Algorithm 2), (2) runs the
+//! attribute-filtering + partition-selection pipeline for its own query
+//! slice, (3) batches per-partition work and synchronously invokes one
+//! QueryProcessor per visited partition, (4) merges per-partition
+//! results into global top-k lists, and (5) returns its own + its
+//! subtree's results to its parent.
+//!
+//! Task interleaving (§3.4): the QA's slice is processed in sub-batches;
+//! while the QPs of batch i are in flight, the QA prepares (filters +
+//! selects partitions for) batch i+1, overlapping communication with
+//! computation.
+
+use std::sync::Arc;
+
+use crate::attrs::mask::predicate_mask;
+use crate::attrs::quantize::AttributeIndex;
+use crate::coordinator::merge::merge_topk;
+use crate::coordinator::payload::{
+    QaRequest, QaResponse, QpItem, QpRequest, QpResponse, QueryResult,
+};
+use crate::coordinator::{qp, SystemCtx};
+use crate::cost::Role;
+use crate::data::workload::Query;
+use crate::partition::selection::{rebalance_batch, select_partitions};
+use crate::partition::PartitionLayout;
+use crate::storage::index_files;
+use crate::util::bitmap::Bitmap;
+
+/// Invoke one QA function synchronously (used by the CO and by parent
+/// QAs for their children).
+pub fn invoke_qa(ctx: &Arc<SystemCtx>, req: QaRequest) -> QaResponse {
+    let ctx2 = ctx.clone();
+    let bytes = req.to_bytes();
+    let out = ctx
+        .platform
+        .invoke("squash-qa", Role::QueryAllocator, &bytes, move |ictx, payload| {
+            let req = QaRequest::from_bytes(payload).expect("qa request decode");
+            qa_handler(&ctx2, ictx, req).to_bytes()
+        })
+        .expect("qa invocation");
+    QaResponse::from_bytes(&out).expect("qa response decode")
+}
+
+/// The QA function body.
+pub fn qa_handler(
+    ctx: &Arc<SystemCtx>,
+    ictx: &mut crate::faas::InvocationCtx,
+    req: QaRequest,
+) -> QaResponse {
+    let tree = ctx.cfg.tree;
+
+    // ---- 1. launch children first (Alg 2), then do own work ----------
+    let children = tree.children(req.id, req.level);
+    let mut response = QaResponse::default();
+    std::thread::scope(|scope| {
+        let mut child_handles = Vec::new();
+        for &(cid, clevel) in &children {
+            let (qs, qe) = tree.subtree_query_range(req.q_total, cid, clevel);
+            if qs >= qe {
+                continue;
+            }
+            let child_req = QaRequest {
+                id: cid,
+                level: clevel,
+                q_total: req.q_total,
+                q_offset: qs,
+                queries: req.queries[qs - req.q_offset..qe - req.q_offset].to_vec(),
+            };
+            let ctx = ctx.clone();
+            child_handles.push(scope.spawn(move || invoke_qa(&ctx, child_req)));
+        }
+
+        // ---- 2. own slice: load shared indexes (DRE first) ----------
+        let (own_start, own_end) = tree.query_slice(req.q_total, req.id as usize);
+        if own_start < own_end {
+            let attrs = load_attrs(ctx, ictx);
+            let layout = load_layout(ctx, ictx);
+            let own: Vec<(usize, &Query)> = (own_start..own_end)
+                .map(|qi| (qi, &req.queries[qi - req.q_offset]))
+                .collect();
+            let own_results = process_own_queries(ctx, &attrs, &layout, &own);
+            response.results.extend(own_results);
+        }
+
+        // ---- 5. gather child subtree results --------------------------
+        for h in child_handles {
+            let child = h.join().expect("child QA thread");
+            response.results.extend(child.results);
+        }
+    });
+    response
+}
+
+fn load_attrs(ctx: &Arc<SystemCtx>, ictx: &mut crate::faas::InvocationCtx) -> Arc<AttributeIndex> {
+    if let Some(a) = ictx.dre_get::<AttributeIndex>("attrs") {
+        return a;
+    }
+    let bytes = ctx
+        .s3
+        .get(&index_files::attrs_key(&ctx.ds_name))
+        .expect("attrs index in object store");
+    let parsed = Arc::new(AttributeIndex::from_bytes(&bytes).expect("attrs decode"));
+    ictx.dre_put("attrs", parsed.clone());
+    parsed
+}
+
+fn load_layout(ctx: &Arc<SystemCtx>, ictx: &mut crate::faas::InvocationCtx) -> Arc<PartitionLayout> {
+    if let Some(l) = ictx.dre_get::<PartitionLayout>("layout") {
+        return l;
+    }
+    let bytes = ctx
+        .s3
+        .get(&index_files::layout_key(&ctx.ds_name))
+        .expect("layout in object store");
+    let parsed =
+        Arc::new(index_files::layout_from_bytes(&bytes).expect("layout decode"));
+    ictx.dre_put("layout", parsed.clone());
+    parsed
+}
+
+/// A prepared sub-batch: per-partition QP requests plus the query ids it
+/// covers.
+struct PreparedBatch {
+    qp_requests: Vec<QpRequest>,
+    /// (global query index, that query's k)
+    query_ids: Vec<(usize, usize)>,
+}
+
+/// Steps 2–4 for the QA's own queries, with task interleaving across
+/// sub-batches.
+fn process_own_queries(
+    ctx: &Arc<SystemCtx>,
+    attrs: &AttributeIndex,
+    layout: &PartitionLayout,
+    own: &[(usize, &Query)],
+) -> Vec<(usize, QueryResult)> {
+    let n_batches = if ctx.cfg.interleave { ctx.cfg.qa_batches.max(1) } else { 1 };
+    let per = own.len().div_ceil(n_batches);
+    let batches: Vec<&[(usize, &Query)]> = own.chunks(per.max(1)).collect();
+
+    let mut results: Vec<(usize, QueryResult)> = Vec::with_capacity(own.len());
+    // prepare, then loop { invoke, prepare next, reduce } (§3.4)
+    let mut prepared: Option<PreparedBatch> = batches.first().map(|b| prepare_batch(ctx, attrs, layout, b));
+    let mut next_idx = 1;
+    while let Some(batch) = prepared.take() {
+        // fire QPs for this batch on background threads
+        let partials = std::thread::scope(|scope| {
+            let handles: Vec<_> = batch
+                .qp_requests
+                .iter()
+                .map(|qp_req| {
+                    let ctx = ctx.clone();
+                    let req = qp_req.clone();
+                    scope.spawn(move || qp::invoke_qp(&ctx, req))
+                })
+                .collect();
+            // overlap: prepare the next sub-batch while QPs run
+            if next_idx < batches.len() {
+                prepared = Some(prepare_batch(ctx, attrs, layout, batches[next_idx]));
+                next_idx += 1;
+            }
+            handles.into_iter().map(|h| h.join().expect("qp thread")).collect::<Vec<QpResponse>>()
+        });
+        // reduce: merge per-partition lists per query
+        results.extend(reduce_batch(&batch, partials));
+    }
+    results
+}
+
+/// Attribute filtering + Algorithm 1 for one sub-batch; builds the
+/// per-partition QP payloads.
+fn prepare_batch(
+    ctx: &Arc<SystemCtx>,
+    attrs: &AttributeIndex,
+    layout: &PartitionLayout,
+    batch: &[(usize, &Query)],
+) -> PreparedBatch {
+    let vectors: Vec<Vec<f32>> = batch.iter().map(|(_, q)| q.vector.clone()).collect();
+    let masks: Vec<Bitmap> =
+        batch.iter().map(|(_, q)| predicate_mask(attrs, &q.predicate)).collect();
+    let k = batch.iter().map(|(_, q)| q.k).max().unwrap_or(10);
+    // over-gather (see SquashConfig::gather_factor) for recall robustness
+    let target = k * ctx.cfg.gather_factor.max(1);
+    let mut plan = select_partitions(layout, &vectors, &masks, ctx.t, target);
+    if ctx.cfg.rebalance {
+        rebalance_batch(layout, &vectors, &masks, &mut plan, 1.5);
+    }
+    let mut qp_requests = Vec::new();
+    for (p, visits) in plan.visits.iter().enumerate() {
+        if visits.is_empty() {
+            continue;
+        }
+        let items: Vec<QpItem> = visits
+            .iter()
+            .map(|v| QpItem {
+                query_idx: batch[v.query].0,
+                vector: batch[v.query].1.vector.clone(),
+                local_rows: v.local_rows.clone(),
+                k: batch[v.query].1.k,
+            })
+            .collect();
+        qp_requests.push(QpRequest { partition: p, items });
+    }
+    PreparedBatch {
+        qp_requests,
+        query_ids: batch.iter().map(|(qi, q)| (*qi, q.k)).collect(),
+    }
+}
+
+/// Merge-sort reduce of per-partition results (§2.4.5).
+fn reduce_batch(batch: &PreparedBatch, partials: Vec<QpResponse>) -> Vec<(usize, QueryResult)> {
+    let mut per_query: std::collections::HashMap<usize, Vec<QueryResult>> =
+        batch.query_ids.iter().map(|&(qi, _)| (qi, Vec::new())).collect();
+    for resp in partials {
+        for (qi, res) in resp.results {
+            per_query.entry(qi).or_default().push(res);
+        }
+    }
+    let k_of: std::collections::HashMap<usize, usize> = batch.query_ids.iter().copied().collect();
+    let mut out: Vec<(usize, QueryResult)> = per_query
+        .into_iter()
+        .map(|(qi, lists)| {
+            let k = k_of.get(&qi).copied().unwrap_or(10);
+            (qi, merge_topk(&lists, k))
+        })
+        .collect();
+    out.sort_by_key(|&(qi, _)| qi);
+    out
+}

@@ -1,0 +1,142 @@
+//! QueryProcessor (paper §3.1): per-partition processing.
+//!
+//! Pipeline per query item (all on the candidate rows delivered by the
+//! QA — vectors failing the filter never touch the QP):
+//!   1. load the partition's OSQ index (DRE hit or S3 GET),
+//!   2. low-bit OSQ Hamming pruning, keeping the best `H_perc` (§2.4.3),
+//!   3. fine-grained LB distances via the ADC LUT (§2.4.4) through the
+//!      configured ComputeBackend (XLA artifacts or native Rust),
+//!   4. optional post-refinement: R·k full-precision vectors fetched from
+//!      the file store (EFS random reads), exact distances, re-rank
+//!      (§2.4.5),
+//!   5. local top-k (global ids) returned to the calling QA.
+//!
+//! Each partition has its own function name (`squash-processor-{p}`), so
+//! a warm container's retained index always matches its partition.
+
+use std::sync::Arc;
+
+use crate::coordinator::payload::{QpRequest, QpResponse, QueryResult};
+use crate::coordinator::{PartitionFile, SystemCtx};
+use crate::cost::Role;
+use crate::osq::binary::select_by_hamming_with_ties;
+use crate::osq::distance::top_k_smallest;
+use crate::storage::index_files;
+use crate::util::matrix::l2_sq;
+
+/// Invoke the QP for one partition synchronously.
+pub fn invoke_qp(ctx: &Arc<SystemCtx>, req: QpRequest) -> QpResponse {
+    let function = format!("squash-processor-{}", req.partition);
+    let ctx2 = ctx.clone();
+    let bytes = req.to_bytes();
+    let out = ctx
+        .platform
+        .invoke(&function, Role::QueryProcessor, &bytes, move |ictx, payload| {
+            let req = QpRequest::from_bytes(payload).expect("qp request decode");
+            qp_handler(&ctx2, ictx, req).to_bytes()
+        })
+        .expect("qp invocation");
+    QpResponse::from_bytes(&out).expect("qp response decode")
+}
+
+/// The QP function body.
+pub fn qp_handler(
+    ctx: &Arc<SystemCtx>,
+    ictx: &mut crate::faas::InvocationCtx,
+    req: QpRequest,
+) -> QpResponse {
+    let file = load_partition(ctx, ictx, req.partition);
+    let idx = &file.index;
+    let mut results = Vec::with_capacity(req.items.len());
+    for item in &req.items {
+        if item.local_rows.is_empty() {
+            results.push((item.query_idx, Vec::new()));
+            continue;
+        }
+        let rows: Vec<usize> = item.local_rows.iter().map(|&r| r as usize).collect();
+        let qf = idx.query_frame(&item.vector);
+
+        // ---- low-bit OSQ pruning (§2.4.3) -----------------------------
+        // Pruning pays off when the filter left many candidates ("this is
+        // particularly important when the filter predicate is not highly
+        // restrictive"); tiny candidate sets go straight to the LB scan.
+        let prune_floor = (4 * item.k * ctx.cfg.refine_ratio).max(64);
+        let survivors: Vec<usize> = if ctx.cfg.prune && rows.len() > prune_floor {
+            let h = ctx.backend.hamming_scan(idx, &item.vector, &rows);
+            // keep H_perc of candidates but never fewer than R·k (the
+            // refinement budget must stay fillable)
+            let keep = ((rows.len() as f64 * ctx.cfg.h_keep).ceil() as usize)
+                .max(item.k * ctx.cfg.refine_ratio)
+                .min(rows.len());
+            select_by_hamming_with_ties(&h, idx.d, keep).into_iter().map(|i| rows[i]).collect()
+        } else {
+            rows.clone()
+        };
+
+        // ---- fine-grained LB distances (§2.4.4) ------------------------
+        let lb = ctx.backend.lb_scan(idx, &qf, &survivors);
+        let shortlist_len = (item.k * ctx.cfg.refine_ratio).max(item.k);
+        let shortlist = top_k_smallest(
+            lb.iter()
+                .enumerate()
+                .map(|(i, &d)| (file.globals[survivors[i]], d)),
+            shortlist_len.min(survivors.len()),
+        );
+
+        // ---- optional post-refinement (§2.4.5) -------------------------
+        let top = if ctx.cfg.refine && !shortlist.is_empty() {
+            refine(ctx, &item.vector, &shortlist, item.k)
+        } else {
+            let mut s = shortlist;
+            s.truncate(item.k);
+            s
+        };
+        results.push((item.query_idx, top));
+    }
+    QpResponse { results }
+}
+
+/// Load the partition index bundle, preferring retained data (DRE).
+fn load_partition(
+    ctx: &Arc<SystemCtx>,
+    ictx: &mut crate::faas::InvocationCtx,
+    partition: usize,
+) -> Arc<PartitionFile> {
+    let key = format!("partition-{partition}");
+    if let Some(f) = ictx.dre_get::<PartitionFile>(&key) {
+        return f;
+    }
+    let bytes = ctx
+        .s3
+        .get(&index_files::partition_key(&ctx.ds_name, partition))
+        .expect("partition index in object store");
+    let parsed = Arc::new(PartitionFile::from_bytes(&bytes).expect("partition decode"));
+    ictx.dre_put(&key, parsed.clone());
+    parsed
+}
+
+/// Fetch R·k full-precision vectors (random EFS reads), compute exact
+/// squared distances, return the exact top-k.
+fn refine(
+    ctx: &Arc<SystemCtx>,
+    query: &[f32],
+    shortlist: &[(u64, f32)],
+    k: usize,
+) -> QueryResult {
+    let key = index_files::vectors_key(&ctx.ds_name);
+    let ranges: Vec<(usize, usize)> = shortlist
+        .iter()
+        .map(|&(id, _)| index_files::vector_range(ctx.d, id))
+        .collect();
+    let Some(blobs) = ctx.efs.read_many(&key, &ranges) else {
+        // file store unavailable: fall back to LB ordering
+        let mut s = shortlist.to_vec();
+        s.truncate(k);
+        return s;
+    };
+    let exact = shortlist.iter().zip(&blobs).map(|(&(id, _), blob)| {
+        let v = index_files::decode_vector(blob, ctx.d);
+        (id, l2_sq(query, &v))
+    });
+    top_k_smallest(exact, k)
+}

@@ -1,0 +1,115 @@
+//! Lightweight result cache (paper §3.2 / §5.6): saves results of
+//! earlier queries and short-circuits repeated requests. Disabled by
+//! default; enabled only for the Table-3 caching comparison against
+//! Vexless, exactly as in the paper.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::coordinator::payload::QueryResult;
+use crate::data::workload::Query;
+use crate::util::rng::mix64;
+
+/// Key = hash of (vector bits, predicate, k).
+fn query_key(q: &Query) -> u64 {
+    let mut h = q.predicate.cache_key() ^ mix64(q.k as u64);
+    for &v in &q.vector {
+        h = mix64(h ^ v.to_bits() as u64);
+    }
+    h
+}
+
+/// Thread-safe exact-match result cache.
+#[derive(Default)]
+pub struct ResultCache {
+    map: RwLock<HashMap<u64, QueryResult>>,
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+impl ResultCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, q: &Query) -> Option<QueryResult> {
+        let key = query_key(q);
+        let got = self.map.read().unwrap().get(&key).cloned();
+        match &got {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        got
+    }
+
+    pub fn put(&self, q: &Query, result: QueryResult) {
+        self.map.write().unwrap().insert(query_key(q), result);
+    }
+
+    /// Drop all entries and reset counters (benchmark protocol reuse).
+    pub fn clear(&self) {
+        self.map.write().unwrap().clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits.load(Ordering::Relaxed) as f64;
+        let m = self.misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attrs::predicate::{parse_predicate, Predicate};
+
+    fn query(v: Vec<f32>, pred: &str, k: usize) -> Query {
+        Query {
+            vector: v,
+            predicate: if pred.is_empty() {
+                Predicate::match_all(2)
+            } else {
+                parse_predicate(pred, 2).unwrap()
+            },
+            k,
+        }
+    }
+
+    #[test]
+    fn hit_and_miss() {
+        let c = ResultCache::new();
+        let q = query(vec![1.0, 2.0], "a0<5", 10);
+        assert!(c.get(&q).is_none());
+        c.put(&q, vec![(3, 0.5)]);
+        assert_eq!(c.get(&q).unwrap(), vec![(3, 0.5)]);
+        assert_eq!(c.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(c.misses.load(Ordering::Relaxed), 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinguishes_vector_predicate_and_k() {
+        let c = ResultCache::new();
+        let base = query(vec![1.0, 2.0], "a0<5", 10);
+        c.put(&base, vec![(1, 0.1)]);
+        assert!(c.get(&query(vec![1.0, 2.1], "a0<5", 10)).is_none());
+        assert!(c.get(&query(vec![1.0, 2.0], "a0<6", 10)).is_none());
+        assert!(c.get(&query(vec![1.0, 2.0], "a0<5", 11)).is_none());
+        assert!(c.get(&base).is_some());
+    }
+}

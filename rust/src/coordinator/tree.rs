@@ -1,0 +1,230 @@
+//! Tree-based FaaS invocation — Algorithm 2 and Figure 7 of the paper.
+//!
+//! The Coordinator (id = −1, level 0) launches F root QueryAllocators;
+//! every internal QA launches F children, down to `l_max` levels. IDs are
+//! assigned so each node's subtree is a *contiguous* ID range — the
+//! "jump size" J_S of Algorithm 2 — which lets every parent know exactly
+//! which child IDs will return results to it, with no coordination
+//! channel beyond the synchronous request/response payloads.
+//!
+//! Total allocators: `N_QA = F · (1 − F^l_max) / (1 − F)` (Alg 2, L1) —
+//! the paper's configurations: (F=10, l=1) → 10, (4,2) → 20, (4,3) → 84,
+//! (5,3) → 155, (6,3) → 258, (4,4) → 340.
+
+/// Tree shape parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TreeConfig {
+    /// branching factor F
+    pub f: usize,
+    /// maximum QA level l_max (levels are 1..=l_max; CO is level 0)
+    pub l_max: usize,
+}
+
+impl TreeConfig {
+    pub fn new(f: usize, l_max: usize) -> Self {
+        assert!(f >= 1 && l_max >= 1);
+        Self { f, l_max }
+    }
+
+    /// Pick (F, l_max) producing the paper's N_QA values.
+    pub fn for_n_qa(n_qa: usize) -> Option<Self> {
+        for (n, f, l) in [
+            (10, 10, 1),
+            (20, 4, 2),
+            (84, 4, 3),
+            (155, 5, 3),
+            (258, 6, 3),
+            (340, 4, 4),
+        ] {
+            if n == n_qa {
+                return Some(Self::new(f, l));
+            }
+        }
+        None
+    }
+
+    /// Total number of QAs in the tree (Alg 2 line 1).
+    pub fn n_qa(&self) -> usize {
+        // F + F^2 + ... + F^l_max
+        let mut total = 0usize;
+        let mut level_count = 1usize;
+        for _ in 0..self.l_max {
+            level_count *= self.f;
+            total += level_count;
+        }
+        total
+    }
+
+    /// Nodes in the subtree rooted at a node of `level` (inclusive).
+    /// span(l_max) = 1; span(l) = 1 + F * span(l+1).
+    pub fn span(&self, level: usize) -> usize {
+        assert!((1..=self.l_max).contains(&level));
+        let mut s = 1usize;
+        for _ in level..self.l_max {
+            s = 1 + self.f * s;
+        }
+        s
+    }
+
+    /// Child QA ids+levels of a node (`id = -1, level = 0` is the CO).
+    /// Children are spaced by their subtree span so ID ranges nest.
+    pub fn children(&self, id: i64, level: usize) -> Vec<(i64, usize)> {
+        if level >= self.l_max {
+            return Vec::new(); // leaf QA
+        }
+        let child_level = level + 1;
+        let child_span = self.span(child_level) as i64;
+        // first child: CO's first child is 0; a QA's first child is id+1
+        let first = if id < 0 { 0 } else { id + 1 };
+        (0..self.f as i64).map(|i| (first + i * child_span, child_level)).collect()
+    }
+
+    /// The contiguous QA-ID range `[lo, hi]` of the subtree rooted at
+    /// (id, level) — the IDs a parent expects results from.
+    pub fn subtree_range(&self, id: i64, level: usize) -> (usize, usize) {
+        assert!(id >= 0 && level >= 1);
+        let s = self.span(level);
+        (id as usize, id as usize + s - 1)
+    }
+
+    /// Contiguous query slice `[start, end)` owned by QA `id` when
+    /// `q_total` queries are split over all allocators (CO splits the
+    /// batch; each QA works its own slice and forwards the rest).
+    pub fn query_slice(&self, q_total: usize, id: usize) -> (usize, usize) {
+        let n = self.n_qa();
+        debug_assert!(id < n);
+        let per = q_total.div_ceil(n);
+        let start = (id * per).min(q_total);
+        let end = ((id + 1) * per).min(q_total);
+        (start, end)
+    }
+
+    /// The query range covering a whole subtree (what the parent sends).
+    pub fn subtree_query_range(&self, q_total: usize, id: i64, level: usize) -> (usize, usize) {
+        let (lo, hi) = self.subtree_range(id, level);
+        let (start, _) = self.query_slice(q_total, lo);
+        let (_, end) = self.query_slice(q_total, hi);
+        (start, end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn paper_configurations() {
+        for (f, l, n) in [(10, 1, 10), (4, 2, 20), (4, 3, 84), (5, 3, 155), (6, 3, 258), (4, 4, 340)]
+        {
+            assert_eq!(TreeConfig::new(f, l).n_qa(), n, "F={f} l={l}");
+            assert_eq!(TreeConfig::for_n_qa(n), Some(TreeConfig::new(f, l)));
+        }
+        assert!(TreeConfig::for_n_qa(7).is_none());
+    }
+
+    fn collect_ids(cfg: &TreeConfig) -> Vec<i64> {
+        // BFS from the CO, collecting every QA id
+        let mut out = Vec::new();
+        let mut frontier = vec![(-1i64, 0usize)];
+        while let Some((id, level)) = frontier.pop() {
+            for (cid, clevel) in cfg.children(id, level) {
+                out.push(cid);
+                frontier.push((cid, clevel));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn ids_cover_exactly_0_to_nqa() {
+        for (f, l) in [(10, 1), (4, 2), (4, 3), (5, 3), (3, 4), (2, 5)] {
+            let cfg = TreeConfig::new(f, l);
+            let mut ids = collect_ids(&cfg);
+            ids.sort_unstable();
+            let want: Vec<i64> = (0..cfg.n_qa() as i64).collect();
+            assert_eq!(ids, want, "F={f} l={l}");
+        }
+    }
+
+    #[test]
+    fn subtree_ranges_nest_and_match_children() {
+        let cfg = TreeConfig::new(4, 3);
+        // root child 0 owns [0, 20] (span(1) = 21)
+        assert_eq!(cfg.span(1), 21);
+        assert_eq!(cfg.subtree_range(0, 1), (0, 20));
+        let kids = cfg.children(0, 1);
+        assert_eq!(kids.len(), 4);
+        // children partition [1, 20] into 4 spans of 5
+        assert_eq!(kids, vec![(1, 2), (6, 2), (11, 2), (16, 2)]);
+        for &(kid, klevel) in &kids {
+            let (lo, hi) = cfg.subtree_range(kid, klevel);
+            assert!(lo >= 1 && hi <= 20);
+        }
+        // leaves have no children
+        assert!(cfg.children(2, 3).is_empty());
+    }
+
+    #[test]
+    fn prop_id_scheme_invariants() {
+        prop::check("tree-id-invariants", 40, |g| {
+            let f = g.usize_in(2, 6);
+            let l = g.usize_in(1, 4);
+            let cfg = TreeConfig::new(f, l);
+            let mut ids = collect_ids(&cfg);
+            let n = cfg.n_qa();
+            ids.sort_unstable();
+            ids.dedup();
+            if ids.len() != n {
+                return Err(format!("expected {n} unique ids, got {}", ids.len()));
+            }
+            if ids[0] != 0 || *ids.last().unwrap() != (n - 1) as i64 {
+                return Err("ids not contiguous from 0".into());
+            }
+            // every node's children lie inside its subtree range
+            let mut frontier = vec![(-1i64, 0usize)];
+            while let Some((id, level)) = frontier.pop() {
+                for (cid, clevel) in cfg.children(id, level) {
+                    if id >= 0 {
+                        let (lo, hi) = cfg.subtree_range(id, level);
+                        if (cid as usize) < lo || (cid as usize) > hi {
+                            return Err(format!("child {cid} outside parent {id} range"));
+                        }
+                    }
+                    frontier.push((cid, clevel));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn query_slices_partition_the_batch() {
+        prop::check("tree-query-slices", 30, |g| {
+            let f = g.usize_in(2, 5);
+            let l = g.usize_in(1, 3);
+            let cfg = TreeConfig::new(f, l);
+            let q = g.usize_in(0, 2000);
+            let mut covered = 0usize;
+            for id in 0..cfg.n_qa() {
+                let (s, e) = cfg.query_slice(q, id);
+                if s != covered.min(q) {
+                    return Err(format!("slice {id} starts at {s}, want {covered}"));
+                }
+                covered = e;
+            }
+            if covered != q {
+                return Err(format!("covered {covered} != {q}"));
+            }
+            // subtree ranges agree with concatenated slices
+            let (s, e) = cfg.subtree_query_range(q, 0, 1);
+            let (s0, _) = cfg.query_slice(q, 0);
+            let (lo, hi) = cfg.subtree_range(0, 1);
+            let (_, e1) = cfg.query_slice(q, hi);
+            if s != s0 || e != e1 || lo != 0 {
+                return Err("subtree query range mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

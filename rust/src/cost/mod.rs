@@ -1,0 +1,280 @@
+//! Cost model for serverless distributed vector search (paper §3.5,
+//! Equations 3–8) plus the baseline pricing models used in §5.4.
+//!
+//!   C_Total = C_λ + C_S3 + C_EFS                      (Eq 3)
+//!   C_λ     = C_Invoc + C_Run                          (Eq 4)
+//!   C_Invoc = (N_QA + N_QP + 1) · C_λ(Inv)             (Eq 5)
+//!   C_Run   = (M_QA Σ T_A + M_QP Σ T_P + M_CO T_CO) · C_λ(Run)   (Eq 6)
+//!   C_S3    = L · C_S3(Get)                            (Eq 7)
+//!   C_EFS   = (S · R_Size) · C_EFS(Byte)               (Eq 8)
+//!
+//! All accounting flows through [`CostLedger`], which every simulated
+//! component (FaaS platform, object store, file store) updates.
+
+pub mod pricing;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use pricing::Pricing;
+
+/// Which run-time entity a charge belongs to (memory sizes differ).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Coordinator,
+    QueryAllocator,
+    QueryProcessor,
+}
+
+/// Thread-safe accumulator of every billable event in a run.
+#[derive(Debug, Default)]
+pub struct CostLedger {
+    // Lambda
+    pub invocations_co: AtomicU64,
+    pub invocations_qa: AtomicU64,
+    pub invocations_qp: AtomicU64,
+    pub cold_starts: AtomicU64,
+    /// MB-seconds by role, stored as micro-MB-seconds for atomicity
+    mbs_co_micro: AtomicU64,
+    mbs_qa_micro: AtomicU64,
+    mbs_qp_micro: AtomicU64,
+    // storage
+    pub s3_gets: AtomicU64,
+    pub s3_bytes: AtomicU64,
+    pub efs_reads: AtomicU64,
+    pub efs_bytes: AtomicU64,
+    // payload traffic (diagnostics, not billed by AWS Lambda)
+    pub payload_bytes: AtomicU64,
+    /// per-role wall runtimes (seconds), for reports
+    runtimes: Mutex<Vec<(Role, f64)>>,
+}
+
+impl CostLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_invocation(&self, role: Role, cold: bool) {
+        match role {
+            Role::Coordinator => &self.invocations_co,
+            Role::QueryAllocator => &self.invocations_qa,
+            Role::QueryProcessor => &self.invocations_qp,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+        if cold {
+            self.cold_starts.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a function execution: `seconds` of billed runtime at
+    /// `memory_mb` of configured memory.
+    pub fn record_runtime(&self, role: Role, memory_mb: u32, seconds: f64) {
+        let micro = (seconds * memory_mb as f64 * 1e6) as u64;
+        match role {
+            Role::Coordinator => &self.mbs_co_micro,
+            Role::QueryAllocator => &self.mbs_qa_micro,
+            Role::QueryProcessor => &self.mbs_qp_micro,
+        }
+        .fetch_add(micro, Ordering::Relaxed);
+        self.runtimes.lock().unwrap().push((role, seconds));
+    }
+
+    pub fn record_s3_get(&self, bytes: u64) {
+        self.s3_gets.fetch_add(1, Ordering::Relaxed);
+        self.s3_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn record_efs_read(&self, bytes: u64) {
+        self.efs_reads.fetch_add(1, Ordering::Relaxed);
+        self.efs_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn record_payload(&self, bytes: u64) {
+        self.payload_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn mb_seconds(&self, role: Role) -> f64 {
+        let micro = match role {
+            Role::Coordinator => &self.mbs_co_micro,
+            Role::QueryAllocator => &self.mbs_qa_micro,
+            Role::QueryProcessor => &self.mbs_qp_micro,
+        };
+        micro.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn total_invocations(&self) -> u64 {
+        self.invocations_co.load(Ordering::Relaxed)
+            + self.invocations_qa.load(Ordering::Relaxed)
+            + self.invocations_qp.load(Ordering::Relaxed)
+    }
+
+    /// Evaluate the cost model (Eqs 3–8) against a pricing sheet.
+    pub fn report(&self, pricing: &Pricing) -> CostReport {
+        let invocations = self.total_invocations();
+        let c_invoc = invocations as f64 * pricing.lambda_per_invocation;
+        let mbs_total = self.mb_seconds(Role::Coordinator)
+            + self.mb_seconds(Role::QueryAllocator)
+            + self.mb_seconds(Role::QueryProcessor);
+        let c_run = mbs_total * pricing.lambda_per_mb_second;
+        let c_s3 = self.s3_gets.load(Ordering::Relaxed) as f64 * pricing.s3_per_get;
+        let c_efs = self.efs_bytes.load(Ordering::Relaxed) as f64 * pricing.efs_per_byte;
+        CostReport {
+            invocations,
+            cold_starts: self.cold_starts.load(Ordering::Relaxed),
+            mb_seconds: mbs_total,
+            s3_gets: self.s3_gets.load(Ordering::Relaxed),
+            efs_bytes: self.efs_bytes.load(Ordering::Relaxed),
+            payload_bytes: self.payload_bytes.load(Ordering::Relaxed),
+            c_invoc,
+            c_run,
+            c_s3,
+            c_efs,
+        }
+    }
+}
+
+/// Itemized cost of a run (Eq 3 decomposition).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CostReport {
+    pub invocations: u64,
+    pub cold_starts: u64,
+    pub mb_seconds: f64,
+    pub s3_gets: u64,
+    pub efs_bytes: u64,
+    pub payload_bytes: u64,
+    pub c_invoc: f64,
+    pub c_run: f64,
+    pub c_s3: f64,
+    pub c_efs: f64,
+}
+
+impl CostReport {
+    /// C_Total (Eq 3).
+    pub fn total(&self) -> f64 {
+        self.c_invoc + self.c_run + self.c_s3 + self.c_efs
+    }
+}
+
+impl std::fmt::Display for CostReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "${:.6} (invoc ${:.6} [{} calls, {} cold], run ${:.6} [{:.1} MB-s], s3 ${:.6} [{} GETs], efs ${:.6} [{} B])",
+            self.total(),
+            self.c_invoc,
+            self.invocations,
+            self.cold_starts,
+            self.c_run,
+            self.mb_seconds,
+            self.c_s3,
+            self.s3_gets,
+            self.c_efs,
+            self.efs_bytes
+        )
+    }
+}
+
+/// Provisioned-server daily cost (§5.4 baselines: two instances for
+/// redundancy/burst, billed hourly regardless of load).
+pub fn server_daily_cost(hourly: f64, instances: usize) -> f64 {
+    hourly * 24.0 * instances as f64
+}
+
+/// System-X (commercial serverless vector DB) per-query cost: read units
+/// scale with dimensionality and top-k (pay-per-read-unit pricing).
+pub fn system_x_query_cost(pricing: &Pricing, d: usize, k: usize) -> f64 {
+    let read_units = pricing.system_x_base_ru
+        + (d as f64 / 128.0) * pricing.system_x_ru_per_128d
+        + k as f64 * 0.05;
+    read_units * pricing.system_x_per_ru
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use pricing::Pricing;
+
+    #[test]
+    fn eq5_invocation_cost() {
+        let l = CostLedger::new();
+        let p = Pricing::aws_eu_west_1();
+        // N_QA = 84, N_QP = 300, + 1 CO
+        for _ in 0..84 {
+            l.record_invocation(Role::QueryAllocator, false);
+        }
+        for _ in 0..300 {
+            l.record_invocation(Role::QueryProcessor, false);
+        }
+        l.record_invocation(Role::Coordinator, true);
+        let r = l.report(&p);
+        assert_eq!(r.invocations, 385);
+        assert!((r.c_invoc - 385.0 * p.lambda_per_invocation).abs() < 1e-15);
+        assert_eq!(r.cold_starts, 1);
+    }
+
+    #[test]
+    fn eq6_runtime_cost_weights_memory() {
+        let l = CostLedger::new();
+        let p = Pricing::aws_eu_west_1();
+        l.record_runtime(Role::QueryAllocator, 1770, 2.0);
+        l.record_runtime(Role::Coordinator, 512, 1.0);
+        let r = l.report(&p);
+        let want = (1770.0 * 2.0 + 512.0 * 1.0) * p.lambda_per_mb_second;
+        assert!((r.c_run - want).abs() < 1e-12, "{} vs {want}", r.c_run);
+    }
+
+    #[test]
+    fn eq7_eq8_storage_costs() {
+        let l = CostLedger::new();
+        let p = Pricing::aws_eu_west_1();
+        for _ in 0..1000 {
+            l.record_s3_get(1 << 20);
+        }
+        l.record_efs_read(512 * 1000);
+        let r = l.report(&p);
+        assert!((r.c_s3 - 1000.0 * p.s3_per_get).abs() < 1e-12);
+        assert!((r.c_efs - 512_000.0 * p.efs_per_byte).abs() < 1e-12);
+        // S3 charges per GET, not per byte
+        assert_eq!(r.s3_gets, 1000);
+    }
+
+    #[test]
+    fn total_is_sum() {
+        let l = CostLedger::new();
+        let p = Pricing::aws_eu_west_1();
+        l.record_invocation(Role::QueryProcessor, false);
+        l.record_runtime(Role::QueryProcessor, 1770, 0.5);
+        l.record_s3_get(100);
+        l.record_efs_read(4096);
+        let r = l.report(&p);
+        assert!((r.total() - (r.c_invoc + r.c_run + r.c_s3 + r.c_efs)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn server_and_system_x_models() {
+        let p = Pricing::aws_eu_west_1();
+        assert!(server_daily_cost(p.c7i_16xlarge_hourly, 2) > server_daily_cost(p.c7i_4xlarge_hourly, 2));
+        // GIST (960d) queries cost more than SIFT (128d) queries
+        assert!(system_x_query_cost(&p, 960, 10) > system_x_query_cost(&p, 128, 10));
+    }
+
+    #[test]
+    fn ledger_thread_safety() {
+        let l = std::sync::Arc::new(CostLedger::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let l = l.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    l.record_s3_get(1);
+                    l.record_invocation(Role::QueryProcessor, false);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(l.s3_gets.load(Ordering::Relaxed), 8000);
+        assert_eq!(l.total_invocations(), 8000);
+    }
+}

@@ -1,0 +1,77 @@
+//! Attribute generation (paper §5.1): "we generate A = 4 uniform
+//! attributes for each dataset", supporting both real-valued and
+//! categorical kinds. Numeric attributes are grid-valued (integers
+//! 0..=99) so quantized filtering is exact — see `attrs::quantize`.
+
+use crate::attrs::quantize::AttrValue;
+use crate::util::rng::Rng;
+
+/// Grid size for numeric attributes (100 distinct values, like price
+/// points or star ratings scaled).
+pub const NUMERIC_GRID: usize = 100;
+
+/// Cardinality for the categorical attribute when A >= 4.
+pub const CATEGORICAL_CARD: usize = 16;
+
+/// Generate per-vector attribute rows: attributes 0..A-2 are uniform
+/// numeric on the grid; the last is categorical (mixed-type coverage —
+/// the paper supports both kinds).
+pub fn generate_attributes(n: usize, a: usize, rng: &mut Rng) -> Vec<Vec<AttrValue>> {
+    (0..n)
+        .map(|_| {
+            (0..a)
+                .map(|attr| {
+                    if attr + 1 == a && a > 1 {
+                        AttrValue::Cat(rng.gen_range(CATEGORICAL_CARD) as u32)
+                    } else {
+                        AttrValue::Num(rng.gen_range(NUMERIC_GRID) as f32)
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_kinds() {
+        let mut rng = Rng::new(1);
+        let rows = generate_attributes(200, 4, &mut rng);
+        assert_eq!(rows.len(), 200);
+        for r in &rows {
+            assert_eq!(r.len(), 4);
+            for v in &r[..3] {
+                match v {
+                    AttrValue::Num(x) => {
+                        assert!(*x >= 0.0 && *x < NUMERIC_GRID as f32 && x.fract() == 0.0)
+                    }
+                    _ => panic!("expected numeric"),
+                }
+            }
+            match r[3] {
+                AttrValue::Cat(c) => assert!((c as usize) < CATEGORICAL_CARD),
+                _ => panic!("expected categorical"),
+            }
+        }
+    }
+
+    #[test]
+    fn roughly_uniform() {
+        let mut rng = Rng::new(2);
+        let rows = generate_attributes(20_000, 2, &mut rng);
+        let mut hist = vec![0usize; NUMERIC_GRID];
+        for r in &rows {
+            hist[r[0].as_f32() as usize] += 1;
+        }
+        let expect = 20_000 / NUMERIC_GRID;
+        for (v, &c) in hist.iter().enumerate() {
+            assert!(
+                c > expect / 2 && c < expect * 2,
+                "value {v} count {c} vs expect {expect}"
+            );
+        }
+    }
+}

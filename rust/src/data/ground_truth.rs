@@ -1,0 +1,111 @@
+//! Filtered brute-force ground truth and recall accounting
+//! (paper §5.1: recall@k = |G ∩ R| / k with G the filter-satisfying true
+//! nearest neighbors).
+
+use crate::attrs::mask::naive_mask;
+use crate::data::workload::Query;
+use crate::data::Dataset;
+use crate::osq::distance::top_k_smallest;
+use crate::util::matrix::l2_sq;
+use crate::util::threadpool::parallel_map;
+
+/// Exact filtered top-k for one query (brute force over passing rows).
+pub fn exact_top_k(ds: &Dataset, q: &Query) -> Vec<(u64, f32)> {
+    let mask = naive_mask(&ds.attributes, &q.predicate);
+    top_k_smallest(
+        mask.iter_ones().map(|i| (i as u64, l2_sq(&q.vector, ds.vectors.row(i)))),
+        q.k,
+    )
+}
+
+/// Ground truth for a batch, computed in parallel.
+pub fn exact_batch(ds: &Dataset, queries: &[Query], threads: usize) -> Vec<Vec<(u64, f32)>> {
+    parallel_map(queries, threads, |_, q| exact_top_k(ds, q))
+}
+
+/// recall@k of retrieved ids vs ground-truth ids.
+pub fn recall_at_k(truth: &[(u64, f32)], retrieved: &[(u64, f32)], k: usize) -> f64 {
+    if k == 0 {
+        return 1.0;
+    }
+    let gt: std::collections::HashSet<u64> = truth.iter().take(k).map(|&(i, _)| i).collect();
+    if gt.is_empty() {
+        // no vector satisfies the filter: define recall as 1 when the
+        // system also returns nothing relevant
+        return if retrieved.is_empty() { 1.0 } else { 1.0 };
+    }
+    let hits = retrieved.iter().take(k).filter(|&&(i, _)| gt.contains(&i)).count();
+    // the paper divides by k; when fewer than k vectors pass globally,
+    // divide by the achievable count so recall stays in [0, 1]
+    hits as f64 / gt.len().min(k) as f64
+}
+
+/// Mean recall@k over a batch.
+pub fn mean_recall(
+    truth: &[Vec<(u64, f32)>],
+    retrieved: &[Vec<(u64, f32)>],
+    k: usize,
+) -> f64 {
+    assert_eq!(truth.len(), retrieved.len());
+    if truth.is_empty() {
+        return 1.0;
+    }
+    let total: f64 =
+        truth.iter().zip(retrieved).map(|(t, r)| recall_at_k(t, r, k)).sum();
+    total / truth.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::profiles::by_name;
+    use crate::data::synthetic::generate;
+    use crate::data::workload::{generate_workload, WorkloadOptions};
+
+    #[test]
+    fn exact_results_pass_filter_and_sorted() {
+        let ds = generate(by_name("test").unwrap(), 3000, 1);
+        let w = generate_workload(&ds, &WorkloadOptions { n_queries: 10, ..Default::default() }, 2);
+        for q in &w.queries {
+            let top = exact_top_k(&ds, q);
+            assert!(top.len() <= q.k);
+            for win in top.windows(2) {
+                assert!(win[0].1 <= win[1].1);
+            }
+            for &(id, dist) in &top {
+                assert!(q.predicate.eval(&ds.attributes[id as usize]));
+                let want = l2_sq(&q.vector, ds.vectors.row(id as usize));
+                assert!((dist - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let ds = generate(by_name("test").unwrap(), 1000, 3);
+        let w = generate_workload(&ds, &WorkloadOptions { n_queries: 8, ..Default::default() }, 4);
+        let batch = exact_batch(&ds, &w.queries, 4);
+        for (q, b) in w.queries.iter().zip(&batch) {
+            assert_eq!(&exact_top_k(&ds, q), b);
+        }
+    }
+
+    #[test]
+    fn recall_accounting() {
+        let truth = vec![(1u64, 0.1f32), (2, 0.2), (3, 0.3)];
+        let perfect = truth.clone();
+        assert_eq!(recall_at_k(&truth, &perfect, 3), 1.0);
+        let partial = vec![(1u64, 0.1f32), (9, 0.15), (3, 0.3)];
+        assert!((recall_at_k(&truth, &partial, 3) - 2.0 / 3.0).abs() < 1e-12);
+        let empty: Vec<(u64, f32)> = vec![];
+        assert_eq!(recall_at_k(&empty, &empty, 5), 1.0);
+    }
+
+    #[test]
+    fn recall_with_fewer_than_k_passing() {
+        // only 2 vectors pass the filter globally; returning both = 1.0
+        let truth = vec![(4u64, 0.5f32), (7, 0.9)];
+        let got = vec![(4u64, 0.5f32), (7, 0.9)];
+        assert_eq!(recall_at_k(&truth, &got, 10), 1.0);
+    }
+}

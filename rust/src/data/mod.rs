@@ -1,0 +1,46 @@
+//! Datasets, attributes, workloads and ground truth (paper §5.1).
+//!
+//! The paper evaluates on SIFT1M / GIST1M / SIFT10M / DEEP10M. Those
+//! binaries are not available offline, so `synthetic` generates clustered
+//! datasets with the same dimensionality and a matched difficulty knob
+//! (cluster count / noise / anisotropy standing in for LID) — see
+//! DESIGN.md §2 for the substitution argument. All sizes are config
+//! driven; the defaults keep CI fast while `--scale` reproduces larger
+//! runs.
+
+pub mod attributes;
+pub mod ground_truth;
+pub mod profiles;
+pub mod synthetic;
+pub mod workload;
+
+use crate::attrs::quantize::AttrValue;
+use crate::util::matrix::Matrix;
+
+/// An attributed vector dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub vectors: Matrix,
+    /// per-vector attribute rows (A values each)
+    pub attributes: Vec<Vec<AttrValue>>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.vectors.n()
+    }
+
+    pub fn d(&self) -> usize {
+        self.vectors.d()
+    }
+
+    pub fn n_attrs(&self) -> usize {
+        self.attributes.first().map(|a| a.len()).unwrap_or(0)
+    }
+
+    /// Size of the raw full-precision vectors on disk (EFS cost input).
+    pub fn vector_bytes(&self) -> usize {
+        self.n() * self.d() * 4
+    }
+}

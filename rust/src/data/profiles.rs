@@ -1,0 +1,140 @@
+//! Dataset profiles mirroring the paper's Table 2, with scaled default
+//! sizes for the offline reproduction (full sizes are a config change).
+
+/// A dataset profile (paper Table 2 row).
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub name: &'static str,
+    /// dimensionality (matches the paper exactly)
+    pub d: usize,
+    /// paper's N
+    pub paper_n: usize,
+    /// default N for the reproduction runs
+    pub default_n: usize,
+    /// per-vector bit budget b = 4 * d (paper Table 2)
+    pub bit_budget: usize,
+    /// partitions P (paper §5.3: 10 for 1M-scale, 20 for 10M-scale)
+    pub partitions: usize,
+    /// paper's tuned centroid-distance threshold T (§5.3)
+    pub t_threshold: f32,
+    /// Hamming cut keep-fraction (paper's H_perc = 10 => 0.10, tuned per
+    /// dataset; low-d profiles need a wider cut — 1-bit signatures get
+    /// coarser as d shrinks)
+    pub h_keep: f64,
+    /// fine-tuning ratio R (§2.4.5): refine R*k candidates. Paper uses 2
+    /// on the real datasets; the synthetic GIST-like profile needs 4 (its
+    /// 4-bit LB ordering is weaker at d=960 than on real GIST).
+    pub refine_ratio: usize,
+    /// clusters in the synthetic mixture (difficulty knob; higher LID
+    /// datasets get more, tighter clusters)
+    pub clusters: usize,
+    /// within-cluster noise scale relative to center spread
+    pub noise: f32,
+    /// number of attributes A (paper §5.1: 4)
+    pub n_attrs: usize,
+}
+
+/// The paper's four datasets plus a tiny CI profile (d=16 matches the
+/// `test` XLA artifact configuration).
+pub const PROFILES: &[Profile] = &[
+    Profile {
+        name: "test",
+        d: 16,
+        paper_n: 0,
+        default_n: 4_000,
+        bit_budget: 64,
+        partitions: 4,
+        t_threshold: 1.15,
+        h_keep: 0.60,
+        refine_ratio: 2,
+        clusters: 16,
+        noise: 0.35,
+        n_attrs: 4,
+    },
+    Profile {
+        name: "sift",
+        d: 128,
+        paper_n: 1_000_000,
+        default_n: 100_000,
+        bit_budget: 512,
+        partitions: 10,
+        t_threshold: 1.15,
+        h_keep: 0.15,
+        refine_ratio: 2,
+        clusters: 64,
+        noise: 0.35,
+        n_attrs: 4,
+    },
+    Profile {
+        name: "gist",
+        d: 960,
+        paper_n: 1_000_000,
+        default_n: 20_000,
+        bit_budget: 3840,
+        partitions: 10,
+        t_threshold: 1.2,
+        h_keep: 0.25,
+        refine_ratio: 4,
+        clusters: 32,
+        noise: 0.5, // higher LID (29.1): noisier, less separable
+        n_attrs: 4,
+    },
+    Profile {
+        name: "sift10m",
+        d: 128,
+        paper_n: 10_000_000,
+        default_n: 200_000,
+        bit_budget: 512,
+        partitions: 20,
+        t_threshold: 1.15,
+        h_keep: 0.15,
+        refine_ratio: 2,
+        clusters: 64,
+        noise: 0.35,
+        n_attrs: 4,
+    },
+    Profile {
+        name: "deep",
+        d: 96,
+        paper_n: 10_000_000,
+        default_n: 200_000,
+        bit_budget: 384,
+        partitions: 20,
+        t_threshold: 1.13,
+        h_keep: 0.30,
+        refine_ratio: 2,
+        clusters: 80,
+        noise: 0.3, // lowest LID (10.2): cleanest clusters
+        n_attrs: 4,
+    },
+];
+
+/// Look up a profile by name.
+pub fn by_name(name: &str) -> Option<&'static Profile> {
+    PROFILES.iter().find(|p| p.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table2_dimensions() {
+        assert_eq!(by_name("sift").unwrap().d, 128);
+        assert_eq!(by_name("gist").unwrap().d, 960);
+        assert_eq!(by_name("sift10m").unwrap().d, 128);
+        assert_eq!(by_name("deep").unwrap().d, 96);
+    }
+
+    #[test]
+    fn bit_budget_is_4d() {
+        for p in PROFILES {
+            assert_eq!(p.bit_budget, 4 * p.d, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn unknown_profile() {
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,119 @@
+//! Synthetic attributed-vector dataset generation.
+//!
+//! Clustered anisotropic Gaussian mixtures: cluster centers are spread in
+//! a low-ish effective-rank subspace (energy decays per dimension, like
+//! real descriptor data after whitening), with per-cluster noise. This
+//! reproduces the properties OSQ exploits — correlated dimensions with
+//! decaying variance (KLT + non-uniform bit allocation), and cluster
+//! structure (balanced partitioning + threshold-based selection).
+
+use crate::data::attributes::generate_attributes;
+use crate::data::profiles::Profile;
+use crate::data::Dataset;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Generate a dataset for a profile at size `n` (0 = profile default).
+pub fn generate(profile: &Profile, n: usize, seed: u64) -> Dataset {
+    let n = if n == 0 { profile.default_n } else { n };
+    let d = profile.d;
+    let k = profile.clusters;
+    let mut rng = Rng::new(seed ^ 0x5941_7444);
+
+    // per-dimension energy decay: var_j ~ 1 / (1 + j)^0.7, randomly
+    // permuted so the interesting dims are not axis-aligned-by-index
+    let mut scales: Vec<f32> =
+        (0..d).map(|j| (1.0 / (1.0 + j as f32).powf(0.7)).sqrt()).collect();
+    rng.shuffle(&mut scales);
+
+    // cluster centers + per-cluster anisotropy
+    let centers: Vec<Vec<f32>> = (0..k)
+        .map(|_| (0..d).map(|j| rng.normal() * 3.0 * scales[j]).collect())
+        .collect();
+    let cluster_noise: Vec<f32> =
+        (0..k).map(|_| profile.noise * rng.f32_range(0.6, 1.4)).collect();
+
+    let mut crng = rng.fork(1);
+    let vectors = Matrix::from_rows_fn(n, d, |_, row| {
+        let c = crng.gen_range(k);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = centers[c][j] + crng.normal() * cluster_noise[c] * scales[j];
+        }
+    });
+
+    let attributes = generate_attributes(n, profile.n_attrs, &mut rng.fork(2));
+    Dataset { name: profile.name.to_string(), vectors, attributes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::profiles::by_name;
+
+    #[test]
+    fn shapes_match_profile() {
+        let p = by_name("test").unwrap();
+        let ds = generate(p, 500, 7);
+        assert_eq!(ds.n(), 500);
+        assert_eq!(ds.d(), 16);
+        assert_eq!(ds.n_attrs(), 4);
+        assert_eq!(ds.attributes.len(), 500);
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = by_name("test").unwrap();
+        let a = generate(p, 100, 42);
+        let b = generate(p, 100, 42);
+        assert_eq!(a.vectors, b.vectors);
+        assert_eq!(a.attributes, b.attributes);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let p = by_name("test").unwrap();
+        let a = generate(p, 100, 1);
+        let b = generate(p, 100, 2);
+        assert_ne!(a.vectors, b.vectors);
+    }
+
+    #[test]
+    fn variance_is_nonuniform() {
+        // the energy-decay knob must produce dims worth > 4 bits and dims
+        // worth < 4 bits, or the non-uniform allocation is pointless
+        let p = by_name("test").unwrap();
+        let ds = generate(p, 2000, 3);
+        let vars = ds.vectors.col_variances();
+        let max = vars.iter().cloned().fold(0f32, f32::max);
+        let min = vars.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(max / min.max(1e-9) > 4.0, "variance ratio {}", max / min);
+    }
+
+    #[test]
+    fn clustered_not_degenerate() {
+        let p = by_name("test").unwrap();
+        let ds = generate(p, 1000, 9);
+        // nearest-neighbor distance should be much smaller than the
+        // average pairwise distance in a clustered set
+        let m = &ds.vectors;
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut nn_sum = 0f64;
+        let mut avg_sum = 0f64;
+        for _ in 0..30 {
+            let i = rng.gen_range(m.n());
+            let mut nn = f32::INFINITY;
+            let mut avg = 0f64;
+            for j in 0..m.n() {
+                if i == j {
+                    continue;
+                }
+                let d2 = crate::util::matrix::l2_sq(m.row(i), m.row(j));
+                nn = nn.min(d2);
+                avg += d2 as f64;
+            }
+            nn_sum += nn as f64;
+            avg_sum += avg / (m.n() - 1) as f64;
+        }
+        assert!(nn_sum * 4.0 < avg_sum, "no cluster structure: {nn_sum} vs {avg_sum}");
+    }
+}

@@ -1,0 +1,168 @@
+//! Hybrid-query workload generation (paper §5.1): 1000 queries per run,
+//! each with a vector (a perturbed database vector, the standard
+//! benchmark construction) and a multi-attribute predicate with a target
+//! joint selectivity of ~8%.
+
+use crate::attrs::predicate::{Conjunction, Op, Predicate};
+use crate::data::attributes::{CATEGORICAL_CARD, NUMERIC_GRID};
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+
+/// One hybrid query: vector + predicate + top-k limit.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub vector: Vec<f32>,
+    pub predicate: Predicate,
+    pub k: usize,
+}
+
+/// A batch workload.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub queries: Vec<Query>,
+}
+
+/// Workload generation options.
+#[derive(Clone, Debug)]
+pub struct WorkloadOptions {
+    pub n_queries: usize,
+    pub k: usize,
+    /// target joint selectivity (paper: 0.08). 1.0 => match-all (pure ANN)
+    pub selectivity: f64,
+    /// noise added to the seed database vector
+    pub query_noise: f32,
+}
+
+impl Default for WorkloadOptions {
+    fn default() -> Self {
+        Self { n_queries: 1000, k: 10, selectivity: 0.08, query_noise: 0.1 }
+    }
+}
+
+/// Generate a workload over a dataset.
+///
+/// Per-attribute range predicates are sized so their product hits the
+/// joint selectivity target: with A attributes each gets selectivity
+/// `s^(1/A)` — numeric attrs get a random BETWEEN window of that width on
+/// the grid, the categorical attr gets an equality-set via BETWEEN over
+/// category codes (contiguous ids ≈ fraction of categories).
+pub fn generate_workload(ds: &Dataset, opts: &WorkloadOptions, seed: u64) -> Workload {
+    let mut rng = Rng::new(seed ^ 0x574C_4F41);
+    let a = ds.n_attrs();
+    let queries = (0..opts.n_queries)
+        .map(|_| {
+            // query vector: perturbed database row
+            let base = rng.gen_range(ds.n());
+            let vector: Vec<f32> = ds
+                .vectors
+                .row(base)
+                .iter()
+                .map(|&v| v + rng.normal() * opts.query_noise)
+                .collect();
+            let predicate = if opts.selectivity >= 1.0 || a == 0 {
+                Predicate::match_all(a)
+            } else {
+                let per_attr = (opts.selectivity.powf(1.0 / a as f64)).clamp(0.0, 1.0);
+                let mut c = Conjunction::all_pass(a);
+                for attr in 0..a {
+                    let op = if attr + 1 == a && a > 1 {
+                        // categorical: contiguous id range covering per_attr
+                        let width = ((CATEGORICAL_CARD as f64 * per_attr).round() as usize)
+                            .clamp(1, CATEGORICAL_CARD);
+                        let lo = rng.gen_range(CATEGORICAL_CARD - width + 1);
+                        Op::Between(lo as f32, (lo + width - 1) as f32)
+                    } else {
+                        let width = ((NUMERIC_GRID as f64 * per_attr).round() as usize)
+                            .clamp(1, NUMERIC_GRID);
+                        let lo = rng.gen_range(NUMERIC_GRID - width + 1);
+                        Op::Between(lo as f32, (lo + width - 1) as f32)
+                    };
+                    c = c.with(attr, op);
+                }
+                Predicate::single(c)
+            };
+            Query { vector, predicate, k: opts.k }
+        })
+        .collect();
+    Workload { queries }
+}
+
+/// Arrival models for the cost experiments (paper §5.4: "queries arrive
+/// at uniform intervals over a 24 hour period").
+#[derive(Clone, Copy, Debug)]
+pub enum ArrivalModel {
+    /// `volume` queries spread evenly over `period_s` seconds
+    Uniform { volume: u64, period_s: f64 },
+}
+
+impl ArrivalModel {
+    /// Mean inter-arrival gap in seconds.
+    pub fn mean_gap_s(&self) -> f64 {
+        match *self {
+            ArrivalModel::Uniform { volume, period_s } => period_s / volume.max(1) as f64,
+        }
+    }
+
+    pub fn volume(&self) -> u64 {
+        match *self {
+            ArrivalModel::Uniform { volume, .. } => volume,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attrs::mask::naive_mask;
+    use crate::data::profiles::by_name;
+    use crate::data::synthetic::generate;
+
+    #[test]
+    fn workload_shapes() {
+        let ds = generate(by_name("test").unwrap(), 2000, 1);
+        let w = generate_workload(&ds, &WorkloadOptions::default(), 2);
+        assert_eq!(w.queries.len(), 1000);
+        assert!(w.queries.iter().all(|q| q.vector.len() == 16 && q.k == 10));
+    }
+
+    #[test]
+    fn selectivity_near_target() {
+        let ds = generate(by_name("test").unwrap(), 20_000, 3);
+        let opts = WorkloadOptions { n_queries: 60, ..Default::default() };
+        let w = generate_workload(&ds, &opts, 4);
+        let sels: Vec<f64> = w
+            .queries
+            .iter()
+            .map(|q| naive_mask(&ds.attributes, &q.predicate).count_ones() as f64 / 20_000.0)
+            .collect();
+        let mean = crate::util::stats::mean(&sels);
+        assert!((mean - 0.08).abs() < 0.03, "mean selectivity {mean}");
+        // every query admits at least a few candidates
+        assert!(sels.iter().all(|&s| s > 0.0), "empty predicate generated");
+    }
+
+    #[test]
+    fn match_all_option() {
+        let ds = generate(by_name("test").unwrap(), 500, 5);
+        let opts = WorkloadOptions { selectivity: 1.0, n_queries: 5, ..Default::default() };
+        let w = generate_workload(&ds, &opts, 6);
+        assert!(w.queries.iter().all(|q| q.predicate.is_match_all()));
+    }
+
+    #[test]
+    fn arrival_model() {
+        let m = ArrivalModel::Uniform { volume: 86_400, period_s: 86_400.0 };
+        assert!((m.mean_gap_s() - 1.0).abs() < 1e-9);
+        assert_eq!(m.volume(), 86_400);
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = generate(by_name("test").unwrap(), 1000, 7);
+        let a = generate_workload(&ds, &WorkloadOptions::default(), 8);
+        let b = generate_workload(&ds, &WorkloadOptions::default(), 8);
+        assert_eq!(a.queries.len(), b.queries.len());
+        assert_eq!(a.queries[0].vector, b.queries[0].vector);
+        assert_eq!(a.queries[0].predicate, b.queries[0].predicate);
+    }
+}

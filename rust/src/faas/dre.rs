@@ -1,0 +1,69 @@
+//! Data Retention Exploitation store (paper §3.2).
+//!
+//! AWS Lambda re-uses execution environments across invocations; any
+//! state parked in a global ("singleton class" in the paper's Python)
+//! survives. `DreStore` is that global area: a typed KV map living inside
+//! a simulated container. QA/QP handlers check it before fetching index
+//! files from object storage, eliminating redundant I/O on warm starts.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Type-erased retained-data store (one per container).
+#[derive(Default)]
+pub struct DreStore {
+    map: HashMap<String, Arc<dyn Any + Send + Sync>>,
+}
+
+impl DreStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get<T: Send + Sync + 'static>(&self, key: &str) -> Option<Arc<T>> {
+        self.map.get(key).and_then(|v| v.clone().downcast::<T>().ok())
+    }
+
+    pub fn put<T: Send + Sync + 'static>(&mut self, key: &str, value: Arc<T>) {
+        self.map.insert(key.to_string(), value);
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_roundtrip() {
+        let mut s = DreStore::new();
+        s.put("a", Arc::new(vec![1u32, 2]));
+        s.put("b", Arc::new("text".to_string()));
+        assert_eq!(*s.get::<Vec<u32>>("a").unwrap(), vec![1, 2]);
+        assert_eq!(*s.get::<String>("b").unwrap(), "text");
+        assert!(s.get::<u64>("a").is_none(), "wrong type yields None");
+        assert!(s.get::<u32>("missing").is_none());
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn overwrite() {
+        let mut s = DreStore::new();
+        s.put("k", Arc::new(1u32));
+        s.put("k", Arc::new(2u32));
+        assert_eq!(*s.get::<u32>("k").unwrap(), 2);
+        assert_eq!(s.len(), 1);
+    }
+}

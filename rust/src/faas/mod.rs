@@ -1,0 +1,344 @@
+//! FaaS platform simulator (paper §3): Lambda-like function containers
+//! with cold/warm starts, synchronous invocation with request/response
+//! payloads, per-invocation billing, and container reuse — the substrate
+//! for Data Retention Exploitation (§3.2).
+//!
+//! What is simulated vs real: *compute inside a handler runs for real on
+//! this host*; invocation overheads, payload transfer and storage I/O are
+//! modeled latencies injected through [`SimParams`] (scaled sleeps).
+//! Billing follows AWS semantics: a function is billed for its wall
+//! duration — including time blocked on child invocations — at its
+//! configured memory. When `time_scale == 0` (unit tests) the modeled
+//! latencies are still *billed* via a thread-local accumulator even
+//! though nothing sleeps.
+
+pub mod dre;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cost::{CostLedger, Role};
+use crate::storage::{take_modeled_extra, SimParams};
+use dre::DreStore;
+
+/// Platform configuration (paper §5.3 defaults).
+#[derive(Clone, Debug)]
+pub struct FaasConfig {
+    pub memory_co_mb: u32,
+    pub memory_qa_mb: u32,
+    pub memory_qp_mb: u32,
+    /// cold start: sandbox creation + INIT phase
+    pub cold_start_s: f64,
+    /// warm invocation dispatch overhead
+    pub warm_start_s: f64,
+    /// request/response payload bandwidth
+    pub payload_bandwidth_bps: f64,
+    /// AWS synchronous invocation payload cap (6 MB)
+    pub max_payload_bytes: usize,
+    /// Data Retention Exploitation on/off (Fig 6 ablation)
+    pub dre_enabled: bool,
+}
+
+impl Default for FaasConfig {
+    fn default() -> Self {
+        Self {
+            memory_co_mb: 512,
+            memory_qa_mb: 1770,
+            memory_qp_mb: 1770,
+            cold_start_s: 0.18,
+            warm_start_s: 0.006,
+            payload_bandwidth_bps: 40e6,
+            max_payload_bytes: 6 * 1024 * 1024,
+            dre_enabled: true,
+        }
+    }
+}
+
+/// A runtime container (execution environment). Its `retained` store
+/// survives across invocations of the same function — the mechanism DRE
+/// exploits via singleton objects.
+pub struct Container {
+    pub id: u64,
+    pub invocations: u64,
+    pub retained: DreStore,
+}
+
+/// Handler context: what a function sees during one invocation.
+pub struct InvocationCtx<'a> {
+    pub container: &'a mut Container,
+    pub dre_enabled: bool,
+    pub function: &'a str,
+}
+
+impl InvocationCtx<'_> {
+    /// DRE read: present only on warm containers with DRE enabled.
+    pub fn dre_get<T: Send + Sync + 'static>(&self, key: &str) -> Option<Arc<T>> {
+        if !self.dre_enabled {
+            return None;
+        }
+        self.container.retained.get(key)
+    }
+
+    /// DRE write (no-op when disabled, mirroring handlers that skip the
+    /// singleton when the feature flag is off).
+    pub fn dre_put<T: Send + Sync + 'static>(&mut self, key: &str, value: Arc<T>) {
+        if self.dre_enabled {
+            self.container.retained.put(key, value);
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum FaasError {
+    #[error("payload of {0} bytes exceeds the synchronous invocation cap {1}")]
+    PayloadTooLarge(usize, usize),
+}
+
+/// The Lambda-like platform: per-function container pools.
+pub struct Platform {
+    pools: Mutex<HashMap<String, Vec<Container>>>,
+    next_container: AtomicU64,
+    pub config: FaasConfig,
+    pub params: SimParams,
+    pub ledger: Arc<CostLedger>,
+    pub warm_invocations: AtomicU64,
+    pub cold_invocations: AtomicU64,
+}
+
+impl Platform {
+    pub fn new(config: FaasConfig, params: SimParams, ledger: Arc<CostLedger>) -> Self {
+        Self {
+            pools: Mutex::new(HashMap::new()),
+            next_container: AtomicU64::new(0),
+            config,
+            params,
+            ledger,
+            warm_invocations: AtomicU64::new(0),
+            cold_invocations: AtomicU64::new(0),
+        }
+    }
+
+    fn memory_for(&self, role: Role) -> u32 {
+        match role {
+            Role::Coordinator => self.config.memory_co_mb,
+            Role::QueryAllocator => self.config.memory_qa_mb,
+            Role::QueryProcessor => self.config.memory_qp_mb,
+        }
+    }
+
+    /// Synchronously invoke `function`: acquire a container (warm if one
+    /// is idle, else cold), transfer the request payload, run `handler`,
+    /// transfer the response, release the container, bill everything.
+    pub fn invoke<F>(
+        &self,
+        function: &str,
+        role: Role,
+        payload: &[u8],
+        handler: F,
+    ) -> Result<Vec<u8>, FaasError>
+    where
+        F: FnOnce(&mut InvocationCtx, &[u8]) -> Vec<u8>,
+    {
+        if payload.len() > self.config.max_payload_bytes {
+            return Err(FaasError::PayloadTooLarge(payload.len(), self.config.max_payload_bytes));
+        }
+        // acquire container
+        let (mut container, cold) = {
+            let mut pools = self.pools.lock().unwrap();
+            match pools.get_mut(function).and_then(|v| v.pop()) {
+                Some(c) => (c, false),
+                None => (
+                    Container {
+                        id: self.next_container.fetch_add(1, Ordering::Relaxed),
+                        invocations: 0,
+                        retained: DreStore::new(),
+                    },
+                    true,
+                ),
+            }
+        };
+        self.ledger.record_invocation(role, cold);
+        if cold {
+            self.cold_invocations.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.warm_invocations.fetch_add(1, Ordering::Relaxed);
+        }
+
+        let start = std::time::Instant::now();
+        take_modeled_extra(); // reset the billing accumulator
+
+        // startup + request payload transfer
+        let startup = if cold { self.config.cold_start_s } else { self.config.warm_start_s };
+        let transfer_in = payload.len() as f64 / self.config.payload_bandwidth_bps;
+        self.params.simulate_latency(startup + transfer_in);
+        self.ledger.record_payload(payload.len() as u64);
+
+        // INVOKE phase: run the handler
+        container.invocations += 1;
+        let mut ctx = InvocationCtx {
+            container: &mut container,
+            dre_enabled: self.config.dre_enabled,
+            function,
+        };
+        let response = handler(&mut ctx, payload);
+
+        // response payload transfer
+        let transfer_out = response.len() as f64 / self.config.payload_bandwidth_bps;
+        self.params.simulate_latency(transfer_out);
+        self.ledger.record_payload(response.len() as u64);
+
+        // billing: wall duration + modeled-but-unslept latencies
+        let extra = take_modeled_extra();
+        let billed = start.elapsed().as_secs_f64() + extra;
+        self.ledger.record_runtime(role, self.memory_for(role), billed);
+
+        // release container to the pool (warm for the next invocation)
+        self.pools.lock().unwrap().entry(function.to_string()).or_default().push(container);
+        Ok(response)
+    }
+
+    /// Number of idle containers for a function (tests/diagnostics).
+    pub fn pool_size(&self, function: &str) -> usize {
+        self.pools.lock().unwrap().get(function).map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Drop all containers — simulates a cold fleet / redeployment.
+    pub fn reset_containers(&self) {
+        self.pools.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn platform(dre: bool) -> Platform {
+        let ledger = Arc::new(CostLedger::new());
+        Platform::new(
+            FaasConfig { dre_enabled: dre, ..Default::default() },
+            SimParams::instant(),
+            ledger,
+        )
+    }
+
+    #[test]
+    fn cold_then_warm() {
+        let p = platform(true);
+        for i in 0..3 {
+            let r = p
+                .invoke("f", Role::QueryProcessor, b"ping", |ctx, payload| {
+                    assert_eq!(payload, b"ping");
+                    assert_eq!(ctx.function, "f");
+                    vec![i]
+                })
+                .unwrap();
+            assert_eq!(r, vec![i]);
+        }
+        assert_eq!(p.cold_invocations.load(Ordering::Relaxed), 1);
+        assert_eq!(p.warm_invocations.load(Ordering::Relaxed), 2);
+        assert_eq!(p.pool_size("f"), 1);
+    }
+
+    #[test]
+    fn concurrent_invocations_get_distinct_containers() {
+        let p = Arc::new(platform(true));
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = p.clone();
+            let b = barrier.clone();
+            handles.push(std::thread::spawn(move || {
+                p.invoke("g", Role::QueryAllocator, b"", |ctx, _| {
+                    b.wait(); // hold all 4 containers simultaneously
+                    vec![ctx.container.id as u8]
+                })
+                .unwrap()[0]
+            }));
+        }
+        let mut ids: Vec<u8> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 4, "containers must not be shared concurrently");
+        assert_eq!(p.cold_invocations.load(Ordering::Relaxed), 4);
+        assert_eq!(p.pool_size("g"), 4);
+    }
+
+    #[test]
+    fn dre_retains_across_invocations() {
+        let p = platform(true);
+        p.invoke("h", Role::QueryProcessor, b"", |ctx, _| {
+            assert!(ctx.dre_get::<Vec<u8>>("index").is_none());
+            ctx.dre_put("index", Arc::new(vec![9u8, 9, 9]));
+            vec![]
+        })
+        .unwrap();
+        p.invoke("h", Role::QueryProcessor, b"", |ctx, _| {
+            let got = ctx.dre_get::<Vec<u8>>("index").expect("retained data");
+            assert_eq!(*got, vec![9u8, 9, 9]);
+            vec![]
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn dre_disabled_sees_nothing() {
+        let p = platform(false);
+        p.invoke("h", Role::QueryProcessor, b"", |ctx, _| {
+            ctx.dre_put("index", Arc::new(1u32)); // no-op
+            vec![]
+        })
+        .unwrap();
+        p.invoke("h", Role::QueryProcessor, b"", |ctx, _| {
+            assert!(ctx.dre_get::<u32>("index").is_none());
+            vec![]
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn per_function_pools_are_separate() {
+        // the paper names a function per partition (squash-processor-0,
+        // squash-processor-1, ...) so retained indexes can't cross
+        let p = platform(true);
+        p.invoke("squash-processor-0", Role::QueryProcessor, b"", |ctx, _| {
+            ctx.dre_put("index", Arc::new(0usize));
+            vec![]
+        })
+        .unwrap();
+        p.invoke("squash-processor-1", Role::QueryProcessor, b"", |ctx, _| {
+            assert!(ctx.dre_get::<usize>("index").is_none());
+            vec![]
+        })
+        .unwrap();
+        assert_eq!(p.pool_size("squash-processor-0"), 1);
+        assert_eq!(p.pool_size("squash-processor-1"), 1);
+    }
+
+    #[test]
+    fn payload_cap_enforced() {
+        let p = platform(true);
+        let big = vec![0u8; p.config.max_payload_bytes + 1];
+        let r = p.invoke("f", Role::Coordinator, &big, |_, _| vec![]);
+        assert!(matches!(r, Err(FaasError::PayloadTooLarge(_, _))));
+    }
+
+    #[test]
+    fn billing_includes_modeled_latency_at_scale_zero() {
+        let p = platform(true);
+        p.invoke("f", Role::QueryProcessor, b"x", |_, _| vec![0u8; 1000]).unwrap();
+        // billed runtime must include the (unslept) cold start
+        let mbs = p.ledger.mb_seconds(Role::QueryProcessor);
+        let billed_s = mbs / p.config.memory_qp_mb as f64;
+        assert!(billed_s >= p.config.cold_start_s, "billed {billed_s}");
+    }
+
+    #[test]
+    fn reset_makes_everything_cold_again() {
+        let p = platform(true);
+        p.invoke("f", Role::QueryProcessor, b"", |_, _| vec![]).unwrap();
+        p.reset_containers();
+        p.invoke("f", Role::QueryProcessor, b"", |_, _| vec![]).unwrap();
+        assert_eq!(p.cold_invocations.load(Ordering::Relaxed), 2);
+    }
+}

@@ -1,0 +1,20 @@
+//! SQUASH: serverless & distributed quantization-based attributed vector
+//! similarity search — reproduction library.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results. Layering:
+//!   L3 (this crate): coordinator, FaaS simulator, storage, cost model
+//!   L2/L1 (python/compile): JAX graph + Pallas kernels, AOT-lowered to
+//!   HLO text and executed through `runtime::` on the request path.
+pub mod attrs;
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod faas;
+pub mod osq;
+pub mod partition;
+pub mod runtime;
+pub mod storage;
+pub mod util;

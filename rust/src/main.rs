@@ -1,0 +1,142 @@
+//! SQUASH CLI — the launcher for the reproduction system.
+//!
+//! Subcommands:
+//!   info                               dataset profiles (paper Table 2)
+//!   serve   [--profile sift] [...]     build + deploy + run a batch,
+//!                                      report QPS / latency / cost / recall
+//!   query   --predicate "a0<50 & a2>10" [...]   single hybrid query demo
+//!   cost    [--volume 100000]          daily-cost model comparison (Fig 8)
+//!
+//! Common options: --profile <test|sift|gist|sift10m|deep>, --n <rows>,
+//! --queries <count>, --n-qa <10|20|84|155|258|340>, --backend
+//! <native|xla|auto>, --time-scale <f>, --no-dre, --seed <u64>.
+
+use squash::baselines::server::InstanceType;
+use squash::bench::{measure_server, measure_squash, measure_system_x, Env, EnvOptions, RunStats};
+use squash::coordinator::tree::TreeConfig;
+use squash::cost::pricing::Pricing;
+use squash::cost::{server_daily_cost, system_x_query_cost};
+use squash::data::profiles::PROFILES;
+use squash::util::cli::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(),
+        Some("serve") => cmd_serve(&args),
+        Some("query") => cmd_query(&args),
+        Some("cost") => cmd_cost(&args),
+        _ => {
+            eprintln!(
+                "usage: squash <info|serve|query|cost> [options]   (see doc comment in rust/src/main.rs)"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn env_opts(args: &Args) -> EnvOptions {
+    EnvOptions {
+        profile: Box::leak(args.get_or("profile", "test").to_string().into_boxed_str()),
+        n: args.get_usize("n", 0).unwrap_or(0),
+        n_queries: args.get_usize("queries", 100).unwrap_or(100),
+        selectivity: args.get_f64("selectivity", 0.08).unwrap_or(0.08),
+        time_scale: args.get_f64("time-scale", 1.0).unwrap_or(1.0),
+        dre: !args.has_flag("no-dre"),
+        backend: args.get_or("backend", "native").to_string(),
+        seed: args.get_u64("seed", 42).unwrap_or(42),
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("dataset profiles (paper Table 2; default_n = offline reproduction size)");
+    println!(
+        "{:<9} {:>5} {:>11} {:>10} {:>6} {:>5} {:>7} {:>7}",
+        "name", "d", "paper N", "default N", "b", "P", "T", "H_keep"
+    );
+    for p in PROFILES {
+        println!(
+            "{:<9} {:>5} {:>11} {:>10} {:>6} {:>5} {:>7.2} {:>7.2}",
+            p.name, p.d, p.paper_n, p.default_n, p.bit_budget, p.partitions, p.t_threshold, p.h_keep
+        );
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let opts = env_opts(args);
+    eprintln!("building {} (n={}, backend={})...", opts.profile, opts.n, opts.backend);
+    let mut env = Env::setup(&opts);
+    if let Some(n_qa) = args.get("n-qa") {
+        let n_qa: usize = n_qa.parse().expect("n-qa");
+        let tree = TreeConfig::for_n_qa(n_qa).expect("n-qa must be one of 10/20/84/155/258/340");
+        env.with_config(|c| c.tree = tree);
+    }
+    let truth_k = if args.has_flag("no-recall") { 0 } else { 10 };
+    let stats = measure_squash(&env, "squash", truth_k);
+    println!("{}", RunStats::header());
+    println!("{stats}");
+    println!("cost detail: {}", stats.cost);
+    if args.has_flag("baselines") {
+        println!("{}", measure_system_x(&env, truth_k));
+        println!("{}", measure_server(&env, InstanceType::C7i4xlarge, truth_k));
+        println!("{}", measure_server(&env, InstanceType::C7i16xlarge, truth_k));
+    }
+    0
+}
+
+fn cmd_query(args: &Args) -> i32 {
+    let opts = env_opts(args);
+    let env = Env::setup(&opts);
+    let ptxt = args.get_or("predicate", "a0<50");
+    let predicate = match squash::attrs::predicate::parse_predicate(ptxt, env.ds.n_attrs()) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("bad predicate: {e}");
+            return 2;
+        }
+    };
+    let k = args.get_usize("k", 10).unwrap_or(10);
+    let mut q = env.queries[0].clone();
+    q.predicate = predicate;
+    q.k = k;
+    let out = env.sys.run_batch(&[q.clone()]);
+    println!("predicate: {ptxt}   k={k}");
+    for (rank, (id, dist)) in out.results[0].iter().enumerate() {
+        let attrs: Vec<String> =
+            env.ds.attributes[*id as usize].iter().map(|a| format!("{:.0}", a.as_f32())).collect();
+        println!("{:>3}. id={id:<8} dist={dist:<12.4} attrs=[{}]", rank + 1, attrs.join(", "));
+    }
+    0
+}
+
+fn cmd_cost(args: &Args) -> i32 {
+    let pricing = Pricing::default();
+    let volume = args.get_u64("volume", 100_000).unwrap_or(100_000);
+    // per-query SQUASH cost measured on a small live run
+    let opts = EnvOptions { profile: "test", n: 2000, n_queries: 50, time_scale: 0.0, ..env_opts(args) };
+    let env = Env::setup(&opts);
+    let squash_per_q = measure_squash(&env, "probe", 0).cost_per_query;
+    println!("daily cost at {volume} queries/day (uniform arrivals):");
+    println!("  squash      ${:>12.2}", squash_per_q * volume as f64);
+    println!(
+        "  system-x    ${:>12.2}",
+        system_x_query_cost(&pricing, env.ds.d(), 10) * volume as f64
+    );
+    println!(
+        "  2x c7i.4x   ${:>12.2}  (provisioned)",
+        server_daily_cost(pricing.c7i_4xlarge_hourly, 2)
+    );
+    println!(
+        "  2x c7i.16x  ${:>12.2}  (provisioned)",
+        server_daily_cost(pricing.c7i_16xlarge_hourly, 2)
+    );
+    0
+}

@@ -1,0 +1,415 @@
+//! Low-bit (binary) OSQ index (paper §2.4.3).
+//!
+//! One bit per dimension: standardize the (KLT-frame) data, threshold at
+//! zero, and pack S dimensions per segment. Query-to-candidate Hamming
+//! distances then prune most candidates before any Euclidean work; the
+//! best `H_perc` percent survive to the fine-grained LB stage.
+//!
+//! Codes are stored as u64 words for the native scan (XOR + POPCNT) and
+//! exported as u32 words for the XLA artifacts (PJRT `population_count`
+//! on u32) — both derive from the same LSB-first bit order used by
+//! `python/compile/kernels/ref.py::pack_bits_u32`.
+
+use crate::util::matrix::Matrix;
+
+/// Per-partition binary index.
+#[derive(Clone, Debug)]
+pub struct BinaryIndex {
+    pub d: usize,
+    /// u64 words per row.
+    pub words: usize,
+    /// mean used for standardization (KLT-frame)
+    pub mean: Vec<f32>,
+    /// inverse std-dev (0 for constant dims: bit always 0)
+    pub inv_std: Vec<f32>,
+    /// `n x words` packed codes
+    pub codes: Vec<u64>,
+}
+
+impl BinaryIndex {
+    /// Number of u64 words for `d` bits.
+    pub fn words_for(d: usize) -> usize {
+        d.div_ceil(64)
+    }
+
+    /// Build over (KLT-frame) partition data.
+    pub fn build(data: &Matrix) -> Self {
+        let d = data.d();
+        let n = data.n();
+        let mean = data.col_means();
+        let var = data.col_variances();
+        let inv_std: Vec<f32> =
+            var.iter().map(|&v| if v > 1e-12 { 1.0 / v.sqrt() } else { 0.0 }).collect();
+        let words = Self::words_for(d);
+        let mut codes = vec![0u64; n * words];
+        let mut row_bits = vec![0u64; words];
+        for i in 0..n {
+            encode_row(data.row(i), &mean, &inv_std, &mut row_bits);
+            codes[i * words..(i + 1) * words].copy_from_slice(&row_bits);
+        }
+        Self { d, words, mean, inv_std, codes }
+    }
+
+    /// Binary-quantize one query into packed u64 words.
+    pub fn encode_query(&self, q: &[f32]) -> Vec<u64> {
+        let mut out = vec![0u64; self.words];
+        encode_row(q, &self.mean, &self.inv_std, &mut out);
+        out
+    }
+
+    /// Packed code of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u64] {
+        &self.codes[i * self.words..(i + 1) * self.words]
+    }
+
+    /// Hamming distance from a packed query to row `i`.
+    #[inline]
+    pub fn hamming(&self, q_words: &[u64], i: usize) -> u32 {
+        hamming_words(q_words, self.row(i))
+    }
+
+    /// Hamming scan over a candidate list; distances appended to `out`.
+    pub fn hamming_scan(&self, q_words: &[u64], rows: &[usize], out: &mut Vec<u32>) {
+        out.clear();
+        out.reserve(rows.len());
+        for &r in rows {
+            out.push(hamming_words(q_words, self.row(r)));
+        }
+    }
+
+    /// Export row codes as u32 words (LSB-first order preserved) for the
+    /// XLA hamming artifact; rows are padded/truncated by the runtime.
+    pub fn rows_as_u32(&self, rows: &[usize], out: &mut Vec<u32>) {
+        out.clear();
+        let w32 = self.d.div_ceil(32);
+        for &r in rows {
+            let row = self.row(r);
+            for k in 0..w32 {
+                let word = row[k / 2];
+                out.push(if k % 2 == 0 { word as u32 } else { (word >> 32) as u32 });
+            }
+        }
+    }
+
+    /// Export a packed query as u32 words.
+    pub fn query_as_u32(&self, q_words: &[u64]) -> Vec<u32> {
+        let w32 = self.d.div_ceil(32);
+        (0..w32)
+            .map(|k| {
+                let word = q_words[k / 2];
+                if k % 2 == 0 {
+                    word as u32
+                } else {
+                    (word >> 32) as u32
+                }
+            })
+            .collect()
+    }
+
+    /// Index memory footprint in bytes (codes only; the per-dim stats are
+    /// O(d)). Used by the cost/DRE accounting.
+    pub fn code_bytes(&self) -> usize {
+        self.codes.len() * 8
+    }
+}
+
+#[inline]
+fn encode_row(x: &[f32], mean: &[f32], inv_std: &[f32], out: &mut [u64]) {
+    for w in out.iter_mut() {
+        *w = 0;
+    }
+    for (j, &v) in x.iter().enumerate() {
+        // standardized value > 0 <=> raw value > mean (inv_std > 0), so the
+        // threshold-at-zero rule reduces to a mean comparison; constant
+        // dims (inv_std == 0) always map to 0.
+        if inv_std[j] > 0.0 && (v - mean[j]) > 0.0 {
+            out[j / 64] |= 1u64 << (j % 64);
+        }
+    }
+}
+
+/// XOR + POPCNT over word pairs.
+#[inline]
+pub fn hamming_words(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0u32;
+    for (x, y) in a.iter().zip(b) {
+        acc += (x ^ y).count_ones();
+    }
+    acc
+}
+
+/// Like [`select_by_hamming`] but keeps *every* candidate tied at the
+/// cutoff distance. With high-dimensional signatures ties are rare and
+/// this matches the exact H_perc cut; with coarse (low-d) signatures the
+/// tie group is large and all equally-ranked candidates proceed — the
+/// cutoff is a distance, not an arbitrary index order. This is the
+/// variant the QP uses (§2.4.3: "the proportion of the best vectors in
+/// ascending Hamming distance order to retain").
+pub fn select_by_hamming_with_ties(dists: &[u32], d: usize, keep: usize) -> Vec<usize> {
+    let keep = keep.min(dists.len());
+    if keep == 0 {
+        return Vec::new();
+    }
+    if keep == dists.len() {
+        return (0..dists.len()).collect();
+    }
+    let mut hist = vec![0usize; d + 2];
+    for &h in dists {
+        hist[(h as usize).min(d + 1)] += 1;
+    }
+    let mut acc = 0usize;
+    let mut cut = 0usize;
+    for (h, &c) in hist.iter().enumerate() {
+        if acc + c >= keep {
+            cut = h;
+            break;
+        }
+        acc += c;
+    }
+    dists
+        .iter()
+        .enumerate()
+        .filter(|&(_, &h)| (h as usize) <= cut)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Select the best `keep` candidates by ascending Hamming distance
+/// (paper's H_perc cutoff). Returns indices *into* `rows`. Uses an O(n)
+/// counting select over the bounded distance domain (<= d).
+pub fn select_by_hamming(dists: &[u32], d: usize, keep: usize) -> Vec<usize> {
+    let keep = keep.min(dists.len());
+    if keep == 0 {
+        return Vec::new();
+    }
+    if keep == dists.len() {
+        return (0..dists.len()).collect();
+    }
+    // histogram over [0, d]
+    let mut hist = vec![0usize; d + 2];
+    for &h in dists {
+        hist[(h as usize).min(d + 1)] += 1;
+    }
+    // find the cutoff distance so that count(dist < cut) <= keep <= count(dist <= cut)
+    let mut acc = 0usize;
+    let mut cut = 0usize;
+    for (h, &c) in hist.iter().enumerate() {
+        if acc + c >= keep {
+            cut = h;
+            break;
+        }
+        acc += c;
+    }
+    let mut out = Vec::with_capacity(keep);
+    // take all strictly below the cutoff, then fill ties in index order
+    for (i, &h) in dists.iter().enumerate() {
+        if (h as usize) < cut {
+            out.push(i);
+        }
+    }
+    for (i, &h) in dists.iter().enumerate() {
+        if out.len() >= keep {
+            break;
+        }
+        if h as usize == cut {
+            out.push(i);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_matrix(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_rows_fn(n, d, |_, row| {
+            for v in row.iter_mut() {
+                *v = rng.normal();
+            }
+        })
+    }
+
+    #[test]
+    fn hamming_words_matches_naive() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let w = 1 + rng.gen_range(4);
+            let a: Vec<u64> = (0..w).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..w).map(|_| rng.next_u64()).collect();
+            let naive: u32 = a
+                .iter()
+                .zip(&b)
+                .map(|(x, y)| (0..64).filter(|&k| (x >> k) & 1 != (y >> k) & 1).count() as u32)
+                .sum();
+            assert_eq!(hamming_words(&a, &b), naive);
+        }
+    }
+
+    #[test]
+    fn build_and_self_distance() {
+        let m = random_matrix(100, 37, 2);
+        let idx = BinaryIndex::build(&m);
+        assert_eq!(idx.words, 1);
+        // a row's own encoding has Hamming distance 0 to itself
+        for i in (0..100).step_by(13) {
+            let q = idx.encode_query(m.row(i));
+            assert_eq!(idx.hamming(&q, i), 0);
+        }
+    }
+
+    #[test]
+    fn padding_bits_zero() {
+        let m = random_matrix(20, 70, 3);
+        let idx = BinaryIndex::build(&m);
+        assert_eq!(idx.words, 2);
+        for i in 0..20 {
+            let row = idx.row(i);
+            assert_eq!(row[1] >> (70 - 64), 0, "padding bits must stay zero");
+        }
+    }
+
+    #[test]
+    fn u32_export_consistent() {
+        let m = random_matrix(16, 96, 4);
+        let idx = BinaryIndex::build(&m);
+        let rows: Vec<usize> = (0..16).collect();
+        let mut u32s = Vec::new();
+        idx.rows_as_u32(&rows, &mut u32s);
+        let w32 = 3;
+        for (i, &r) in rows.iter().enumerate() {
+            let q = idx.row(r).to_vec();
+            let qu32 = idx.query_as_u32(&q);
+            assert_eq!(&u32s[i * w32..(i + 1) * w32], &qu32[..]);
+            // reassembled u64s match
+            for k in 0..idx.words {
+                let lo = qu32.get(2 * k).copied().unwrap_or(0) as u64;
+                let hi = qu32.get(2 * k + 1).copied().unwrap_or(0) as u64;
+                let want = if 2 * k + 1 < w32 { lo | (hi << 32) } else { lo };
+                assert_eq!(q[k] & want | want, q[k] | want); // same bits present
+            }
+        }
+    }
+
+    #[test]
+    fn select_by_hamming_keeps_smallest() {
+        let dists = vec![5u32, 1, 3, 1, 9, 0, 3];
+        let sel = select_by_hamming(&dists, 10, 3);
+        assert_eq!(sel.len(), 3);
+        let mut got: Vec<u32> = sel.iter().map(|&i| dists[i]).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 1]);
+    }
+
+    #[test]
+    fn select_edge_cases() {
+        assert!(select_by_hamming(&[], 8, 3).is_empty());
+        assert_eq!(select_by_hamming(&[2, 2, 2], 8, 3), vec![0, 1, 2]);
+        assert!(select_by_hamming(&[1, 2], 8, 0).is_empty());
+        assert_eq!(select_by_hamming(&[7], 8, 5), vec![0]);
+    }
+
+    #[test]
+    fn prop_select_is_exact_partial_sort() {
+        prop::check("hamming-select", 60, |g| {
+            let n = g.usize_in(1, 200);
+            let d = g.usize_in(1, 128);
+            let dists: Vec<u32> = (0..n).map(|_| g.usize_in(0, d) as u32).collect();
+            let keep = g.usize_in(0, n);
+            let sel = select_by_hamming(&dists, d, keep);
+            if sel.len() != keep.min(n) {
+                return Err(format!("kept {} want {}", sel.len(), keep));
+            }
+            let mut selected: Vec<u32> = sel.iter().map(|&i| dists[i]).collect();
+            selected.sort_unstable();
+            let mut all = dists.clone();
+            all.sort_unstable();
+            if selected != all[..keep.min(n)] {
+                return Err("selection is not the k smallest".into());
+            }
+            // no duplicate indices
+            let mut s = sel.clone();
+            s.sort_unstable();
+            s.dedup();
+            if s.len() != sel.len() {
+                return Err("duplicate indices".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hamming_correlates_with_euclidean() {
+        // the §2.4.3 observation backing the pruning design. Clustered
+        // data (like the real benchmark distributions) — on pure iid
+        // Gaussian the binary signature is much weaker, which is exactly
+        // why the paper standardizes in the KLT frame.
+        let mut rng = Rng::new(8);
+        let d = 128;
+        let centers: Vec<Vec<f32>> =
+            (0..8).map(|_| (0..d).map(|_| rng.normal() * 1.5).collect()).collect();
+        let m = Matrix::from_rows_fn(2000, d, |i, row| {
+            let c = &centers[i % 8];
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = c[j] + rng.normal() * 0.6;
+            }
+        });
+        let idx = BinaryIndex::build(&m);
+        let mut rng = Rng::new(9);
+        // realistic query: a database vector plus noise (benchmark queries
+        // are drawn from the data distribution)
+        let base = rng.gen_range(2000);
+        let q: Vec<f32> = m.row(base).iter().map(|&v| v + rng.normal() * 0.2).collect();
+        let qw = idx.encode_query(&q);
+        let rows: Vec<usize> = (0..2000).collect();
+        let mut h = Vec::new();
+        idx.hamming_scan(&qw, &rows, &mut h);
+        let eu: Vec<f32> = (0..2000)
+            .map(|i| crate::util::matrix::l2_sq(&q, m.row(i)))
+            .collect();
+        // of the 100 nearest by Euclidean, at least 80 must survive a 20%
+        // Hamming cut
+        let mut by_eu: Vec<usize> = (0..2000).collect();
+        by_eu.sort_by(|&a, &b| eu[a].partial_cmp(&eu[b]).unwrap());
+        let survivors: std::collections::HashSet<usize> =
+            select_by_hamming(&h, 128, 400).into_iter().collect();
+        let hits = by_eu[..100].iter().filter(|&&i| survivors.contains(&i)).count();
+        assert!(hits >= 80, "only {hits}/100 survived the Hamming cut");
+    }
+}
+
+#[cfg(test)]
+mod tie_tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn with_ties_is_superset_and_distance_bounded() {
+        prop::check("hamming-select-ties", 60, |g| {
+            let n = g.usize_in(1, 200);
+            let d = g.usize_in(1, 32); // coarse signatures: ties abound
+            let dists: Vec<u32> = (0..n).map(|_| g.usize_in(0, d) as u32).collect();
+            let keep = g.usize_in(1, n);
+            let exact = select_by_hamming(&dists, d, keep);
+            let ties = select_by_hamming_with_ties(&dists, d, keep);
+            if ties.len() < exact.len() {
+                return Err("ties variant kept fewer".into());
+            }
+            let cut = exact.iter().map(|&i| dists[i]).max().unwrap_or(0);
+            // everything kept is within the cutoff distance, and everything
+            // within the cutoff distance is kept
+            for (i, &h) in dists.iter().enumerate() {
+                let kept = ties.contains(&i);
+                if kept != (h <= cut) {
+                    return Err(format!("idx {i} dist {h} cutoff {cut} kept={kept}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,133 @@
+//! Non-uniform bit allocation (paper §2.2.1).
+//!
+//! Bits are assigned greedily to the dimension with the highest current
+//! variance; after each assignment the dimension's variance is divided by
+//! four (one bit of a scalar quantizer buys ~6 dB ⇒ a 4x variance
+//! reduction — Gersho & Gray [22]). The result is the per-dimension bit
+//! vector `B` and cell counts `C[j] = 2^B[j]` consumed by the segment
+//! layout and quantizer design.
+
+/// Maximum bits for any single dimension. 8 bits = 256 cells keeps every
+/// LUT at the paper's (M+1, d) shape with M = 256 and lets codes fit u8.
+pub const MAX_BITS_PER_DIM: u8 = 8;
+
+/// Greedy variance-driven allocation of `budget` total bits over `d`
+/// dimensions. Returns `B` with `sum(B) <= budget` (equality unless the
+/// cap binds everywhere) and `B[j] <= MAX_BITS_PER_DIM`.
+pub fn allocate_bits(variances: &[f32], budget: usize) -> Vec<u8> {
+    let d = variances.len();
+    let mut bits = vec![0u8; d];
+    if d == 0 {
+        return bits;
+    }
+    // Remaining "value" of the next bit for each dim.
+    let mut value: Vec<f64> = variances.iter().map(|&v| (v.max(0.0)) as f64).collect();
+    // A binary heap of (value, dim) would be O(b log d); d <= 960 and
+    // b <= 4*960 so a linear argmax scan is fine and allocation order is
+    // deterministic (ties break to the lowest dimension index).
+    for _ in 0..budget {
+        let mut best = usize::MAX;
+        let mut best_v = f64::NEG_INFINITY;
+        for j in 0..d {
+            if bits[j] < MAX_BITS_PER_DIM && value[j] > best_v {
+                best_v = value[j];
+                best = j;
+            }
+        }
+        if best == usize::MAX || best_v <= 0.0 {
+            break; // cap bound everywhere, or no variance left to encode
+        }
+        bits[best] += 1;
+        value[best] /= 4.0;
+    }
+    bits
+}
+
+/// Cell counts `C[j] = 2^B[j]` (1 for zero-bit dimensions: a single cell,
+/// i.e. the dimension is not discriminative and is dropped from codes).
+pub fn cell_counts(bits: &[u8]) -> Vec<u16> {
+    bits.iter().map(|&b| 1u16 << b).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn respects_budget_and_cap() {
+        let vars = vec![4.0, 1.0, 0.25, 0.0625];
+        let bits = allocate_bits(&vars, 8);
+        assert_eq!(bits.iter().map(|&b| b as usize).sum::<usize>(), 8);
+        assert!(bits.iter().all(|&b| b <= MAX_BITS_PER_DIM));
+    }
+
+    #[test]
+    fn higher_variance_gets_more_bits() {
+        let vars = vec![16.0, 1.0];
+        let bits = allocate_bits(&vars, 6);
+        assert!(bits[0] > bits[1], "{bits:?}");
+    }
+
+    #[test]
+    fn equal_variances_split_evenly() {
+        let vars = vec![1.0; 8];
+        let bits = allocate_bits(&vars, 32);
+        assert!(bits.iter().all(|&b| b == 4), "{bits:?}");
+    }
+
+    #[test]
+    fn zero_variance_gets_nothing() {
+        let vars = vec![1.0, 0.0, 1.0];
+        let bits = allocate_bits(&vars, 6);
+        assert_eq!(bits[1], 0);
+    }
+
+    #[test]
+    fn cap_binds() {
+        // budget larger than d * MAX: every dim saturates
+        let vars = vec![1.0, 2.0];
+        let bits = allocate_bits(&vars, 100);
+        assert_eq!(bits, vec![8, 8]);
+    }
+
+    #[test]
+    fn cells_are_powers_of_two() {
+        assert_eq!(cell_counts(&[0, 1, 3, 8]), vec![1, 2, 8, 256]);
+    }
+
+    #[test]
+    fn empty_dims() {
+        assert!(allocate_bits(&[], 16).is_empty());
+    }
+
+    #[test]
+    fn prop_budget_and_monotonicity() {
+        prop::check("bit-alloc-invariants", 50, |g| {
+            let d = g.usize_in(1, 64);
+            let budget = g.usize_in(0, d * 10);
+            let vars: Vec<f32> = (0..d).map(|_| g.f32_in(0.0, 10.0)).collect();
+            let bits = allocate_bits(&vars, budget);
+            let total: usize = bits.iter().map(|&b| b as usize).sum();
+            if total > budget {
+                return Err(format!("total {total} > budget {budget}"));
+            }
+            if bits.iter().any(|&b| b > MAX_BITS_PER_DIM) {
+                return Err("cap violated".into());
+            }
+            // a dimension with strictly larger variance never gets fewer
+            // bits under greedy allocation with uniform decay
+            for a in 0..d {
+                for b in 0..d {
+                    if vars[a] > vars[b] && bits[a] < bits[b] {
+                        return Err(format!(
+                            "monotonicity: var[{a}]={} > var[{b}]={} but bits {} < {}",
+                            vars[a], vars[b], bits[a], bits[b]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

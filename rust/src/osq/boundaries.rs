@@ -1,0 +1,253 @@
+//! Optimal scalar-quantizer design via one-dimensional K-means
+//! (Lloyd–Max, paper §2.4.1 "efficient one-dimensional K-means clustering
+//! to design optimal scalar quantizers based on the data distribution").
+//!
+//! For each dimension we fit `C[j]` cells to (a sample of) the data:
+//! centroids minimize within-cell squared error; boundaries are centroid
+//! midpoints. The outermost edges are pinned to the data min/max so every
+//! indexed value lies inside a cell (required for the LB property — see
+//! python/tests/test_kernels.py::test_lb_is_lower_bound_of_euclidean).
+
+/// One dimension's scalar quantizer: `edges.len() == cells + 1`,
+/// cell k spans `[edges[k], edges[k+1]]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScalarQuantizer {
+    pub edges: Vec<f32>,
+}
+
+impl ScalarQuantizer {
+    pub fn cells(&self) -> usize {
+        self.edges.len() - 1
+    }
+
+    /// Quantize one value to its cell index (clamped to the edge cells, so
+    /// out-of-sample outliers map to the nearest extreme cell).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> u16 {
+        let interior = &self.edges[1..self.edges.len() - 1];
+        // binary search over interior edges: count of edges strictly < x
+        // (ties go to the left cell; cells are closed on both edges for
+        // the LB math, so either side is valid — `<` also collapses the
+        // zero-width duplicate edges of degenerate/constant dimensions).
+        let mut lo = 0usize;
+        let mut hi = interior.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if interior[mid] < x {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo as u16
+    }
+
+    /// Reconstruction value (cell midpoint) — used by tests/ablation only;
+    /// search uses boundary distances, not reconstructions.
+    pub fn reconstruct(&self, cell: u16) -> f32 {
+        let k = cell as usize;
+        0.5 * (self.edges[k] + self.edges[k + 1])
+    }
+}
+
+/// Design a quantizer with `cells` cells for `values` via Lloyd–Max.
+///
+/// `values` need not be sorted; they are copied and sorted internally.
+/// Degenerate inputs (constant dimension, fewer distinct values than
+/// cells) collapse gracefully to duplicate edges.
+pub fn lloyd_max(values: &[f32], cells: usize, max_iters: usize) -> ScalarQuantizer {
+    assert!(cells >= 1);
+    assert!(!values.is_empty(), "lloyd_max on empty values");
+    let mut sorted: Vec<f32> = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let (lo, hi) = (sorted[0], sorted[n - 1]);
+
+    if cells == 1 || lo == hi {
+        let mut edges = vec![lo; cells + 1];
+        edges[cells] = hi;
+        // Single-cell (or constant) dimension: one cell covers the range;
+        // extra cells (if any) are zero-width duplicates at lo.
+        if cells >= 1 {
+            edges[cells] = hi;
+        }
+        return ScalarQuantizer { edges };
+    }
+
+    // Init centroids at quantiles — a good start that makes Lloyd converge
+    // in a handful of sweeps on smooth distributions.
+    let mut centroids: Vec<f64> = (0..cells)
+        .map(|k| {
+            let q = (k as f64 + 0.5) / cells as f64;
+            sorted[((q * n as f64) as usize).min(n - 1)] as f64
+        })
+        .collect();
+    centroids.dedup();
+    while centroids.len() < cells {
+        // split the widest gap to restore the requested cell count
+        let mut widest = 0;
+        let mut width = f64::NEG_INFINITY;
+        for i in 0..centroids.len() - 1 {
+            let w = centroids[i + 1] - centroids[i];
+            if w > width {
+                width = w;
+                widest = i;
+            }
+        }
+        let mid = 0.5 * (centroids[widest] + centroids[widest + 1]);
+        centroids.insert(widest + 1, mid);
+    }
+
+    // Prefix sums for O(1) per-cell mean given sorted data.
+    let mut prefix = vec![0f64; n + 1];
+    for (i, &v) in sorted.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + v as f64;
+    }
+
+    let mut cuts = vec![0usize; cells + 1]; // index ranges per cell
+    cuts[cells] = n;
+    for _ in 0..max_iters {
+        // Assignment step: cell boundaries are centroid midpoints; convert
+        // to index cuts via binary search on the sorted values.
+        for k in 1..cells {
+            let midpoint = 0.5 * (centroids[k - 1] + centroids[k]);
+            cuts[k] = sorted.partition_point(|&v| (v as f64) < midpoint).max(cuts[k - 1]);
+        }
+        // Update step: centroid = mean of its cell (keep previous centroid
+        // for empty cells).
+        let mut moved = 0f64;
+        for k in 0..cells {
+            let (a, b) = (cuts[k], cuts[k + 1]);
+            if b > a {
+                let mean = (prefix[b] - prefix[a]) / (b - a) as f64;
+                moved += (mean - centroids[k]).abs();
+                centroids[k] = mean;
+            }
+        }
+        if moved < 1e-9 * (hi - lo).abs() as f64 {
+            break;
+        }
+    }
+
+    // Boundaries: data min, centroid midpoints, data max.
+    let mut edges = Vec::with_capacity(cells + 1);
+    edges.push(lo);
+    for k in 1..cells {
+        edges.push((0.5 * (centroids[k - 1] + centroids[k])) as f32);
+    }
+    edges.push(hi);
+    // enforce monotonicity under f32 rounding
+    for i in 1..edges.len() {
+        if edges[i] < edges[i - 1] {
+            edges[i] = edges[i - 1];
+        }
+    }
+    ScalarQuantizer { edges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn edges_cover_data_range() {
+        let mut r = Rng::new(1);
+        let vals: Vec<f32> = (0..1000).map(|_| r.normal()).collect();
+        let q = lloyd_max(&vals, 8, 30);
+        let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert_eq!(q.edges[0], lo);
+        assert_eq!(*q.edges.last().unwrap(), hi);
+        assert_eq!(q.cells(), 8);
+    }
+
+    #[test]
+    fn quantize_in_range_cells() {
+        let mut r = Rng::new(2);
+        let vals: Vec<f32> = (0..500).map(|_| r.f32_range(-3.0, 3.0)).collect();
+        let q = lloyd_max(&vals, 16, 30);
+        for &v in &vals {
+            let c = q.quantize(v) as usize;
+            assert!(c < 16);
+            assert!(q.edges[c] <= v && v <= q.edges[c + 1], "v={v} c={c}");
+        }
+    }
+
+    #[test]
+    fn outliers_clamp() {
+        let vals = vec![0.0, 1.0, 2.0, 3.0];
+        let q = lloyd_max(&vals, 2, 10);
+        assert_eq!(q.quantize(-100.0), 0);
+        assert_eq!(q.quantize(100.0), 1);
+    }
+
+    #[test]
+    fn constant_dimension() {
+        let vals = vec![5.0; 100];
+        let q = lloyd_max(&vals, 4, 10);
+        assert_eq!(q.cells(), 4);
+        assert_eq!(q.quantize(5.0) as usize, 0);
+    }
+
+    #[test]
+    fn single_cell() {
+        let q = lloyd_max(&[1.0, 2.0, 3.0], 1, 10);
+        assert_eq!(q.cells(), 1);
+        assert_eq!(q.quantize(2.0), 0);
+    }
+
+    #[test]
+    fn bimodal_beats_uniform_grid() {
+        // Lloyd-Max should place cut(s) inside the gap of a bimodal
+        // distribution, beating a uniform grid's MSE.
+        let mut r = Rng::new(3);
+        let vals: Vec<f32> = (0..4000)
+            .map(|i| if i % 2 == 0 { r.normal() * 0.1 - 2.0 } else { r.normal() * 0.1 + 2.0 })
+            .collect();
+        let q = lloyd_max(&vals, 2, 50);
+        // the single interior edge must fall in the (-1, 1) gap
+        assert!(q.edges[1] > -1.0 && q.edges[1] < 1.0, "{:?}", q.edges);
+
+        let mse = |edges: &[f32]| -> f64 {
+            vals.iter()
+                .map(|&v| {
+                    let k = if v < edges[1] { 0 } else { 1 };
+                    let rec = 0.5 * (edges[k] + edges[k + 1]);
+                    ((v - rec) as f64).powi(2)
+                })
+                .sum::<f64>()
+        };
+        let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let uniform = [lo, 0.5 * (lo + hi), hi];
+        assert!(mse(&q.edges) <= mse(&uniform) * 1.001);
+    }
+
+    #[test]
+    fn prop_monotone_edges_and_membership() {
+        prop::check("lloyd-max-invariants", 40, |g| {
+            let n = g.usize_in(2, 400);
+            let cells = g.usize_in(1, 32);
+            let vals = g.normal_vec(n);
+            let q = lloyd_max(&vals, cells, 25);
+            if q.edges.len() != cells + 1 {
+                return Err("edge count".into());
+            }
+            if q.edges.windows(2).any(|w| w[1] < w[0]) {
+                return Err(format!("non-monotone edges {:?}", q.edges));
+            }
+            for &v in &vals {
+                let c = q.quantize(v) as usize;
+                if c >= cells {
+                    return Err(format!("cell {c} out of range {cells}"));
+                }
+                if !(q.edges[c] <= v && v <= q.edges[c + 1]) {
+                    return Err(format!("value {v} not in its cell {c}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

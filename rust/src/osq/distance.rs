@@ -1,0 +1,277 @@
+//! Fine-grained lower-bound distance calculations via ADC lookup tables
+//! (paper §2.4.4) — the native (Rust) implementation; the XLA/Pallas
+//! implementation of the same math lives in `python/compile/kernels/`.
+//!
+//! For a query q and the per-dimension boundary matrix, the LUT
+//! `L[k][j]` holds the *squared* distance from `q[j]` to the nearest edge
+//! of cell k in dimension j (0 if q falls inside the cell). The LB
+//! distance of a candidate is then `sqrt(Σ_j L[code_j][j])` — a pure
+//! gather + row-sum over the candidate's codes.
+//!
+//! Layout note: the native LUT is dimension-major (`lut[j * m1 + k]`) so
+//! the per-candidate accumulation walks memory monotonically; the XLA
+//! artifact uses the (M+1, d) row-major layout of the paper (built by the
+//! `lut` entry point) — both are produced from the same boundary matrix.
+
+use crate::osq::boundaries::ScalarQuantizer;
+
+/// Per-query ADC lookup table in dimension-major layout.
+#[derive(Clone, Debug)]
+pub struct AdcTable {
+    pub d: usize,
+    /// rows per dimension = max cells + 1 (paper's M+1)
+    pub m1: usize,
+    /// `d * m1` squared edge distances, dimension-major
+    pub table: Vec<f32>,
+}
+
+impl AdcTable {
+    /// Build the LUT for query `q` (KLT frame) against per-dim quantizers.
+    /// Costs `Σ_j C[j]` distance evaluations (paper: `(Σ_j C[j]) - 1`).
+    pub fn build(q: &[f32], quantizers: &[ScalarQuantizer], m1: usize) -> Self {
+        let d = quantizers.len();
+        debug_assert_eq!(q.len(), d);
+        let mut table = vec![0f32; d * m1];
+        for (j, sq) in quantizers.iter().enumerate() {
+            let qj = q[j];
+            let cells = sq.cells();
+            let col = &mut table[j * m1..(j + 1) * m1];
+            for k in 0..cells.min(m1) {
+                let left = sq.edges[k];
+                let right = sq.edges[k + 1];
+                let dist = if qj < left {
+                    left - qj
+                } else if qj > right {
+                    qj - right
+                } else {
+                    0.0
+                };
+                col[k] = dist * dist;
+            }
+            // rows >= cells stay 0 (codes never reference them)
+        }
+        Self { d, m1, table }
+    }
+
+    /// Squared LB distance of one candidate given its per-dim codes.
+    #[inline]
+    pub fn lb_sq(&self, codes: &[u16]) -> f32 {
+        debug_assert_eq!(codes.len(), self.d);
+        let m1 = self.m1;
+        let mut s = 0f32;
+        for (j, &c) in codes.iter().enumerate() {
+            s += self.table[j * m1 + c as usize];
+        }
+        s
+    }
+
+    /// Batched accumulation: codes are dimension-major columns (one
+    /// extracted column per dimension, as produced by
+    /// `SegmentLayout::extract_dim_column`). `acc` holds per-candidate
+    /// partial sums and must be zeroed by the caller before dim 0.
+    pub fn accumulate_dim(&self, j: usize, codes: &[u16], acc: &mut [f32]) {
+        debug_assert_eq!(codes.len(), acc.len());
+        let col = &self.table[j * self.m1..(j + 1) * self.m1];
+        for (a, &c) in acc.iter_mut().zip(codes) {
+            *a += col[c as usize];
+        }
+    }
+
+    /// Export to the XLA (M+1, d) row-major layout used by the `lb`
+    /// artifact (and built natively when the `lut` artifact is bypassed).
+    pub fn to_row_major(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.m1 * self.d];
+        for j in 0..self.d {
+            for k in 0..self.m1 {
+                out[k * self.d + j] = self.table[j * self.m1 + k];
+            }
+        }
+        out
+    }
+}
+
+/// Top-k selection over (id, distance) pairs by ascending distance —
+/// bounded binary max-heap, O(n log k). Returns pairs sorted ascending.
+pub fn top_k_smallest(items: impl Iterator<Item = (u64, f32)>, k: usize) -> Vec<(u64, f32)> {
+    if k == 0 {
+        return Vec::new();
+    }
+    // max-heap on distance so the root is the current worst of the best-k
+    let mut heap: Vec<(u64, f32)> = Vec::with_capacity(k + 1);
+    // total order: distance, then id (deterministic tie-break)
+    fn worse(a: &(u64, f32), b: &(u64, f32)) -> bool {
+        a.1 > b.1 || (a.1 == b.1 && a.0 > b.0)
+    }
+    fn sift_up(h: &mut [(u64, f32)], mut i: usize) {
+        while i > 0 {
+            let p = (i - 1) / 2;
+            if worse(&h[i], &h[p]) {
+                h.swap(i, p);
+                i = p;
+            } else {
+                break;
+            }
+        }
+    }
+    fn sift_down(h: &mut [(u64, f32)]) {
+        let n = h.len();
+        let mut i = 0;
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut m = i;
+            if l < n && worse(&h[l], &h[m]) {
+                m = l;
+            }
+            if r < n && worse(&h[r], &h[m]) {
+                m = r;
+            }
+            if m == i {
+                break;
+            }
+            h.swap(i, m);
+            i = m;
+        }
+    }
+    for it in items {
+        if heap.len() < k {
+            heap.push(it);
+            { let last = heap.len() - 1; sift_up(&mut heap, last); }
+        } else if worse(&heap[0], &it) {
+            heap[0] = it;
+            sift_down(&mut heap);
+        }
+    }
+    heap.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+    heap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::osq::boundaries::lloyd_max;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn quantizers_for(d: usize, cells: usize, seed: u64) -> (Vec<ScalarQuantizer>, Vec<Vec<f32>>) {
+        let mut rng = Rng::new(seed);
+        let mut qs = Vec::new();
+        let mut samples = Vec::new();
+        for _ in 0..d {
+            let vals: Vec<f32> = (0..500).map(|_| rng.normal()).collect();
+            qs.push(lloyd_max(&vals, cells, 20));
+            samples.push(vals);
+        }
+        (qs, samples)
+    }
+
+    #[test]
+    fn lut_zero_inside_home_cell() {
+        let (qs, _) = quantizers_for(4, 8, 1);
+        let q: Vec<f32> = qs.iter().map(|s| s.reconstruct(3)).collect();
+        let lut = AdcTable::build(&q, &qs, 9);
+        let codes = vec![3u16; 4];
+        assert_eq!(lut.lb_sq(&codes), 0.0);
+    }
+
+    #[test]
+    fn lb_monotone_in_cell_distance() {
+        // farther cells (same dim) never have smaller edge distance
+        let (qs, _) = quantizers_for(1, 16, 2);
+        let q = vec![qs[0].reconstruct(8)];
+        let lut = AdcTable::build(&q, &qs, 17);
+        let dist_at = |c: u16| lut.lb_sq(&[c]);
+        for c in 8..15 {
+            assert!(dist_at(c + 1) >= dist_at(c));
+        }
+        for c in (1..=8).rev() {
+            assert!(dist_at(c - 1) >= dist_at(c));
+        }
+    }
+
+    #[test]
+    fn accumulate_dim_matches_lb_sq() {
+        let (qs, _) = quantizers_for(6, 8, 3);
+        let mut rng = Rng::new(4);
+        let q: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+        let lut = AdcTable::build(&q, &qs, 9);
+        let n = 40;
+        let codes: Vec<Vec<u16>> =
+            (0..n).map(|_| (0..6).map(|_| rng.gen_range(8) as u16).collect()).collect();
+        let mut acc = vec![0f32; n];
+        let mut col = vec![0u16; n];
+        for j in 0..6 {
+            for (i, c) in codes.iter().enumerate() {
+                col[i] = c[j];
+            }
+            lut.accumulate_dim(j, &col, &mut acc);
+        }
+        for (i, c) in codes.iter().enumerate() {
+            assert!((acc[i] - lut.lb_sq(c)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn row_major_export_transposes() {
+        let (qs, _) = quantizers_for(3, 4, 5);
+        let lut = AdcTable::build(&[0.1, -0.2, 0.3], &qs, 5);
+        let rm = lut.to_row_major();
+        for j in 0..3 {
+            for k in 0..5 {
+                assert_eq!(rm[k * 3 + j], lut.table[j * 5 + k]);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_lb_is_lower_bound() {
+        // LB(q, cell(v)) <= ||q - v||^2 when v lies in its cell
+        prop::check("adc-lower-bound", 30, |g| {
+            let d = g.usize_in(1, 12);
+            let cells = g.usize_in(2, 16);
+            let mut qs = Vec::new();
+            let mut data: Vec<Vec<f32>> = Vec::new();
+            for _ in 0..d {
+                let vals = g.normal_vec(300);
+                qs.push(lloyd_max(&vals, cells, 15));
+                data.push(vals);
+            }
+            let q: Vec<f32> = g.normal_vec(d);
+            let lut = AdcTable::build(&q, &qs, cells + 1);
+            for i in 0..50 {
+                let v: Vec<f32> = (0..d).map(|j| data[j][i * 3]).collect();
+                let codes: Vec<u16> = (0..d).map(|j| qs[j].quantize(v[j])).collect();
+                let lb = lut.lb_sq(&codes);
+                let true_sq = crate::util::matrix::l2_sq(&q, &v);
+                if lb > true_sq + 1e-3 {
+                    return Err(format!("LB {lb} > true {true_sq}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn top_k_matches_full_sort() {
+        prop::check("top-k", 50, |g| {
+            let n = g.usize_in(0, 300);
+            let k = g.usize_in(0, 20);
+            let items: Vec<(u64, f32)> =
+                (0..n).map(|i| (i as u64, g.f32_in(0.0, 10.0))).collect();
+            let got = top_k_smallest(items.iter().copied(), k);
+            let mut sorted = items.clone();
+            sorted.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            sorted.truncate(k);
+            if got != sorted {
+                return Err(format!("got {got:?} want {sorted:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn top_k_with_duplicates() {
+        let items = vec![(3u64, 1.0f32), (1, 1.0), (2, 0.5), (0, 1.0)];
+        let got = top_k_smallest(items.into_iter(), 3);
+        assert_eq!(got, vec![(2, 0.5), (0, 1.0), (1, 1.0)]);
+    }
+}

@@ -1,0 +1,405 @@
+//! Karhunen–Loève Transform (paper §2.4.1).
+//!
+//! Each partition is independently decorrelated with a unitary (distance
+//! preserving) transform so the variance-greedy bit allocation
+//! concentrates bits on a few high-energy dimensions. We compute the
+//! covariance matrix of (a sample of) the partition and its symmetric
+//! eigendecomposition via Householder tridiagonalization (`tred2`) +
+//! implicit-QL with Wilkinson shifts (`tqli`) — no LAPACK offline.
+//!
+//! The basis is orthonormal, so ||Q(x - μ)|| = ||x - μ|| and distances
+//! computed in the transformed frame match the original frame exactly
+//! (this is what makes cross-partition result merging correct).
+
+use crate::util::matrix::Matrix;
+
+/// A fitted KLT: `y = basis * (x - mean)`, basis rows are eigenvectors of
+/// the covariance sorted by descending eigenvalue.
+#[derive(Clone, Debug)]
+pub struct Klt {
+    pub d: usize,
+    pub mean: Vec<f32>,
+    /// Row-major `d x d`; row i is the i-th principal direction.
+    pub basis: Vec<f32>,
+    /// Descending eigenvalues (per-dimension variances after transform).
+    pub eigenvalues: Vec<f32>,
+}
+
+impl Klt {
+    /// Identity transform (used when KLT is disabled in config).
+    pub fn identity(d: usize) -> Self {
+        let mut basis = vec![0f32; d * d];
+        for i in 0..d {
+            basis[i * d + i] = 1.0;
+        }
+        Self { d, mean: vec![0.0; d], basis, eigenvalues: vec![1.0; d] }
+    }
+
+    /// Fit from data (optionally subsampled by the caller).
+    pub fn fit(data: &Matrix) -> Self {
+        let d = data.d();
+        let n = data.n();
+        assert!(n >= 2, "KLT needs at least 2 samples");
+        let mean = data.col_means();
+
+        // covariance (upper triangle, f64 accumulators)
+        let mut cov = vec![0f64; d * d];
+        let mut centered = vec![0f32; d];
+        for i in 0..n {
+            let row = data.row(i);
+            for j in 0..d {
+                centered[j] = row[j] - mean[j];
+            }
+            for a in 0..d {
+                let ca = centered[a] as f64;
+                let base = a * d;
+                for b in a..d {
+                    cov[base + b] += ca * centered[b] as f64;
+                }
+            }
+        }
+        let scale = 1.0 / (n - 1) as f64;
+        for a in 0..d {
+            for b in a..d {
+                let v = cov[a * d + b] * scale;
+                cov[a * d + b] = v;
+                cov[b * d + a] = v;
+            }
+        }
+
+        let (mut eigvals, mut vectors) = sym_eig(&cov, d);
+
+        // sort descending by eigenvalue; vectors are currently columns of
+        // `vectors` (row-major d x d): column k is the k-th eigenvector.
+        let mut order: Vec<usize> = (0..d).collect();
+        order.sort_by(|&a, &b| eigvals[b].partial_cmp(&eigvals[a]).unwrap());
+        let mut basis = vec![0f32; d * d];
+        let mut sorted_vals = vec![0f32; d];
+        for (row, &k) in order.iter().enumerate() {
+            sorted_vals[row] = eigvals[k].max(0.0) as f32;
+            for j in 0..d {
+                basis[row * d + j] = vectors[j * d + k] as f32;
+            }
+        }
+        eigvals.clear();
+        vectors.clear();
+
+        Self { d, mean, basis, eigenvalues: sorted_vals }
+    }
+
+    /// Transform one vector into the KLT frame.
+    pub fn transform(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.d);
+        debug_assert_eq!(out.len(), self.d);
+        let d = self.d;
+        let mut centered = vec![0f32; d];
+        for j in 0..d {
+            centered[j] = x[j] - self.mean[j];
+        }
+        for i in 0..d {
+            let row = &self.basis[i * d..(i + 1) * d];
+            let mut s = 0f32;
+            for j in 0..d {
+                s += row[j] * centered[j];
+            }
+            out[i] = s;
+        }
+    }
+
+    /// Transform a whole matrix.
+    pub fn transform_matrix(&self, data: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(data.n(), self.d);
+        let mut buf = vec![0f32; self.d];
+        for i in 0..data.n() {
+            self.transform(data.row(i), &mut buf);
+            out.row_mut(i).copy_from_slice(&buf);
+        }
+        out
+    }
+}
+
+/// Symmetric eigendecomposition: returns (eigenvalues, eigenvectors) with
+/// eigenvector k in column k of the row-major `d x d` matrix.
+/// Householder tridiagonalization followed by implicit-QL iteration.
+fn sym_eig(a: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut z = a.to_vec(); // will accumulate the orthogonal transform
+    let mut diag = vec![0f64; n];
+    let mut off = vec![0f64; n];
+    tred2(&mut z, n, &mut diag, &mut off);
+    tqli(&mut diag, &mut off, n, &mut z);
+    (diag, z)
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form
+/// (Numerical Recipes `tred2`, zero-indexed). On exit `z` holds the
+/// orthogonal matrix Q effecting the reduction, `d` the diagonal and
+/// `e` the off-diagonal (e[0] unused).
+fn tred2(z: &mut [f64], n: usize, d: &mut [f64], e: &mut [f64]) {
+    for i in (1..n).rev() {
+        let l = i; // number of leading elements in row i
+        let mut h = 0.0f64;
+        if l > 1 {
+            let mut scale = 0.0f64;
+            for k in 0..l {
+                scale += z[i * n + k].abs();
+            }
+            if scale == 0.0 {
+                e[i] = z[i * n + l - 1];
+            } else {
+                for k in 0..l {
+                    z[i * n + k] /= scale;
+                    h += z[i * n + k] * z[i * n + k];
+                }
+                let f = z[i * n + l - 1];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[i * n + l - 1] = f - g;
+                let mut fsum = 0.0f64;
+                for j in 0..l {
+                    z[j * n + i] = z[i * n + j] / h;
+                    let mut g = 0.0f64;
+                    for k in 0..=j {
+                        g += z[j * n + k] * z[i * n + k];
+                    }
+                    for k in j + 1..l {
+                        g += z[k * n + j] * z[i * n + k];
+                    }
+                    e[j] = g / h;
+                    fsum += e[j] * z[i * n + j];
+                }
+                let hh = fsum / (h + h);
+                for j in 0..l {
+                    let f = z[i * n + j];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        z[j * n + k] -= f * e[k] + g * z[i * n + k];
+                    }
+                }
+            }
+        } else {
+            e[i] = z[i * n + l - 1];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0f64;
+                for k in 0..i {
+                    g += z[i * n + k] * z[k * n + j];
+                }
+                for k in 0..i {
+                    z[k * n + j] -= g * z[k * n + i];
+                }
+            }
+        }
+        d[i] = z[i * n + i];
+        z[i * n + i] = 1.0;
+        for j in 0..i {
+            z[j * n + i] = 0.0;
+            z[i * n + j] = 0.0;
+        }
+    }
+}
+
+/// Implicit QL with Wilkinson shifts on a tridiagonal matrix
+/// (Numerical Recipes `tqli`), accumulating eigenvectors into `z`.
+fn tqli(d: &mut [f64], e: &mut [f64], n: usize, z: &mut [f64]) {
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find a negligible off-diagonal e[m] to split the problem
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter <= 60, "tqli: too many iterations");
+            // Wilkinson shift
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + sign(r, g));
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    // deflate: rotation underflowed
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate eigenvector rotation
+                for k in 0..n {
+                    f = z[k * n + i + 1];
+                    z[k * n + i + 1] = s * z[k * n + i] + c * f;
+                    z[k * n + i] = c * z[k * n + i] - s * f;
+                }
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+}
+
+#[inline]
+fn sign(a: f64, b: f64) -> f64 {
+    if b >= 0.0 {
+        a.abs()
+    } else {
+        -a.abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::matrix::l2_sq;
+    use crate::util::rng::Rng;
+
+    fn random_correlated(n: usize, d: usize, seed: u64) -> Matrix {
+        // correlated Gaussian: x = A * z with banded A
+        let mut rng = Rng::new(seed);
+        let mut a = vec![0f32; d * d];
+        for i in 0..d {
+            for j in 0..=i {
+                a[i * d + j] = rng.normal() * (0.9f32).powi((i - j) as i32);
+            }
+        }
+        Matrix::from_rows_fn(n, d, |_, row| {
+            let z: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            for i in 0..d {
+                let mut s = 0f32;
+                for j in 0..=i {
+                    s += a[i * d + j] * z[j];
+                }
+                row[i] = s;
+            }
+        })
+    }
+
+    #[test]
+    fn eig_reconstructs_small_matrix() {
+        // A = [[2,1],[1,2]] -> eigenvalues 3, 1
+        let a = vec![2.0, 1.0, 1.0, 2.0];
+        let (vals, vecs) = sym_eig(&a, 2);
+        let mut sorted = vals.clone();
+        sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((sorted[0] - 1.0).abs() < 1e-10);
+        assert!((sorted[1] - 3.0).abs() < 1e-10);
+        // A v = λ v for each column
+        for k in 0..2 {
+            for i in 0..2 {
+                let av: f64 = (0..2).map(|j| a[i * 2 + j] * vecs[j * 2 + k]).sum();
+                assert!((av - vals[k] * vecs[i * 2 + k]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn eig_orthonormal_columns() {
+        let m = random_correlated(500, 16, 9);
+        let d = 16;
+        let mean = m.col_means();
+        let mut cov = vec![0f64; d * d];
+        for i in 0..m.n() {
+            let r = m.row(i);
+            for a in 0..d {
+                for b in 0..d {
+                    cov[a * d + b] +=
+                        ((r[a] - mean[a]) as f64) * ((r[b] - mean[b]) as f64) / (m.n() - 1) as f64;
+                }
+            }
+        }
+        let (_vals, vecs) = sym_eig(&cov, d);
+        for a in 0..d {
+            for b in 0..d {
+                let dot: f64 = (0..d).map(|k| vecs[k * d + a] * vecs[k * d + b]).sum();
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-8, "({a},{b}) dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn klt_preserves_distances() {
+        let m = random_correlated(300, 12, 4);
+        let klt = Klt::fit(&m);
+        let t = klt.transform_matrix(&m);
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let i = rng.gen_range(m.n());
+            let j = rng.gen_range(m.n());
+            let orig = l2_sq(m.row(i), m.row(j));
+            let trans = l2_sq(t.row(i), t.row(j));
+            assert!(
+                (orig - trans).abs() <= 1e-3 * orig.max(1.0),
+                "distance not preserved: {orig} vs {trans}"
+            );
+        }
+    }
+
+    #[test]
+    fn klt_compacts_energy() {
+        let m = random_correlated(2000, 16, 11);
+        let klt = Klt::fit(&m);
+        let t = klt.transform_matrix(&m);
+        let before = m.col_variances();
+        let after = t.col_variances();
+        // eigenvalues descending
+        for w in klt.eigenvalues.windows(2) {
+            assert!(w[0] >= w[1] - 1e-4);
+        }
+        // transformed variances match eigenvalues
+        for (j, &ev) in klt.eigenvalues.iter().enumerate() {
+            assert!((after[j] - ev).abs() < 0.15 * ev.max(0.1), "dim {j}: {} vs {ev}", after[j]);
+        }
+        // energy compaction: top-4 transformed dims hold more energy than
+        // top-4 original dims
+        let top = |v: &[f32]| {
+            let mut s = v.to_vec();
+            s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            s[..4].iter().sum::<f32>()
+        };
+        assert!(top(&after) >= top(&before));
+    }
+
+    #[test]
+    fn identity_transform_is_noop() {
+        let klt = Klt::identity(3);
+        let mut out = vec![0f32; 3];
+        klt.transform(&[1.0, -2.0, 0.5], &mut out);
+        assert_eq!(out, vec![1.0, -2.0, 0.5]);
+    }
+}

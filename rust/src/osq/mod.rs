@@ -1,0 +1,12 @@
+//! Optimized Scalar Quantization (paper §2.2, §2.4): non-uniform bit
+//! allocation, Lloyd–Max quantizer design, per-partition KLT, shared
+//! segment-based storage with dimensional extraction, the low-bit binary
+//! index, and ADC lookup-table lower-bound distances.
+
+pub mod binary;
+pub mod bit_alloc;
+pub mod boundaries;
+pub mod distance;
+pub mod klt;
+pub mod quantizer;
+pub mod segment;

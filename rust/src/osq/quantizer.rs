@@ -1,0 +1,568 @@
+//! The per-partition OSQ index: KLT + non-uniform bit allocation +
+//! Lloyd–Max quantizers + segment-packed codes + the low-bit binary
+//! index. This is the unit of data a QueryProcessor loads from object
+//! storage (and retains across warm invocations via DRE).
+
+use crate::osq::binary::BinaryIndex;
+use crate::osq::bit_alloc::{allocate_bits, cell_counts};
+use crate::osq::boundaries::{lloyd_max, ScalarQuantizer};
+use crate::osq::distance::AdcTable;
+use crate::osq::klt::Klt;
+use crate::osq::segment::SegmentLayout;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+use crate::util::ser::{read_header, write_header, Reader, SerError, Writer};
+
+const MAGIC: u32 = 0x4F53_5131; // "OSQ1"
+
+/// Build options for one partition's OSQ index.
+#[derive(Clone, Debug)]
+pub struct OsqOptions {
+    /// Total per-vector bit budget `b` (paper uses 4*d).
+    pub bit_budget: usize,
+    /// Apply the per-partition KLT (paper's optional unitary transform).
+    pub use_klt: bool,
+    /// Max rows used to fit the KLT covariance (0 = all rows).
+    pub klt_sample: usize,
+    /// Max values per dimension used to fit Lloyd–Max (0 = all rows).
+    pub train_sample: usize,
+    /// Lloyd–Max iterations.
+    pub lloyd_iters: usize,
+    /// LUT rows (max cells + 1); fixed at 257 to match the XLA artifacts.
+    pub m1: usize,
+}
+
+impl Default for OsqOptions {
+    fn default() -> Self {
+        Self {
+            bit_budget: 0, // 0 => 4 * d at build time
+            use_klt: true,
+            klt_sample: 4096,
+            train_sample: 16384,
+            lloyd_iters: 16,
+            m1: 257,
+        }
+    }
+}
+
+/// One partition's complete OSQ index.
+#[derive(Clone, Debug)]
+pub struct OsqIndex {
+    pub d: usize,
+    pub n: usize,
+    pub m1: usize,
+    pub klt: Klt,
+    pub layout: SegmentLayout,
+    pub quantizers: Vec<ScalarQuantizer>,
+    /// `n * layout.segments_per_vector()` packed primary codes.
+    pub packed: Vec<u8>,
+    /// Low-bit (1 bit/dim) index over the original (pre-KLT) frame.
+    pub binary: BinaryIndex,
+}
+
+impl OsqIndex {
+    /// Build the index over one partition's vectors (original frame).
+    pub fn build(data: &Matrix, opts: &OsqOptions, rng: &mut Rng) -> Self {
+        let d = data.d();
+        let n = data.n();
+        assert!(n > 0, "empty partition");
+        let budget = if opts.bit_budget == 0 { 4 * d } else { opts.bit_budget };
+
+        // 1. per-partition KLT (optional)
+        let klt = if opts.use_klt && n >= 8 {
+            let fit_data = if opts.klt_sample > 0 && n > opts.klt_sample {
+                let rows = rng.sample_indices(n, opts.klt_sample);
+                data.select_rows(&rows)
+            } else {
+                data.clone()
+            };
+            Klt::fit(&fit_data)
+        } else {
+            Klt::identity(d)
+        };
+        let t = klt.transform_matrix(data);
+
+        // 2. variance-driven bit allocation in the KLT frame
+        let vars = t.col_variances();
+        let bits = allocate_bits(&vars, budget);
+        let cells = cell_counts(&bits);
+        let layout = SegmentLayout::new(bits);
+
+        // 3. per-dimension Lloyd–Max quantizer design
+        let sample_rows: Option<Vec<usize>> = if opts.train_sample > 0 && n > opts.train_sample {
+            Some(rng.sample_indices(n, opts.train_sample))
+        } else {
+            None
+        };
+        let mut quantizers = Vec::with_capacity(d);
+        let mut col = Vec::new();
+        for j in 0..d {
+            col.clear();
+            match &sample_rows {
+                Some(rows) => col.extend(rows.iter().map(|&i| t.row(i)[j])),
+                None => col.extend((0..n).map(|i| t.row(i)[j])),
+            }
+            quantizers.push(lloyd_max(&col, cells[j] as usize, opts.lloyd_iters));
+        }
+
+        // 4. encode + pack all vectors
+        let mut codes = vec![0u16; n * d];
+        for i in 0..n {
+            let row = t.row(i);
+            for j in 0..d {
+                codes[i * d + j] = quantizers[j].quantize(row[j]);
+            }
+        }
+        let packed = layout.pack_all(&codes, n);
+
+        // 5. low-bit index over the ORIGINAL frame (paper §2.4.3: "we
+        // first standardize the data"). In the KLT frame the trailing
+        // (low-eigenvalue) dimensions are within-cluster noise, and their
+        // sign bits would swamp the equally-weighted Hamming distance;
+        // standardized original dimensions carry near-uniform signal.
+        let binary = BinaryIndex::build(data);
+
+        Self { d, n, m1: opts.m1, klt, layout, quantizers, packed, binary }
+    }
+
+    /// Transform a query into this partition's KLT frame.
+    pub fn query_frame(&self, q: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; self.d];
+        self.klt.transform(q, &mut out);
+        out
+    }
+
+    /// Build the per-query ADC lookup table (KLT-frame query).
+    pub fn adc_table(&self, q_frame: &[f32]) -> AdcTable {
+        AdcTable::build(q_frame, &self.quantizers, self.m1)
+    }
+
+    /// Fused row-major LB scan: each candidate's packed row (G bytes) is
+    /// visited once, extracting every dimension and gathering its LUT
+    /// entry in the same pass.
+    ///
+    /// §Perf note: measured SLOWER than the column-wise default on
+    /// d=128/20k (7.4 ms vs 6.3 ms): the column pass streams the packed
+    /// array sequentially with one hot 257-float LUT column, while the
+    /// row pass scatters over the whole 131 KB LUT per row. Kept as the
+    /// documented ablation (EXPERIMENTS.md §Perf iteration 1, reverted).
+    pub fn lb_sq_scan_rowmajor(&self, lut: &AdcTable, rows: &[usize], acc: &mut Vec<f32>) {
+        acc.clear();
+        acc.reserve(rows.len());
+        let g = self.layout.segments_per_vector();
+        let accessors = self.layout.dim_accessors();
+        let m1 = lut.m1;
+        let table = &lut.table;
+        for &r in rows {
+            let row = &self.packed[r * g..(r + 1) * g];
+            let mut s = 0f32;
+            for (j, a) in accessors.iter().enumerate() {
+                let seg = a.seg as usize;
+                // unaligned u32 window; rows shorter than seg+4 take the
+                // safe tail path (only possible near the buffer end)
+                let window = if seg + 4 <= row.len() {
+                    u32::from_le_bytes(row[seg..seg + 4].try_into().unwrap())
+                } else {
+                    let mut w = 0u32;
+                    for (k, &byte) in row[seg..].iter().enumerate() {
+                        w |= (byte as u32) << (8 * k);
+                    }
+                    w
+                };
+                let code = ((window >> a.shift) & a.mask) as usize;
+                s += table[j * m1 + code];
+            }
+            acc.push(s);
+        }
+    }
+
+    /// Squared LB distances for `rows` (local ids) — the native hot path:
+    /// column-wise extraction fused with the dimension-major LUT
+    /// accumulation (paper §2.4.4 "advanced indexing").
+    ///
+    /// §Perf iteration 2: the extract and accumulate loops were fused per
+    /// column, removing the intermediate code buffer (one pass per
+    /// dimension: window-load → shift/mask → LUT add). ~1.5x over the
+    /// two-pass version; see EXPERIMENTS.md §Perf. `lb_sq_scan_rowmajor`
+    /// is the measured-and-reverted row-major ablation (iteration 1).
+    pub fn lb_sq_scan(&self, lut: &AdcTable, rows: &[usize], acc: &mut Vec<f32>) {
+        acc.clear();
+        acc.resize(rows.len(), 0.0);
+        let g = self.layout.segments_per_vector();
+        let accessors = self.layout.dim_accessors();
+        let m1 = lut.m1;
+        let packed = &self.packed;
+        for (j, a) in accessors.iter().enumerate() {
+            if a.mask == 0 {
+                continue; // zero-bit dims carry no code and LB contribution 0
+            }
+            let seg = a.seg as usize;
+            let shift = a.shift;
+            let mask = a.mask;
+            let lut_col = &lut.table[j * m1..(j + 1) * m1];
+            if seg + 4 <= g {
+                for (out, &r) in acc.iter_mut().zip(rows) {
+                    let base = r * g + seg;
+                    let window = u32::from_le_bytes(packed[base..base + 4].try_into().unwrap());
+                    *out += lut_col[((window >> shift) & mask) as usize];
+                }
+            } else {
+                for (out, &r) in acc.iter_mut().zip(rows) {
+                    let row = &packed[r * g..(r + 1) * g];
+                    let mut window = 0u32;
+                    for (k, &byte) in row[seg..].iter().enumerate() {
+                        window |= (byte as u32) << (8 * k);
+                    }
+                    *out += lut_col[((window >> shift) & mask) as usize];
+                }
+            }
+        }
+    }
+
+    /// The original two-pass column scan (extract into a buffer, then
+    /// accumulate) — kept as the §Perf iteration-2 baseline + oracle.
+    pub fn lb_sq_scan_twopass(&self, lut: &AdcTable, rows: &[usize], acc: &mut Vec<f32>) {
+        acc.clear();
+        acc.resize(rows.len(), 0.0);
+        let mut col: Vec<u16> = Vec::with_capacity(rows.len());
+        for j in 0..self.d {
+            if self.layout.bits_of(j) == 0 {
+                continue;
+            }
+            self.layout.extract_dim_column(&self.packed, rows, j, &mut col);
+            lut.accumulate_dim(j, &col, acc);
+        }
+    }
+
+    /// Extract full code rows as i32 (XLA `lb` artifact input layout),
+    /// appending `rows.len() * d` values to `out`.
+    pub fn codes_as_i32(&self, rows: &[usize], out: &mut Vec<i32>) {
+        out.clear();
+        out.reserve(rows.len() * self.d);
+        for &r in rows {
+            let row = &self.packed[r * self.layout.segments_per_vector()
+                ..(r + 1) * self.layout.segments_per_vector()];
+            for j in 0..self.d {
+                out.push(self.layout.extract_dim(row, j) as i32);
+            }
+        }
+    }
+
+    /// Padded boundary matrix in the XLA `(M2, d)` row-major layout
+    /// (rows >= cells replicate the last real edge) plus per-dim cell
+    /// counts — the inputs of the `lut` artifact.
+    pub fn boundaries_padded(&self, m2: usize) -> (Vec<f32>, Vec<i32>) {
+        let d = self.d;
+        let mut b = vec![0f32; m2 * d];
+        let mut cells = vec![0i32; d];
+        for (j, sq) in self.quantizers.iter().enumerate() {
+            let c = sq.cells();
+            cells[j] = c as i32;
+            for k in 0..m2 {
+                let idx = k.min(c); // replicate last edge beyond cells
+                b[k * d + j] = sq.edges[idx.min(sq.edges.len() - 1)];
+            }
+        }
+        (b, cells)
+    }
+
+    /// Primary-index bytes (packed codes) — drives the cost model.
+    pub fn primary_bytes(&self) -> usize {
+        self.packed.len()
+    }
+
+    /// Total in-memory index footprint in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.packed.len()
+            + self.binary.code_bytes()
+            + self.quantizers.iter().map(|q| q.edges.len() * 4).sum::<usize>()
+            + self.klt.basis.len() * 4
+    }
+
+    // ------------------------------------------------------------------
+    // serialization (index files stored in simulated object storage)
+    // ------------------------------------------------------------------
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        write_header(&mut w, MAGIC, 1);
+        w.usize(self.d);
+        w.usize(self.n);
+        w.usize(self.m1);
+        // klt
+        w.f32_slice(&self.klt.mean);
+        w.f32_slice(&self.klt.basis);
+        w.f32_slice(&self.klt.eigenvalues);
+        // layout
+        w.u8_slice(self.layout.bits());
+        // quantizers
+        for q in &self.quantizers {
+            w.f32_slice(&q.edges);
+        }
+        // packed primary codes
+        w.u8_slice(&self.packed);
+        // binary index
+        w.usize(self.binary.words);
+        w.f32_slice(&self.binary.mean);
+        w.f32_slice(&self.binary.inv_std);
+        w.u64_slice(&self.binary.codes);
+        w.into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, SerError> {
+        let mut r = Reader::new(bytes);
+        read_header(&mut r, MAGIC, 1)?;
+        let d = r.usize()?;
+        let n = r.usize()?;
+        let m1 = r.usize()?;
+        let mean = r.f32_vec()?;
+        let basis = r.f32_vec()?;
+        let eigenvalues = r.f32_vec()?;
+        let klt = Klt { d, mean, basis, eigenvalues };
+        let bits = r.u8_vec()?;
+        let layout = SegmentLayout::new(bits);
+        let mut quantizers = Vec::with_capacity(d);
+        for _ in 0..d {
+            quantizers.push(ScalarQuantizer { edges: r.f32_vec()? });
+        }
+        let packed = r.u8_vec()?;
+        let words = r.usize()?;
+        let bmean = r.f32_vec()?;
+        let binv = r.f32_vec()?;
+        let bcodes = r.u64_vec()?;
+        let binary = BinaryIndex { d, words, mean: bmean, inv_std: binv, codes: bcodes };
+        Ok(Self { d, n, m1, klt, layout, quantizers, packed, binary })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::osq::binary::select_by_hamming;
+    use crate::osq::distance::top_k_smallest;
+    use crate::util::matrix::l2_sq;
+
+    fn clustered(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..d).map(|_| rng.normal() * 3.0).collect()).collect();
+        Matrix::from_rows_fn(n, d, |i, row| {
+            let c = &centers[i % 4];
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = c[j] + rng.normal() * 0.5;
+            }
+        })
+    }
+
+    fn build_small(seed: u64, use_klt: bool) -> (Matrix, OsqIndex) {
+        let data = clustered(400, 16, seed);
+        let mut rng = Rng::new(seed + 1);
+        let opts = OsqOptions { use_klt, ..Default::default() };
+        let idx = OsqIndex::build(&data, &opts, &mut rng);
+        (data, idx)
+    }
+
+    #[test]
+    fn build_shapes() {
+        let (_, idx) = build_small(1, true);
+        assert_eq!(idx.d, 16);
+        assert_eq!(idx.n, 400);
+        assert_eq!(idx.layout.total_bits(), 64); // 4 * d
+        assert_eq!(idx.layout.segments_per_vector(), 8);
+        assert_eq!(idx.packed.len(), 400 * 8);
+        assert_eq!(idx.quantizers.len(), 16);
+    }
+
+    #[test]
+    fn lb_is_lower_bound_of_true_distance() {
+        let (data, idx) = build_small(2, true);
+        let mut rng = Rng::new(99);
+        for _ in 0..10 {
+            let qi = rng.gen_range(data.n());
+            let q = data.row(qi);
+            let qf = idx.query_frame(q);
+            let lut = idx.adc_table(&qf);
+            let rows: Vec<usize> = (0..data.n()).collect();
+            let mut lb = Vec::new();
+            idx.lb_sq_scan(&lut, &rows, &mut lb);
+            for (i, &l) in lb.iter().enumerate() {
+                let true_sq = l2_sq(q, data.row(i));
+                assert!(
+                    l <= true_sq + 1e-2 + 1e-3 * true_sq,
+                    "row {i}: LB {l} > true {true_sq}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lb_search_finds_near_neighbors() {
+        // quantized search (LB ranking) must place the true NN in the top
+        // few candidates for an easy clustered dataset
+        let (data, idx) = build_small(3, true);
+        let mut rng = Rng::new(5);
+        let mut hits = 0;
+        let trials = 20;
+        for _ in 0..trials {
+            let qi = rng.gen_range(data.n());
+            let q = data.row(qi); // query = a database vector; NN = itself
+            let qf = idx.query_frame(q);
+            let lut = idx.adc_table(&qf);
+            let rows: Vec<usize> = (0..data.n()).collect();
+            let mut lb = Vec::new();
+            idx.lb_sq_scan(&lut, &rows, &mut lb);
+            let top = top_k_smallest(
+                lb.iter().enumerate().map(|(i, &v)| (i as u64, v)),
+                10,
+            );
+            if top.iter().any(|&(id, _)| id as usize == qi) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= trials * 9 / 10, "hits={hits}/{trials}");
+    }
+
+    #[test]
+    fn codes_as_i32_matches_extraction() {
+        let (_, idx) = build_small(4, false);
+        let rows = vec![0usize, 7, 31];
+        let mut out = Vec::new();
+        idx.codes_as_i32(&rows, &mut out);
+        assert_eq!(out.len(), 3 * 16);
+        let mut col = Vec::new();
+        for j in 0..16 {
+            idx.layout.extract_dim_column(&idx.packed, &rows, j, &mut col);
+            for (k, &c) in col.iter().enumerate() {
+                assert_eq!(out[k * 16 + j], c as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn boundaries_padded_layout() {
+        let (_, idx) = build_small(5, false);
+        let m2 = 258;
+        let (b, cells) = idx.boundaries_padded(m2);
+        assert_eq!(b.len(), m2 * 16);
+        for j in 0..16 {
+            let c = cells[j] as usize;
+            assert_eq!(c, idx.quantizers[j].cells());
+            // boundary column is monotone then constant
+            for k in 1..m2 {
+                assert!(b[k * 16 + j] >= b[(k - 1) * 16 + j]);
+            }
+            assert_eq!(b[(m2 - 1) * 16 + j], *idx.quantizers[j].edges.last().unwrap());
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let (data, idx) = build_small(6, true);
+        let bytes = idx.to_bytes();
+        let back = OsqIndex::from_bytes(&bytes).unwrap();
+        assert_eq!(back.d, idx.d);
+        assert_eq!(back.n, idx.n);
+        assert_eq!(back.packed, idx.packed);
+        assert_eq!(back.binary.codes, idx.binary.codes);
+        assert_eq!(back.layout, idx.layout);
+        // behavioral equality: same LB distances
+        let q = data.row(17);
+        let lut_a = idx.adc_table(&idx.query_frame(q));
+        let lut_b = back.adc_table(&back.query_frame(q));
+        let rows: Vec<usize> = (0..50).collect();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        idx.lb_sq_scan(&lut_a, &rows, &mut a);
+        back.lb_sq_scan(&lut_b, &rows, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn hamming_prune_keeps_quality() {
+        // end-to-end §2.4.3 behaviour: prune to 25% by Hamming, then LB;
+        // recall@10 vs exhaustive LB must stay high
+        let (data, idx) = build_small(7, true);
+        let mut rng = Rng::new(8);
+        let rows: Vec<usize> = (0..data.n()).collect();
+        let mut total_overlap = 0;
+        for _ in 0..10 {
+            let q: Vec<f32> = data.row(rng.gen_range(data.n())).to_vec();
+            let qf = idx.query_frame(&q);
+            let lut = idx.adc_table(&qf);
+            // exhaustive LB top-10
+            let mut lb_all = Vec::new();
+            idx.lb_sq_scan(&lut, &rows, &mut lb_all);
+            let full = top_k_smallest(lb_all.iter().enumerate().map(|(i, &v)| (i as u64, v)), 10);
+            // hamming-pruned (low-bit index lives in the original frame)
+            let qw = idx.binary.encode_query(&q);
+            let mut h = Vec::new();
+            idx.binary.hamming_scan(&qw, &rows, &mut h);
+            let kept = select_by_hamming(&h, idx.d, rows.len() / 4);
+            let kept_rows: Vec<usize> = kept.iter().map(|&i| rows[i]).collect();
+            let mut lb_kept = Vec::new();
+            idx.lb_sq_scan(&lut, &kept_rows, &mut lb_kept);
+            let pruned = top_k_smallest(
+                lb_kept.iter().enumerate().map(|(i, &v)| (kept_rows[i] as u64, v)),
+                10,
+            );
+            let set: std::collections::HashSet<u64> = full.iter().map(|&(i, _)| i).collect();
+            total_overlap += pruned.iter().filter(|&&(i, _)| set.contains(&i)).count();
+        }
+        assert!(total_overlap >= 70, "overlap {total_overlap}/100");
+    }
+
+    #[test]
+    fn memory_footprint_compresses() {
+        let (data, idx) = build_small(9, false);
+        let raw = data.n() * data.d() * 4;
+        // per-vector payload: 4 bits/dim primary + 1 bit/dim binary vs 32
+        // bits/dim raw => 6.4x compression on codes
+        // (at d=16 the u64-word binary rounding costs a factor; large-d
+        // profiles reach ~6.4x — see benches/fig2_compression)
+        let per_vector = idx.primary_bytes() + idx.binary.code_bytes();
+        assert!(per_vector * 4 <= raw, "codes {per_vector} vs raw {raw}");
+        // whole-index footprint (incl. O(d^2) KLT + boundaries, which
+        // amortize with n) still well under half the raw data at n=400
+        assert!(idx.memory_bytes() < raw / 2, "index {} vs raw {raw}", idx.memory_bytes());
+    }
+}
+
+#[cfg(test)]
+mod perf_equivalence_tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn fused_row_scan_matches_column_scan() {
+        prop::check("lb-fused-vs-columns", 25, |g| {
+            let n = g.usize_in(2, 300);
+            let d = g.usize_in(1, 24);
+            let data = crate::util::matrix::Matrix::from_rows_fn(n, d, |_, row| {
+                for v in row.iter_mut() {
+                    *v = g.rng.normal();
+                }
+            });
+            let mut rng = crate::util::rng::Rng::new(g.seed ^ 1);
+            let use_klt = g.bool();
+            let idx = OsqIndex::build(
+                &data,
+                &OsqOptions { use_klt, ..Default::default() },
+                &mut rng,
+            );
+            let q = data.row(g.usize_in(0, n - 1)).to_vec();
+            let qf = idx.query_frame(&q);
+            let lut = idx.adc_table(&qf);
+            let rows: Vec<usize> = (0..n).step_by(1 + g.usize_in(0, 3)).collect();
+            let (mut a, mut b, mut c) = (Vec::new(), Vec::new(), Vec::new());
+            idx.lb_sq_scan(&lut, &rows, &mut a);
+            idx.lb_sq_scan_rowmajor(&lut, &rows, &mut b);
+            idx.lb_sq_scan_twopass(&lut, &rows, &mut c);
+            for (i, ((x, y), z)) in a.iter().zip(&b).zip(&c).enumerate() {
+                if (x - y).abs() > 1e-4 + 1e-4 * x.abs() || (x - z).abs() > 1e-4 + 1e-4 * x.abs()
+                {
+                    return Err(format!("row {i}: fused {x} rowmajor {y} twopass {z}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,400 @@
+//! Shared segment-based storage and dimensional extraction
+//! (paper §2.2.1–§2.2.2, Figures 1–3).
+//!
+//! Standard SQ stores each dimension's variable-length code in its own
+//! fixed S-bit variable, wasting `S - B[j]` bits per dimension. OSQ
+//! concatenates the bit patterns of consecutive dimensions into shared
+//! S-bit segments, so a vector needs `G_OSQ = ceil(b / S)` segments
+//! instead of `G_SQ = d` — the minimum possible wastage (only final
+//! padding).
+//!
+//! Extraction (Fig 3) recovers dimension `j` from its 1–2 covering
+//! segments via shift/mask/OR. Two equivalent implementations are
+//! provided:
+//!   * [`SegmentLayout::extract_dim_column`] — the fast path: a word
+//!     window read + one shift + one mask, applied column-wise over all
+//!     candidate rows (vectorizes well);
+//!   * [`SegmentLayout::extract_dim_fig3`] — the paper's literal
+//!     two-residue merge (left/right shifts per covering segment, then
+//!     OR), kept as executable documentation and cross-checked by
+//!     property tests.
+//!
+//! Bit order: we fill segments LSB-first (bit `t` of the stream lives in
+//! segment `t / S`, position `t % S`). The paper's figures draw MSB-first
+//! fills; the two are mirror images with identical wastage and cost.
+
+/// Segment size in bits. The paper evaluates S = 8 (u8 segments); the
+/// layout supports any S that divides 8*k storage (we fix 8 here and note
+/// where S would generalize).
+pub const SEGMENT_BITS: usize = 8;
+
+/// One dimension's extraction recipe (see `dim_accessors`).
+#[derive(Clone, Copy, Debug)]
+pub struct DimAccessor {
+    /// first covering segment (byte) index
+    pub seg: u32,
+    /// bit offset within that byte
+    pub shift: u32,
+    /// `(1 << B[j]) - 1`
+    pub mask: u32,
+}
+
+/// Bit-packing layout for one partition's OSQ index.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SegmentLayout {
+    /// Bits per dimension `B[j]` (0 allowed: dimension carries no code).
+    bits: Vec<u8>,
+    /// Cumulative bit offsets: `offset[j]` = start bit of dim j;
+    /// `offset[d]` = total bits per vector.
+    offsets: Vec<u32>,
+}
+
+impl SegmentLayout {
+    pub fn new(bits: Vec<u8>) -> Self {
+        let mut offsets = Vec::with_capacity(bits.len() + 1);
+        let mut acc = 0u32;
+        offsets.push(0);
+        for &b in &bits {
+            assert!(b as usize <= 16, "per-dimension codes above 16 bits unsupported");
+            acc += b as u32;
+            offsets.push(acc);
+        }
+        Self { bits, offsets }
+    }
+
+    #[inline]
+    pub fn dims(&self) -> usize {
+        self.bits.len()
+    }
+
+    #[inline]
+    pub fn bits_of(&self, j: usize) -> u8 {
+        self.bits[j]
+    }
+
+    pub fn bits(&self) -> &[u8] {
+        &self.bits
+    }
+
+    /// Total code bits per vector (`b` in the paper).
+    #[inline]
+    pub fn total_bits(&self) -> usize {
+        *self.offsets.last().unwrap() as usize
+    }
+
+    /// Segments per vector under OSQ: `ceil(b / S)` (paper's G_OSQ).
+    #[inline]
+    pub fn segments_per_vector(&self) -> usize {
+        self.total_bits().div_ceil(SEGMENT_BITS)
+    }
+
+    /// Segments per vector under standard SQ: one S-bit variable per
+    /// nonzero dimension plus `ceil((B[j]-S)/S)` extras for dims wider
+    /// than a segment (paper's G_SQ = d in the all-dims-coded case).
+    pub fn segments_per_vector_sq(&self) -> usize {
+        self.bits
+            .iter()
+            .map(|&b| (b as usize).div_ceil(SEGMENT_BITS).max(1))
+            .sum()
+    }
+
+    /// Wasted bits per vector under standard SQ (paper's W = Σ_j S - B[j]).
+    pub fn sq_wasted_bits(&self) -> usize {
+        self.segments_per_vector_sq() * SEGMENT_BITS - self.total_bits()
+    }
+
+    /// Wasted bits per vector under OSQ (final-segment padding only).
+    pub fn osq_wasted_bits(&self) -> usize {
+        self.segments_per_vector() * SEGMENT_BITS - self.total_bits()
+    }
+
+    // ------------------------------------------------------------------
+    // packing
+    // ------------------------------------------------------------------
+
+    /// Pack one vector's per-dimension codes into `out` (length
+    /// `segments_per_vector()`, zero-initialized by the caller).
+    pub fn pack_into(&self, codes: &[u16], out: &mut [u8]) {
+        debug_assert_eq!(codes.len(), self.dims());
+        debug_assert_eq!(out.len(), self.segments_per_vector());
+        for (j, &code) in codes.iter().enumerate() {
+            let b = self.bits[j] as u32;
+            if b == 0 {
+                debug_assert_eq!(code, 0, "code for 0-bit dim must be 0");
+                continue;
+            }
+            debug_assert!((code as u32) < (1u32 << b), "code {code} overflows {b} bits");
+            let start = self.offsets[j] as usize;
+            let mut remaining = b;
+            let mut val = code as u32;
+            let mut bit = start;
+            while remaining > 0 {
+                let seg = bit / SEGMENT_BITS;
+                let pos = bit % SEGMENT_BITS;
+                let take = remaining.min((SEGMENT_BITS - pos) as u32);
+                let mask = ((1u32 << take) - 1) as u8;
+                out[seg] |= (((val & ((1 << take) - 1)) as u8) & mask) << pos;
+                val >>= take;
+                bit += take as usize;
+                remaining -= take;
+            }
+        }
+    }
+
+    /// Pack a full matrix of codes (`n x d`, row-major) into a contiguous
+    /// byte buffer of `n * segments_per_vector()` bytes.
+    pub fn pack_all(&self, codes: &[u16], n: usize) -> Vec<u8> {
+        let d = self.dims();
+        assert_eq!(codes.len(), n * d);
+        let g = self.segments_per_vector();
+        let mut out = vec![0u8; n * g];
+        for i in 0..n {
+            self.pack_into(&codes[i * d..(i + 1) * d], &mut out[i * g..(i + 1) * g]);
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // extraction
+    // ------------------------------------------------------------------
+
+    /// Fast single-row extraction of dimension `j` from a packed row.
+    #[inline]
+    pub fn extract_dim(&self, row: &[u8], j: usize) -> u16 {
+        let b = self.bits[j] as u32;
+        if b == 0 {
+            return 0;
+        }
+        let start = self.offsets[j] as usize;
+        let seg = start / SEGMENT_BITS;
+        let pos = (start % SEGMENT_BITS) as u32;
+        // read a u32 window (codes span <= 3 bytes for b <= 16 at any pos)
+        let mut window = 0u32;
+        for (k, byte) in row[seg..row.len().min(seg + 4)].iter().enumerate() {
+            window |= (*byte as u32) << (8 * k);
+        }
+        ((window >> pos) & ((1u32 << b) - 1)) as u16
+    }
+
+    /// Column-wise extraction: dimension `j` of `rows.len()` candidates
+    /// (the hybrid-search fast path — only rows passing the filter are
+    /// touched, exactly as in Fig 3). `packed` is the full `n x G` buffer.
+    pub fn extract_dim_column(&self, packed: &[u8], rows: &[usize], j: usize, out: &mut Vec<u16>) {
+        out.clear();
+        let g = self.segments_per_vector();
+        let b = self.bits[j] as u32;
+        if b == 0 {
+            out.resize(rows.len(), 0);
+            return;
+        }
+        let start = self.offsets[j] as usize;
+        let seg = start / SEGMENT_BITS;
+        let pos = (start % SEGMENT_BITS) as u32;
+        let mask = (1u32 << b) - 1;
+        // Hot loop: same (seg, pos, mask) for every row — the per-row work
+        // is one window load + shift + mask.
+        if seg + 4 <= g {
+            for &r in rows {
+                let base = r * g + seg;
+                let window = u32::from_le_bytes(packed[base..base + 4].try_into().unwrap());
+                out.push(((window >> pos) & mask) as u16);
+            }
+        } else {
+            for &r in rows {
+                let row = &packed[r * g..(r + 1) * g];
+                out.push(self.extract_dim(row, j));
+            }
+        }
+    }
+
+    /// Precomputed per-dimension accessors (byte offset, bit shift, mask)
+    /// for the fused row-major scans. Dimensions with 0 bits get mask 0,
+    /// so they contribute code 0 (LUT row 0 of an all-zero column).
+    pub fn dim_accessors(&self) -> Vec<DimAccessor> {
+        (0..self.dims())
+            .map(|j| {
+                let b = self.bits[j] as u32;
+                let start = self.offsets[j] as usize;
+                DimAccessor {
+                    seg: (start / SEGMENT_BITS) as u32,
+                    shift: (start % SEGMENT_BITS) as u32,
+                    mask: if b == 0 { 0 } else { (1u32 << b) - 1 },
+                }
+            })
+            .collect()
+    }
+
+    /// The paper's literal Figure-3 procedure: per covering segment,
+    /// left-shift to drop unrelated high bits, right-shift to position at
+    /// the LSB, place into a residue with the dimension-relative offset,
+    /// then OR the residues. Semantically identical to `extract_dim`;
+    /// kept as executable documentation + differential-test oracle.
+    pub fn extract_dim_fig3(&self, row: &[u8], j: usize) -> u16 {
+        let b = self.bits[j] as usize;
+        if b == 0 {
+            return 0;
+        }
+        let start = self.offsets[j] as usize;
+        let end = start + b; // exclusive
+        let first_seg = start / SEGMENT_BITS;
+        let last_seg = (end - 1) / SEGMENT_BITS;
+        let mut result: u32 = 0;
+        let mut taken = 0usize; // bits of dim j already produced (from LSB)
+        for seg in first_seg..=last_seg {
+            let seg_lo = seg * SEGMENT_BITS;
+            let lo = start.max(seg_lo) - seg_lo; // first relevant bit in seg
+            let hi = end.min(seg_lo + SEGMENT_BITS) - seg_lo; // one past last
+            let width = hi - lo;
+            let byte = row[seg] as u32;
+            // Case 1 ops (LSB-first mirror of the figure): left-shift to
+            // zero bits above `hi`, then right-shift to park at the LSB.
+            let left_shifted = (byte << (32 - hi)) & 0xFFFF_FFFF;
+            let parked = left_shifted >> (32 - hi + lo);
+            // Residue R_i: offset by the bits this dimension already has.
+            result |= parked << taken;
+            taken += width;
+        }
+        debug_assert_eq!(taken, b);
+        result as u16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn random_layout(g: &mut prop::Gen) -> (SegmentLayout, Vec<u16>) {
+        let d = g.usize_in(1, 40);
+        let bits: Vec<u8> = (0..d).map(|_| g.usize_in(0, 9) as u8).collect();
+        let layout = SegmentLayout::new(bits.clone());
+        let codes: Vec<u16> = bits
+            .iter()
+            .map(|&b| if b == 0 { 0 } else { (g.usize_in(0, (1usize << b) - 1)) as u16 })
+            .collect();
+        (layout, codes)
+    }
+
+    #[test]
+    fn paper_example_segment_counts() {
+        // Illustrative example from §2.2.1: d=128, S=8, b=512:
+        // G_OSQ = 64 vs G_SQ = 128.
+        let layout = SegmentLayout::new(vec![4u8; 128]);
+        assert_eq!(layout.total_bits(), 512);
+        assert_eq!(layout.segments_per_vector(), 64);
+        assert_eq!(layout.segments_per_vector_sq(), 128);
+        assert_eq!(layout.osq_wasted_bits(), 0);
+        assert_eq!(layout.sq_wasted_bits(), 512);
+    }
+
+    #[test]
+    fn nine_bit_dimension_fits_without_widening() {
+        // §2.2.1: OSQ can give 9 bits to one important dimension without
+        // widening every segment to 16 bits.
+        let layout = SegmentLayout::new(vec![9, 3, 4]);
+        assert_eq!(layout.total_bits(), 16);
+        assert_eq!(layout.segments_per_vector(), 2);
+        let mut out = vec![0u8; 2];
+        layout.pack_into(&[0b1_0110_1001, 0b101, 0b1100], &mut out);
+        assert_eq!(layout.extract_dim(&out, 0), 0b1_0110_1001);
+        assert_eq!(layout.extract_dim(&out, 1), 0b101);
+        assert_eq!(layout.extract_dim(&out, 2), 0b1100);
+    }
+
+    #[test]
+    fn fig3_style_split_dimension() {
+        // Dims of 5,5,6 bits: D2 spans segments 0 and 1 like Fig 3's D2.
+        let layout = SegmentLayout::new(vec![5, 5, 6]);
+        assert_eq!(layout.segments_per_vector(), 2);
+        let codes = [0b10011u16, 0b01101, 0b110010];
+        let mut out = vec![0u8; 2];
+        layout.pack_into(&codes, &mut out);
+        for j in 0..3 {
+            assert_eq!(layout.extract_dim(&out, j), codes[j], "dim {j}");
+            assert_eq!(layout.extract_dim_fig3(&out, j), codes[j], "fig3 dim {j}");
+        }
+    }
+
+    #[test]
+    fn zero_bit_dims_are_transparent() {
+        let layout = SegmentLayout::new(vec![3, 0, 5]);
+        let codes = [0b111u16, 0, 0b10101];
+        let mut out = vec![0u8; layout.segments_per_vector()];
+        layout.pack_into(&codes, &mut out);
+        assert_eq!(layout.extract_dim(&out, 0), 0b111);
+        assert_eq!(layout.extract_dim(&out, 1), 0);
+        assert_eq!(layout.extract_dim(&out, 2), 0b10101);
+    }
+
+    #[test]
+    fn pack_all_and_column_extract() {
+        let layout = SegmentLayout::new(vec![4, 7, 2, 8]);
+        let d = 4;
+        let n = 9;
+        let codes: Vec<u16> = (0..n * d)
+            .map(|i| {
+                let b = layout.bits_of(i % d) as u32;
+                ((i as u32).wrapping_mul(2654435761) % (1 << b)) as u16
+            })
+            .collect();
+        let packed = layout.pack_all(&codes, n);
+        let rows: Vec<usize> = (0..n).step_by(2).collect();
+        let mut col = Vec::new();
+        for j in 0..d {
+            layout.extract_dim_column(&packed, &rows, j, &mut col);
+            for (k, &r) in rows.iter().enumerate() {
+                assert_eq!(col[k], codes[r * d + j], "row {r} dim {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_pack_extract_roundtrip() {
+        prop::check("segment-pack-roundtrip", 120, |g| {
+            let (layout, codes) = random_layout(g);
+            let mut out = vec![0u8; layout.segments_per_vector()];
+            layout.pack_into(&codes, &mut out);
+            for j in 0..layout.dims() {
+                let got = layout.extract_dim(&out, j);
+                if got != codes[j] {
+                    return Err(format!("dim {j}: got {got}, want {}", codes[j]));
+                }
+                let fig3 = layout.extract_dim_fig3(&out, j);
+                if fig3 != codes[j] {
+                    return Err(format!("fig3 dim {j}: got {fig3}, want {}", codes[j]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_osq_never_wastes_more_than_final_padding() {
+        prop::check("osq-wastage", 60, |g| {
+            let (layout, _) = random_layout(g);
+            let w = layout.osq_wasted_bits();
+            if w >= SEGMENT_BITS {
+                return Err(format!("osq wastage {w} >= segment size"));
+            }
+            if layout.sq_wasted_bits() < w {
+                return Err("SQ wasted less than OSQ".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wastage_figure2_shape() {
+        // Fig 2: savings grow with the average segment delta. Check the
+        // monotone shape for B in {1..8} uniform allocations over 128 dims.
+        let mut prev_savings = -1.0f64;
+        for b in (1..=8).rev() {
+            let layout = SegmentLayout::new(vec![b as u8; 128]);
+            let sq_bits = layout.segments_per_vector_sq() * SEGMENT_BITS;
+            let osq_bits = layout.segments_per_vector() * SEGMENT_BITS;
+            let savings = 1.0 - osq_bits as f64 / sq_bits as f64;
+            assert!(savings >= prev_savings, "b={b}");
+            prev_savings = savings;
+        }
+    }
+}

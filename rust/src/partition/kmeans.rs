@@ -1,0 +1,220 @@
+//! Balanced k-means coarse partitioner (paper §2.4.1: "constrained
+//! clustering to extract balanced partitions for computational load
+//! balance").
+//!
+//! Standard Lloyd iterations with a per-partition capacity cap: each
+//! assignment pass processes points in ascending best-centroid distance
+//! and spills to the next-nearest centroid with free capacity. The cap is
+//! `ceil(n / p) * slack`, giving near-equal partition sizes while keeping
+//! assignments close to vanilla k-means.
+
+use crate::util::matrix::{l2_sq, Matrix};
+use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
+
+#[derive(Clone, Debug)]
+pub struct KMeansOptions {
+    pub iters: usize,
+    /// capacity slack factor (1.0 = perfectly balanced, paper-style)
+    pub slack: f64,
+    /// rows sampled for centroid updates (0 = all)
+    pub sample: usize,
+    pub threads: usize,
+}
+
+impl Default for KMeansOptions {
+    fn default() -> Self {
+        Self { iters: 12, slack: 1.05, sample: 0, threads: 4 }
+    }
+}
+
+/// Result of balanced clustering.
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    /// centroid matrix `p x d`
+    pub centroids: Matrix,
+    /// per-row partition assignment
+    pub assignments: Vec<u32>,
+}
+
+/// k-means++ style seeding (distance-proportional, deterministic via rng).
+fn seed_centroids(data: &Matrix, p: usize, rng: &mut Rng) -> Matrix {
+    let n = data.n();
+    let mut centroids = Matrix::zeros(p, data.d());
+    let first = rng.gen_range(n);
+    centroids.row_mut(0).copy_from_slice(data.row(first));
+    let mut d2 = vec![f32::INFINITY; n];
+    for c in 1..p {
+        // update distances to the nearest chosen centroid
+        let prev = centroids.row(c - 1).to_vec();
+        for i in 0..n {
+            let dist = l2_sq(data.row(i), &prev);
+            if dist < d2[i] {
+                d2[i] = dist;
+            }
+        }
+        // sample proportional to d^2
+        let total: f64 = d2.iter().map(|&x| x as f64).sum();
+        let mut target = rng.f64() * total;
+        let mut chosen = n - 1;
+        for (i, &x) in d2.iter().enumerate() {
+            target -= x as f64;
+            if target <= 0.0 {
+                chosen = i;
+                break;
+            }
+        }
+        centroids.row_mut(c).copy_from_slice(data.row(chosen));
+    }
+    centroids
+}
+
+/// Run balanced k-means.
+pub fn balanced_kmeans(data: &Matrix, p: usize, opts: &KMeansOptions, rng: &mut Rng) -> Clustering {
+    let n = data.n();
+    let d = data.d();
+    assert!(p >= 1 && n >= p, "need at least p rows");
+    let cap = (((n as f64) / p as f64).ceil() * opts.slack).ceil() as usize;
+
+    let mut centroids = seed_centroids(data, p, rng);
+    let mut assignments = vec![0u32; n];
+
+    for _iter in 0..opts.iters {
+        // --- balanced assignment -------------------------------------
+        // distances to all centroids, computed in parallel row blocks
+        let rows: Vec<usize> = (0..n).collect();
+        let dists: Vec<Vec<f32>> = parallel_map(&rows, opts.threads, |_, &i| {
+            (0..p).map(|c| l2_sq(data.row(i), centroids.row(c))).collect()
+        });
+        // process points by the margin they'd lose if bumped (closest
+        // points first keeps the spill fair)
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            let ma = dists[a].iter().cloned().fold(f32::INFINITY, f32::min);
+            let mb = dists[b].iter().cloned().fold(f32::INFINITY, f32::min);
+            ma.partial_cmp(&mb).unwrap()
+        });
+        let mut sizes = vec![0usize; p];
+        for &i in &order {
+            // nearest centroid with capacity
+            let mut best = usize::MAX;
+            let mut best_d = f32::INFINITY;
+            for c in 0..p {
+                if sizes[c] < cap && dists[i][c] < best_d {
+                    best_d = dists[i][c];
+                    best = c;
+                }
+            }
+            let best = if best == usize::MAX {
+                // all full under slack: put in the globally smallest
+                (0..p).min_by_key(|&c| sizes[c]).unwrap()
+            } else {
+                best
+            };
+            assignments[i] = best as u32;
+            sizes[best] += 1;
+        }
+
+        // --- centroid update ------------------------------------------
+        let mut sums = vec![0f64; p * d];
+        let mut counts = vec![0usize; p];
+        for i in 0..n {
+            let c = assignments[i] as usize;
+            counts[c] += 1;
+            let row = data.row(i);
+            for j in 0..d {
+                sums[c * d + j] += row[j] as f64;
+            }
+        }
+        for c in 0..p {
+            if counts[c] > 0 {
+                let row = centroids.row_mut(c);
+                for j in 0..d {
+                    row[j] = (sums[c * d + j] / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+
+    Clustering { centroids, assignments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(n: usize, d: usize, k: usize, seed: u64) -> (Matrix, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<f32>> =
+            (0..k).map(|_| (0..d).map(|_| rng.normal() * 8.0).collect()).collect();
+        let mut labels = vec![0usize; n];
+        let m = Matrix::from_rows_fn(n, d, |i, row| {
+            let c = i % k;
+            labels[i] = c;
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = centers[c][j] + rng.normal() * 0.5;
+            }
+        });
+        (m, labels)
+    }
+
+    #[test]
+    fn partitions_are_balanced() {
+        let (data, _) = blobs(1000, 8, 7, 1);
+        let mut rng = Rng::new(2);
+        let c = balanced_kmeans(&data, 10, &KMeansOptions::default(), &mut rng);
+        let mut sizes = vec![0usize; 10];
+        for &a in &c.assignments {
+            sizes[a as usize] += 1;
+        }
+        let cap = ((1000f64 / 10.0).ceil() * 1.05).ceil() as usize;
+        for (p, &s) in sizes.iter().enumerate() {
+            assert!(s <= cap, "partition {p} size {s} > cap {cap}");
+            assert!(s > 0, "partition {p} empty");
+        }
+    }
+
+    #[test]
+    fn well_separated_blobs_recovered() {
+        let (data, labels) = blobs(600, 6, 4, 3);
+        let mut rng = Rng::new(4);
+        let c = balanced_kmeans(
+            &data,
+            4,
+            &KMeansOptions { slack: 1.2, ..Default::default() },
+            &mut rng,
+        );
+        // same-blob points should mostly share a partition
+        let mut agree = 0;
+        let mut total = 0;
+        for i in (0..600).step_by(7) {
+            for j in (i + 1..600).step_by(11) {
+                total += 1;
+                let same_blob = labels[i] == labels[j];
+                let same_part = c.assignments[i] == c.assignments[j];
+                if same_blob == same_part {
+                    agree += 1;
+                }
+            }
+        }
+        assert!(agree as f64 / total as f64 > 0.9, "{agree}/{total}");
+    }
+
+    #[test]
+    fn single_partition() {
+        let (data, _) = blobs(50, 4, 2, 5);
+        let mut rng = Rng::new(6);
+        let c = balanced_kmeans(&data, 1, &KMeansOptions::default(), &mut rng);
+        assert!(c.assignments.iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (data, _) = blobs(200, 4, 3, 7);
+        let run = |seed| {
+            let mut rng = Rng::new(seed);
+            balanced_kmeans(&data, 4, &KMeansOptions::default(), &mut rng).assignments
+        };
+        assert_eq!(run(42), run(42));
+    }
+}

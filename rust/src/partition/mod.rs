@@ -1,0 +1,160 @@
+//! Coarse partitioning (paper §2.4.1–§2.4.2): balanced k-means, the
+//! partition–vector residency map, threshold calibration (Eq 1) and the
+//! filtered partition ranking & selection of Algorithm 1.
+
+pub mod kmeans;
+pub mod selection;
+
+use crate::util::bitmap::Bitmap;
+use crate::util::matrix::{l2, Matrix};
+use crate::util::rng::Rng;
+
+/// Global partition layout shared by the Coordinator and all
+/// QueryAllocators: centroids, assignments, and the compact in-memory
+/// P–V bitmaps of the vectors resident in each partition.
+#[derive(Clone, Debug)]
+pub struct PartitionLayout {
+    pub p: usize,
+    /// `p x d` centroid matrix
+    pub centroids: Matrix,
+    /// global id -> partition
+    pub assignments: Vec<u32>,
+    /// global id -> local index within its partition
+    pub local_of: Vec<u32>,
+    /// partition -> local index -> global id
+    pub globals: Vec<Vec<u64>>,
+    /// partition -> residency bitmap over global ids (the paper's P_V)
+    pub pv: Vec<Bitmap>,
+}
+
+impl PartitionLayout {
+    pub fn from_clustering(c: &kmeans::Clustering) -> Self {
+        let p = c.centroids.n();
+        let n = c.assignments.len();
+        let mut local_of = vec![0u32; n];
+        let mut globals: Vec<Vec<u64>> = vec![Vec::new(); p];
+        let mut pv: Vec<Bitmap> = (0..p).map(|_| Bitmap::zeros(n)).collect();
+        for (i, &a) in c.assignments.iter().enumerate() {
+            let part = a as usize;
+            local_of[i] = globals[part].len() as u32;
+            globals[part].push(i as u64);
+            pv[part].set(i, true);
+        }
+        Self { p, centroids: c.centroids.clone(), assignments: c.assignments.clone(), local_of, globals, pv }
+    }
+
+    pub fn partition_size(&self, p: usize) -> usize {
+        self.globals[p].len()
+    }
+
+    /// Euclidean distances from a query to every centroid.
+    pub fn centroid_distances(&self, q: &[f32]) -> Vec<f32> {
+        (0..self.p).map(|c| l2(q, self.centroids.row(c))).collect()
+    }
+}
+
+/// Calibrate the centroid-distance threshold T (paper Eq 1):
+/// `T = 1 + σ_μ / μ_μ + β √d` from the vector→centroid ratio matrix of a
+/// data sample. `β` trades recall for visited partitions (paper: 0.001).
+pub fn calibrate_threshold(
+    data: &Matrix,
+    layout: &PartitionLayout,
+    beta: f64,
+    sample: usize,
+    rng: &mut Rng,
+) -> f32 {
+    let n = data.n();
+    let rows: Vec<usize> = if sample > 0 && n > sample {
+        rng.sample_indices(n, sample)
+    } else {
+        (0..n).collect()
+    };
+    let mut row_means = Vec::with_capacity(rows.len());
+    let mut row_stds = Vec::with_capacity(rows.len());
+    for &i in &rows {
+        let dists = layout.centroid_distances(data.row(i));
+        // home = the *nearest* centroid (assignment may differ slightly
+        // under balancing; the ratio definition uses the nearest)
+        let home = dists.iter().cloned().fold(f32::INFINITY, f32::min).max(1e-12);
+        let ratios: Vec<f64> = dists.iter().map(|&x| (x / home) as f64).collect();
+        let m = crate::util::stats::mean(&ratios);
+        row_means.push(m);
+        row_stds.push(crate::util::stats::std_dev(&ratios));
+    }
+    let mu_mu = crate::util::stats::mean(&row_means).max(1e-12);
+    let sigma_mu = crate::util::stats::mean(&row_stds);
+    (1.0 + sigma_mu / mu_mu + beta * (data.d() as f64).sqrt()) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::kmeans::{balanced_kmeans, KMeansOptions};
+
+    fn blobs(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..d).map(|_| rng.normal() * 6.0).collect()).collect();
+        Matrix::from_rows_fn(n, d, |i, row| {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = centers[i % 5][j] + rng.normal() * 0.4;
+            }
+        })
+    }
+
+    fn layout_for(data: &Matrix, p: usize, seed: u64) -> PartitionLayout {
+        let mut rng = Rng::new(seed);
+        let c = balanced_kmeans(data, p, &KMeansOptions::default(), &mut rng);
+        PartitionLayout::from_clustering(&c)
+    }
+
+    #[test]
+    fn layout_maps_consistent() {
+        let data = blobs(400, 8, 1);
+        let l = layout_for(&data, 5, 2);
+        // every global id appears exactly once across partitions
+        let mut seen = vec![false; 400];
+        for p in 0..l.p {
+            for (local, &g) in l.globals[p].iter().enumerate() {
+                assert!(!seen[g as usize], "duplicate id {g}");
+                seen[g as usize] = true;
+                assert_eq!(l.assignments[g as usize] as usize, p);
+                assert_eq!(l.local_of[g as usize] as usize, local);
+                assert!(l.pv[p].get(g as usize));
+            }
+            assert_eq!(l.pv[p].count_ones(), l.globals[p].len());
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn pv_maps_disjoint() {
+        let data = blobs(300, 6, 3);
+        let l = layout_for(&data, 4, 4);
+        for a in 0..l.p {
+            for b in a + 1..l.p {
+                assert!(!l.pv[a].intersects(&l.pv[b]), "partitions {a},{b} overlap");
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_reasonable_range() {
+        let data = blobs(500, 16, 5);
+        let l = layout_for(&data, 5, 6);
+        let mut rng = Rng::new(7);
+        let t = calibrate_threshold(&data, &l, 0.001, 200, &mut rng);
+        // Eq-1 thresholds land just above 1 (paper uses 1.13–1.2)
+        assert!(t > 1.0 && t < 3.0, "T={t}");
+    }
+
+    #[test]
+    fn beta_increases_threshold() {
+        let data = blobs(300, 16, 8);
+        let l = layout_for(&data, 4, 9);
+        let mut rng = Rng::new(10);
+        let t0 = calibrate_threshold(&data, &l, 0.0, 150, &mut rng.fork(0));
+        let t1 = calibrate_threshold(&data, &l, 0.01, 150, &mut rng.fork(0));
+        assert!(t1 > t0);
+    }
+}

@@ -1,0 +1,284 @@
+//! Filtered partition ranking and selection — Algorithm 1 of the paper.
+//!
+//! For each query, partitions are visited in ascending centroid-distance
+//! order until BOTH (1) at least k filter-passing candidates have been
+//! gathered and (2) every partition whose centroid lies within the
+//! multiplicative threshold T of the nearest has been taken. Visiting is
+//! decided once per query — a single distributed pass, no processor
+//! re-invocation — and each visit carries the exact local candidate rows
+//! so the QueryProcessor prunes all non-passing vectors up front.
+
+use crate::partition::PartitionLayout;
+use crate::util::bitmap::Bitmap;
+
+/// One query's visit to one partition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryVisit {
+    pub query: usize,
+    /// local candidate row indices within the partition (filter-passing)
+    pub local_rows: Vec<u32>,
+}
+
+/// Output of Algorithm 1: for each partition, the queries that must visit
+/// it (the paper's P_Q dictionary).
+#[derive(Clone, Debug, Default)]
+pub struct SelectionPlan {
+    pub visits: Vec<Vec<QueryVisit>>,
+    /// per-query count of gathered candidates (diagnostics / tests)
+    pub candidates_per_query: Vec<usize>,
+    /// per-query number of partitions visited
+    pub partitions_per_query: Vec<usize>,
+}
+
+/// Run Algorithm 1 for a batch of queries.
+///
+/// `filter_mask` is the *global* attribute mask F (one per query);
+/// `t` is the centroid-distance threshold; `k` the top-k target.
+pub fn select_partitions(
+    layout: &PartitionLayout,
+    queries: &[Vec<f32>],
+    filter_masks: &[Bitmap],
+    t: f32,
+    k: usize,
+) -> SelectionPlan {
+    assert_eq!(queries.len(), filter_masks.len());
+    let mut plan = SelectionPlan {
+        visits: vec![Vec::new(); layout.p],
+        candidates_per_query: vec![0; queries.len()],
+        partitions_per_query: vec![0; queries.len()],
+    };
+    let mut order: Vec<usize> = Vec::with_capacity(layout.p);
+    for (qi, (q, mask)) in queries.iter().zip(filter_masks).enumerate() {
+        let dists = layout.centroid_distances(q); // L4-5
+        order.clear();
+        order.extend(0..layout.p);
+        order.sort_by(|&a, &b| dists[a].partial_cmp(&dists[b]).unwrap()); // L6
+        let nearest = dists[order[0]].max(1e-12);
+        let mut gathered = 0usize;
+        let mut visited = 0usize;
+        for &p in &order {
+            // L7: stop once the threshold is exceeded AND k is satisfied
+            if dists[p] > t * nearest && gathered >= k {
+                break;
+            }
+            // L9: FilterPartitionVectors(F, P_V, p)
+            let local_rows = filter_partition_vectors(layout, mask, p);
+            if !local_rows.is_empty() {
+                gathered += local_rows.len(); // L12
+                plan.visits[p].push(QueryVisit { query: qi, local_rows }); // L11
+            }
+            visited += 1;
+        }
+        plan.candidates_per_query[qi] = gathered;
+        plan.partitions_per_query[qi] = visited;
+    }
+    plan
+}
+
+/// Intersect the global filter mask with a partition's residency bitmap
+/// and translate to local row indices (paper L9: bitmap representation of
+/// local candidate indices).
+pub fn filter_partition_vectors(layout: &PartitionLayout, mask: &Bitmap, p: usize) -> Vec<u32> {
+    let inter = mask.and(&layout.pv[p]);
+    inter.iter_ones().map(|g| layout.local_of[g]).collect()
+}
+
+/// Optional batch-balancing step (§2.4.2 last paragraph): partitions with
+/// few assigned queries receive extra queries — those for which they were
+/// most narrowly pruned — until the per-partition load is within
+/// `balance_factor` of the mean. Returns the number of extra visits added.
+pub fn rebalance_batch(
+    layout: &PartitionLayout,
+    queries: &[Vec<f32>],
+    filter_masks: &[Bitmap],
+    plan: &mut SelectionPlan,
+    balance_factor: f64,
+) -> usize {
+    let total_visits: usize = plan.visits.iter().map(|v| v.len()).sum();
+    if total_visits == 0 || layout.p < 2 {
+        return 0;
+    }
+    let mean = total_visits as f64 / layout.p as f64;
+    let target = (mean / balance_factor).floor() as usize;
+    let mut added = 0;
+    for p in 0..layout.p {
+        if plan.visits[p].len() >= target {
+            continue;
+        }
+        // rank queries not already visiting p by closeness of centroid p
+        let visiting: std::collections::HashSet<usize> =
+            plan.visits[p].iter().map(|v| v.query).collect();
+        let mut cands: Vec<(usize, f32)> = queries
+            .iter()
+            .enumerate()
+            .filter(|(qi, _)| !visiting.contains(qi))
+            .map(|(qi, q)| {
+                let dists = layout.centroid_distances(q);
+                let nearest = dists.iter().cloned().fold(f32::INFINITY, f32::min).max(1e-12);
+                (qi, dists[p] / nearest) // "first centroid distance above the threshold"
+            })
+            .collect();
+        cands.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        for (qi, _ratio) in cands {
+            if plan.visits[p].len() >= target {
+                break;
+            }
+            let local_rows = filter_partition_vectors(layout, &filter_masks[qi], p);
+            if !local_rows.is_empty() {
+                plan.candidates_per_query[qi] += local_rows.len();
+                plan.visits[p].push(QueryVisit { query: qi, local_rows });
+                added += 1;
+            }
+        }
+    }
+    added
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::kmeans::{balanced_kmeans, KMeansOptions};
+    use crate::util::matrix::Matrix;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, d: usize, p: usize, seed: u64) -> (Matrix, PartitionLayout) {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<f32>> =
+            (0..p).map(|_| (0..d).map(|_| rng.normal() * 5.0).collect()).collect();
+        let data = Matrix::from_rows_fn(n, d, |i, row| {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = centers[i % p][j] + rng.normal() * 0.5;
+            }
+        });
+        let c = balanced_kmeans(&data, p, &KMeansOptions::default(), &mut rng);
+        (data, PartitionLayout::from_clustering(&c))
+    }
+
+    #[test]
+    fn guarantees_k_candidates_when_available() {
+        let (data, layout) = setup(600, 8, 6, 1);
+        let mut rng = Rng::new(2);
+        // a sparse filter: ~5% of vectors pass
+        let mask = Bitmap::from_fn(600, |_| rng.gen_range(100) < 5);
+        let available = mask.count_ones();
+        let queries: Vec<Vec<f32>> = (0..10).map(|i| data.row(i * 7).to_vec()).collect();
+        let masks = vec![mask.clone(); queries.len()];
+        let k = 10;
+        let plan = select_partitions(&layout, &queries, &masks, 1.1, k);
+        for (qi, &c) in plan.candidates_per_query.iter().enumerate() {
+            assert!(c >= k.min(available), "query {qi} gathered {c} < k");
+        }
+    }
+
+    #[test]
+    fn exhausts_all_partitions_when_filter_tiny() {
+        let (data, layout) = setup(300, 6, 5, 3);
+        // only 3 vectors pass globally, k = 10: must visit everything
+        let mask = Bitmap::from_indices(300, [5, 111, 222]);
+        let plan =
+            select_partitions(&layout, &[data.row(0).to_vec()], &[mask.clone()], 1.05, 10);
+        assert_eq!(plan.candidates_per_query[0], 3);
+        assert_eq!(plan.partitions_per_query[0], 5);
+        // every passing vector is delivered exactly once with correct local ids
+        let mut delivered = 0;
+        for p in 0..layout.p {
+            for v in &plan.visits[p] {
+                for &lr in &v.local_rows {
+                    let g = layout.globals[p][lr as usize];
+                    assert!(mask.get(g as usize));
+                    delivered += 1;
+                }
+            }
+        }
+        assert_eq!(delivered, 3);
+    }
+
+    #[test]
+    fn threshold_widens_visits() {
+        let (data, layout) = setup(500, 8, 8, 4);
+        let mask = Bitmap::ones(500);
+        let q = vec![data.row(3).to_vec()];
+        let narrow = select_partitions(&layout, &q, &[mask.clone()], 1.0, 1);
+        let wide = select_partitions(&layout, &q, &[mask.clone()], 1e12, 1);
+        let nv: usize = narrow.visits.iter().map(|v| v.len()).sum();
+        let wv: usize = wide.visits.iter().map(|v| v.len()).sum();
+        assert!(wv >= nv);
+        // T is multiplicative on the *nearest* centroid distance, which is
+        // tiny when the query sits on a blob — an astronomically large T
+        // is needed to force a full sweep here.
+        assert_eq!(wv, 8, "T=1e12 must visit everything");
+    }
+
+    #[test]
+    fn empty_filter_visits_but_gathers_nothing() {
+        let (data, layout) = setup(200, 6, 4, 5);
+        let mask = Bitmap::zeros(200);
+        let plan = select_partitions(&layout, &[data.row(0).to_vec()], &[mask], 1.2, 5);
+        assert_eq!(plan.candidates_per_query[0], 0);
+        assert!(plan.visits.iter().all(|v| v.is_empty()));
+    }
+
+    #[test]
+    fn prop_selection_guarantee_and_no_duplicates() {
+        prop::check("algorithm1-invariants", 30, |g| {
+            let p = g.usize_in(2, 8);
+            let n = g.usize_in(p * 10, 400);
+            let d = g.usize_in(2, 12);
+            let seed = g.rng.next_u64();
+            let (data, layout) = setup(n, d, p, seed);
+            let pass_pct = g.usize_in(1, 100);
+            let mask = Bitmap::from_fn(n, |_| g.usize_in(1, 100) <= pass_pct);
+            let available = mask.count_ones();
+            let k = g.usize_in(1, 30);
+            let t = 1.0 + g.f32_in(0.0, 0.5);
+            let q = data.row(g.usize_in(0, n - 1)).to_vec();
+            let plan = select_partitions(&layout, &[q], &[mask.clone()], t, k);
+            // guarantee: k candidates if they exist globally
+            if plan.candidates_per_query[0] < k.min(available) {
+                return Err(format!(
+                    "gathered {} < min(k={k}, avail={available})",
+                    plan.candidates_per_query[0]
+                ));
+            }
+            // no global id delivered twice; all delivered pass the filter
+            let mut seen = std::collections::HashSet::new();
+            for part in 0..layout.p {
+                for v in &plan.visits[part] {
+                    for &lr in &v.local_rows {
+                        let gid = layout.globals[part][lr as usize];
+                        if !mask.get(gid as usize) {
+                            return Err(format!("non-passing id {gid} delivered"));
+                        }
+                        if !seen.insert(gid) {
+                            return Err(format!("id {gid} delivered twice"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rebalance_adds_visits_to_idle_partitions() {
+        let (data, layout) = setup(400, 8, 8, 6);
+        let mask = Bitmap::ones(400);
+        // all queries near one blob => skewed plan
+        let queries: Vec<Vec<f32>> = (0..16).map(|i| data.row(i * 8).to_vec()).collect();
+        let masks = vec![mask; queries.len()];
+        let mut plan = select_partitions(&layout, &queries, &masks, 1.02, 5);
+        let before: usize = plan.visits.iter().map(|v| v.len()).sum();
+        let added = rebalance_batch(&layout, &queries, &masks, &mut plan, 2.0);
+        let after: usize = plan.visits.iter().map(|v| v.len()).sum();
+        assert_eq!(after, before + added);
+        // no duplicate (query, partition) pairs
+        for p in 0..layout.p {
+            let mut qs: Vec<usize> = plan.visits[p].iter().map(|v| v.query).collect();
+            qs.sort_unstable();
+            let len = qs.len();
+            qs.dedup();
+            assert_eq!(qs.len(), len, "duplicate visit in partition {p}");
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! The QP compute backend: one trait, two implementations.
+//!
+//! * [`NativeBackend`] — the scalar/auto-vectorized Rust implementation
+//!   (`osq::binary`, `osq::distance`).
+//! * [`XlaBackend`] — the AOT path: the same math lowered from
+//!   JAX/Pallas and executed through PJRT (`runtime::Engine`).
+//!
+//! Both must agree bit-for-bit on Hamming distances and to float
+//! tolerance on LB distances — enforced by `rust/tests/runtime_xla.rs`.
+
+use std::sync::Arc;
+
+use crate::osq::distance::AdcTable;
+use crate::osq::quantizer::OsqIndex;
+use crate::runtime::Engine;
+
+/// Abstract QP hot-spot compute.
+pub trait ComputeBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Hamming distances from the *original-frame* query to the given
+    /// candidate rows of the partition's binary index (the low-bit index
+    /// standardizes raw dimensions; see osq::quantizer).
+    fn hamming_scan(&self, idx: &OsqIndex, q_raw: &[f32], rows: &[usize]) -> Vec<u32>;
+
+    /// Squared LB distances from the query to the given candidate rows
+    /// via the primary OSQ index.
+    fn lb_scan(&self, idx: &OsqIndex, q_frame: &[f32], rows: &[usize]) -> Vec<f32>;
+}
+
+/// Pure-Rust implementation (always available).
+pub struct NativeBackend;
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn hamming_scan(&self, idx: &OsqIndex, q_raw: &[f32], rows: &[usize]) -> Vec<u32> {
+        let q_words = idx.binary.encode_query(q_raw);
+        let mut out = Vec::new();
+        idx.binary.hamming_scan(&q_words, rows, &mut out);
+        out
+    }
+
+    fn lb_scan(&self, idx: &OsqIndex, q_frame: &[f32], rows: &[usize]) -> Vec<f32> {
+        let lut = AdcTable::build(q_frame, &idx.quantizers, idx.m1);
+        let mut acc = Vec::new();
+        idx.lb_sq_scan(&lut, rows, &mut acc);
+        acc
+    }
+}
+
+/// XLA/PJRT implementation executing the AOT artifacts.
+pub struct XlaBackend {
+    engine: Arc<Engine>,
+}
+
+impl XlaBackend {
+    pub fn new(engine: Arc<Engine>) -> Self {
+        Self { engine }
+    }
+
+    pub fn supports(&self, d: usize) -> bool {
+        self.engine.supports(d)
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn hamming_scan(&self, idx: &OsqIndex, q_raw: &[f32], rows: &[usize]) -> Vec<u32> {
+        let q_words64 = idx.binary.encode_query(q_raw);
+        let q_words = idx.binary.query_as_u32(&q_words64);
+        let mut codes = Vec::new();
+        idx.binary.rows_as_u32(rows, &mut codes);
+        self.engine
+            .hamming(idx.d, &q_words, &codes, rows.len())
+            .expect("xla hamming execution")
+    }
+
+    fn lb_scan(&self, idx: &OsqIndex, q_frame: &[f32], rows: &[usize]) -> Vec<f32> {
+        // LUT built on-device from the padded boundary matrix, then the
+        // gather+sum kernel over extracted candidate codes.
+        let (boundaries, cells) = idx.boundaries_padded(self.engine.m2);
+        let lut = self
+            .engine
+            .lut(idx.d, q_frame, &boundaries, &cells)
+            .expect("xla lut execution");
+        let mut codes = Vec::new();
+        idx.codes_as_i32(rows, &mut codes);
+        self.engine.lb(idx.d, &lut, &codes, rows.len()).expect("xla lb execution")
+    }
+}
+
+/// Pick the backend by name: "xla" (requires artifacts for `d`),
+/// "native", or "auto" (xla when available).
+pub fn select_backend(
+    name: &str,
+    engine: Option<Arc<Engine>>,
+    d: usize,
+) -> Arc<dyn ComputeBackend> {
+    match name {
+        "native" => Arc::new(NativeBackend),
+        "xla" => {
+            let engine = engine.expect("xla backend requested but no engine loaded");
+            assert!(engine.supports(d), "no artifacts for d={d}; run `make artifacts`");
+            Arc::new(XlaBackend::new(engine))
+        }
+        _ => match engine {
+            Some(e) if e.supports(d) => Arc::new(XlaBackend::new(e)),
+            _ => Arc::new(NativeBackend),
+        },
+    }
+}

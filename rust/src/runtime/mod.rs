@@ -1,0 +1,288 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! This is the L3 ↔ L2/L1 boundary of the three-layer architecture.
+//! Python is never on this path: `make artifacts` lowers the JAX/Pallas
+//! entry points to HLO *text* once; here the `xla` crate parses the text
+//! (`HloModuleProto::from_text_file`), compiles it on the PJRT CPU
+//! client, and executes with concrete buffers.
+//!
+//! A [`ComputeBackend`] abstracts the QP hot-spot math so the coordinator
+//! can run either through XLA (`XlaBackend`) or the equivalent native
+//! Rust (`NativeBackend`) — the ablation measured in
+//! `benches/perf_hotpath.rs` and the fallback when artifacts are absent.
+
+pub mod backend;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One artifact from `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub entry: String,
+    pub d: usize,
+    pub w: usize,
+    pub chunk: usize,
+    pub m1: usize,
+    pub m2: usize,
+    pub path: PathBuf,
+}
+
+/// Parse the manifest emitted by aot.py.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactEntry>> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+    let v = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    let entries = v.get("entries").as_arr().ok_or_else(|| anyhow!("manifest: no entries"))?;
+    entries
+        .iter()
+        .map(|e| {
+            Ok(ArtifactEntry {
+                entry: e.get("entry").as_str().ok_or_else(|| anyhow!("entry name"))?.to_string(),
+                d: e.get("d").as_usize().ok_or_else(|| anyhow!("d"))?,
+                w: e.get("w").as_usize().ok_or_else(|| anyhow!("w"))?,
+                chunk: e.get("chunk").as_usize().ok_or_else(|| anyhow!("chunk"))?,
+                m1: e.get("m1").as_usize().ok_or_else(|| anyhow!("m1"))?,
+                m2: e.get("m2").as_usize().ok_or_else(|| anyhow!("m2"))?,
+                path: dir.join(e.get("path").as_str().ok_or_else(|| anyhow!("path"))?),
+            })
+        })
+        .collect()
+}
+
+/// Locate the artifacts directory: `$SQUASH_ARTIFACTS` or `./artifacts`
+/// (walking up from the current dir, so tests work from any cwd).
+pub fn default_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("SQUASH_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}
+
+struct Executables {
+    client: xla::PjRtClient,
+    /// compiled executables keyed by (entry, d); compiled lazily
+    compiled: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+}
+
+/// The PJRT engine. PJRT raw handles are not `Send` in the `xla` crate's
+/// type system, so all executions are funneled through one mutex — each
+/// call is itself internally parallel (XLA CPU thread pool), and the
+/// native backend exists for unserialized scaling comparisons.
+pub struct Engine {
+    inner: Mutex<Executables>,
+    manifest: Vec<ArtifactEntry>,
+    pub chunk: usize,
+    pub m1: usize,
+    pub m2: usize,
+}
+
+// Safety: the PJRT CPU client is thread-safe (PJRT API contract); the
+// wrapper pointers are only reached through the `inner` mutex.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create an engine over an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = load_manifest(dir)?;
+        if manifest.is_empty() {
+            bail!("empty artifact manifest in {}", dir.display());
+        }
+        let chunk = manifest[0].chunk;
+        let m1 = manifest[0].m1;
+        let m2 = manifest[0].m2;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self {
+            inner: Mutex::new(Executables { client, compiled: HashMap::new() }),
+            manifest,
+            chunk,
+            m1,
+            m2,
+        })
+    }
+
+    /// Engine from the default artifacts location.
+    pub fn load_default() -> Result<Self> {
+        let dir = default_artifacts_dir()
+            .ok_or_else(|| anyhow!("artifacts/manifest.json not found; run `make artifacts`"))?;
+        Self::load(&dir)
+    }
+
+    /// Dimensionalities available in the manifest.
+    pub fn available_dims(&self) -> Vec<usize> {
+        let mut dims: Vec<usize> = self.manifest.iter().map(|e| e.d).collect();
+        dims.sort_unstable();
+        dims.dedup();
+        dims
+    }
+
+    pub fn supports(&self, d: usize) -> bool {
+        self.manifest.iter().any(|e| e.d == d)
+    }
+
+    fn artifact(&self, entry: &str, d: usize) -> Result<&ArtifactEntry> {
+        self.manifest
+            .iter()
+            .find(|e| e.entry == entry && e.d == d)
+            .ok_or_else(|| anyhow!("no artifact for entry={entry} d={d}"))
+    }
+
+    /// Execute one entry point with input literals; returns the flattened
+    /// tuple elements.
+    fn execute(&self, entry: &str, d: usize, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let art = self.artifact(entry, d)?.clone();
+        let mut inner = self.inner.lock().unwrap();
+        let key = (entry.to_string(), d);
+        if !inner.compiled.contains_key(&key) {
+            let proto = xla::HloModuleProto::from_text_file(
+                art.path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", art.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {entry} d={d}: {e:?}"))?;
+            inner.compiled.insert(key.clone(), exe);
+        }
+        let exe = inner.compiled.get(&key).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {entry} d={d}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True
+        let elems = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        Ok(elems)
+    }
+
+    /// Hamming distances: one packed query (u32 words) vs `n` candidate
+    /// code rows (`codes.len() == n * w`). Pads to CHUNK internally.
+    pub fn hamming(&self, d: usize, q_words: &[u32], codes: &[u32], n: usize) -> Result<Vec<u32>> {
+        let art = self.artifact("hamming", d)?;
+        let (w, chunk) = (art.w, art.chunk);
+        assert_eq!(q_words.len(), w);
+        assert_eq!(codes.len(), n * w);
+        let q = xla::Literal::vec1(q_words)
+            .reshape(&[1, w as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let mut out = Vec::with_capacity(n);
+        for start in (0..n).step_by(chunk) {
+            let rows = (n - start).min(chunk);
+            let mut buf = vec![0u32; chunk * w];
+            buf[..rows * w].copy_from_slice(&codes[start * w..(start + rows) * w]);
+            let c = xla::Literal::vec1(&buf)
+                .reshape(&[chunk as i64, w as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let res = self.execute("hamming", d, &[q.clone(), c])?;
+            let v: Vec<u32> = res[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            out.extend_from_slice(&v[..rows]);
+        }
+        Ok(out)
+    }
+
+    /// Build the ADC LUT on-device: query (KLT frame), padded boundaries
+    /// (m2 x d row-major) and cell counts -> (m1 x d) row-major LUT.
+    pub fn lut(&self, d: usize, q_frame: &[f32], boundaries: &[f32], cells: &[i32]) -> Result<Vec<f32>> {
+        let art = self.artifact("lut", d)?;
+        assert_eq!(q_frame.len(), d);
+        assert_eq!(boundaries.len(), art.m2 * d);
+        assert_eq!(cells.len(), d);
+        let q = xla::Literal::vec1(q_frame);
+        let b = xla::Literal::vec1(boundaries)
+            .reshape(&[art.m2 as i64, d as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let c = xla::Literal::vec1(cells);
+        let res = self.execute("lut", d, &[q, b, c])?;
+        res[0].to_vec().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Squared LB distances via the on-device gather+sum: `lut` is the
+    /// (m1 x d) row-major table, `codes` is `n * d` i32. Pads to CHUNK.
+    pub fn lb(&self, d: usize, lut: &[f32], codes: &[i32], n: usize) -> Result<Vec<f32>> {
+        let art = self.artifact("lb", d)?;
+        let chunk = art.chunk;
+        assert_eq!(lut.len(), art.m1 * d);
+        assert_eq!(codes.len(), n * d);
+        let l = xla::Literal::vec1(lut)
+            .reshape(&[art.m1 as i64, d as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let mut out = Vec::with_capacity(n);
+        for start in (0..n).step_by(chunk) {
+            let rows = (n - start).min(chunk);
+            let mut buf = vec![0i32; chunk * d];
+            buf[..rows * d].copy_from_slice(&codes[start * d..(start + rows) * d]);
+            let c = xla::Literal::vec1(&buf)
+                .reshape(&[chunk as i64, d as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let res = self.execute("lb", d, &[l.clone(), c])?;
+            let v: Vec<f32> = res[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            out.extend_from_slice(&v[..rows]);
+        }
+        Ok(out)
+    }
+
+    /// Fused scan: hamming + LB over the same candidate rows in one
+    /// PJRT call per chunk (the `qp_scan` entry point).
+    #[allow(clippy::too_many_arguments)]
+    pub fn scan(
+        &self,
+        d: usize,
+        q_words: &[u32],
+        bin_codes: &[u32],
+        lut: &[f32],
+        codes: &[i32],
+        n: usize,
+    ) -> Result<(Vec<u32>, Vec<f32>)> {
+        let art = self.artifact("scan", d)?;
+        let (w, chunk) = (art.w, art.chunk);
+        assert_eq!(bin_codes.len(), n * w);
+        assert_eq!(codes.len(), n * d);
+        let q = xla::Literal::vec1(q_words)
+            .reshape(&[1, w as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let l = xla::Literal::vec1(lut)
+            .reshape(&[art.m1 as i64, d as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let mut h_out = Vec::with_capacity(n);
+        let mut lb_out = Vec::with_capacity(n);
+        for start in (0..n).step_by(chunk) {
+            let rows = (n - start).min(chunk);
+            let mut bbuf = vec![0u32; chunk * w];
+            bbuf[..rows * w].copy_from_slice(&bin_codes[start * w..(start + rows) * w]);
+            let mut cbuf = vec![0i32; chunk * d];
+            cbuf[..rows * d].copy_from_slice(&codes[start * d..(start + rows) * d]);
+            let b = xla::Literal::vec1(&bbuf)
+                .reshape(&[chunk as i64, w as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let c = xla::Literal::vec1(&cbuf)
+                .reshape(&[chunk as i64, d as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let res = self.execute("scan", d, &[q.clone(), b, l.clone(), c])?;
+            let hv: Vec<u32> = res[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let lv: Vec<f32> = res[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            h_out.extend_from_slice(&hv[..rows]);
+            lb_out.extend_from_slice(&lv[..rows]);
+        }
+        Ok((h_out, lb_out))
+    }
+}

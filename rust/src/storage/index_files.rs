@@ -1,0 +1,142 @@
+//! Index-file layout: what SQUASH persists to object storage / the file
+//! system at build time, and what QA/QP instances read at query time.
+//!
+//! Object store (S3):
+//!   `{ds}/attrs.idx`     — attribute Q-index (read by every QA)
+//!   `{ds}/layout.idx`    — partition layout: centroids + P–V maps (QA)
+//!   `{ds}/part-{p}.osq`  — per-partition OSQ index (QP p)
+//! File store (EFS):
+//!   `{ds}/vectors.fp32`  — row-major full-precision vectors (QP
+//!                          post-refinement random reads)
+
+use crate::partition::PartitionLayout;
+use crate::util::bitmap::Bitmap;
+use crate::util::matrix::Matrix;
+use crate::util::ser::{read_header, write_header, Reader, SerError, Writer};
+
+const LAYOUT_MAGIC: u32 = 0x504C_5931; // "PLY1"
+
+pub fn attrs_key(ds: &str) -> String {
+    format!("{ds}/attrs.idx")
+}
+
+pub fn layout_key(ds: &str) -> String {
+    format!("{ds}/layout.idx")
+}
+
+pub fn partition_key(ds: &str, p: usize) -> String {
+    format!("{ds}/part-{p}.osq")
+}
+
+pub fn vectors_key(ds: &str) -> String {
+    format!("{ds}/vectors.fp32")
+}
+
+/// Serialize the partition layout (centroids + maps).
+pub fn layout_to_bytes(l: &PartitionLayout) -> Vec<u8> {
+    let mut w = Writer::new();
+    write_header(&mut w, LAYOUT_MAGIC, 1);
+    w.usize(l.p);
+    w.usize(l.centroids.d());
+    w.f32_slice(l.centroids.data());
+    w.u32_slice(&l.assignments);
+    w.into_bytes()
+}
+
+/// Deserialize the partition layout (maps are rebuilt from assignments).
+pub fn layout_from_bytes(bytes: &[u8]) -> Result<PartitionLayout, SerError> {
+    let mut r = Reader::new(bytes);
+    read_header(&mut r, LAYOUT_MAGIC, 1)?;
+    let p = r.usize()?;
+    let d = r.usize()?;
+    let cdata = r.f32_vec()?;
+    let centroids = Matrix::from_vec(p, d, cdata);
+    let assignments = r.u32_vec()?;
+    let n = assignments.len();
+    let mut local_of = vec![0u32; n];
+    let mut globals: Vec<Vec<u64>> = vec![Vec::new(); p];
+    let mut pv: Vec<Bitmap> = (0..p).map(|_| Bitmap::zeros(n)).collect();
+    for (i, &a) in assignments.iter().enumerate() {
+        let part = a as usize;
+        local_of[i] = globals[part].len() as u32;
+        globals[part].push(i as u64);
+        pv[part].set(i, true);
+    }
+    Ok(PartitionLayout { p, centroids, assignments, local_of, globals, pv })
+}
+
+/// Serialize full-precision vectors for the EFS file (row-major f32 LE).
+pub fn vectors_to_bytes(m: &Matrix) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.usize(m.n());
+    w.usize(m.d());
+    w.f32_slice(m.data());
+    w.into_bytes()
+}
+
+/// Byte range of one vector inside the EFS file (for random reads).
+pub fn vector_range(d: usize, id: u64) -> (usize, usize) {
+    // header: n(8) + d(8) + slice-len(8) = 24 bytes, then row-major f32
+    let offset = 24 + (id as usize) * d * 4;
+    (offset, d * 4)
+}
+
+/// Decode one vector fetched via `vector_range`.
+pub fn decode_vector(bytes: &[u8], d: usize) -> Vec<f32> {
+    assert_eq!(bytes.len(), d * 4);
+    let mut v = vec![0f32; d];
+    for (j, chunk) in bytes.chunks_exact(4).enumerate() {
+        v[j] = f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::kmeans::{balanced_kmeans, KMeansOptions};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn layout_roundtrip() {
+        let mut rng = Rng::new(1);
+        let data = Matrix::from_rows_fn(120, 6, |_, row| {
+            for v in row.iter_mut() {
+                *v = rng.normal();
+            }
+        });
+        let c = balanced_kmeans(&data, 4, &KMeansOptions::default(), &mut rng);
+        let l = PartitionLayout::from_clustering(&c);
+        let back = layout_from_bytes(&layout_to_bytes(&l)).unwrap();
+        assert_eq!(back.p, l.p);
+        assert_eq!(back.assignments, l.assignments);
+        assert_eq!(back.local_of, l.local_of);
+        assert_eq!(back.globals, l.globals);
+        assert_eq!(back.centroids, l.centroids);
+        for p in 0..l.p {
+            assert_eq!(back.pv[p], l.pv[p]);
+        }
+    }
+
+    #[test]
+    fn vector_file_random_access() {
+        let mut rng = Rng::new(2);
+        let m = Matrix::from_rows_fn(50, 7, |_, row| {
+            for v in row.iter_mut() {
+                *v = rng.normal();
+            }
+        });
+        let bytes = vectors_to_bytes(&m);
+        for id in [0u64, 13, 49] {
+            let (off, len) = vector_range(7, id);
+            let got = decode_vector(&bytes[off..off + len], 7);
+            assert_eq!(&got[..], m.row(id as usize));
+        }
+    }
+
+    #[test]
+    fn keys_are_distinct_per_partition() {
+        assert_ne!(partition_key("sift", 0), partition_key("sift", 1));
+        assert_ne!(partition_key("sift", 0), partition_key("gist", 0));
+    }
+}

@@ -1,0 +1,275 @@
+//! Dense bitmaps over `u64` words.
+//!
+//! The attribute filter masks (paper §2.3.2), partition residency maps
+//! (§2.4.2) and candidate sets are all length-N bitmaps combined with
+//! bitwise AND/OR — word-level operations here are the hot path of the
+//! QueryAllocator.
+
+/// A fixed-length dense bitmap.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bitmap {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl Bitmap {
+    /// All-zeros bitmap of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        Self { len, words: vec![0; len.div_ceil(64)] }
+    }
+
+    /// All-ones bitmap of `len` bits (trailing pad bits kept zero).
+    pub fn ones(len: usize) -> Self {
+        let mut b = Self { len, words: vec![u64::MAX; len.div_ceil(64)] };
+        b.clear_padding();
+        b
+    }
+
+    /// Build from a predicate over indices.
+    pub fn from_fn(len: usize, mut f: impl FnMut(usize) -> bool) -> Self {
+        let mut b = Self::zeros(len);
+        for i in 0..len {
+            if f(i) {
+                b.set(i, true);
+            }
+        }
+        b
+    }
+
+    /// Build from an iterator of set indices.
+    pub fn from_indices(len: usize, idx: impl IntoIterator<Item = usize>) -> Self {
+        let mut b = Self::zeros(len);
+        for i in idx {
+            b.set(i, true);
+        }
+        b
+    }
+
+    #[inline]
+    fn clear_padding(&mut self) {
+        let tail = self.len % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i / 64];
+        let bit = 1u64 << (i % 64);
+        if v {
+            *w |= bit;
+        } else {
+            *w &= !bit;
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// `self &= other` (paper's progressive filter-mask AND).
+    pub fn and_inplace(&mut self, other: &Bitmap) {
+        assert_eq!(self.len, other.len, "bitmap length mismatch");
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= *b;
+        }
+    }
+
+    /// `self |= other` (disjunctive OR predicates).
+    pub fn or_inplace(&mut self, other: &Bitmap) {
+        assert_eq!(self.len, other.len, "bitmap length mismatch");
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= *b;
+        }
+    }
+
+    /// `self &= !other`.
+    pub fn and_not_inplace(&mut self, other: &Bitmap) {
+        assert_eq!(self.len, other.len, "bitmap length mismatch");
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= !*b;
+        }
+    }
+
+    /// New bitmap: `self & other`.
+    pub fn and(&self, other: &Bitmap) -> Bitmap {
+        let mut out = self.clone();
+        out.and_inplace(other);
+        out
+    }
+
+    /// Count of set bits in `self & other` without materializing it.
+    pub fn and_count(&self, other: &Bitmap) -> usize {
+        assert_eq!(self.len, other.len, "bitmap length mismatch");
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+
+    /// Whether `self & other` has any set bit.
+    pub fn intersects(&self, other: &Bitmap) -> bool {
+        self.words.iter().zip(&other.words).any(|(a, b)| a & b != 0)
+    }
+
+    /// Iterate over the indices of set bits, ascending.
+    pub fn iter_ones(&self) -> OnesIter<'_> {
+        OnesIter { words: &self.words, len: self.len, word_idx: 0, current: self.words.first().copied().unwrap_or(0) }
+    }
+
+    /// Collect set indices (convenience for payload building).
+    pub fn to_indices(&self) -> Vec<usize> {
+        self.iter_ones().collect()
+    }
+
+    /// Raw word access (for serialization).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild from raw words.
+    pub fn from_words(len: usize, words: Vec<u64>) -> Self {
+        assert_eq!(words.len(), len.div_ceil(64));
+        let mut b = Self { len, words };
+        b.clear_padding();
+        b
+    }
+}
+
+/// Iterator over set-bit indices using trailing-zero scans.
+pub struct OnesIter<'a> {
+    words: &'a [u64],
+    len: usize,
+    word_idx: usize,
+    current: u64,
+}
+
+impl Iterator for OnesIter<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.current != 0 {
+                let tz = self.current.trailing_zeros() as usize;
+                self.current &= self.current - 1; // clear lowest set bit
+                let idx = self.word_idx * 64 + tz;
+                if idx < self.len {
+                    return Some(idx);
+                }
+                return None;
+            }
+            self.word_idx += 1;
+            if self.word_idx >= self.words.len() {
+                return None;
+            }
+            self.current = self.words[self.word_idx];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ones_zeros_counts() {
+        assert_eq!(Bitmap::zeros(130).count_ones(), 0);
+        assert_eq!(Bitmap::ones(130).count_ones(), 130);
+        assert_eq!(Bitmap::ones(64).count_ones(), 64);
+        assert_eq!(Bitmap::ones(0).count_ones(), 0);
+    }
+
+    #[test]
+    fn set_get() {
+        let mut b = Bitmap::zeros(100);
+        b.set(0, true);
+        b.set(63, true);
+        b.set(64, true);
+        b.set(99, true);
+        assert!(b.get(0) && b.get(63) && b.get(64) && b.get(99));
+        assert!(!b.get(1) && !b.get(65));
+        assert_eq!(b.count_ones(), 4);
+        b.set(63, false);
+        assert!(!b.get(63));
+        assert_eq!(b.count_ones(), 3);
+    }
+
+    #[test]
+    fn and_or_match_naive() {
+        let mut rng = Rng::new(31);
+        for _ in 0..20 {
+            let n = 1 + rng.gen_range(300);
+            let a = Bitmap::from_fn(n, |_| rng.next_u64() & 1 == 1);
+            let b = Bitmap::from_fn(n, |_| rng.next_u64() & 1 == 1);
+            let mut and = a.clone();
+            and.and_inplace(&b);
+            let mut or = a.clone();
+            or.or_inplace(&b);
+            for i in 0..n {
+                assert_eq!(and.get(i), a.get(i) && b.get(i));
+                assert_eq!(or.get(i), a.get(i) || b.get(i));
+            }
+            assert_eq!(a.and_count(&b), and.count_ones());
+            assert_eq!(a.intersects(&b), and.count_ones() > 0);
+        }
+    }
+
+    #[test]
+    fn iter_ones_matches_get() {
+        let mut rng = Rng::new(77);
+        for _ in 0..20 {
+            let n = 1 + rng.gen_range(500);
+            let b = Bitmap::from_fn(n, |_| rng.next_u64() % 3 == 0);
+            let ones: Vec<usize> = b.iter_ones().collect();
+            let expected: Vec<usize> = (0..n).filter(|&i| b.get(i)).collect();
+            assert_eq!(ones, expected);
+        }
+    }
+
+    #[test]
+    fn from_indices_roundtrip() {
+        let b = Bitmap::from_indices(10, [1, 3, 9]);
+        assert_eq!(b.to_indices(), vec![1, 3, 9]);
+    }
+
+    #[test]
+    fn word_roundtrip() {
+        let b = Bitmap::from_indices(70, [0, 65, 69]);
+        let c = Bitmap::from_words(70, b.words().to_vec());
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn padding_never_leaks() {
+        let mut b = Bitmap::ones(65);
+        let c = Bitmap::ones(65);
+        b.and_inplace(&c);
+        assert_eq!(b.count_ones(), 65);
+        b.or_inplace(&c);
+        assert_eq!(b.count_ones(), 65);
+    }
+}

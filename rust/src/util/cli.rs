@@ -1,0 +1,141 @@
+//! Tiny CLI argument parser (no clap offline).
+//!
+//! Grammar: `squash <subcommand> [--key value | --flag] ...`
+//! Values may also be attached with `=`: `--queries=1000`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing value for option --{0}")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    InvalidValue(String, String),
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` when the next token isn't another option;
+                    // bare trailing keys are flags.
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            args.options.insert(body.to_string(), v);
+                        }
+                        _ => args.flags.push(body.to_string()),
+                    }
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args, CliError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::InvalidValue(name.to_string(), v.to_string())),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::InvalidValue(name.to_string(), v.to_string())),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::InvalidValue(name.to_string(), v.to_string())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --queries 1000 --dataset sift --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("queries"), Some("1000"));
+        assert_eq!(a.get("dataset"), Some("sift"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --n-qa=84 --beta=0.001");
+        assert_eq!(a.get_usize("n-qa", 0).unwrap(), 84);
+        assert!((a.get_f64("beta", 0.0).unwrap() - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("run --k ten");
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_usize("k", 0).is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("query q1 q2 --k 5");
+        assert_eq!(a.subcommand.as_deref(), Some("query"));
+        assert_eq!(a.positional, vec!["q1", "q2"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("serve --dre");
+        assert!(a.has_flag("dre"));
+    }
+}

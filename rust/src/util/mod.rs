@@ -1,0 +1,15 @@
+//! Substrate utilities implemented from scratch for the offline
+//! environment: RNG, bitmaps, thread pool, JSON, CLI parsing, statistics,
+//! binary serialization, timing/benchmarking and a mini property-testing
+//! framework.
+
+pub mod bitmap;
+pub mod matrix;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod ser;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

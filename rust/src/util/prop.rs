@@ -1,0 +1,133 @@
+//! Miniature property-testing framework (no proptest crate offline).
+//!
+//! `check(name, cases, |g| ...)` runs the property over `cases` seeded
+//! random inputs drawn through `Gen`; failures report the failing seed so
+//! `check_seed` can replay them. Used for coordinator/OSQ invariants
+//! (pack/extract round-trips, mask equivalence, partition-selection
+//! guarantees, tree-ID coverage).
+
+use crate::util::rng::Rng;
+
+/// Generator handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    /// usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.gen_range(hi - lo + 1)
+    }
+
+    /// f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.f32_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vec of f32 drawn from N(0, 1).
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    /// Vec of f32 uniform in [lo, hi).
+    pub fn uniform_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.f32_range(lo, hi)).collect()
+    }
+
+    /// Pick one of the given values.
+    pub fn choose<T: Copy>(&mut self, xs: &[T]) -> T {
+        xs[self.rng.gen_range(xs.len())]
+    }
+}
+
+/// Run `prop` over `cases` random cases; panic with the failing seed on
+/// the first failure (property returns `Err(reason)` or panics itself).
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        check_seed(name, seed, &mut prop);
+    }
+}
+
+/// Replay a single seed (printed by a failing `check`).
+pub fn check_seed<F>(name: &str, seed: u64, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen { rng: Rng::new(seed), seed };
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g))) {
+        Ok(Ok(())) => {}
+        Ok(Err(msg)) => panic!("property '{name}' failed (replay seed={seed:#x}): {msg}"),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "panic".to_string());
+            panic!("property '{name}' panicked (replay seed={seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("sum-commutes", 25, |g| {
+            count += 1;
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed=")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 3, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn panicking_property_reports_seed() {
+        check("panics", 2, |_g| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn gen_helpers_in_range() {
+        check("gen-ranges", 50, |g| {
+            let x = g.usize_in(3, 9);
+            if !(3..=9).contains(&x) {
+                return Err(format!("usize_in out of range: {x}"));
+            }
+            let f = g.f32_in(-1.0, 1.0);
+            if !(-1.0..1.0).contains(&f) {
+                return Err(format!("f32_in out of range: {f}"));
+            }
+            let v = g.normal_vec(4);
+            if v.len() != 4 {
+                return Err("normal_vec length".into());
+            }
+            Ok(())
+        });
+    }
+}

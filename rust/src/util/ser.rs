@@ -1,0 +1,295 @@
+//! Binary (de)serialization for index files (no serde/bincode offline).
+//!
+//! Little-endian, length-prefixed. Every index artifact the QA/QP reads
+//! from simulated object storage is encoded through this module, so the
+//! byte counts feeding the cost model (S3 GET sizes, EFS reads) are the
+//! real encoded sizes.
+
+#[derive(Debug, thiserror::Error)]
+pub enum SerError {
+    #[error("unexpected end of buffer at {0}")]
+    Eof(usize),
+    #[error("bad magic: expected {expected:#x}, got {got:#x}")]
+    BadMagic { expected: u32, got: u32 },
+    #[error("unsupported version {0}")]
+    BadVersion(u32),
+}
+
+/// Append-only byte writer.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.usize(v.len());
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    pub fn u8_slice_raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn u32_slice(&mut self, v: &[u32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.u32(x);
+        }
+    }
+
+    pub fn u64_slice(&mut self, v: &[u64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.u64(x);
+        }
+    }
+
+    pub fn f32_slice(&mut self, v: &[f32]) {
+        self.usize(v.len());
+        // bulk copy: f32 slices dominate index files
+        let bytes = unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn u8_slice(&mut self, v: &[u8]) {
+        self.bytes(v);
+    }
+
+    pub fn u16_slice(&mut self, v: &[u16]) {
+        self.usize(v.len());
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Sequential byte reader.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SerError> {
+        if self.pos + n > self.buf.len() {
+            return Err(SerError::Eof(self.pos));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, SerError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, SerError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, SerError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, SerError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, SerError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize, SerError> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8], SerError> {
+        let n = self.usize()?;
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<String, SerError> {
+        let b = self.bytes()?;
+        Ok(String::from_utf8_lossy(b).into_owned())
+    }
+
+    pub fn u32_vec(&mut self) -> Result<Vec<u32>, SerError> {
+        let n = self.usize()?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    pub fn u64_vec(&mut self) -> Result<Vec<u64>, SerError> {
+        let n = self.usize()?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u64()?);
+        }
+        Ok(v)
+    }
+
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>, SerError> {
+        let n = self.usize()?;
+        let bytes = self.take(n * 4)?;
+        let mut v = vec![0f32; n];
+        // safe: f32 has no invalid bit patterns; length checked above
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), v.as_mut_ptr() as *mut u8, n * 4);
+        }
+        Ok(v)
+    }
+
+    pub fn u8_vec(&mut self) -> Result<Vec<u8>, SerError> {
+        Ok(self.bytes()?.to_vec())
+    }
+
+    pub fn u16_vec(&mut self) -> Result<Vec<u16>, SerError> {
+        let n = self.usize()?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(u16::from_le_bytes(self.take(2)?.try_into().unwrap()));
+        }
+        Ok(v)
+    }
+}
+
+/// Write a file header (magic + version).
+pub fn write_header(w: &mut Writer, magic: u32, version: u32) {
+    w.u32(magic);
+    w.u32(version);
+}
+
+/// Validate a file header.
+pub fn read_header(r: &mut Reader, magic: u32, max_version: u32) -> Result<u32, SerError> {
+    let got = r.u32()?;
+    if got != magic {
+        return Err(SerError::BadMagic { expected: magic, got });
+    }
+    let version = r.u32()?;
+    if version == 0 || version > max_version {
+        return Err(SerError::BadVersion(version));
+    }
+    Ok(version)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEADBEEF);
+        w.u64(u64::MAX - 1);
+        w.f32(1.5);
+        w.f64(-2.25);
+        w.str("héllo");
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.f64().unwrap(), -2.25);
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let mut w = Writer::new();
+        w.u32_slice(&[1, 2, 3]);
+        w.f32_slice(&[0.5, -0.25, 3.0, 4.0]);
+        w.u64_slice(&[9, 10]);
+        w.u8_slice(&[1, 2, 255]);
+        w.u16_slice(&[256, 65535]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u32_vec().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.f32_vec().unwrap(), vec![0.5, -0.25, 3.0, 4.0]);
+        assert_eq!(r.u64_vec().unwrap(), vec![9, 10]);
+        assert_eq!(r.u8_vec().unwrap(), vec![1, 2, 255]);
+        assert_eq!(r.u16_vec().unwrap(), vec![256, 65535]);
+    }
+
+    #[test]
+    fn eof_detected() {
+        let mut r = Reader::new(&[1, 2]);
+        assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let mut w = Writer::new();
+        write_header(&mut w, 0x53515348, 2);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(read_header(&mut r, 0x53515348, 3).unwrap(), 2);
+
+        let mut r2 = Reader::new(&bytes);
+        assert!(matches!(
+            read_header(&mut r2, 0x1111, 3),
+            Err(SerError::BadMagic { .. })
+        ));
+
+        let mut r3 = Reader::new(&bytes);
+        assert!(matches!(read_header(&mut r3, 0x53515348, 1), Err(SerError::BadVersion(2))));
+    }
+}

@@ -1,0 +1,236 @@
+//! Minimal thread-pool + wait-group substrate.
+//!
+//! No tokio/rayon in this offline environment. The FaaS simulator spawns a
+//! real OS thread per Lambda invocation (AWS-style unlimited concurrency,
+//! small stacks), while CPU-bound build steps (quantizer training, ground
+//! truth) use `parallel_map` over scoped threads. `ThreadPool` backs the
+//! server baselines, where the paper's point is precisely that a *bounded*
+//! number of vCPUs causes contention.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size worker pool. Jobs queue when all workers are busy — this
+/// models a `c7i.4xlarge` (16 vCPU) or `c7i.16xlarge` (64 vCPU) server.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    inflight: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(n_workers: usize) -> Self {
+        assert!(n_workers > 0);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let inflight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let workers = (0..n_workers)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                let inf = Arc::clone(&inflight);
+                thread::Builder::new()
+                    .name(format!("squash-pool-{i}"))
+                    .stack_size(2 << 20)
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (lock, cvar) = &*inf;
+                                let mut n = lock.lock().unwrap();
+                                *n -= 1;
+                                if *n == 0 {
+                                    cvar.notify_all();
+                                }
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { sender: Some(sender), workers, inflight }
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        {
+            let (lock, _) = &*self.inflight;
+            *lock.lock().unwrap() += 1;
+        }
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("pool send");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn join(&self) {
+        let (lock, cvar) = &*self.inflight;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cvar.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take()); // close the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A simple wait-group (used by the QA tree to await child responses).
+#[derive(Clone)]
+pub struct WaitGroup {
+    inner: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl Default for WaitGroup {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WaitGroup {
+    pub fn new() -> Self {
+        Self { inner: Arc::new((Mutex::new(0), Condvar::new())) }
+    }
+
+    pub fn add(&self, n: usize) {
+        *self.inner.0.lock().unwrap() += n;
+    }
+
+    pub fn done(&self) {
+        let (lock, cvar) = &*self.inner;
+        let mut v = lock.lock().unwrap();
+        assert!(*v > 0, "WaitGroup::done without add");
+        *v -= 1;
+        if *v == 0 {
+            cvar.notify_all();
+        }
+    }
+
+    pub fn wait(&self) {
+        let (lock, cvar) = &*self.inner;
+        let mut v = lock.lock().unwrap();
+        while *v > 0 {
+            v = cvar.wait(v).unwrap();
+        }
+    }
+}
+
+/// Map `f` over `items` with up to `n_threads` scoped threads, preserving
+/// order. Panics in `f` propagate.
+pub fn parallel_map<T: Sync, R: Send>(
+    items: &[T],
+    n_threads: usize,
+    f: impl Fn(usize, &T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let n_threads = n_threads.max(1).min(n);
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
+    // Work-stealing-free dynamic scheduling: each thread grabs the next
+    // index. Results are written through a mutex-guarded slot vector; the
+    // lock is taken once per item, negligible next to real work.
+    thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|x| x.expect("parallel_map slot")).collect()
+}
+
+/// Number of logical CPUs (fallback 4).
+pub fn num_cpus() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_join_twice_ok() {
+        let pool = ThreadPool::new(2);
+        pool.join();
+        let c = Arc::new(AtomicU64::new(0));
+        let c2 = Arc::clone(&c);
+        pool.execute(move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.join();
+        assert_eq!(c.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn waitgroup_blocks_until_done() {
+        let wg = WaitGroup::new();
+        wg.add(3);
+        let wg2 = wg.clone();
+        let h = thread::spawn(move || {
+            for _ in 0..3 {
+                wg2.done();
+            }
+        });
+        wg.wait();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..257).collect();
+        let out = parallel_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let items: Vec<u64> = vec![];
+        assert!(parallel_map(&items, 4, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn parallel_map_single_thread() {
+        let items: Vec<u64> = (0..10).collect();
+        let out = parallel_map(&items, 1, |i, &x| x + i as u64);
+        assert_eq!(out, (0..10).map(|x| 2 * x).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,170 @@
+//! Wall-clock timing + the in-tree micro-benchmark harness.
+//!
+//! `cargo bench` targets in `rust/benches/` are `harness = false` binaries
+//! (no criterion offline); they use `bench_fn` for timing-sensitive
+//! micro-benchmarks and plain drivers for the paper-figure regenerators.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// One micro-benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub total: Duration,
+    /// per-iteration mean, seconds
+    pub mean_s: f64,
+    /// per-iteration best (min over batches), seconds
+    pub best_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let unit = |s: f64| -> String {
+            if s >= 1.0 {
+                format!("{s:.3} s")
+            } else if s >= 1e-3 {
+                format!("{:.3} ms", s * 1e3)
+            } else if s >= 1e-6 {
+                format!("{:.3} µs", s * 1e6)
+            } else {
+                format!("{:.1} ns", s * 1e9)
+            }
+        };
+        write!(
+            f,
+            "{:<42} {:>12}/iter (best {:>12}, {} iters)",
+            self.name,
+            unit(self.mean_s),
+            unit(self.best_s),
+            self.iters
+        )
+    }
+}
+
+/// Measure `f`, auto-calibrating the iteration count to roughly
+/// `target_time`. Warmup runs are discarded. Returns per-iter timings.
+pub fn bench_fn(name: &str, target_time: Duration, mut f: impl FnMut()) -> BenchResult {
+    // warmup + calibration: find iters/batch so a batch is >= ~10ms
+    let mut batch = 1u64;
+    loop {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t.elapsed();
+        if dt >= Duration::from_millis(10) || batch >= 1 << 24 {
+            break;
+        }
+        batch *= 4;
+    }
+    // measured batches
+    let mut iters = 0u64;
+    let mut total = Duration::ZERO;
+    let mut best_batch = f64::INFINITY;
+    while total < target_time {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t.elapsed();
+        best_batch = best_batch.min(dt.as_secs_f64() / batch as f64);
+        total += dt;
+        iters += batch;
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        total,
+        mean_s: total.as_secs_f64() / iters as f64,
+        best_s: best_batch,
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint variant).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_counts_iters() {
+        let mut n = 0u64;
+        let r = bench_fn("noop", Duration::from_millis(30), || {
+            n += 1;
+            black_box(n);
+        });
+        // calibration/warmup runs also call f, so n >= measured iters
+        assert!(n >= r.iters && r.iters > 0, "n={n} iters={}", r.iters);
+        assert!(r.mean_s > 0.0);
+        assert!(r.best_s <= r.mean_s * 1.5);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.secs() >= 0.002);
+        let e = sw.restart();
+        assert!(e.as_secs_f64() >= 0.002);
+    }
+
+    #[test]
+    fn display_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            total: Duration::from_millis(10),
+            mean_s: 1e-3,
+            best_s: 9e-4,
+        };
+        let s = format!("{r}");
+        assert!(s.contains("ms"));
+    }
+}

@@ -1,0 +1,76 @@
+//! Baseline integration: System-X, the Vexless-like system and the
+//! server runner produce sound results on shared workloads, and the
+//! comparison harness wires them consistently.
+
+use squash::baselines::server::InstanceType;
+use squash::bench::{measure_server, measure_squash, measure_system_x, Env, EnvOptions};
+
+fn env(n_queries: usize, seed: u64) -> Env {
+    Env::setup(&EnvOptions {
+        profile: "test",
+        n: 4000,
+        n_queries,
+        time_scale: 0.0,
+        seed,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn all_systems_reach_high_recall_on_the_same_workload() {
+    let e = env(25, 1);
+    let squash = measure_squash(&e, "squash", 10);
+    let sx = measure_system_x(&e, 10);
+    let server = measure_server(&e, InstanceType::C7i4xlarge, 10);
+    assert!(squash.recall >= 0.9, "squash {}", squash.recall);
+    assert!(sx.recall >= 0.85, "system-x {}", sx.recall);
+    assert!(server.recall >= 0.85, "server {}", server.recall);
+}
+
+#[test]
+fn system_x_costs_more_per_query() {
+    let e = env(40, 2);
+    let _ = measure_squash(&e, "cold", 0);
+    let squash = measure_squash(&e, "warm", 0);
+    let sx = measure_system_x(&e, 0);
+    assert!(
+        sx.cost_per_query > squash.cost_per_query,
+        "system-x ${} vs squash ${}",
+        sx.cost_per_query,
+        squash.cost_per_query
+    );
+}
+
+#[test]
+fn server_instances_scale_with_vcpus() {
+    // the 64-vCPU instance must not be slower than the 16-vCPU one on a
+    // parallel workload (coarse sanity, generous tolerance for CI noise)
+    let e = env(64, 3);
+    let small = measure_server(&e, InstanceType::C7i4xlarge, 0);
+    let large = measure_server(&e, InstanceType::C7i16xlarge, 0);
+    assert!(
+        large.wall_s <= small.wall_s * 1.5,
+        "large {} vs small {}",
+        large.wall_s,
+        small.wall_s
+    );
+}
+
+#[test]
+fn vexless_unfiltered_agreement_with_ground_truth() {
+    use squash::baselines::vexless::{VexlessLike, VexlessParams};
+    use squash::data::ground_truth::{exact_batch, mean_recall};
+    use squash::data::workload::{generate_workload, WorkloadOptions};
+
+    let e = env(1, 4);
+    let vx = VexlessLike::deploy(&e.ds, VexlessParams::default(), e.platform.clone());
+    let w = generate_workload(
+        &e.ds,
+        &WorkloadOptions { n_queries: 20, selectivity: 1.0, ..Default::default() },
+        9,
+    );
+    let out = vx.run_batch(&w.queries);
+    let truth = exact_batch(&e.ds, &w.queries, 4);
+    let recall = mean_recall(&truth, &out.results, 10);
+    assert!(recall >= 0.85, "vexless recall {recall}");
+}

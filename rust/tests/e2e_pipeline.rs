@@ -1,0 +1,95 @@
+//! Full three-layer end-to-end: the XLA backend (AOT JAX/Pallas
+//! artifacts through PJRT) driving the complete serverless pipeline must
+//! produce the same results as the native backend — and both must hit
+//! the recall target. Skips (with notice) when artifacts are missing.
+
+use std::sync::Arc;
+
+use squash::bench::{measure_squash, Env, EnvOptions};
+use squash::coordinator::{BuildOptions, SquashConfig, SquashSystem};
+use squash::data::ground_truth::{exact_batch, mean_recall};
+use squash::data::profiles::by_name;
+use squash::data::synthetic::generate;
+use squash::data::workload::{generate_workload, WorkloadOptions};
+use squash::runtime::backend::{NativeBackend, XlaBackend};
+use squash::runtime::Engine;
+
+#[test]
+fn xla_backend_end_to_end_matches_native() {
+    let Ok(engine) = Engine::load_default() else {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+        return;
+    };
+    let engine = Arc::new(engine);
+    let profile = by_name("test").unwrap();
+    let ds = generate(profile, 2500, 31);
+    let queries = generate_workload(
+        &ds,
+        &WorkloadOptions { n_queries: 12, ..Default::default() },
+        32,
+    )
+    .queries;
+
+    let native_sys = SquashSystem::build_default(
+        &ds,
+        &BuildOptions::for_profile(profile),
+        SquashConfig::for_profile(profile),
+        Arc::new(NativeBackend),
+    );
+    let native_out = native_sys.run_batch(&queries);
+
+    let xla_sys = SquashSystem::build_default(
+        &ds,
+        &BuildOptions::for_profile(profile),
+        SquashConfig::for_profile(profile),
+        Arc::new(XlaBackend::new(engine)),
+    );
+    let xla_out = xla_sys.run_batch(&queries);
+
+    // identical ids in identical order (hamming is exact; LB agrees to
+    // float tolerance, and refinement recomputes exact distances)
+    for (qi, (a, b)) in native_out.results.iter().zip(&xla_out.results).enumerate() {
+        let ids_a: Vec<u64> = a.iter().map(|&(i, _)| i).collect();
+        let ids_b: Vec<u64> = b.iter().map(|&(i, _)| i).collect();
+        assert_eq!(ids_a, ids_b, "query {qi} diverged between backends");
+    }
+
+    let truth = exact_batch(&ds, &queries, 4);
+    let recall = mean_recall(&truth, &xla_out.results, 10);
+    assert!(recall >= 0.9, "xla-backend E2E recall {recall}");
+}
+
+#[test]
+fn auto_backend_selection_prefers_xla_when_available() {
+    let opts = EnvOptions {
+        profile: "test",
+        n: 1200,
+        n_queries: 6,
+        time_scale: 0.0,
+        backend: "auto".into(),
+        ..Default::default()
+    };
+    let env = Env::setup(&opts);
+    let expected = if Engine::load_default().is_ok() { "xla" } else { "native" };
+    assert_eq!(env.sys.ctx.backend.name(), expected);
+    let stats = measure_squash(&env, "auto", 10);
+    assert!(stats.recall >= 0.85, "recall {}", stats.recall);
+}
+
+#[test]
+fn deterministic_across_runs() {
+    // identical seeds => identical results (the whole stack is seeded)
+    let run = || {
+        let opts = EnvOptions {
+            profile: "test",
+            n: 1500,
+            n_queries: 8,
+            time_scale: 0.0,
+            seed: 77,
+            ..Default::default()
+        };
+        let env = Env::setup(&opts);
+        env.sys.run_batch(&env.queries).results
+    };
+    assert_eq!(run(), run());
+}

@@ -1,0 +1,128 @@
+//! FaaS + cost-model integration: invocation accounting, DRE effects on
+//! the ledger, payload caps, and Eq 3–8 consistency over real runs.
+
+use std::sync::atomic::Ordering;
+
+use squash::bench::{measure_squash, Env, EnvOptions};
+use squash::coordinator::tree::TreeConfig;
+
+fn env(dre: bool, seed: u64) -> Env {
+    Env::setup(&EnvOptions {
+        profile: "test",
+        n: 2000,
+        n_queries: 24,
+        time_scale: 0.0,
+        dre,
+        seed,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn invocation_counts_match_tree_shape() {
+    let mut e = Env::setup(&EnvOptions {
+        profile: "test",
+        n: 2000,
+        n_queries: 336, // 4 per QA: every one of the 84 allocators owns a slice
+        time_scale: 0.0,
+        ..Default::default()
+    });
+    e.with_config(|c| c.tree = TreeConfig::new(4, 3)); // N_QA = 84
+    let stats = measure_squash(&e, "x", 0);
+    // 1 CO + 84 QAs exactly; QPs vary with partition visits
+    let co = e.ledger.invocations_co.load(Ordering::Relaxed);
+    let qa = e.ledger.invocations_qa.load(Ordering::Relaxed);
+    let qp = e.ledger.invocations_qp.load(Ordering::Relaxed);
+    assert_eq!(co, 1);
+    assert_eq!(qa, 84);
+    assert!(qp > 0);
+    assert_eq!(stats.cost.invocations, co + qa + qp);
+}
+
+#[test]
+fn fewer_queries_than_allocators_skips_empty_subtrees() {
+    let mut e = env(true, 2);
+    e.with_config(|c| c.tree = TreeConfig::new(4, 3));
+    // 24 queries over 84 QAs: ceil(24/84)=1 per slice; only 24 QAs own
+    // work, but ancestors of those slices must still be invoked
+    let _ = measure_squash(&e, "x", 0);
+    let qa = e.ledger.invocations_qa.load(Ordering::Relaxed);
+    assert!(qa <= 84, "qa invocations {qa}");
+    assert!(qa >= 24, "at least the owning QAs run: {qa}");
+}
+
+#[test]
+fn dre_eliminates_repeat_s3_reads() {
+    let e = env(true, 3);
+    let cold = measure_squash(&e, "cold", 0);
+    let warm = measure_squash(&e, "warm", 0);
+    assert!(cold.cost.s3_gets > 0);
+    // warm-run S3 GETs come only from containers newly created by
+    // concurrency peaks; under parallel test load the peak varies, so the
+    // assertion is a coarse halving rather than an exact count
+    assert!(
+        warm.cost.s3_gets * 2 <= cold.cost.s3_gets,
+        "warm {} vs cold {}",
+        warm.cost.s3_gets,
+        cold.cost.s3_gets
+    );
+    // cold-start counts on warm runs depend on the concurrency peak (new
+    // containers appear when more invocations overlap than ever before),
+    // so only a coarse reduction is asserted
+    assert!(
+        warm.cost.cold_starts * 3 <= cold.cost.cold_starts.max(3),
+        "warm colds {} vs cold colds {}",
+        warm.cost.cold_starts,
+        cold.cost.cold_starts
+    );
+    assert!(warm.cost.total() < cold.cost.total());
+}
+
+#[test]
+fn no_dre_keeps_fetching() {
+    let e = env(false, 4);
+    let cold = measure_squash(&e, "cold", 0);
+    let warm = measure_squash(&e, "warm", 0);
+    // without DRE every QA/QP invocation re-fetches its index
+    assert!(
+        warm.cost.s3_gets * 2 >= cold.cost.s3_gets,
+        "warm {} cold {}",
+        warm.cost.s3_gets,
+        cold.cost.s3_gets
+    );
+}
+
+#[test]
+fn refinement_reads_efs_per_query() {
+    let e = env(true, 5);
+    let stats = measure_squash(&e, "x", 0);
+    // R*k refined vectors per visited partition per query: bytes > 0 and
+    // a multiple of the vector size
+    assert!(stats.cost.efs_bytes > 0);
+    assert_eq!(stats.cost.efs_bytes % (e.ds.d() as u64 * 4), 0);
+}
+
+#[test]
+fn cost_report_total_consistency() {
+    let e = env(true, 6);
+    let stats = measure_squash(&e, "x", 0);
+    let r = &stats.cost;
+    assert!((r.total() - (r.c_invoc + r.c_run + r.c_s3 + r.c_efs)).abs() < 1e-12);
+    assert!(r.c_run > 0.0 && r.c_invoc > 0.0);
+    // per-query cost is total / queries
+    assert!((stats.cost_per_query - r.total() / 24.0).abs() < 1e-12);
+}
+
+#[test]
+fn billing_includes_modeled_io_at_scale_zero() {
+    // at time_scale = 0 nothing sleeps, but cold starts + S3 latency must
+    // still be billed (MODELED_EXTRA accounting)
+    let e = env(true, 7);
+    let cold = measure_squash(&e, "cold", 0);
+    let billed_s = cold.cost.mb_seconds / 1770.0; // lower bound via QA/QP memory
+    let cold_starts = cold.cost.cold_starts as f64;
+    assert!(
+        billed_s > cold_starts * 0.18 * 0.9,
+        "billed {billed_s}s < cold-start time of {cold_starts} containers"
+    );
+}

@@ -1,0 +1,172 @@
+//! End-to-end hybrid search integration: the full CO → QA tree → QP
+//! pipeline over the simulated FaaS platform must hit high filtered
+//! recall against brute-force ground truth, honor predicates exactly,
+//! and behave identically with and without DRE / interleaving.
+
+use std::sync::Arc;
+
+use squash::coordinator::tree::TreeConfig;
+use squash::coordinator::{BuildOptions, SquashConfig, SquashSystem};
+use squash::data::ground_truth::{exact_batch, mean_recall, recall_at_k};
+use squash::data::profiles::by_name;
+use squash::data::synthetic::generate;
+use squash::data::workload::{generate_workload, Query, WorkloadOptions};
+use squash::runtime::backend::NativeBackend;
+
+fn build_system(n: usize, seed: u64, cfg: SquashConfig) -> (squash::data::Dataset, SquashSystem) {
+    let profile = by_name("test").unwrap();
+    let ds = generate(profile, n, seed);
+    // tests pass profile-agnostic overrides but always take the profile's
+    // tuned H_perc (the paper calibrates it per dataset)
+    let cfg = SquashConfig { h_keep: profile.h_keep, ..cfg };
+    let sys = SquashSystem::build_default(
+        &ds,
+        &BuildOptions::for_profile(profile),
+        cfg,
+        Arc::new(NativeBackend),
+    );
+    (ds, sys)
+}
+
+fn workload(ds: &squash::data::Dataset, n_queries: usize, seed: u64) -> Vec<Query> {
+    generate_workload(
+        ds,
+        &WorkloadOptions { n_queries, selectivity: 0.08, ..Default::default() },
+        seed,
+    )
+    .queries
+}
+
+#[test]
+fn filtered_recall_is_high() {
+    let (ds, sys) = build_system(4000, 1, SquashConfig::default());
+    let queries = workload(&ds, 40, 2);
+    let out = sys.run_batch(&queries);
+    let truth = exact_batch(&ds, &queries, 4);
+    let recall = mean_recall(&truth, &out.results, 10);
+    assert!(recall >= 0.95, "recall@10 = {recall}");
+}
+
+#[test]
+fn all_results_satisfy_the_predicate() {
+    let (ds, sys) = build_system(3000, 3, SquashConfig::default());
+    let queries = workload(&ds, 25, 4);
+    let out = sys.run_batch(&queries);
+    for (q, res) in queries.iter().zip(&out.results) {
+        for &(id, _) in res {
+            assert!(
+                q.predicate.eval(&ds.attributes[id as usize]),
+                "result {id} violates the filter"
+            );
+        }
+    }
+}
+
+#[test]
+fn guarantees_k_results_when_available() {
+    let (ds, sys) = build_system(3000, 5, SquashConfig::default());
+    let queries = workload(&ds, 25, 6);
+    let truth = exact_batch(&ds, &queries, 4);
+    let out = sys.run_batch(&queries);
+    for ((q, t), r) in queries.iter().zip(&truth).zip(&out.results) {
+        assert_eq!(
+            r.len(),
+            t.len().min(q.k),
+            "query must return min(k, passing) results"
+        );
+    }
+}
+
+#[test]
+fn pure_ann_queries_work_too() {
+    // selectivity = 1.0 => match-all predicates (no filtering)
+    let (ds, sys) = build_system(3000, 7, SquashConfig::default());
+    let queries = generate_workload(
+        &ds,
+        &WorkloadOptions { n_queries: 20, selectivity: 1.0, ..Default::default() },
+        8,
+    )
+    .queries;
+    let out = sys.run_batch(&queries);
+    let truth = exact_batch(&ds, &queries, 4);
+    let recall = mean_recall(&truth, &out.results, 10);
+    assert!(recall >= 0.9, "unfiltered recall@10 = {recall}");
+}
+
+#[test]
+fn tree_shapes_agree() {
+    // same workload through different (F, l_max) trees => same results
+    let (ds, sys_a) = build_system(
+        2500,
+        9,
+        SquashConfig { tree: TreeConfig::new(10, 1), ..Default::default() },
+    );
+    let queries = workload(&ds, 30, 10);
+    let out_a = sys_a.run_batch(&queries);
+
+    let (_, sys_b) = build_system(
+        2500,
+        9,
+        SquashConfig { tree: TreeConfig::new(4, 3), ..Default::default() },
+    );
+    let out_b = sys_b.run_batch(&queries);
+    assert_eq!(out_a.results, out_b.results, "tree shape must not affect results");
+}
+
+#[test]
+fn interleaving_and_dre_do_not_change_results() {
+    let (ds, sys_a) = build_system(
+        2500,
+        11,
+        SquashConfig { interleave: false, qa_batches: 1, ..Default::default() },
+    );
+    let queries = workload(&ds, 20, 12);
+    let out_a = sys_a.run_batch(&queries);
+
+    let (_, sys_b) = build_system(
+        2500,
+        11,
+        SquashConfig { interleave: true, qa_batches: 4, ..Default::default() },
+    );
+    let out_b = sys_b.run_batch(&queries);
+    assert_eq!(out_a.results, out_b.results);
+
+    // run the same batch twice (second run hits warm containers + DRE)
+    let out_c = sys_b.run_batch(&queries);
+    assert_eq!(out_b.results, out_c.results, "DRE must be semantically invisible");
+}
+
+#[test]
+fn no_refine_still_reasonable() {
+    let (ds, sys) =
+        build_system(3000, 13, SquashConfig { refine: false, ..Default::default() });
+    let queries = workload(&ds, 20, 14);
+    let out = sys.run_batch(&queries);
+    let truth = exact_batch(&ds, &queries, 4);
+    // quantized-only (LB-ranked) results: recall dips but stays useful
+    let recall = mean_recall(&truth, &out.results, 10);
+    assert!(recall >= 0.7, "LB-only recall@10 = {recall}");
+}
+
+#[test]
+fn impossible_filter_returns_empty() {
+    let (ds, sys) = build_system(1500, 15, SquashConfig::default());
+    let mut q = workload(&ds, 1, 16).remove(0);
+    q.predicate = squash::attrs::predicate::parse_predicate("a0<0", ds.n_attrs()).unwrap();
+    let out = sys.run_batch(&[q]);
+    assert!(out.results[0].is_empty());
+}
+
+#[test]
+fn recall_survives_dre_warm_runs() {
+    let (ds, sys) = build_system(3000, 17, SquashConfig::default());
+    let q1 = workload(&ds, 15, 18);
+    let q2 = workload(&ds, 15, 19);
+    let _ = sys.run_batch(&q1); // warm the fleet
+    let out = sys.run_batch(&q2);
+    let truth = exact_batch(&ds, &q2, 4);
+    for (t, r) in truth.iter().zip(&out.results) {
+        let rec = recall_at_k(t, r, 10);
+        assert!(rec >= 0.6, "warm-run per-query recall {rec}");
+    }
+}

@@ -1,0 +1,96 @@
+//! XLA runtime integration: the AOT artifacts must produce exactly the
+//! same Hamming distances and tolerance-equal LB distances as the native
+//! Rust implementation. Skips (with a notice) when artifacts are absent
+//! (`make artifacts` generates them).
+
+use std::sync::Arc;
+
+use squash::data::profiles::by_name;
+use squash::data::synthetic::generate;
+use squash::osq::quantizer::{OsqIndex, OsqOptions};
+use squash::runtime::backend::{ComputeBackend, NativeBackend, XlaBackend};
+use squash::runtime::Engine;
+use squash::util::rng::Rng;
+
+fn engine() -> Option<Arc<Engine>> {
+    match Engine::load_default() {
+        Ok(e) => Some(Arc::new(e)),
+        Err(err) => {
+            eprintln!("SKIP runtime_xla tests: {err}");
+            None
+        }
+    }
+}
+
+fn build_index(n: usize, seed: u64) -> (squash::data::Dataset, OsqIndex) {
+    let profile = by_name("test").unwrap();
+    let ds = generate(profile, n, seed);
+    let mut rng = Rng::new(seed + 1);
+    let idx = OsqIndex::build(&ds.vectors, &OsqOptions::default(), &mut rng);
+    (ds, idx)
+}
+
+#[test]
+fn xla_matches_native_hamming_and_lb() {
+    let Some(engine) = engine() else { return };
+    let (ds, idx) = build_index(1500, 10);
+    let native = NativeBackend;
+    let xla = XlaBackend::new(engine);
+    assert!(xla.supports(16));
+
+    let mut rng = Rng::new(11);
+    for trial in 0..5 {
+        let q = ds.vectors.row(rng.gen_range(ds.n())).to_vec();
+        let qf = idx.query_frame(&q);
+        // candidate subsets of varying sizes incl. non-chunk-multiples
+        let n_rows = [7usize, 256, 1024, 1500][trial % 4];
+        let rows: Vec<usize> = (0..n_rows).map(|_| rng.gen_range(ds.n())).collect();
+
+        let h_native = native.hamming_scan(&idx, &qf, &rows);
+        let h_xla = xla.hamming_scan(&idx, &qf, &rows);
+        assert_eq!(h_native, h_xla, "hamming mismatch (trial {trial})");
+
+        let lb_native = native.lb_scan(&idx, &qf, &rows);
+        let lb_xla = xla.lb_scan(&idx, &qf, &rows);
+        assert_eq!(lb_native.len(), lb_xla.len());
+        for (i, (a, b)) in lb_native.iter().zip(&lb_xla).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-3 + 1e-3 * a.abs(),
+                "lb mismatch row {i}: native {a} vs xla {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_engine_chunking_pads_correctly() {
+    let Some(engine) = engine() else { return };
+    let (ds, idx) = build_index(300, 20);
+    let xla = XlaBackend::new(engine.clone());
+    let q = ds.vectors.row(0).to_vec();
+    let qf = idx.query_frame(&q);
+    // n = 1 (minimal) and n = chunk + 1 (crosses the chunk boundary)
+    for n in [1usize, engine.chunk + 1] {
+        let rows: Vec<usize> = (0..n).map(|i| i % ds.n()).collect();
+        let h = xla.hamming_scan(&idx, &qf, &rows);
+        assert_eq!(h.len(), n);
+        let lb = xla.lb_scan(&idx, &qf, &rows);
+        assert_eq!(lb.len(), n);
+        // duplicate rows must give identical outputs (padding never leaks):
+        // position `chunk` (second chunk) refers to the same underlying row
+        // as position `chunk % ds.n()` (first chunk)
+        if n > engine.chunk {
+            let twin = engine.chunk % ds.n();
+            assert_eq!(h[twin], h[engine.chunk], "same row, same hamming");
+            assert!((lb[twin] - lb[engine.chunk]).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn engine_reports_available_dims() {
+    let Some(engine) = engine() else { return };
+    let dims = engine.available_dims();
+    assert!(dims.contains(&16), "test profile artifacts missing: {dims:?}");
+    assert!(!engine.supports(17));
+}
