@@ -89,11 +89,22 @@ impl InvocationCtx<'_> {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FaasError {
-    #[error("payload of {0} bytes exceeds the synchronous invocation cap {1}")]
     PayloadTooLarge(usize, usize),
 }
+
+impl std::fmt::Display for FaasError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaasError::PayloadTooLarge(got, cap) => {
+                write!(f, "payload of {got} bytes exceeds the synchronous invocation cap {cap}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FaasError {}
 
 /// The Lambda-like platform: per-function container pools.
 pub struct Platform {

@@ -3,24 +3,47 @@
 //!
 //! This is the L3 ↔ L2/L1 boundary of the three-layer architecture.
 //! Python is never on this path: `make artifacts` lowers the JAX/Pallas
-//! entry points to HLO *text* once; here the `xla` crate parses the text
-//! (`HloModuleProto::from_text_file`), compiles it on the PJRT CPU
-//! client, and executes with concrete buffers.
+//! entry points to HLO *text* once; here the [`pjrt`] bridge parses and
+//! compiles the text on a PJRT CPU client and executes with concrete
+//! buffers. In this offline build the bridge is a stub that reports
+//! PJRT as unavailable, so [`Engine::load`] fails gracefully and every
+//! consumer (backend selection, the `runtime_xla` tests, the benches)
+//! falls back to the native engine; swapping in a vendored `xla` crate
+//! re-enables the path without touching anything above the bridge.
 //!
-//! A [`ComputeBackend`] abstracts the QP hot-spot math so the coordinator
-//! can run either through XLA (`XlaBackend`) or the equivalent native
-//! Rust (`NativeBackend`) — the ablation measured in
+//! The QP hot-spot math itself is abstracted by the scan engine in
+//! [`backend`], so the coordinator runs either through XLA or the
+//! equivalent native Rust — the ablation measured in
 //! `benches/perf_hotpath.rs` and the fallback when artifacts are absent.
 
 pub mod backend;
+pub mod pjrt;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
-
 use crate::util::json::Json;
+
+/// Runtime-layer error: artifact discovery, HLO compilation, PJRT
+/// execution. A plain message type — callers either propagate it or
+/// treat any error as "XLA unavailable, use native".
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+fn err(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError(msg.into())
+}
 
 /// One artifact from `artifacts/manifest.json`.
 #[derive(Clone, Debug)]
@@ -37,20 +60,29 @@ pub struct ArtifactEntry {
 /// Parse the manifest emitted by aot.py.
 pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactEntry>> {
     let text = std::fs::read_to_string(dir.join("manifest.json"))
-        .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
-    let v = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
-    let entries = v.get("entries").as_arr().ok_or_else(|| anyhow!("manifest: no entries"))?;
+        .map_err(|e| err(format!("reading {}/manifest.json: {e}", dir.display())))?;
+    let v = Json::parse(&text).map_err(|e| err(format!("manifest parse: {e}")))?;
+    let entries = v.get("entries").as_arr().ok_or_else(|| err("manifest: no entries"))?;
     entries
         .iter()
         .map(|e| {
+            let field = |name: &str| -> Result<usize> {
+                e.get(name).as_usize().ok_or_else(|| err(format!("manifest entry: bad {name}")))
+            };
             Ok(ArtifactEntry {
-                entry: e.get("entry").as_str().ok_or_else(|| anyhow!("entry name"))?.to_string(),
-                d: e.get("d").as_usize().ok_or_else(|| anyhow!("d"))?,
-                w: e.get("w").as_usize().ok_or_else(|| anyhow!("w"))?,
-                chunk: e.get("chunk").as_usize().ok_or_else(|| anyhow!("chunk"))?,
-                m1: e.get("m1").as_usize().ok_or_else(|| anyhow!("m1"))?,
-                m2: e.get("m2").as_usize().ok_or_else(|| anyhow!("m2"))?,
-                path: dir.join(e.get("path").as_str().ok_or_else(|| anyhow!("path"))?),
+                entry: e
+                    .get("entry")
+                    .as_str()
+                    .ok_or_else(|| err("manifest entry: bad entry name"))?
+                    .to_string(),
+                d: field("d")?,
+                w: field("w")?,
+                chunk: field("chunk")?,
+                m1: field("m1")?,
+                m2: field("m2")?,
+                path: dir.join(
+                    e.get("path").as_str().ok_or_else(|| err("manifest entry: bad path"))?,
+                ),
             })
         })
         .collect()
@@ -78,15 +110,15 @@ pub fn default_artifacts_dir() -> Option<PathBuf> {
 }
 
 struct Executables {
-    client: xla::PjRtClient,
+    client: pjrt::Client,
     /// compiled executables keyed by (entry, d); compiled lazily
-    compiled: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+    compiled: HashMap<(String, usize), pjrt::Executable>,
 }
 
-/// The PJRT engine. PJRT raw handles are not `Send` in the `xla` crate's
+/// The PJRT engine. PJRT raw handles are not `Send` in the bridge's
 /// type system, so all executions are funneled through one mutex — each
 /// call is itself internally parallel (XLA CPU thread pool), and the
-/// native backend exists for unserialized scaling comparisons.
+/// native engine exists for unserialized scaling comparisons.
 pub struct Engine {
     inner: Mutex<Executables>,
     manifest: Vec<ArtifactEntry>,
@@ -95,22 +127,17 @@ pub struct Engine {
     pub m2: usize,
 }
 
-// Safety: the PJRT CPU client is thread-safe (PJRT API contract); the
-// wrapper pointers are only reached through the `inner` mutex.
-unsafe impl Send for Engine {}
-unsafe impl Sync for Engine {}
-
 impl Engine {
     /// Create an engine over an artifacts directory.
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest = load_manifest(dir)?;
         if manifest.is_empty() {
-            bail!("empty artifact manifest in {}", dir.display());
+            return Err(err(format!("empty artifact manifest in {}", dir.display())));
         }
         let chunk = manifest[0].chunk;
         let m1 = manifest[0].m1;
         let m2 = manifest[0].m2;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let client = pjrt::Client::cpu().map_err(|e| err(format!("pjrt cpu client: {e}")))?;
         Ok(Self {
             inner: Mutex::new(Executables { client, compiled: HashMap::new() }),
             manifest,
@@ -123,7 +150,7 @@ impl Engine {
     /// Engine from the default artifacts location.
     pub fn load_default() -> Result<Self> {
         let dir = default_artifacts_dir()
-            .ok_or_else(|| anyhow!("artifacts/manifest.json not found; run `make artifacts`"))?;
+            .ok_or_else(|| err("artifacts/manifest.json not found; run `make artifacts`"))?;
         Self::load(&dir)
     }
 
@@ -143,36 +170,27 @@ impl Engine {
         self.manifest
             .iter()
             .find(|e| e.entry == entry && e.d == d)
-            .ok_or_else(|| anyhow!("no artifact for entry={entry} d={d}"))
+            .ok_or_else(|| err(format!("no artifact for entry={entry} d={d}")))
     }
 
-    /// Execute one entry point with input literals; returns the flattened
+    /// Execute one entry point with input buffers; returns the flattened
     /// tuple elements.
-    fn execute(&self, entry: &str, d: usize, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    fn execute(&self, entry: &str, d: usize, inputs: &[pjrt::Buffer]) -> Result<Vec<pjrt::Buffer>> {
         let art = self.artifact(entry, d)?.clone();
         let mut inner = self.inner.lock().unwrap();
         let key = (entry.to_string(), d);
         if !inner.compiled.contains_key(&key) {
-            let proto = xla::HloModuleProto::from_text_file(
-                art.path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )
-            .map_err(|e| anyhow!("parse {}: {e:?}", art.path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
+            let text = std::fs::read_to_string(&art.path)
+                .map_err(|e| err(format!("reading {}: {e}", art.path.display())))?;
             let exe = inner
                 .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {entry} d={d}: {e:?}"))?;
+                .compile_hlo_text(&text)
+                .map_err(|e| err(format!("compile {entry} d={d}: {e}")))?;
             inner.compiled.insert(key.clone(), exe);
         }
         let exe = inner.compiled.get(&key).unwrap();
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute {entry} d={d}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True
-        let elems = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        Ok(elems)
+        // aot.py lowers with return_tuple=True; the bridge flattens it.
+        exe.execute(inputs).map_err(|e| err(format!("execute {entry} d={d}: {e}")))
     }
 
     /// Hamming distances: one packed query (u32 words) vs `n` candidate
@@ -182,19 +200,15 @@ impl Engine {
         let (w, chunk) = (art.w, art.chunk);
         assert_eq!(q_words.len(), w);
         assert_eq!(codes.len(), n * w);
-        let q = xla::Literal::vec1(q_words)
-            .reshape(&[1, w as i64])
-            .map_err(|e| anyhow!("{e:?}"))?;
+        let q = pjrt::Buffer::u32(q_words.to_vec(), vec![1, w as i64]);
         let mut out = Vec::with_capacity(n);
         for start in (0..n).step_by(chunk) {
             let rows = (n - start).min(chunk);
             let mut buf = vec![0u32; chunk * w];
             buf[..rows * w].copy_from_slice(&codes[start * w..(start + rows) * w]);
-            let c = xla::Literal::vec1(&buf)
-                .reshape(&[chunk as i64, w as i64])
-                .map_err(|e| anyhow!("{e:?}"))?;
+            let c = pjrt::Buffer::u32(buf, vec![chunk as i64, w as i64]);
             let res = self.execute("hamming", d, &[q.clone(), c])?;
-            let v: Vec<u32> = res[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let v = res[0].as_u32().map_err(err)?;
             out.extend_from_slice(&v[..rows]);
         }
         Ok(out)
@@ -202,18 +216,22 @@ impl Engine {
 
     /// Build the ADC LUT on-device: query (KLT frame), padded boundaries
     /// (m2 x d row-major) and cell counts -> (m1 x d) row-major LUT.
-    pub fn lut(&self, d: usize, q_frame: &[f32], boundaries: &[f32], cells: &[i32]) -> Result<Vec<f32>> {
+    pub fn lut(
+        &self,
+        d: usize,
+        q_frame: &[f32],
+        boundaries: &[f32],
+        cells: &[i32],
+    ) -> Result<Vec<f32>> {
         let art = self.artifact("lut", d)?;
         assert_eq!(q_frame.len(), d);
         assert_eq!(boundaries.len(), art.m2 * d);
         assert_eq!(cells.len(), d);
-        let q = xla::Literal::vec1(q_frame);
-        let b = xla::Literal::vec1(boundaries)
-            .reshape(&[art.m2 as i64, d as i64])
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let c = xla::Literal::vec1(cells);
+        let q = pjrt::Buffer::f32(q_frame.to_vec(), vec![d as i64]);
+        let b = pjrt::Buffer::f32(boundaries.to_vec(), vec![art.m2 as i64, d as i64]);
+        let c = pjrt::Buffer::i32(cells.to_vec(), vec![d as i64]);
         let res = self.execute("lut", d, &[q, b, c])?;
-        res[0].to_vec().map_err(|e| anyhow!("{e:?}"))
+        res[0].as_f32().map_err(err)
     }
 
     /// Squared LB distances via the on-device gather+sum: `lut` is the
@@ -223,19 +241,15 @@ impl Engine {
         let chunk = art.chunk;
         assert_eq!(lut.len(), art.m1 * d);
         assert_eq!(codes.len(), n * d);
-        let l = xla::Literal::vec1(lut)
-            .reshape(&[art.m1 as i64, d as i64])
-            .map_err(|e| anyhow!("{e:?}"))?;
+        let l = pjrt::Buffer::f32(lut.to_vec(), vec![art.m1 as i64, d as i64]);
         let mut out = Vec::with_capacity(n);
         for start in (0..n).step_by(chunk) {
             let rows = (n - start).min(chunk);
             let mut buf = vec![0i32; chunk * d];
             buf[..rows * d].copy_from_slice(&codes[start * d..(start + rows) * d]);
-            let c = xla::Literal::vec1(&buf)
-                .reshape(&[chunk as i64, d as i64])
-                .map_err(|e| anyhow!("{e:?}"))?;
+            let c = pjrt::Buffer::i32(buf, vec![chunk as i64, d as i64]);
             let res = self.execute("lb", d, &[l.clone(), c])?;
-            let v: Vec<f32> = res[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let v = res[0].as_f32().map_err(err)?;
             out.extend_from_slice(&v[..rows]);
         }
         Ok(out)
@@ -243,7 +257,6 @@ impl Engine {
 
     /// Fused scan: hamming + LB over the same candidate rows in one
     /// PJRT call per chunk (the `qp_scan` entry point).
-    #[allow(clippy::too_many_arguments)]
     pub fn scan(
         &self,
         d: usize,
@@ -257,12 +270,8 @@ impl Engine {
         let (w, chunk) = (art.w, art.chunk);
         assert_eq!(bin_codes.len(), n * w);
         assert_eq!(codes.len(), n * d);
-        let q = xla::Literal::vec1(q_words)
-            .reshape(&[1, w as i64])
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let l = xla::Literal::vec1(lut)
-            .reshape(&[art.m1 as i64, d as i64])
-            .map_err(|e| anyhow!("{e:?}"))?;
+        let q = pjrt::Buffer::u32(q_words.to_vec(), vec![1, w as i64]);
+        let l = pjrt::Buffer::f32(lut.to_vec(), vec![art.m1 as i64, d as i64]);
         let mut h_out = Vec::with_capacity(n);
         let mut lb_out = Vec::with_capacity(n);
         for start in (0..n).step_by(chunk) {
@@ -271,15 +280,11 @@ impl Engine {
             bbuf[..rows * w].copy_from_slice(&bin_codes[start * w..(start + rows) * w]);
             let mut cbuf = vec![0i32; chunk * d];
             cbuf[..rows * d].copy_from_slice(&codes[start * d..(start + rows) * d]);
-            let b = xla::Literal::vec1(&bbuf)
-                .reshape(&[chunk as i64, w as i64])
-                .map_err(|e| anyhow!("{e:?}"))?;
-            let c = xla::Literal::vec1(&cbuf)
-                .reshape(&[chunk as i64, d as i64])
-                .map_err(|e| anyhow!("{e:?}"))?;
+            let b = pjrt::Buffer::u32(bbuf, vec![chunk as i64, w as i64]);
+            let c = pjrt::Buffer::i32(cbuf, vec![chunk as i64, d as i64]);
             let res = self.execute("scan", d, &[q.clone(), b, l.clone(), c])?;
-            let hv: Vec<u32> = res[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
-            let lv: Vec<f32> = res[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let hv = res[0].as_u32().map_err(err)?;
+            let lv = res[1].as_f32().map_err(err)?;
             h_out.extend_from_slice(&hv[..rows]);
             lb_out.extend_from_slice(&lv[..rows]);
         }

@@ -13,13 +13,22 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing value for option --{0}")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1}")]
     InvalidValue(String, String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(k) => write!(f, "missing value for option --{k}"),
+            CliError::InvalidValue(k, v) => write!(f, "invalid value for --{k}: {v}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from an iterator of argument strings (excluding argv[0]).

@@ -5,15 +5,26 @@
 //! byte counts feeding the cost model (S3 GET sizes, EFS reads) are the
 //! real encoded sizes.
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SerError {
-    #[error("unexpected end of buffer at {0}")]
     Eof(usize),
-    #[error("bad magic: expected {expected:#x}, got {got:#x}")]
     BadMagic { expected: u32, got: u32 },
-    #[error("unsupported version {0}")]
     BadVersion(u32),
 }
+
+impl std::fmt::Display for SerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SerError::Eof(pos) => write!(f, "unexpected end of buffer at {pos}"),
+            SerError::BadMagic { expected, got } => {
+                write!(f, "bad magic: expected {expected:#x}, got {got:#x}")
+            }
+            SerError::BadVersion(v) => write!(f, "unsupported version {v}"),
+        }
+    }
+}
+
+impl std::error::Error for SerError {}
 
 /// Append-only byte writer.
 #[derive(Default)]
