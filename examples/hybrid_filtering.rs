@@ -14,7 +14,7 @@ use squash::data::ground_truth::{exact_top_k, recall_at_k};
 use squash::data::profiles::by_name;
 use squash::data::synthetic::generate;
 use squash::data::workload::Query;
-use squash::runtime::backend::NativeBackend;
+use squash::runtime::backend::NativeScanEngine;
 
 fn main() {
     let profile = by_name("test").unwrap();
@@ -23,7 +23,7 @@ fn main() {
         &ds,
         &BuildOptions::for_profile(profile),
         SquashConfig::for_profile(profile),
-        Arc::new(NativeBackend),
+        Arc::new(NativeScanEngine),
     );
 
     // a tour of predicate shapes (a0..a2 numeric 0..=99, a3 categorical 0..=15)

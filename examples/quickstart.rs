@@ -15,7 +15,7 @@ use squash::data::ground_truth::exact_top_k;
 use squash::data::profiles::by_name;
 use squash::data::synthetic::generate;
 use squash::data::workload::Query;
-use squash::runtime::backend::NativeBackend;
+use squash::runtime::backend::NativeScanEngine;
 
 fn main() {
     // 1. a small attributed dataset (test profile: d=16, A=4 attributes)
@@ -28,7 +28,7 @@ fn main() {
         &ds,
         &BuildOptions::for_profile(profile),
         SquashConfig::for_profile(profile),
-        Arc::new(NativeBackend),
+        Arc::new(NativeScanEngine),
     );
     println!(
         "deployed: {} partitions, T = {:.3}, tree N_QA = {}",

@@ -41,7 +41,7 @@ fn main() {
         env.ds.d(),
         env.sys.ctx.n_partitions,
         env.sys.ctx.t,
-        env.sys.ctx.backend.name(),
+        env.sys.ctx.engine.name(),
         sw.secs()
     );
 

@@ -1,8 +1,10 @@
 //! §Perf: hot-path micro-benchmarks. Baselines and the optimization
-//! iteration log live in EXPERIMENTS.md §Perf. Measures the four QP/QA
-//! hot loops (Hamming scan, LB accumulate, dimensional extraction,
-//! filter-mask build), result merging, and the native-vs-XLA backend
-//! ablation on the same inputs.
+//! iteration log live in EXPERIMENTS.md §Perf. Measures the QP/QA hot
+//! loops (Hamming scan, LB accumulate variants incl. the blocked batch
+//! kernel, dimensional extraction, filter-mask build), result merging,
+//! the batched scan engine vs the seed-style per-query path on a
+//! multi-query QP request, and the native-vs-XLA engine ablation on
+//! identical inputs.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -12,8 +14,12 @@ use squash::attrs::predicate::parse_predicate;
 use squash::attrs::quantize::AttributeIndex;
 use squash::data::profiles::by_name;
 use squash::data::synthetic::generate;
+use squash::osq::binary::select_by_hamming_with_ties;
+use squash::osq::distance::AdcTable;
 use squash::osq::quantizer::{OsqIndex, OsqOptions};
-use squash::runtime::backend::{ComputeBackend, NativeBackend, XlaBackend};
+use squash::runtime::backend::{
+    NativeScanEngine, ScanEngine, ScanItem, ScanRequest, ScanScratch, XlaScanEngine,
+};
 use squash::runtime::Engine;
 use squash::util::rng::Rng;
 use squash::util::timer::{bench_fn, black_box};
@@ -30,6 +36,7 @@ fn main() {
     let q = ds.vectors.row(17).to_vec();
     let qf = idx.query_frame(&q);
     let rows: Vec<usize> = (0..n).collect();
+    let rows32: Vec<u32> = (0..n as u32).collect();
 
     // 1. Hamming scan (vectors/s)
     let qw = idx.binary.encode_query(&q);
@@ -39,21 +46,53 @@ fn main() {
         black_box(&h);
     });
     println!("{r}   => {:.1} Mvec/s", n as f64 * r.per_sec() / 1e6);
+    let mut hist = Vec::new();
+    let r = bench_fn("hamming scan+hist fused (20k x 128d)", T, || {
+        idx.binary.hamming_scan_hist(black_box(&qw), black_box(&rows32), &mut h, &mut hist);
+        black_box(&h);
+    });
+    println!("{r}   => {:.1} Mvec/s", n as f64 * r.per_sec() / 1e6);
 
-    // 2. ADC LUT build
+    // 2. ADC LUT build (fresh alloc vs scratch rebuild)
     let r = bench_fn("ADC LUT build (257x128)", T, || {
         black_box(idx.adc_table(black_box(&qf)));
     });
     println!("{r}");
+    let mut lut_scratch = AdcTable::empty();
+    let r = bench_fn("ADC LUT rebuild into scratch", T, || {
+        lut_scratch.rebuild(black_box(&qf), &idx.quantizers, idx.m1);
+        black_box(&lut_scratch);
+    });
+    println!("{r}");
 
-    // 3. LB accumulate over all rows
+    // 3. LB accumulate over all rows — the kernel ablation
     let lut = idx.adc_table(&qf);
     let mut acc = Vec::new();
-    let r = bench_fn("LB scan fused-col (20k x 128d)", T, || {
+    let accessors = idx.layout.dim_accessors();
+    let mut block = Vec::new();
+    let r_blocked = bench_fn("LB scan blocked (20k x 128d)", T, || {
+        idx.lb_sq_scan_blocked(
+            black_box(&lut),
+            black_box(&rows32),
+            &accessors,
+            &mut block,
+            &mut acc,
+        );
+        black_box(&acc);
+    });
+    println!(
+        "{r_blocked}   => {:.1} Mvec/s (batch-engine kernel)",
+        n as f64 * r_blocked.per_sec() / 1e6
+    );
+    let r_fused = bench_fn("LB scan fused-col (20k x 128d)", T, || {
         idx.lb_sq_scan(black_box(&lut), black_box(&rows), &mut acc);
         black_box(&acc);
     });
-    println!("{r}   => {:.1} Mvec/s", n as f64 * r.per_sec() / 1e6);
+    println!("{r_fused}   => {:.1} Mvec/s (seed hot path)", n as f64 * r_fused.per_sec() / 1e6);
+    println!(
+        "    blocked vs fused-col speedup: {:.2}x",
+        r_fused.mean_s / r_blocked.mean_s
+    );
     let r = bench_fn("LB scan two-pass (20k x 128d)", T, || {
         idx.lb_sq_scan_twopass(black_box(&lut), black_box(&rows), &mut acc);
         black_box(&acc);
@@ -90,26 +129,79 @@ fn main() {
     });
     println!("{r}");
 
-    // 7. backend ablation: native vs XLA on identical candidate sets
-    println!("\nbackend ablation (2048 candidates):");
-    let cand: Vec<usize> = (0..2048).collect();
-    let native = NativeBackend;
+    // 7. batched scan engine vs seed-style per-query path on one
+    //    multi-query QP request (the acceptance comparison: Hamming+LB
+    //    over all items of a request, 8 queries x 20k candidates)
+    println!("\nbatched QP request (8 queries x 20k candidates, H_perc=10%):");
+    let n_queries = 8;
+    let queries: Vec<Vec<f32>> =
+        (0..n_queries).map(|i| ds.vectors.row(37 * i + 11).to_vec()).collect();
+    let frames: Vec<Vec<f32>> = queries.iter().map(|v| idx.query_frame(v)).collect();
+    let keep = (n as f64 * 0.10).ceil() as usize;
+    let engine = NativeScanEngine;
+    let mut scratch = ScanScratch::new();
+    engine.begin_partition(&idx, &mut scratch);
+    for (label, prune) in [("pruned 10%", true), ("prune off ", false)] {
+        // seed-style: per-query allocations, ties-select over materialized
+        // distances, fresh LUT, fused-column LB scan (the pre-batch path)
+        let r_seed = bench_fn(&format!("seed-style per-query ({label})"), T, || {
+            for (v, f) in queries.iter().zip(&frames) {
+                let survivors: Vec<usize> = if prune {
+                    let qw = idx.binary.encode_query(v);
+                    let mut hd = Vec::new();
+                    idx.binary.hamming_scan(&qw, &rows, &mut hd);
+                    select_by_hamming_with_ties(&hd, idx.d, keep)
+                        .into_iter()
+                        .map(|i| rows[i])
+                        .collect()
+                } else {
+                    rows.clone()
+                };
+                let lut = idx.adc_table(f);
+                let mut lb = Vec::new();
+                idx.lb_sq_scan(&lut, &survivors, &mut lb);
+                black_box(&lb);
+            }
+        });
+        println!("{r_seed}");
+        let r_batch = bench_fn(&format!("batched scan engine  ({label})"), T, || {
+            let items: Vec<ScanItem> = queries
+                .iter()
+                .zip(&frames)
+                .map(|(v, f)| ScanItem { q_raw: v, q_frame: f, rows: &rows32, prune, keep })
+                .collect();
+            let req = ScanRequest { items };
+            engine.scan_batch(&idx, &req, &mut scratch, &mut |_, s, lb| {
+                black_box((s.len(), lb.len()));
+            });
+        });
+        println!("{r_batch}");
+        println!("    batched speedup ({label}): {:.2}x", r_seed.mean_s / r_batch.mean_s);
+    }
+
+    // 8. engine ablation: native vs XLA on identical candidate sets
+    println!("\nengine ablation (2048 candidates, raw hamming+lb):");
+    let cand: Vec<u32> = (0..2048).collect();
     let r = bench_fn("native hamming+lb (2048)", T, || {
-        black_box(native.hamming_scan(&idx, &q, &cand));
-        black_box(native.lb_scan(&idx, &qf, &cand));
+        let (hd, lb) = engine.raw_distances(&idx, &q, &qf, &cand, &mut scratch);
+        black_box((hd, lb));
     });
     println!("{r}");
     match Engine::load_default() {
-        Ok(engine) if engine.supports(idx.d) => {
-            let xla = XlaBackend::new(Arc::new(engine));
+        Ok(pjrt) if pjrt.supports(idx.d) => {
+            let xla = XlaScanEngine::new(Arc::new(pjrt));
+            let mut xla_scratch = ScanScratch::new();
+            xla.begin_partition(&idx, &mut xla_scratch);
             let r = bench_fn("xla    hamming+lb (2048)", T, || {
-                black_box(xla.hamming_scan(&idx, &q, &cand));
-                black_box(xla.lb_scan(&idx, &qf, &cand));
+                let (hd, lb) = xla.raw_distances(&idx, &q, &qf, &cand, &mut xla_scratch);
+                black_box((hd, lb));
             });
             println!("{r}");
             println!("(XLA path = Pallas interpret=True lowering on CPU PJRT — a correctness");
-            println!(" artifact, not a TPU performance proxy; see DESIGN.md §Hardware-Adaptation)");
+            println!(
+                " artifact, not a TPU performance proxy; see DESIGN.md §Hardware-Adaptation)"
+            );
         }
-        _ => println!("xla backend: artifacts not found (run `make artifacts`)"),
+        _ => println!("xla engine: artifacts not found (run `make artifacts`)"),
     }
 }

@@ -10,7 +10,7 @@ use squash::data::ground_truth::{exact_batch, mean_recall};
 use squash::data::profiles::by_name;
 use squash::data::synthetic::generate;
 use squash::data::workload::{generate_workload, WorkloadOptions};
-use squash::runtime::backend::NativeBackend;
+use squash::runtime::backend::NativeScanEngine;
 
 fn main() {
     println!("=== recall calibration at the paper operating points ===\n");
@@ -41,7 +41,7 @@ fn main() {
                 "noklt" => build.use_klt = false,
                 _ => {}
             }
-            let sys = SquashSystem::build_default(&ds, &build, cfg, Arc::new(NativeBackend));
+            let sys = SquashSystem::build_default(&ds, &build, cfg, Arc::new(NativeScanEngine));
             let out = sys.run_batch(&workload);
             recalls.push(mean_recall(&truth, &out.results, 10));
         }

@@ -16,12 +16,14 @@ use crate::attrs::quantize::AttributeIndex;
 use crate::coordinator::{PartitionFile, SquashConfig};
 use crate::data::workload::Query;
 use crate::data::Dataset;
-use crate::osq::binary::select_by_hamming_with_ties;
 use crate::osq::distance::top_k_smallest;
 use crate::osq::quantizer::OsqOptions;
 use crate::partition::kmeans::{balanced_kmeans, KMeansOptions};
 use crate::partition::selection::select_partitions;
 use crate::partition::{calibrate_threshold, PartitionLayout};
+use crate::runtime::backend::{
+    NativeScanEngine, ScanEngine, ScanItem, ScanRequest, ScanScratch,
+};
 use crate::util::matrix::l2_sq;
 use crate::util::rng::Rng;
 use crate::util::stats::LatencyRecorder;
@@ -105,58 +107,64 @@ impl ServerRunner {
         Self { instance, cfg, attrs, layout, partitions: parts, vectors: ds.vectors.clone(), t }
     }
 
-    /// Process one query end-to-end on the calling worker thread.
+    /// Process one query end-to-end on the calling worker thread —
+    /// through the same batched `ScanEngine` the serverless QP uses, so
+    /// the baseline benefits from the identical kernels and scratch
+    /// reuse ("the same codebase as SQUASH").
     fn serve_one(&self, q: &Query) -> Vec<(u64, f32)> {
         let mask = predicate_mask(&self.attrs, &q.predicate);
         let target = q.k * self.cfg.gather_factor.max(1);
         let plan =
             select_partitions(&self.layout, &[q.vector.clone()], &[mask], self.t, target);
+        let engine = NativeScanEngine;
+        let mut scratch = ScanScratch::new();
         let mut lists = Vec::new();
         for (p, visits) in plan.visits.iter().enumerate() {
+            if visits.is_empty() {
+                continue;
+            }
+            let file = &self.partitions[p];
+            let idx = &file.index;
+            engine.begin_partition(idx, &mut scratch);
             for v in visits {
-                let file = &self.partitions[p];
-                let idx = &file.index;
-                let rows: Vec<usize> = v.local_rows.iter().map(|&r| r as usize).collect();
-                if rows.is_empty() {
+                if v.local_rows.is_empty() {
                     continue;
                 }
                 let qf = idx.query_frame(&q.vector);
                 let prune_floor = (4 * q.k * self.cfg.refine_ratio).max(64);
-                let survivors: Vec<usize> =
-                    if self.cfg.prune && rows.len() > prune_floor {
-                        let qw = idx.binary.encode_query(&q.vector);
-                        let mut h = Vec::new();
-                        idx.binary.hamming_scan(&qw, &rows, &mut h);
-                        let keep = ((rows.len() as f64 * self.cfg.h_keep).ceil() as usize)
-                            .max(q.k * self.cfg.refine_ratio)
-                            .min(rows.len());
-                        select_by_hamming_with_ties(&h, idx.d, keep)
-                            .into_iter()
-                            .map(|i| rows[i])
-                            .collect()
-                    } else {
-                        rows
-                    };
-                let lut = idx.adc_table(&qf);
-                let mut lb = Vec::new();
-                idx.lb_sq_scan(&lut, &survivors, &mut lb);
-                let shortlist = top_k_smallest(
-                    lb.iter().enumerate().map(|(i, &d)| (file.globals[survivors[i]], d)),
-                    (q.k * self.cfg.refine_ratio).min(survivors.len()),
-                );
-                let local = if self.cfg.refine {
-                    top_k_smallest(
-                        shortlist
-                            .iter()
-                            .map(|&(id, _)| (id, l2_sq(&q.vector, self.vectors.row(id as usize)))),
-                        q.k,
-                    )
-                } else {
-                    let mut s = shortlist;
-                    s.truncate(q.k);
-                    s
+                let keep = ((v.local_rows.len() as f64 * self.cfg.h_keep).ceil() as usize)
+                    .max(q.k * self.cfg.refine_ratio)
+                    .min(v.local_rows.len());
+                let req = ScanRequest {
+                    items: vec![ScanItem {
+                        q_raw: &q.vector,
+                        q_frame: &qf,
+                        rows: &v.local_rows,
+                        prune: self.cfg.prune && v.local_rows.len() > prune_floor,
+                        keep,
+                    }],
                 };
-                lists.push(local);
+                engine.scan_batch(idx, &req, &mut scratch, &mut |_, survivors, lb| {
+                    let shortlist = top_k_smallest(
+                        lb.iter()
+                            .enumerate()
+                            .map(|(i, &d)| (file.globals[survivors[i] as usize], d)),
+                        (q.k * self.cfg.refine_ratio).min(survivors.len()),
+                    );
+                    let local = if self.cfg.refine {
+                        top_k_smallest(
+                            shortlist.iter().map(|&(id, _)| {
+                                (id, l2_sq(&q.vector, self.vectors.row(id as usize)))
+                            }),
+                            q.k,
+                        )
+                    } else {
+                        let mut s = shortlist;
+                        s.truncate(q.k);
+                        s
+                    };
+                    lists.push(local);
+                });
             }
         }
         crate::coordinator::merge::merge_topk(&lists, q.k)

@@ -15,7 +15,7 @@ use crate::data::synthetic::generate;
 use crate::data::workload::{generate_workload, Query, WorkloadOptions};
 use crate::data::Dataset;
 use crate::faas::{FaasConfig, Platform};
-use crate::runtime::backend::{select_backend, ComputeBackend};
+use crate::runtime::backend::{select_engine, ScanEngine};
 use crate::runtime::Engine;
 use crate::storage::{FileStore, ObjectStore, SimParams};
 use crate::util::stats::LatencySummary;
@@ -77,10 +77,18 @@ impl Env {
         ));
         let s3 = Arc::new(ObjectStore::new(params.clone(), ledger.clone()));
         let efs = Arc::new(FileStore::new(params, ledger.clone()));
-        let engine = Engine::load_default().ok().map(Arc::new);
-        let backend: Arc<dyn ComputeBackend> = select_backend(&opts.backend, engine, profile.d);
+        let pjrt_engine = Engine::load_default().ok().map(Arc::new);
+        let engine: Arc<dyn ScanEngine> = select_engine(&opts.backend, pjrt_engine, profile.d);
         let cfg = SquashConfig::for_profile(profile);
-        let sys = SquashSystem::build(&ds, &BuildOptions::for_profile(profile), cfg, platform.clone(), s3, efs, backend);
+        let sys = SquashSystem::build(
+            &ds,
+            &BuildOptions::for_profile(profile),
+            cfg,
+            platform.clone(),
+            s3,
+            efs,
+            engine,
+        );
         let queries = generate_workload(
             &ds,
             &WorkloadOptions {
@@ -112,7 +120,7 @@ impl crate::coordinator::SystemCtx {
             s3: self.s3.clone(),
             efs: self.efs.clone(),
             ledger: self.ledger.clone(),
-            backend: self.backend.clone(),
+            engine: self.engine.clone(),
             cache: self.cache.clone(),
             ds_name: self.ds_name.clone(),
             d: self.d,

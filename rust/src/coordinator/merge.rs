@@ -6,7 +6,16 @@ use crate::coordinator::payload::QueryResult;
 
 /// Merge any number of ascending (id, distance) lists into the global
 /// ascending top-k. Deterministic tie-break on id.
+///
+/// Allocation audit (hot-path pre-sizing pass): `out` is pre-sized to
+/// `k`; the single-list case — common when a query's filter confines it
+/// to one partition — skips the cursor allocation entirely.
 pub fn merge_topk(lists: &[QueryResult], k: usize) -> QueryResult {
+    if lists.len() == 1 {
+        let mut out = lists[0].clone();
+        out.truncate(k);
+        return out;
+    }
     // k-way merge via repeated best-head selection (lists are short — the
     // per-partition k — so the simple O(total · lists) scan beats a heap)
     let mut cursors = vec![0usize; lists.len()];

@@ -8,8 +8,9 @@
 //! serialized into object storage; full-precision vectors into the file
 //! store. Query path ([`SquashSystem::run_batch`]): CO → QA tree →
 //! per-partition QPs → merge — Python never appears here; the QP
-//! hot-spot math runs through the `runtime::ComputeBackend` (XLA
-//! artifacts or native).
+//! hot-spot math runs through the batched `runtime::backend::ScanEngine`
+//! (XLA artifacts or native), one `ScanRequest` + reusable `ScanScratch`
+//! per QP invocation.
 
 pub mod merge;
 pub mod payload;
@@ -31,7 +32,7 @@ use crate::faas::{FaasConfig, Platform};
 use crate::osq::quantizer::{OsqIndex, OsqOptions};
 use crate::partition::kmeans::{balanced_kmeans, KMeansOptions};
 use crate::partition::{calibrate_threshold, PartitionLayout};
-use crate::runtime::backend::ComputeBackend;
+use crate::runtime::backend::ScanEngine;
 use crate::storage::{index_files, FileStore, ObjectStore, SimParams};
 use crate::util::rng::Rng;
 use crate::util::ser::{Reader, SerError, Writer};
@@ -111,7 +112,7 @@ pub struct SystemCtx {
     pub s3: Arc<ObjectStore>,
     pub efs: Arc<FileStore>,
     pub ledger: Arc<CostLedger>,
-    pub backend: Arc<dyn ComputeBackend>,
+    pub engine: Arc<dyn ScanEngine>,
     pub cache: Arc<ResultCache>,
     pub ds_name: String,
     pub d: usize,
@@ -194,7 +195,7 @@ impl SquashSystem {
         platform: Arc<Platform>,
         s3: Arc<ObjectStore>,
         efs: Arc<FileStore>,
-        backend: Arc<dyn ComputeBackend>,
+        engine: Arc<dyn ScanEngine>,
     ) -> Self {
         let mut rng = Rng::new(build.seed);
         let ledger = platform.ledger.clone();
@@ -238,7 +239,7 @@ impl SquashSystem {
             s3,
             efs,
             ledger,
-            backend,
+            engine,
             cache: Arc::new(ResultCache::new()),
             ds_name: ds.name.clone(),
             d: ds.d(),
@@ -249,14 +250,14 @@ impl SquashSystem {
     }
 
     /// Convenience constructor: default simulated platform + stores.
-    pub fn build_default(ds: &Dataset, build: &BuildOptions, cfg: SquashConfig, backend: Arc<dyn ComputeBackend>) -> Self {
+    pub fn build_default(ds: &Dataset, build: &BuildOptions, cfg: SquashConfig, engine: Arc<dyn ScanEngine>) -> Self {
         let ledger = Arc::new(CostLedger::new());
         let params = SimParams::instant();
         let platform =
             Arc::new(Platform::new(FaasConfig::default(), params.clone(), ledger.clone()));
         let s3 = Arc::new(ObjectStore::new(params.clone(), ledger.clone()));
         let efs = Arc::new(FileStore::new(params, ledger.clone()));
-        Self::build(ds, build, cfg, platform, s3, efs, backend)
+        Self::build(ds, build, cfg, platform, s3, efs, engine)
     }
 
     /// Execute a query batch end-to-end through the Coordinator function.
@@ -367,7 +368,7 @@ mod tests {
     use crate::data::profiles::by_name;
     use crate::data::synthetic::generate;
     use crate::data::workload::{generate_workload, WorkloadOptions};
-    use crate::runtime::backend::NativeBackend;
+    use crate::runtime::backend::NativeScanEngine;
 
     #[test]
     fn partition_file_roundtrip() {
@@ -387,7 +388,7 @@ mod tests {
             &ds,
             &BuildOptions::default(),
             SquashConfig::default(),
-            Arc::new(NativeBackend),
+            Arc::new(NativeScanEngine),
         );
         let ctx = &sys.ctx;
         assert!(ctx.s3.contains(&index_files::attrs_key("test")));
@@ -406,7 +407,7 @@ mod tests {
             &ds,
             &BuildOptions::default(),
             cfg,
-            Arc::new(NativeBackend),
+            Arc::new(NativeScanEngine),
         );
         let w = generate_workload(&ds, &WorkloadOptions { n_queries: 4, ..Default::default() }, 6);
         let first = sys.run_batch(&w.queries);

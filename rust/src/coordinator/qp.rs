@@ -1,26 +1,34 @@
 //! QueryProcessor (paper §3.1): per-partition processing.
 //!
-//! Pipeline per query item (all on the candidate rows delivered by the
+//! Pipeline per request (all on the candidate rows delivered by the
 //! QA — vectors failing the filter never touch the QP):
 //!   1. load the partition's OSQ index (DRE hit or S3 GET),
-//!   2. low-bit OSQ Hamming pruning, keeping the best `H_perc` (§2.4.3),
-//!   3. fine-grained LB distances via the ADC LUT (§2.4.4) through the
-//!      configured ComputeBackend (XLA artifacts or native Rust),
+//!   2. build one `ScanRequest` covering *every* query item of the
+//!      request and run it through the configured `ScanEngine`
+//!      (`runtime::backend`) with a reusable `ScanScratch`: per item,
+//!      low-bit OSQ Hamming pruning keeping the best `H_perc` (§2.4.3)
+//!      fused with fine-grained LB distances via the ADC LUT (§2.4.4) —
+//!      LUT storage, code blocks and accumulators are shared across the
+//!      batch instead of reallocated per query,
+//!   3. per item, local shortlist from the emitted survivors + LB
+//!      distances,
 //!   4. optional post-refinement: R·k full-precision vectors fetched from
 //!      the file store (EFS random reads), exact distances, re-rank
 //!      (§2.4.5),
 //!   5. local top-k (global ids) returned to the calling QA.
 //!
 //! Each partition has its own function name (`squash-processor-{p}`), so
-//! a warm container's retained index always matches its partition.
+//! a warm container's retained index always matches its partition — and
+//! the engine's `begin_partition` state (segment accessors, padded
+//! boundaries) is valid for the whole request.
 
 use std::sync::Arc;
 
 use crate::coordinator::payload::{QpRequest, QpResponse, QueryResult};
 use crate::coordinator::{PartitionFile, SystemCtx};
 use crate::cost::Role;
-use crate::osq::binary::select_by_hamming_with_ties;
 use crate::osq::distance::top_k_smallest;
+use crate::runtime::backend::{ScanItem, ScanRequest, ScanScratch};
 use crate::storage::index_files;
 use crate::util::matrix::l2_sq;
 
@@ -47,39 +55,57 @@ pub fn qp_handler(
 ) -> QpResponse {
     let file = load_partition(ctx, ictx, req.partition);
     let idx = &file.index;
-    let mut results = Vec::with_capacity(req.items.len());
-    for item in &req.items {
-        if item.local_rows.is_empty() {
-            results.push((item.query_idx, Vec::new()));
-            continue;
-        }
-        let rows: Vec<usize> = item.local_rows.iter().map(|&r| r as usize).collect();
-        let qf = idx.query_frame(&item.vector);
 
-        // ---- low-bit OSQ pruning (§2.4.3) -----------------------------
+    // KLT query frames for every item, owned up front so the ScanItems
+    // can borrow them alongside the raw vectors. Items whose filter left
+    // no candidates in this partition skip the d x d transform — the
+    // engine short-circuits them before touching the frame.
+    let frames: Vec<Vec<f32>> = req
+        .items
+        .iter()
+        .map(|it| {
+            if it.local_rows.is_empty() {
+                Vec::new()
+            } else {
+                idx.query_frame(&it.vector)
+            }
+        })
+        .collect();
+
+    let mut items = Vec::with_capacity(req.items.len());
+    for (it, qf) in req.items.iter().zip(&frames) {
         // Pruning pays off when the filter left many candidates ("this is
         // particularly important when the filter predicate is not highly
         // restrictive"); tiny candidate sets go straight to the LB scan.
-        let prune_floor = (4 * item.k * ctx.cfg.refine_ratio).max(64);
-        let survivors: Vec<usize> = if ctx.cfg.prune && rows.len() > prune_floor {
-            let h = ctx.backend.hamming_scan(idx, &item.vector, &rows);
-            // keep H_perc of candidates but never fewer than R·k (the
-            // refinement budget must stay fillable)
-            let keep = ((rows.len() as f64 * ctx.cfg.h_keep).ceil() as usize)
-                .max(item.k * ctx.cfg.refine_ratio)
-                .min(rows.len());
-            select_by_hamming_with_ties(&h, idx.d, keep).into_iter().map(|i| rows[i]).collect()
-        } else {
-            rows.clone()
-        };
+        let prune_floor = (4 * it.k * ctx.cfg.refine_ratio).max(64);
+        // keep H_perc of candidates but never fewer than R·k (the
+        // refinement budget must stay fillable)
+        let keep = ((it.local_rows.len() as f64 * ctx.cfg.h_keep).ceil() as usize)
+            .max(it.k * ctx.cfg.refine_ratio)
+            .min(it.local_rows.len());
+        items.push(ScanItem {
+            q_raw: &it.vector,
+            q_frame: qf,
+            rows: &it.local_rows,
+            prune: ctx.cfg.prune && it.local_rows.len() > prune_floor,
+            keep,
+        });
+    }
+    let scan_req = ScanRequest { items };
 
-        // ---- fine-grained LB distances (§2.4.4) ------------------------
-        let lb = ctx.backend.lb_scan(idx, &qf, &survivors);
+    let mut scratch = ScanScratch::new();
+    ctx.engine.begin_partition(idx, &mut scratch);
+
+    let mut results: Vec<(usize, QueryResult)> = Vec::with_capacity(req.items.len());
+    ctx.engine.scan_batch(idx, &scan_req, &mut scratch, &mut |i, survivors, lb| {
+        let item = &req.items[i];
+
+        // ---- local shortlist from the scan output ---------------------
         let shortlist_len = (item.k * ctx.cfg.refine_ratio).max(item.k);
         let shortlist = top_k_smallest(
             lb.iter()
                 .enumerate()
-                .map(|(i, &d)| (file.globals[survivors[i]], d)),
+                .map(|(s, &d)| (file.globals[survivors[s] as usize], d)),
             shortlist_len.min(survivors.len()),
         );
 
@@ -92,7 +118,7 @@ pub fn qp_handler(
             s
         };
         results.push((item.query_idx, top));
-    }
+    });
     QpResponse { results }
 }
 

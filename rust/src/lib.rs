@@ -6,6 +6,18 @@
 //!   L3 (this crate): coordinator, FaaS simulator, storage, cost model
 //!   L2/L1 (python/compile): JAX graph + Pallas kernels, AOT-lowered to
 //!   HLO text and executed through `runtime::` on the request path.
+//!
+//! The QP hot path is batch-oriented end to end: `coordinator::qp`
+//! assembles one `runtime::backend::ScanRequest` per partition request
+//! (every query item's frames, `u32` candidate rows and `H_perc` keep
+//! counts) and drives it through a `runtime::backend::ScanEngine` with a
+//! reusable `ScanScratch` — LUT storage, gathered code blocks, distance
+//! accumulators and survivor lists are recycled across the batch. The
+//! native engine runs the blocked columnar kernels in `osq::`; the XLA
+//! engine executes the AOT artifacts through `runtime::pjrt` with
+//! per-partition prepared boundary state. Both agree bit-for-bit on
+//! Hamming survivors and to float tolerance on LB distances
+//! (`tests/runtime_xla.rs`).
 pub mod attrs;
 pub mod baselines;
 pub mod bench;

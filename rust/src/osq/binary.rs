@@ -57,6 +57,14 @@ impl BinaryIndex {
         out
     }
 
+    /// Binary-quantize one query into a reusable words buffer (the
+    /// batch-path variant of [`BinaryIndex::encode_query`]).
+    pub fn encode_query_into(&self, q: &[f32], out: &mut Vec<u64>) {
+        out.clear();
+        out.resize(self.words, 0);
+        encode_row(q, &self.mean, &self.inv_std, out);
+    }
+
     /// Packed code of row `i`.
     #[inline]
     pub fn row(&self, i: usize) -> &[u64] {
@@ -75,6 +83,29 @@ impl BinaryIndex {
         out.reserve(rows.len());
         for &r in rows {
             out.push(hamming_words(q_words, self.row(r)));
+        }
+    }
+
+    /// Fused Hamming scan + distance histogram over `u32` candidate rows:
+    /// one pass over the packed codes yields both the per-candidate
+    /// distances and the histogram the `H_perc` cutoff selection needs —
+    /// the batch-path fusion of [`BinaryIndex::hamming_scan`] with the
+    /// counting phase of [`select_by_hamming_with_ties`].
+    pub fn hamming_scan_hist(
+        &self,
+        q_words: &[u64],
+        rows: &[u32],
+        out: &mut Vec<u32>,
+        hist: &mut Vec<usize>,
+    ) {
+        out.clear();
+        out.reserve(rows.len());
+        hist.clear();
+        hist.resize(self.d + 2, 0);
+        for &r in rows {
+            let h = hamming_words(q_words, self.row(r as usize));
+            hist[(h as usize).min(self.d + 1)] += 1;
+            out.push(h);
         }
     }
 
@@ -140,13 +171,43 @@ pub fn hamming_words(a: &[u64], b: &[u64]) -> u32 {
     acc
 }
 
+/// Distance histogram of a precomputed Hamming scan: `d + 2` buckets,
+/// the last collecting any clamped overflow (distances cannot exceed
+/// `d`, but the clamp keeps corrupt inputs in-bounds).
+pub fn hamming_histogram(dists: &[u32], d: usize, hist: &mut Vec<usize>) {
+    hist.clear();
+    hist.resize(d + 2, 0);
+    for &h in dists {
+        hist[(h as usize).min(d + 1)] += 1;
+    }
+}
+
+/// The `H_perc` cutoff distance: the smallest `cut` such that
+/// `count(dist <= cut) >= keep`. Callers keep every candidate at
+/// distance `<= cut` (ties included). `keep` must be in
+/// `1..=count(hist)`; with larger `keep` the last bucket is returned
+/// (keep everything).
+pub fn hamming_cutoff(hist: &[usize], keep: usize) -> usize {
+    debug_assert!(keep >= 1);
+    let mut acc = 0usize;
+    for (h, &c) in hist.iter().enumerate() {
+        if acc + c >= keep {
+            return h;
+        }
+        acc += c;
+    }
+    hist.len() - 1
+}
+
 /// Like [`select_by_hamming`] but keeps *every* candidate tied at the
 /// cutoff distance. With high-dimensional signatures ties are rare and
 /// this matches the exact H_perc cut; with coarse (low-d) signatures the
 /// tie group is large and all equally-ranked candidates proceed — the
 /// cutoff is a distance, not an arbitrary index order. This is the
 /// variant the QP uses (§2.4.3: "the proportion of the best vectors in
-/// ascending Hamming distance order to retain").
+/// ascending Hamming distance order to retain"); the batched scan engine
+/// fuses the same selection with the scan via
+/// [`BinaryIndex::hamming_scan_hist`] + [`hamming_cutoff`].
 pub fn select_by_hamming_with_ties(dists: &[u32], d: usize, keep: usize) -> Vec<usize> {
     let keep = keep.min(dists.len());
     if keep == 0 {
@@ -155,23 +216,13 @@ pub fn select_by_hamming_with_ties(dists: &[u32], d: usize, keep: usize) -> Vec<
     if keep == dists.len() {
         return (0..dists.len()).collect();
     }
-    let mut hist = vec![0usize; d + 2];
-    for &h in dists {
-        hist[(h as usize).min(d + 1)] += 1;
-    }
-    let mut acc = 0usize;
-    let mut cut = 0usize;
-    for (h, &c) in hist.iter().enumerate() {
-        if acc + c >= keep {
-            cut = h;
-            break;
-        }
-        acc += c;
-    }
+    let mut hist = Vec::new();
+    hamming_histogram(dists, d, &mut hist);
+    let cut = hamming_cutoff(&hist, keep) as u32;
     dists
         .iter()
         .enumerate()
-        .filter(|&(_, &h)| (h as usize) <= cut)
+        .filter(|&(_, &h)| h <= cut)
         .map(|(i, _)| i)
         .collect()
 }
@@ -380,6 +431,75 @@ mod tests {
             select_by_hamming(&h, 128, 400).into_iter().collect();
         let hits = by_eu[..100].iter().filter(|&&i| survivors.contains(&i)).count();
         assert!(hits >= 80, "only {hits}/100 survived the Hamming cut");
+    }
+}
+
+#[cfg(test)]
+mod fused_tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scan_hist_matches_two_phase() {
+        let mut rng = Rng::new(21);
+        let m = Matrix::from_rows_fn(250, 48, |_, row| {
+            for v in row.iter_mut() {
+                *v = rng.normal();
+            }
+        });
+        let idx = BinaryIndex::build(&m);
+        let q: Vec<f32> = (0..48).map(|_| rng.normal()).collect();
+        let qw = idx.encode_query(&q);
+        let rows32: Vec<u32> = (0..250u32).step_by(3).collect();
+        let rows: Vec<usize> = rows32.iter().map(|&r| r as usize).collect();
+        let (mut fused, mut hist) = (Vec::new(), Vec::new());
+        idx.hamming_scan_hist(&qw, &rows32, &mut fused, &mut hist);
+        let mut plain = Vec::new();
+        idx.hamming_scan(&qw, &rows, &mut plain);
+        assert_eq!(fused, plain);
+        let mut want_hist = Vec::new();
+        hamming_histogram(&plain, idx.d, &mut want_hist);
+        assert_eq!(hist, want_hist);
+    }
+
+    #[test]
+    fn encode_query_into_matches_encode_query() {
+        let mut rng = Rng::new(22);
+        let m = Matrix::from_rows_fn(60, 70, |_, row| {
+            for v in row.iter_mut() {
+                *v = rng.normal();
+            }
+        });
+        let idx = BinaryIndex::build(&m);
+        let q: Vec<f32> = (0..70).map(|_| rng.normal()).collect();
+        // a dirty reused buffer must not leak into the encoding
+        let mut buf = vec![u64::MAX; 7];
+        idx.encode_query_into(&q, &mut buf);
+        assert_eq!(buf, idx.encode_query(&q));
+    }
+
+    #[test]
+    fn prop_cutoff_matches_select_with_ties() {
+        prop::check("hamming-cutoff-vs-select", 60, |g| {
+            let n = g.usize_in(1, 150);
+            let d = g.usize_in(1, 40);
+            let dists: Vec<u32> = (0..n).map(|_| g.usize_in(0, d) as u32).collect();
+            let keep = g.usize_in(1, n.max(1));
+            if keep >= n {
+                return Ok(()); // select's early-return path, cutoff unused
+            }
+            let mut hist = Vec::new();
+            hamming_histogram(&dists, d, &mut hist);
+            let cut = hamming_cutoff(&hist, keep) as u32;
+            let fused: Vec<usize> =
+                (0..n).filter(|&i| dists[i] <= cut).collect();
+            let want = select_by_hamming_with_ties(&dists, d, keep);
+            if fused != want {
+                return Err(format!("cut {cut}: {fused:?} != {want:?}"));
+            }
+            Ok(())
+        });
     }
 }
 

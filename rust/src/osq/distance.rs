@@ -25,6 +25,12 @@ pub struct AdcTable {
     pub table: Vec<f32>,
 }
 
+impl Default for AdcTable {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
 impl AdcTable {
     /// Build the LUT for query `q` (KLT frame) against per-dim quantizers.
     /// Costs `Σ_j C[j]` distance evaluations (paper: `(Σ_j C[j]) - 1`).
@@ -32,6 +38,30 @@ impl AdcTable {
         let d = quantizers.len();
         debug_assert_eq!(q.len(), d);
         let mut table = vec![0f32; d * m1];
+        Self::fill(q, quantizers, m1, &mut table);
+        Self { d, m1, table }
+    }
+
+    /// An empty table for scratch reuse; populate with
+    /// [`AdcTable::rebuild`] before the first lookup.
+    pub fn empty() -> Self {
+        Self { d: 0, m1: 0, table: Vec::new() }
+    }
+
+    /// Rebuild the table in place for a new query — the batch-path
+    /// variant of [`AdcTable::build`] that reuses the table allocation
+    /// across the queries of a request.
+    pub fn rebuild(&mut self, q: &[f32], quantizers: &[ScalarQuantizer], m1: usize) {
+        let d = quantizers.len();
+        debug_assert_eq!(q.len(), d);
+        self.d = d;
+        self.m1 = m1;
+        self.table.clear();
+        self.table.resize(d * m1, 0.0);
+        Self::fill(q, quantizers, m1, &mut self.table);
+    }
+
+    fn fill(q: &[f32], quantizers: &[ScalarQuantizer], m1: usize, table: &mut [f32]) {
         for (j, sq) in quantizers.iter().enumerate() {
             let qj = q[j];
             let cells = sq.cells();
@@ -50,7 +80,6 @@ impl AdcTable {
             }
             // rows >= cells stay 0 (codes never reference them)
         }
-        Self { d, m1, table }
     }
 
     /// Squared LB distance of one candidate given its per-dim codes.
@@ -92,15 +121,21 @@ impl AdcTable {
 
 /// Top-k selection over (id, distance) pairs by ascending distance —
 /// bounded binary max-heap, O(n log k). Returns pairs sorted ascending.
+/// Ordering is `f32::total_cmp`, so NaN distances are well-defined (they
+/// rank worst) instead of corrupting the heap or panicking the sort.
 pub fn top_k_smallest(items: impl Iterator<Item = (u64, f32)>, k: usize) -> Vec<(u64, f32)> {
     if k == 0 {
         return Vec::new();
     }
     // max-heap on distance so the root is the current worst of the best-k
     let mut heap: Vec<(u64, f32)> = Vec::with_capacity(k + 1);
-    // total order: distance, then id (deterministic tie-break)
+    // total order: distance (total_cmp), then id (deterministic tie-break)
     fn worse(a: &(u64, f32), b: &(u64, f32)) -> bool {
-        a.1 > b.1 || (a.1 == b.1 && a.0 > b.0)
+        match a.1.total_cmp(&b.1) {
+            std::cmp::Ordering::Greater => true,
+            std::cmp::Ordering::Equal => a.0 > b.0,
+            std::cmp::Ordering::Less => false,
+        }
     }
     fn sift_up(h: &mut [(u64, f32)], mut i: usize) {
         while i > 0 {
@@ -141,7 +176,7 @@ pub fn top_k_smallest(items: impl Iterator<Item = (u64, f32)>, k: usize) -> Vec<
             sift_down(&mut heap);
         }
     }
-    heap.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+    heap.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
     heap
 }
 
@@ -259,7 +294,7 @@ mod tests {
                 (0..n).map(|i| (i as u64, g.f32_in(0.0, 10.0))).collect();
             let got = top_k_smallest(items.iter().copied(), k);
             let mut sorted = items.clone();
-            sorted.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            sorted.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
             sorted.truncate(k);
             if got != sorted {
                 return Err(format!("got {got:?} want {sorted:?}"));
@@ -273,5 +308,25 @@ mod tests {
         let items = vec![(3u64, 1.0f32), (1, 1.0), (2, 0.5), (0, 1.0)];
         let got = top_k_smallest(items.into_iter(), 3);
         assert_eq!(got, vec![(2, 0.5), (0, 1.0), (1, 1.0)]);
+    }
+
+    #[test]
+    fn top_k_survives_nan_distances() {
+        // regression: the seed's partial_cmp().unwrap() panicked on NaN;
+        // total_cmp ranks NaN worst, so finite distances win the top-k
+        let items =
+            vec![(0u64, f32::NAN), (1, 0.5f32), (2, f32::NAN), (3, 0.1), (4, 1.0)];
+        let got = top_k_smallest(items.into_iter(), 3);
+        assert_eq!(got, vec![(3, 0.1), (1, 0.5), (4, 1.0)]);
+        // NaNs fill remaining slots (deterministically, by id) only when
+        // finite candidates run out
+        let items = vec![(7u64, f32::NAN), (5, f32::NAN), (6, 0.25f32)];
+        let got = top_k_smallest(items.into_iter(), 3);
+        assert_eq!(got[0], (6, 0.25));
+        let tail_ids: Vec<u64> = got[1..].iter().map(|&(id, _)| id).collect();
+        assert_eq!(tail_ids, vec![5, 7]);
+        for &(_, d) in &got[1..] {
+            assert!(d.is_nan());
+        }
     }
 }

@@ -369,6 +369,55 @@ mod tests {
     }
 
     #[test]
+    fn prop_column_extract_matches_fig3_oracle() {
+        // the hot columnar path vs the paper's literal Figure-3 procedure,
+        // over randomized allocations that force 0-bit dimensions and
+        // codes straddling two segments
+        prop::check("segment-column-vs-fig3", 80, |g| {
+            let d = g.usize_in(1, 32);
+            // widths drawn to make straddles + empty dims common: 5/7/9-bit
+            // codes rarely align with the 8-bit segment grid
+            let bits: Vec<u8> =
+                (0..d).map(|_| g.choose(&[0u8, 0, 1, 3, 5, 7, 8, 9, 11])).collect();
+            let layout = SegmentLayout::new(bits.clone());
+            let n = g.usize_in(1, 40);
+            let codes: Vec<u16> = (0..n * d)
+                .map(|i| {
+                    let b = bits[i % d];
+                    if b == 0 {
+                        0
+                    } else {
+                        g.usize_in(0, (1usize << b) - 1) as u16
+                    }
+                })
+                .collect();
+            let packed = layout.pack_all(&codes, n);
+            // a sparse, shuffled-ish row subset (the filtered-candidate case)
+            let rows: Vec<usize> = (0..n).filter(|_| g.bool()).collect();
+            let gseg = layout.segments_per_vector();
+            let mut col = Vec::new();
+            for j in 0..d {
+                layout.extract_dim_column(&packed, &rows, j, &mut col);
+                if col.len() != rows.len() {
+                    return Err(format!("dim {j}: column length {}", col.len()));
+                }
+                for (k, &r) in rows.iter().enumerate() {
+                    let row = &packed[r * gseg..(r + 1) * gseg];
+                    let fig3 = layout.extract_dim_fig3(row, j);
+                    if col[k] != fig3 || fig3 != codes[r * d + j] {
+                        return Err(format!(
+                            "row {r} dim {j}: column {} fig3 {fig3} want {}",
+                            col[k],
+                            codes[r * d + j]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_osq_never_wastes_more_than_final_padding() {
         prop::check("osq-wastage", 60, |g| {
             let (layout, _) = random_layout(g);

@@ -1,62 +1,216 @@
-//! The QP compute backend: one trait, two implementations.
+//! The QP scan engine: one batch-oriented trait, two implementations.
 //!
-//! * [`NativeBackend`] — the scalar/auto-vectorized Rust implementation
-//!   (`osq::binary`, `osq::distance`).
-//! * [`XlaBackend`] — the AOT path: the same math lowered from
+//! * [`NativeScanEngine`] — the scalar/auto-vectorized Rust kernels
+//!   (`osq::binary`, `osq::distance`, the blocked columnar LB scan in
+//!   `osq::quantizer`).
+//! * [`XlaScanEngine`] — the AOT path: the same math lowered from
 //!   JAX/Pallas and executed through PJRT (`runtime::Engine`).
 //!
-//! Both must agree bit-for-bit on Hamming distances and to float
+//! # The batch API
+//!
+//! A [`ScanRequest`] carries *all* queries of a `QpRequest` destined for
+//! one partition: per item the original-frame query (low-bit index),
+//! the KLT-frame query (ADC LUT), the candidate rows as `u32`, and the
+//! resolved keep count of the `H_perc` cut. [`ScanEngine::scan_batch`]
+//! runs the fused Hamming-prune + LB pipeline for every item against a
+//! caller-owned [`ScanScratch`] — LUT storage, gathered code blocks,
+//! distance accumulators and survivor lists are all reused across the
+//! items of a request instead of being reallocated per query (the seed's
+//! per-query `ComputeBackend` rebuilt and reallocated everything on
+//! every call). Per-partition state (segment accessors natively, the
+//! padded boundary matrix on the XLA side) is prepared once via
+//! [`ScanEngine::begin_partition`], hoisted out of the per-query loop.
+//!
+//! Results are emitted through a callback with scratch-backed slices:
+//! the rows surviving the low-bit cut and their squared LB distances.
+//! Both engines must agree **bit-for-bit on Hamming survivors** (the
+//! cutoff selection runs on the host in both cases) and to float
 //! tolerance on LB distances — enforced by `rust/tests/runtime_xla.rs`.
 
 use std::sync::Arc;
 
+use crate::osq::binary::{hamming_cutoff, hamming_histogram};
 use crate::osq::distance::AdcTable;
 use crate::osq::quantizer::OsqIndex;
+use crate::osq::segment::DimAccessor;
 use crate::runtime::Engine;
 
-/// Abstract QP hot-spot compute.
-pub trait ComputeBackend: Send + Sync {
+/// One query's slice of a batched partition scan.
+#[derive(Clone, Copy, Debug)]
+pub struct ScanItem<'a> {
+    /// Original-frame query vector (the low-bit index standardizes raw
+    /// dimensions; see osq::quantizer).
+    pub q_raw: &'a [f32],
+    /// KLT-frame query vector (ADC LUT input).
+    pub q_frame: &'a [f32],
+    /// Filter-passing candidate rows (partition-local ids).
+    pub rows: &'a [u32],
+    /// Apply the low-bit Hamming cut (§2.4.3) to this item.
+    pub prune: bool,
+    /// Candidates surviving the cut (H_perc of `rows`, floored at R·k);
+    /// ties at the cutoff distance are kept beyond this count.
+    pub keep: usize,
+}
+
+/// All items of one `QpRequest` for one partition.
+#[derive(Debug, Default)]
+pub struct ScanRequest<'a> {
+    pub items: Vec<ScanItem<'a>>,
+}
+
+/// Reusable per-invocation scratch: every buffer the scan pipeline
+/// needs, allocated once and recycled across the items of a request
+/// (and across requests when the caller retains it). Fields are
+/// deliberately private — the two engines in this module are the only
+/// writers; callers just construct and thread it through.
+#[derive(Default)]
+pub struct ScanScratch {
+    // native path
+    q_words: Vec<u64>,
+    hamming: Vec<u32>,
+    hist: Vec<usize>,
+    survivors: Vec<u32>,
+    lut: AdcTable,
+    acc: Vec<f32>,
+    /// per-partition segment accessors (begin_partition)
+    accessors: Vec<DimAccessor>,
+    /// gathered packed-code block of the blocked LB scan
+    block: Vec<u8>,
+    // xla path
+    rows_usize: Vec<usize>,
+    surv_usize: Vec<usize>,
+    bin_codes: Vec<u32>,
+    codes_i32: Vec<i32>,
+    /// per-partition padded boundary matrix + cell counts (begin_partition)
+    boundaries: Vec<f32>,
+    cells: Vec<i32>,
+}
+
+impl ScanScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Abstract QP hot-spot compute over whole per-partition batches.
+pub trait ScanEngine: Send + Sync {
     fn name(&self) -> &'static str;
 
-    /// Hamming distances from the *original-frame* query to the given
-    /// candidate rows of the partition's binary index (the low-bit index
-    /// standardizes raw dimensions; see osq::quantizer).
-    fn hamming_scan(&self, idx: &OsqIndex, q_raw: &[f32], rows: &[usize]) -> Vec<u32>;
+    /// Prepare per-partition state in `scratch`. Call once before
+    /// `scan_batch` whenever the target partition changes.
+    fn begin_partition(&self, idx: &OsqIndex, scratch: &mut ScanScratch);
 
-    /// Squared LB distances from the query to the given candidate rows
-    /// via the primary OSQ index.
-    fn lb_scan(&self, idx: &OsqIndex, q_frame: &[f32], rows: &[usize]) -> Vec<f32>;
+    /// Run the Hamming-prune + LB pipeline for every item, invoking
+    /// `emit(item_index, survivors, lb_sq)` once per item in order. The
+    /// slices are scratch-backed and valid only during the callback.
+    fn scan_batch(
+        &self,
+        idx: &OsqIndex,
+        req: &ScanRequest<'_>,
+        scratch: &mut ScanScratch,
+        emit: &mut dyn FnMut(usize, &[u32], &[f32]),
+    );
 }
 
 /// Pure-Rust implementation (always available).
-pub struct NativeBackend;
+pub struct NativeScanEngine;
 
-impl ComputeBackend for NativeBackend {
+impl NativeScanEngine {
+    /// Raw Hamming + LB distances of one query over explicit rows — the
+    /// contract tests and the backend-ablation bench. Requires
+    /// `begin_partition` to have run on `scratch` for this `idx`.
+    pub fn raw_distances(
+        &self,
+        idx: &OsqIndex,
+        q_raw: &[f32],
+        q_frame: &[f32],
+        rows: &[u32],
+        scratch: &mut ScanScratch,
+    ) -> (Vec<u32>, Vec<f32>) {
+        idx.binary.encode_query_into(q_raw, &mut scratch.q_words);
+        idx.binary.hamming_scan_hist(
+            &scratch.q_words,
+            rows,
+            &mut scratch.hamming,
+            &mut scratch.hist,
+        );
+        scratch.lut.rebuild(q_frame, &idx.quantizers, idx.m1);
+        idx.lb_sq_scan_blocked(
+            &scratch.lut,
+            rows,
+            &scratch.accessors,
+            &mut scratch.block,
+            &mut scratch.acc,
+        );
+        (scratch.hamming.clone(), scratch.acc.clone())
+    }
+}
+
+impl ScanEngine for NativeScanEngine {
     fn name(&self) -> &'static str {
         "native"
     }
 
-    fn hamming_scan(&self, idx: &OsqIndex, q_raw: &[f32], rows: &[usize]) -> Vec<u32> {
-        let q_words = idx.binary.encode_query(q_raw);
-        let mut out = Vec::new();
-        idx.binary.hamming_scan(&q_words, rows, &mut out);
-        out
+    fn begin_partition(&self, idx: &OsqIndex, scratch: &mut ScanScratch) {
+        scratch.accessors.clear();
+        scratch.accessors.extend(idx.layout.dim_accessors());
     }
 
-    fn lb_scan(&self, idx: &OsqIndex, q_frame: &[f32], rows: &[usize]) -> Vec<f32> {
-        let lut = AdcTable::build(q_frame, &idx.quantizers, idx.m1);
-        let mut acc = Vec::new();
-        idx.lb_sq_scan(&lut, rows, &mut acc);
-        acc
+    fn scan_batch(
+        &self,
+        idx: &OsqIndex,
+        req: &ScanRequest<'_>,
+        scratch: &mut ScanScratch,
+        emit: &mut dyn FnMut(usize, &[u32], &[f32]),
+    ) {
+        for (i, item) in req.items.iter().enumerate() {
+            if item.rows.is_empty() || (item.prune && item.keep == 0) {
+                emit(i, &[], &[]);
+                continue;
+            }
+            // ---- low-bit Hamming cut (§2.4.3), fused with the cutoff
+            // histogram: one pass over the packed codes produces both the
+            // distances and the H_perc selection state.
+            let survivors: &[u32] = if item.prune && item.keep < item.rows.len() {
+                idx.binary.encode_query_into(item.q_raw, &mut scratch.q_words);
+                idx.binary.hamming_scan_hist(
+                    &scratch.q_words,
+                    item.rows,
+                    &mut scratch.hamming,
+                    &mut scratch.hist,
+                );
+                let cut = hamming_cutoff(&scratch.hist, item.keep) as u32;
+                scratch.survivors.clear();
+                for (k, &h) in scratch.hamming.iter().enumerate() {
+                    if h <= cut {
+                        scratch.survivors.push(item.rows[k]);
+                    }
+                }
+                &scratch.survivors
+            } else {
+                item.rows
+            };
+            // ---- fine-grained LB distances (§2.4.4): per-query LUT into
+            // reused storage, then the blocked columnar scan.
+            scratch.lut.rebuild(item.q_frame, &idx.quantizers, idx.m1);
+            idx.lb_sq_scan_blocked(
+                &scratch.lut,
+                survivors,
+                &scratch.accessors,
+                &mut scratch.block,
+                &mut scratch.acc,
+            );
+            emit(i, survivors, &scratch.acc);
+        }
     }
 }
 
 /// XLA/PJRT implementation executing the AOT artifacts.
-pub struct XlaBackend {
+pub struct XlaScanEngine {
     engine: Arc<Engine>,
 }
 
-impl XlaBackend {
+impl XlaScanEngine {
     pub fn new(engine: Arc<Engine>) -> Self {
         Self { engine }
     }
@@ -64,54 +218,291 @@ impl XlaBackend {
     pub fn supports(&self, d: usize) -> bool {
         self.engine.supports(d)
     }
+
+    /// Raw Hamming + LB distances (see `NativeScanEngine::raw_distances`).
+    pub fn raw_distances(
+        &self,
+        idx: &OsqIndex,
+        q_raw: &[f32],
+        q_frame: &[f32],
+        rows: &[u32],
+        scratch: &mut ScanScratch,
+    ) -> (Vec<u32>, Vec<f32>) {
+        scratch.rows_usize.clear();
+        scratch.rows_usize.extend(rows.iter().map(|&r| r as usize));
+        scratch.surv_usize.clear();
+        scratch.surv_usize.extend(rows.iter().map(|&r| r as usize));
+        let h = self.hamming_artifact(idx, q_raw, scratch);
+        let lb = self.lb_artifact(idx, q_frame, scratch);
+        (h, lb)
+    }
+
+    /// Hamming distances over `scratch.rows_usize` via the artifact.
+    fn hamming_artifact(
+        &self,
+        idx: &OsqIndex,
+        q_raw: &[f32],
+        scratch: &mut ScanScratch,
+    ) -> Vec<u32> {
+        idx.binary.encode_query_into(q_raw, &mut scratch.q_words);
+        let q32 = idx.binary.query_as_u32(&scratch.q_words);
+        idx.binary.rows_as_u32(&scratch.rows_usize, &mut scratch.bin_codes);
+        self.engine
+            .hamming(idx.d, &q32, &scratch.bin_codes, scratch.rows_usize.len())
+            .expect("xla hamming execution")
+    }
+
+    /// LB distances over `scratch.surv_usize` via the on-device LUT
+    /// (built from the per-partition prepared boundaries) + gather-sum.
+    fn lb_artifact(&self, idx: &OsqIndex, q_frame: &[f32], scratch: &mut ScanScratch) -> Vec<f32> {
+        let lut = self
+            .engine
+            .lut(idx.d, q_frame, &scratch.boundaries, &scratch.cells)
+            .expect("xla lut execution");
+        idx.codes_as_i32(&scratch.surv_usize, &mut scratch.codes_i32);
+        self.engine
+            .lb(idx.d, &lut, &scratch.codes_i32, scratch.surv_usize.len())
+            .expect("xla lb execution")
+    }
 }
 
-impl ComputeBackend for XlaBackend {
+impl ScanEngine for XlaScanEngine {
     fn name(&self) -> &'static str {
         "xla"
     }
 
-    fn hamming_scan(&self, idx: &OsqIndex, q_raw: &[f32], rows: &[usize]) -> Vec<u32> {
-        let q_words64 = idx.binary.encode_query(q_raw);
-        let q_words = idx.binary.query_as_u32(&q_words64);
-        let mut codes = Vec::new();
-        idx.binary.rows_as_u32(rows, &mut codes);
-        self.engine
-            .hamming(idx.d, &q_words, &codes, rows.len())
-            .expect("xla hamming execution")
+    fn begin_partition(&self, idx: &OsqIndex, scratch: &mut ScanScratch) {
+        // The boundary-matrix padding/flattening ((M2, d) row-major) is
+        // per-partition, not per-query: prepared once here, consumed by
+        // every `lut` artifact call of the batch.
+        let (b, c) = idx.boundaries_padded(self.engine.m2);
+        scratch.boundaries = b;
+        scratch.cells = c;
     }
 
-    fn lb_scan(&self, idx: &OsqIndex, q_frame: &[f32], rows: &[usize]) -> Vec<f32> {
-        // LUT built on-device from the padded boundary matrix, then the
-        // gather+sum kernel over extracted candidate codes.
-        let (boundaries, cells) = idx.boundaries_padded(self.engine.m2);
-        let lut = self
-            .engine
-            .lut(idx.d, q_frame, &boundaries, &cells)
-            .expect("xla lut execution");
-        let mut codes = Vec::new();
-        idx.codes_as_i32(rows, &mut codes);
-        self.engine.lb(idx.d, &lut, &codes, rows.len()).expect("xla lb execution")
+    fn scan_batch(
+        &self,
+        idx: &OsqIndex,
+        req: &ScanRequest<'_>,
+        scratch: &mut ScanScratch,
+        emit: &mut dyn FnMut(usize, &[u32], &[f32]),
+    ) {
+        for (i, item) in req.items.iter().enumerate() {
+            if item.rows.is_empty() || (item.prune && item.keep == 0) {
+                emit(i, &[], &[]);
+                continue;
+            }
+            if item.prune && item.keep < item.rows.len() {
+                scratch.rows_usize.clear();
+                scratch.rows_usize.extend(item.rows.iter().map(|&r| r as usize));
+                let h = self.hamming_artifact(idx, item.q_raw, scratch);
+                // the cutoff selection runs on the host, identically to
+                // the native engine — survivor sets are bit-identical
+                hamming_histogram(&h, idx.d, &mut scratch.hist);
+                let cut = hamming_cutoff(&scratch.hist, item.keep) as u32;
+                scratch.survivors.clear();
+                scratch.surv_usize.clear();
+                for (k, &hd) in h.iter().enumerate() {
+                    if hd <= cut {
+                        scratch.survivors.push(item.rows[k]);
+                        scratch.surv_usize.push(item.rows[k] as usize);
+                    }
+                }
+            } else {
+                scratch.survivors.clear();
+                scratch.survivors.extend_from_slice(item.rows);
+                scratch.surv_usize.clear();
+                scratch.surv_usize.extend(item.rows.iter().map(|&r| r as usize));
+            }
+            let lb = self.lb_artifact(idx, item.q_frame, scratch);
+            emit(i, &scratch.survivors, &lb);
+        }
     }
 }
 
-/// Pick the backend by name: "xla" (requires artifacts for `d`),
+/// Pick the engine by name: "xla" (requires artifacts for `d`),
 /// "native", or "auto" (xla when available).
-pub fn select_backend(
+pub fn select_engine(
     name: &str,
     engine: Option<Arc<Engine>>,
     d: usize,
-) -> Arc<dyn ComputeBackend> {
+) -> Arc<dyn ScanEngine> {
     match name {
-        "native" => Arc::new(NativeBackend),
+        "native" => Arc::new(NativeScanEngine),
         "xla" => {
-            let engine = engine.expect("xla backend requested but no engine loaded");
+            let engine = engine.expect("xla engine requested but no PJRT engine loaded");
             assert!(engine.supports(d), "no artifacts for d={d}; run `make artifacts`");
-            Arc::new(XlaBackend::new(engine))
+            Arc::new(XlaScanEngine::new(engine))
         }
         _ => match engine {
-            Some(e) if e.supports(d) => Arc::new(XlaBackend::new(e)),
-            _ => Arc::new(NativeBackend),
+            Some(e) if e.supports(d) => Arc::new(XlaScanEngine::new(e)),
+            _ => Arc::new(NativeScanEngine),
         },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::profiles::by_name;
+    use crate::data::synthetic::generate;
+    use crate::osq::binary::select_by_hamming_with_ties;
+    use crate::osq::quantizer::OsqOptions;
+    use crate::util::rng::Rng;
+
+    fn small_index() -> (crate::data::Dataset, OsqIndex) {
+        let ds = generate(by_name("test").unwrap(), 600, 3);
+        let mut rng = Rng::new(4);
+        let idx = OsqIndex::build(&ds.vectors, &OsqOptions::default(), &mut rng);
+        (ds, idx)
+    }
+
+    fn run_one(
+        engine: &dyn ScanEngine,
+        idx: &OsqIndex,
+        item: ScanItem<'_>,
+        scratch: &mut ScanScratch,
+    ) -> (Vec<u32>, Vec<f32>) {
+        let req = ScanRequest { items: vec![item] };
+        let mut out = (Vec::new(), Vec::new());
+        engine.scan_batch(idx, &req, scratch, &mut |_, s, lb| {
+            out = (s.to_vec(), lb.to_vec());
+        });
+        out
+    }
+
+    #[test]
+    fn native_matches_seed_pipeline() {
+        // the batched engine must reproduce the seed's per-query path:
+        // select_by_hamming_with_ties survivors + lb_sq_scan distances
+        let (ds, idx) = small_index();
+        let mut scratch = ScanScratch::new();
+        let engine = NativeScanEngine;
+        engine.begin_partition(&idx, &mut scratch);
+        let mut rng = Rng::new(9);
+        for trial in 0..6 {
+            let q = ds.vectors.row(rng.gen_range(ds.n())).to_vec();
+            let qf = idx.query_frame(&q);
+            let rows: Vec<u32> =
+                (0..ds.n() as u32).filter(|_| rng.gen_range(3) > 0).collect();
+            let keep = (rows.len() / 5).max(1);
+            let (survivors, lb) = run_one(
+                &engine,
+                &idx,
+                ScanItem { q_raw: &q, q_frame: &qf, rows: &rows, prune: true, keep },
+                &mut scratch,
+            );
+            // seed path
+            let qw = idx.binary.encode_query(&q);
+            let rows_usize: Vec<usize> = rows.iter().map(|&r| r as usize).collect();
+            let mut h = Vec::new();
+            idx.binary.hamming_scan(&qw, &rows_usize, &mut h);
+            let want_surv: Vec<u32> = select_by_hamming_with_ties(&h, idx.d, keep)
+                .into_iter()
+                .map(|i| rows[i])
+                .collect();
+            assert_eq!(survivors, want_surv, "trial {trial}: survivor sets differ");
+            let lut = idx.adc_table(&qf);
+            let surv_usize: Vec<usize> = want_surv.iter().map(|&r| r as usize).collect();
+            let mut want_lb = Vec::new();
+            idx.lb_sq_scan(&lut, &surv_usize, &mut want_lb);
+            assert_eq!(lb, want_lb, "trial {trial}: LB distances differ");
+        }
+    }
+
+    #[test]
+    fn no_prune_passes_all_rows_through() {
+        let (ds, idx) = small_index();
+        let mut scratch = ScanScratch::new();
+        let engine = NativeScanEngine;
+        engine.begin_partition(&idx, &mut scratch);
+        let q = ds.vectors.row(5).to_vec();
+        let qf = idx.query_frame(&q);
+        let rows: Vec<u32> = (0..100).collect();
+        let (survivors, lb) = run_one(
+            &engine,
+            &idx,
+            ScanItem { q_raw: &q, q_frame: &qf, rows: &rows, prune: false, keep: 10 },
+            &mut scratch,
+        );
+        assert_eq!(survivors, rows);
+        assert_eq!(lb.len(), rows.len());
+    }
+
+    #[test]
+    fn empty_rows_emit_empty() {
+        let (ds, idx) = small_index();
+        let mut scratch = ScanScratch::new();
+        let engine = NativeScanEngine;
+        engine.begin_partition(&idx, &mut scratch);
+        let q = ds.vectors.row(0).to_vec();
+        let qf = idx.query_frame(&q);
+        let (survivors, lb) = run_one(
+            &engine,
+            &idx,
+            ScanItem { q_raw: &q, q_frame: &qf, rows: &[], prune: true, keep: 0 },
+            &mut scratch,
+        );
+        assert!(survivors.is_empty() && lb.is_empty());
+    }
+
+    #[test]
+    fn batch_emits_every_item_in_order() {
+        let (ds, idx) = small_index();
+        let mut scratch = ScanScratch::new();
+        let engine = NativeScanEngine;
+        engine.begin_partition(&idx, &mut scratch);
+        let queries: Vec<Vec<f32>> = (0..5).map(|i| ds.vectors.row(i * 7).to_vec()).collect();
+        let frames: Vec<Vec<f32>> = queries.iter().map(|q| idx.query_frame(q)).collect();
+        let rows: Vec<u32> = (0..200).collect();
+        let items: Vec<ScanItem<'_>> = queries
+            .iter()
+            .zip(&frames)
+            .map(|(q, qf)| ScanItem {
+                q_raw: q,
+                q_frame: qf,
+                rows: &rows,
+                prune: true,
+                keep: 40,
+            })
+            .collect();
+        let req = ScanRequest { items };
+        let mut seen = Vec::new();
+        engine.scan_batch(&idx, &req, &mut scratch, &mut |i, s, lb| {
+            assert_eq!(s.len(), lb.len());
+            assert!(s.len() >= 40, "ties-inclusive cut keeps at least `keep`");
+            seen.push(i);
+        });
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn scratch_reuse_across_batches_is_clean() {
+        // results must not depend on what a previous batch left in scratch
+        let (ds, idx) = small_index();
+        let engine = NativeScanEngine;
+        let q = ds.vectors.row(11).to_vec();
+        let qf = idx.query_frame(&q);
+        let rows: Vec<u32> = (0..300).collect();
+        let item = ScanItem { q_raw: &q, q_frame: &qf, rows: &rows, prune: true, keep: 30 };
+
+        let mut fresh = ScanScratch::new();
+        engine.begin_partition(&idx, &mut fresh);
+        let clean = run_one(&engine, &idx, item, &mut fresh);
+
+        let mut dirty = ScanScratch::new();
+        engine.begin_partition(&idx, &mut dirty);
+        // pollute with a different query + rows first
+        let q2 = ds.vectors.row(99).to_vec();
+        let qf2 = idx.query_frame(&q2);
+        let rows2: Vec<u32> = (100..500).collect();
+        let _ = run_one(
+            &engine,
+            &idx,
+            ScanItem { q_raw: &q2, q_frame: &qf2, rows: &rows2, prune: true, keep: 111 },
+            &mut dirty,
+        );
+        let reused = run_one(&engine, &idx, item, &mut dirty);
+        assert_eq!(clean, reused);
     }
 }

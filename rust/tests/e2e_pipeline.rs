@@ -11,7 +11,7 @@ use squash::data::ground_truth::{exact_batch, mean_recall};
 use squash::data::profiles::by_name;
 use squash::data::synthetic::generate;
 use squash::data::workload::{generate_workload, WorkloadOptions};
-use squash::runtime::backend::{NativeBackend, XlaBackend};
+use squash::runtime::backend::{NativeScanEngine, XlaScanEngine};
 use squash::runtime::Engine;
 
 #[test]
@@ -34,7 +34,7 @@ fn xla_backend_end_to_end_matches_native() {
         &ds,
         &BuildOptions::for_profile(profile),
         SquashConfig::for_profile(profile),
-        Arc::new(NativeBackend),
+        Arc::new(NativeScanEngine),
     );
     let native_out = native_sys.run_batch(&queries);
 
@@ -42,7 +42,7 @@ fn xla_backend_end_to_end_matches_native() {
         &ds,
         &BuildOptions::for_profile(profile),
         SquashConfig::for_profile(profile),
-        Arc::new(XlaBackend::new(engine)),
+        Arc::new(XlaScanEngine::new(engine)),
     );
     let xla_out = xla_sys.run_batch(&queries);
 
@@ -71,7 +71,7 @@ fn auto_backend_selection_prefers_xla_when_available() {
     };
     let env = Env::setup(&opts);
     let expected = if Engine::load_default().is_ok() { "xla" } else { "native" };
-    assert_eq!(env.sys.ctx.backend.name(), expected);
+    assert_eq!(env.sys.ctx.engine.name(), expected);
     let stats = measure_squash(&env, "auto", 10);
     assert!(stats.recall >= 0.85, "recall {}", stats.recall);
 }

@@ -11,7 +11,7 @@ use squash::data::ground_truth::{exact_batch, mean_recall, recall_at_k};
 use squash::data::profiles::by_name;
 use squash::data::synthetic::generate;
 use squash::data::workload::{generate_workload, Query, WorkloadOptions};
-use squash::runtime::backend::NativeBackend;
+use squash::runtime::backend::NativeScanEngine;
 
 fn build_system(n: usize, seed: u64, cfg: SquashConfig) -> (squash::data::Dataset, SquashSystem) {
     let profile = by_name("test").unwrap();
@@ -23,7 +23,7 @@ fn build_system(n: usize, seed: u64, cfg: SquashConfig) -> (squash::data::Datase
         &ds,
         &BuildOptions::for_profile(profile),
         cfg,
-        Arc::new(NativeBackend),
+        Arc::new(NativeScanEngine),
     );
     (ds, sys)
 }

@@ -1,14 +1,17 @@
-//! XLA runtime integration: the AOT artifacts must produce exactly the
-//! same Hamming distances and tolerance-equal LB distances as the native
-//! Rust implementation. Skips (with a notice) when artifacts are absent
-//! (`make artifacts` generates them).
+//! XLA runtime integration: under the batched scan-engine API the AOT
+//! artifacts must produce exactly the same Hamming survivors and
+//! tolerance-equal LB distances as the native Rust implementation.
+//! Skips (with a notice) when artifacts are absent (`make artifacts`
+//! generates them — and the offline PJRT stub always skips).
 
 use std::sync::Arc;
 
 use squash::data::profiles::by_name;
 use squash::data::synthetic::generate;
 use squash::osq::quantizer::{OsqIndex, OsqOptions};
-use squash::runtime::backend::{ComputeBackend, NativeBackend, XlaBackend};
+use squash::runtime::backend::{
+    NativeScanEngine, ScanEngine, ScanItem, ScanRequest, ScanScratch, XlaScanEngine,
+};
 use squash::runtime::Engine;
 use squash::util::rng::Rng;
 
@@ -30,12 +33,28 @@ fn build_index(n: usize, seed: u64) -> (squash::data::Dataset, OsqIndex) {
     (ds, idx)
 }
 
+/// Run a single item through an engine, returning owned outputs.
+fn scan_once(
+    engine: &dyn ScanEngine,
+    idx: &OsqIndex,
+    item: ScanItem<'_>,
+) -> (Vec<u32>, Vec<f32>) {
+    let mut scratch = ScanScratch::new();
+    engine.begin_partition(idx, &mut scratch);
+    let req = ScanRequest { items: vec![item] };
+    let mut out = (Vec::new(), Vec::new());
+    engine.scan_batch(idx, &req, &mut scratch, &mut |_, s, lb| {
+        out = (s.to_vec(), lb.to_vec());
+    });
+    out
+}
+
 #[test]
-fn xla_matches_native_hamming_and_lb() {
+fn xla_matches_native_survivors_and_lb() {
     let Some(engine) = engine() else { return };
     let (ds, idx) = build_index(1500, 10);
-    let native = NativeBackend;
-    let xla = XlaBackend::new(engine);
+    let native = NativeScanEngine;
+    let xla = XlaScanEngine::new(engine);
     assert!(xla.supports(16));
 
     let mut rng = Rng::new(11);
@@ -44,20 +63,74 @@ fn xla_matches_native_hamming_and_lb() {
         let qf = idx.query_frame(&q);
         // candidate subsets of varying sizes incl. non-chunk-multiples
         let n_rows = [7usize, 256, 1024, 1500][trial % 4];
-        let rows: Vec<usize> = (0..n_rows).map(|_| rng.gen_range(ds.n())).collect();
-
-        let h_native = native.hamming_scan(&idx, &qf, &rows);
-        let h_xla = xla.hamming_scan(&idx, &qf, &rows);
-        assert_eq!(h_native, h_xla, "hamming mismatch (trial {trial})");
-
-        let lb_native = native.lb_scan(&idx, &qf, &rows);
-        let lb_xla = xla.lb_scan(&idx, &qf, &rows);
-        assert_eq!(lb_native.len(), lb_xla.len());
-        for (i, (a, b)) in lb_native.iter().zip(&lb_xla).enumerate() {
-            assert!(
-                (a - b).abs() <= 1e-3 + 1e-3 * a.abs(),
-                "lb mismatch row {i}: native {a} vs xla {b}"
+        let rows: Vec<u32> =
+            (0..n_rows).map(|_| rng.gen_range(ds.n()) as u32).collect();
+        for keep_frac in [3usize, 10] {
+            let keep = (rows.len() / keep_frac).max(1);
+            let item =
+                ScanItem { q_raw: &q, q_frame: &qf, rows: &rows, prune: true, keep };
+            let (s_native, lb_native) = scan_once(&native, &idx, item);
+            let (s_xla, lb_xla) = scan_once(&xla, &idx, item);
+            // Hamming is exact: the host-side cutoff over bit-identical
+            // distances must select identical survivor sets
+            assert_eq!(
+                s_native, s_xla,
+                "survivor mismatch (trial {trial}, keep 1/{keep_frac})"
             );
+            assert_eq!(lb_native.len(), lb_xla.len());
+            for (i, (a, b)) in lb_native.iter().zip(&lb_xla).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-3 + 1e-3 * a.abs(),
+                    "lb mismatch row {i}: native {a} vs xla {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn xla_batch_request_matches_native_itemwise() {
+    // a realistic multi-query QP batch through both engines in ONE
+    // scan_batch call each (scratch reused across items)
+    let Some(engine) = engine() else { return };
+    let (ds, idx) = build_index(1200, 30);
+    let native = NativeScanEngine;
+    let xla = XlaScanEngine::new(engine);
+    let mut rng = Rng::new(31);
+    let queries: Vec<Vec<f32>> =
+        (0..6).map(|_| ds.vectors.row(rng.gen_range(ds.n())).to_vec()).collect();
+    let frames: Vec<Vec<f32>> = queries.iter().map(|q| idx.query_frame(q)).collect();
+    let row_sets: Vec<Vec<u32>> = (0..6)
+        .map(|i| (0..(200 + i * 150)).map(|_| rng.gen_range(ds.n()) as u32).collect())
+        .collect();
+    let items: Vec<ScanItem<'_>> = (0..6)
+        .map(|i| ScanItem {
+            q_raw: &queries[i],
+            q_frame: &frames[i],
+            rows: &row_sets[i],
+            prune: i % 2 == 0, // mix pruned and unpruned items
+            keep: (row_sets[i].len() / 8).max(1),
+        })
+        .collect();
+
+    let run = |engine: &dyn ScanEngine| -> Vec<(Vec<u32>, Vec<f32>)> {
+        let mut scratch = ScanScratch::new();
+        engine.begin_partition(&idx, &mut scratch);
+        let req = ScanRequest { items: items.clone() };
+        let mut out = Vec::new();
+        engine.scan_batch(&idx, &req, &mut scratch, &mut |i, s, lb| {
+            assert_eq!(i, out.len(), "items must be emitted in order");
+            out.push((s.to_vec(), lb.to_vec()));
+        });
+        out
+    };
+    let a = run(&native);
+    let b = run(&xla);
+    assert_eq!(a.len(), 6);
+    for (i, ((sa, la), (sb, lb))) in a.iter().zip(&b).enumerate() {
+        assert_eq!(sa, sb, "item {i} survivors");
+        for (x, y) in la.iter().zip(lb) {
+            assert!((x - y).abs() <= 1e-3 + 1e-3 * x.abs(), "item {i} lb");
         }
     }
 }
@@ -66,15 +139,17 @@ fn xla_matches_native_hamming_and_lb() {
 fn xla_engine_chunking_pads_correctly() {
     let Some(engine) = engine() else { return };
     let (ds, idx) = build_index(300, 20);
-    let xla = XlaBackend::new(engine.clone());
+    let xla = XlaScanEngine::new(engine.clone());
+    let mut scratch = ScanScratch::new();
+    xla.begin_partition(&idx, &mut scratch);
     let q = ds.vectors.row(0).to_vec();
     let qf = idx.query_frame(&q);
-    // n = 1 (minimal) and n = chunk + 1 (crosses the chunk boundary)
+    // n = 1 (minimal) and n = chunk + 1 (crosses the chunk boundary);
+    // raw_distances exercises BOTH artifact chunk loops (hamming + lb)
     for n in [1usize, engine.chunk + 1] {
-        let rows: Vec<usize> = (0..n).map(|i| i % ds.n()).collect();
-        let h = xla.hamming_scan(&idx, &qf, &rows);
+        let rows: Vec<u32> = (0..n).map(|i| (i % ds.n()) as u32).collect();
+        let (h, lb) = xla.raw_distances(&idx, &q, &qf, &rows, &mut scratch);
         assert_eq!(h.len(), n);
-        let lb = xla.lb_scan(&idx, &qf, &rows);
         assert_eq!(lb.len(), n);
         // duplicate rows must give identical outputs (padding never leaks):
         // position `chunk` (second chunk) refers to the same underlying row
@@ -82,7 +157,7 @@ fn xla_engine_chunking_pads_correctly() {
         if n > engine.chunk {
             let twin = engine.chunk % ds.n();
             assert_eq!(h[twin], h[engine.chunk], "same row, same hamming");
-            assert!((lb[twin] - lb[engine.chunk]).abs() < 1e-5);
+            assert!((lb[twin] - lb[engine.chunk]).abs() < 1e-5, "same row, same LB");
         }
     }
 }
