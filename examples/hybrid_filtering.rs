@@ -23,7 +23,7 @@ fn main() {
         &ds,
         &BuildOptions::for_profile(profile),
         SquashConfig::for_profile(profile),
-        Arc::new(NativeScanEngine),
+        Arc::new(NativeScanEngine::new()),
     );
 
     // a tour of predicate shapes (a0..a2 numeric 0..=99, a3 categorical 0..=15)

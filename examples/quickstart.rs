@@ -28,7 +28,7 @@ fn main() {
         &ds,
         &BuildOptions::for_profile(profile),
         SquashConfig::for_profile(profile),
-        Arc::new(NativeScanEngine),
+        Arc::new(NativeScanEngine::new()),
     );
     println!(
         "deployed: {} partitions, T = {:.3}, tree N_QA = {}",

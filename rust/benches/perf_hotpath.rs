@@ -1,10 +1,13 @@
 //! §Perf: hot-path micro-benchmarks. Baselines and the optimization
 //! iteration log live in EXPERIMENTS.md §Perf. Measures the QP/QA hot
-//! loops (Hamming scan, LB accumulate variants incl. the blocked batch
-//! kernel, dimensional extraction, filter-mask build), result merging,
-//! the batched scan engine vs the seed-style per-query path on a
-//! multi-query QP request, and the native-vs-XLA engine ablation on
-//! identical inputs.
+//! loops (Hamming scan incl. the SIMD-dispatched kernel, LB accumulate
+//! variants incl. the blocked batch kernel and its SIMD dispatch,
+//! dimensional extraction, filter-mask build), result merging, the
+//! scalar/SIMD/sharded scan-engine ablation vs the seed-style per-query
+//! path on a multi-query QP request, and the native-vs-XLA engine
+//! ablation on identical inputs. Key results are additionally written to
+//! `BENCH_hotpath.json` so the perf trajectory is machine-trackable
+//! across PRs.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -17,14 +20,26 @@ use squash::data::synthetic::generate;
 use squash::osq::binary::select_by_hamming_with_ties;
 use squash::osq::distance::AdcTable;
 use squash::osq::quantizer::{OsqIndex, OsqOptions};
+use squash::osq::simd::Kernels;
 use squash::runtime::backend::{
-    NativeScanEngine, ScanEngine, ScanItem, ScanRequest, ScanScratch, XlaScanEngine,
+    NativeScanEngine, ScanEngine, ScanItem, ScanParallelism, ScanRequest, ScanScratch,
+    XlaScanEngine,
 };
 use squash::runtime::Engine;
+use squash::util::json::Json;
 use squash::util::rng::Rng;
-use squash::util::timer::{bench_fn, black_box};
+use squash::util::timer::{bench_fn, black_box, BenchResult};
 
 const T: Duration = Duration::from_millis(400);
+
+/// JSON row for one measured configuration.
+fn json_row(name: &str, r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("mean_s", Json::num(r.mean_s)),
+        ("per_sec", Json::num(r.per_sec())),
+    ])
+}
 
 fn main() {
     println!("=== §Perf hot-path micro-benchmarks ===\n");
@@ -47,11 +62,32 @@ fn main() {
     });
     println!("{r}   => {:.1} Mvec/s", n as f64 * r.per_sec() / 1e6);
     let mut hist = Vec::new();
+    let mut json_rows: Vec<Json> = Vec::new();
     let r = bench_fn("hamming scan+hist fused (20k x 128d)", T, || {
         idx.binary.hamming_scan_hist(black_box(&qw), black_box(&rows32), &mut h, &mut hist);
         black_box(&h);
     });
     println!("{r}   => {:.1} Mvec/s", n as f64 * r.per_sec() / 1e6);
+    json_rows.push(json_row("hamming_scan_hist_scalar", &r));
+    let kernels = Kernels::detect();
+    if kernels != Kernels::scalar() {
+        let r = bench_fn(
+            &format!("hamming scan+hist {} (20k x 128d)", kernels.name()),
+            T,
+            || {
+                kernels.hamming_scan_hist(
+                    &idx.binary,
+                    black_box(&qw),
+                    black_box(&rows32),
+                    &mut h,
+                    &mut hist,
+                );
+                black_box(&h);
+            },
+        );
+        println!("{r}   => {:.1} Mvec/s", n as f64 * r.per_sec() / 1e6);
+        json_rows.push(json_row(&format!("hamming_scan_hist_{}", kernels.name()), &r));
+    }
 
     // 2. ADC LUT build (fresh alloc vs scratch rebuild)
     let r = bench_fn("ADC LUT build (257x128)", T, || {
@@ -84,6 +120,27 @@ fn main() {
         "{r_blocked}   => {:.1} Mvec/s (batch-engine kernel)",
         n as f64 * r_blocked.per_sec() / 1e6
     );
+    json_rows.push(json_row("lb_scan_blocked_scalar", &r_blocked));
+    if kernels != Kernels::scalar() {
+        let r = bench_fn(&format!("LB scan blocked {} (20k x 128d)", kernels.name()), T, || {
+            kernels.lb_sq_scan_blocked(
+                &idx,
+                black_box(&lut),
+                black_box(&rows32),
+                &accessors,
+                &mut block,
+                &mut acc,
+            );
+            black_box(&acc);
+        });
+        println!(
+            "{r}   => {:.1} Mvec/s ({} vs scalar: {:.2}x)",
+            n as f64 * r.per_sec() / 1e6,
+            kernels.name(),
+            r_blocked.mean_s / r.mean_s
+        );
+        json_rows.push(json_row(&format!("lb_scan_blocked_{}", kernels.name()), &r));
+    }
     let r_fused = bench_fn("LB scan fused-col (20k x 128d)", T, || {
         idx.lb_sq_scan(black_box(&lut), black_box(&rows), &mut acc);
         black_box(&acc);
@@ -129,22 +186,61 @@ fn main() {
     });
     println!("{r}");
 
-    // 7. batched scan engine vs seed-style per-query path on one
-    //    multi-query QP request (the acceptance comparison: Hamming+LB
-    //    over all items of a request, 8 queries x 20k candidates)
-    println!("\nbatched QP request (8 queries x 20k candidates, H_perc=10%):");
+    // 7. scan-engine configuration ablation on one multi-query QP
+    //    request (8 queries x 20k candidates): seed-style per-query path
+    //    vs the batched engine with scalar kernels (the PR 1 baseline),
+    //    SIMD kernels, and SIMD + sharded rows. All four produce
+    //    bit-identical survivors/distances (verified below before
+    //    timing).
+    let scalar_engine = NativeScanEngine::scalar();
+    let simd_engine = NativeScanEngine::new();
+    let sharded_engine = NativeScanEngine::with_parallelism(ScanParallelism::Auto);
+    println!(
+        "\nbatched QP request (8 queries x 20k candidates, H_perc=10%) — kernels: {}, shards: {}",
+        simd_engine.kernel_name(),
+        sharded_engine.shards()
+    );
     let n_queries = 8;
     let queries: Vec<Vec<f32>> =
         (0..n_queries).map(|i| ds.vectors.row(37 * i + 11).to_vec()).collect();
     let frames: Vec<Vec<f32>> = queries.iter().map(|v| idx.query_frame(v)).collect();
     let keep = (n as f64 * 0.10).ceil() as usize;
-    let engine = NativeScanEngine;
-    let mut scratch = ScanScratch::new();
-    engine.begin_partition(&idx, &mut scratch);
-    for (label, prune) in [("pruned 10%", true), ("prune off ", false)] {
+    let configs: [(&str, &NativeScanEngine); 3] = [
+        ("scalar      ", &scalar_engine),
+        ("simd        ", &simd_engine),
+        ("simd+sharded", &sharded_engine),
+    ];
+    // bit-identity cross-check before the clock starts
+    let make_req = |prune: bool| ScanRequest {
+        items: queries
+            .iter()
+            .zip(&frames)
+            .map(|(v, f)| ScanItem { q_raw: v, q_frame: f, rows: &rows32, prune, keep })
+            .collect(),
+    };
+    for prune in [true, false] {
+        let mut want: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
+        for (ci, (cname, engine)) in configs.iter().enumerate() {
+            let mut scratch = ScanScratch::new();
+            engine.begin_partition(&idx, &mut scratch);
+            let mut got: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
+            engine.scan_batch(&idx, &make_req(prune), &mut scratch, &mut |_, s, lb| {
+                got.push((s.to_vec(), lb.to_vec()));
+            });
+            if ci == 0 {
+                want = got;
+            } else {
+                assert_eq!(got, want, "{cname} diverges from scalar (prune={prune})");
+            }
+        }
+    }
+    let mut speedups: Vec<(&str, Json)> = Vec::new();
+    for (label, tag, prune) in
+        [("pruned 10%", "pruned", true), ("prune off ", "noprune", false)]
+    {
         // seed-style: per-query allocations, ties-select over materialized
         // distances, fresh LUT, fused-column LB scan (the pre-batch path)
-        let r_seed = bench_fn(&format!("seed-style per-query ({label})"), T, || {
+        let r_seed = bench_fn(&format!("seed-style per-query   ({label})"), T, || {
             for (v, f) in queries.iter().zip(&frames) {
                 let survivors: Vec<usize> = if prune {
                     let qw = idx.binary.encode_query(v);
@@ -164,23 +260,63 @@ fn main() {
             }
         });
         println!("{r_seed}");
-        let r_batch = bench_fn(&format!("batched scan engine  ({label})"), T, || {
-            let items: Vec<ScanItem> = queries
-                .iter()
-                .zip(&frames)
-                .map(|(v, f)| ScanItem { q_raw: v, q_frame: f, rows: &rows32, prune, keep })
-                .collect();
-            let req = ScanRequest { items };
-            engine.scan_batch(&idx, &req, &mut scratch, &mut |_, s, lb| {
-                black_box((s.len(), lb.len()));
+        json_rows.push(json_row(&format!("request_seed_style_{tag}"), &r_seed));
+        let mut scalar_mean = 0.0;
+        for (cname, engine) in &configs {
+            let mut scratch = ScanScratch::new();
+            engine.begin_partition(&idx, &mut scratch);
+            let r = bench_fn(&format!("batched {cname} ({label})"), T, || {
+                engine.scan_batch(&idx, &make_req(prune), &mut scratch, &mut |_, s, lb| {
+                    black_box((s.len(), lb.len()));
+                });
             });
-        });
-        println!("{r_batch}");
-        println!("    batched speedup ({label}): {:.2}x", r_seed.mean_s / r_batch.mean_s);
+            println!("{r}");
+            let cname = cname.trim_end();
+            json_rows.push(json_row(&format!("request_batched_{cname}_{tag}"), &r));
+            if cname == "scalar" {
+                scalar_mean = r.mean_s;
+                println!(
+                    "    batched-scalar vs seed-style ({label}): {:.2}x",
+                    r_seed.mean_s / r.mean_s
+                );
+            } else {
+                let s = scalar_mean / r.mean_s;
+                println!("    {cname} vs batched-scalar ({label}): {s:.2}x");
+                speedups.push((
+                    match (cname, prune) {
+                        ("simd", true) => "simd_vs_scalar_pruned",
+                        ("simd", false) => "simd_vs_scalar_noprune",
+                        ("simd+sharded", true) => "sharded_vs_scalar_pruned",
+                        _ => "sharded_vs_scalar_noprune",
+                    },
+                    Json::num(s),
+                ));
+            }
+        }
+    }
+
+    // machine-readable perf trajectory (tracked across PRs)
+    let report = Json::obj(vec![
+        ("bench", Json::str("perf_hotpath")),
+        ("profile", Json::str("sift")),
+        ("n", Json::num(n as f64)),
+        ("d", Json::num(idx.d as f64)),
+        ("n_queries", Json::num(n_queries as f64)),
+        ("kernel", Json::str(simd_engine.kernel_name())),
+        ("shards", Json::num(sharded_engine.shards() as f64)),
+        ("results", Json::Arr(json_rows)),
+        ("speedups", Json::obj(speedups)),
+    ]);
+    match std::fs::write("BENCH_hotpath.json", report.to_string_pretty()) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_hotpath.json: {e}"),
     }
 
     // 8. engine ablation: native vs XLA on identical candidate sets
     println!("\nengine ablation (2048 candidates, raw hamming+lb):");
+    let engine = &simd_engine;
+    let mut scratch = ScanScratch::new();
+    engine.begin_partition(&idx, &mut scratch);
     let cand: Vec<u32> = (0..2048).collect();
     let r = bench_fn("native hamming+lb (2048)", T, || {
         let (hd, lb) = engine.raw_distances(&idx, &q, &qf, &cand, &mut scratch);

@@ -41,7 +41,7 @@ fn main() {
                 "noklt" => build.use_klt = false,
                 _ => {}
             }
-            let sys = SquashSystem::build_default(&ds, &build, cfg, Arc::new(NativeScanEngine));
+            let sys = SquashSystem::build_default(&ds, &build, cfg, Arc::new(NativeScanEngine::new()));
             let out = sys.run_batch(&workload);
             recalls.push(mean_recall(&truth, &out.results, 10));
         }

@@ -22,7 +22,7 @@ use crate::partition::kmeans::{balanced_kmeans, KMeansOptions};
 use crate::partition::selection::select_partitions;
 use crate::partition::{calibrate_threshold, PartitionLayout};
 use crate::runtime::backend::{
-    NativeScanEngine, ScanEngine, ScanItem, ScanRequest, ScanScratch,
+    NativeScanEngine, ScanEngine, ScanItem, ScanParallelism, ScanRequest, ScanScratch,
 };
 use crate::util::matrix::l2_sq;
 use crate::util::rng::Rng;
@@ -71,6 +71,12 @@ pub struct ServerRunner {
     partitions: Vec<Arc<PartitionFile>>,
     vectors: crate::util::matrix::Matrix,
     t: f32,
+    /// Shared scan engine (SIMD kernels auto-detected). Serial by
+    /// default: the batch already saturates the instance's vCPUs with
+    /// one query per worker, so per-query sharding would oversubscribe —
+    /// [`ServerRunner::with_scan_parallelism`] opts in for low-QPS /
+    /// latency-focused runs.
+    engine: NativeScanEngine,
 }
 
 #[derive(Clone, Debug)]
@@ -104,7 +110,23 @@ impl ServerRunner {
         } else {
             calibrate_threshold(&ds.vectors, &layout, 0.001, 2000, &mut rng)
         };
-        Self { instance, cfg, attrs, layout, partitions: parts, vectors: ds.vectors.clone(), t }
+        Self {
+            instance,
+            cfg,
+            attrs,
+            layout,
+            partitions: parts,
+            vectors: ds.vectors.clone(),
+            t,
+            engine: NativeScanEngine::new(),
+        }
+    }
+
+    /// Shard each query's candidate rows across worker threads inside
+    /// `serve_one` (see the `engine` field docs for when this pays off).
+    pub fn with_scan_parallelism(mut self, parallelism: ScanParallelism) -> Self {
+        self.engine = NativeScanEngine::with_parallelism(parallelism);
+        self
     }
 
     /// Process one query end-to-end on the calling worker thread —
@@ -116,7 +138,7 @@ impl ServerRunner {
         let target = q.k * self.cfg.gather_factor.max(1);
         let plan =
             select_partitions(&self.layout, &[q.vector.clone()], &[mask], self.t, target);
-        let engine = NativeScanEngine;
+        let engine = &self.engine;
         let mut scratch = ScanScratch::new();
         let mut lists = Vec::new();
         for (p, visits) in plan.visits.iter().enumerate() {

@@ -15,7 +15,7 @@ use crate::data::synthetic::generate;
 use crate::data::workload::{generate_workload, Query, WorkloadOptions};
 use crate::data::Dataset;
 use crate::faas::{FaasConfig, Platform};
-use crate::runtime::backend::{select_engine, ScanEngine};
+use crate::runtime::backend::{select_engine, ScanEngine, ScanParallelism};
 use crate::runtime::Engine;
 use crate::storage::{FileStore, ObjectStore, SimParams};
 use crate::util::stats::LatencySummary;
@@ -32,8 +32,10 @@ pub struct EnvOptions {
     /// 0.0 = no sleeping (unit tests)
     pub time_scale: f64,
     pub dre: bool,
-    /// "native" | "xla" | "auto"
+    /// "native" | "scalar" | "xla" | "auto"
     pub backend: String,
+    /// row sharding inside each QP scan (native backends)
+    pub scan_parallelism: ScanParallelism,
     pub seed: u64,
 }
 
@@ -47,6 +49,7 @@ impl Default for EnvOptions {
             time_scale: 1.0,
             dre: true,
             backend: "native".to_string(),
+            scan_parallelism: ScanParallelism::Serial,
             seed: 42,
         }
     }
@@ -78,7 +81,8 @@ impl Env {
         let s3 = Arc::new(ObjectStore::new(params.clone(), ledger.clone()));
         let efs = Arc::new(FileStore::new(params, ledger.clone()));
         let pjrt_engine = Engine::load_default().ok().map(Arc::new);
-        let engine: Arc<dyn ScanEngine> = select_engine(&opts.backend, pjrt_engine, profile.d);
+        let engine: Arc<dyn ScanEngine> =
+            select_engine(&opts.backend, pjrt_engine, profile.d, opts.scan_parallelism);
         let cfg = SquashConfig::for_profile(profile);
         let sys = SquashSystem::build(
             &ds,

@@ -388,7 +388,7 @@ mod tests {
             &ds,
             &BuildOptions::default(),
             SquashConfig::default(),
-            Arc::new(NativeScanEngine),
+            Arc::new(NativeScanEngine::new()),
         );
         let ctx = &sys.ctx;
         assert!(ctx.s3.contains(&index_files::attrs_key("test")));
@@ -407,7 +407,7 @@ mod tests {
             &ds,
             &BuildOptions::default(),
             cfg,
-            Arc::new(NativeScanEngine),
+            Arc::new(NativeScanEngine::new()),
         );
         let w = generate_workload(&ds, &WorkloadOptions { n_queries: 4, ..Default::default() }, 6);
         let first = sys.run_batch(&w.queries);

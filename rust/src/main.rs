@@ -9,10 +9,13 @@
 //!
 //! Common options: --profile <test|sift|gist|sift10m|deep>, --n <rows>,
 //! --queries <count>, --n-qa <10|20|84|155|258|340>, --backend
-//! <native|xla|auto>, --time-scale <f>, --no-dre, --seed <u64>.
+//! <native|scalar|xla|auto>, --scan-threads <off|auto|N> (shard each
+//! QP scan's candidate rows across N workers), --time-scale <f>,
+//! --no-dre, --seed <u64>.
 
 use squash::baselines::server::InstanceType;
 use squash::bench::{measure_server, measure_squash, measure_system_x, Env, EnvOptions, RunStats};
+use squash::runtime::backend::ScanParallelism;
 use squash::coordinator::tree::TreeConfig;
 use squash::cost::pricing::Pricing;
 use squash::cost::{server_daily_cost, system_x_query_cost};
@@ -51,6 +54,11 @@ fn env_opts(args: &Args) -> EnvOptions {
         time_scale: args.get_f64("time-scale", 1.0).unwrap_or(1.0),
         dre: !args.has_flag("no-dre"),
         backend: args.get_or("backend", "native").to_string(),
+        scan_parallelism: ScanParallelism::parse(args.get_or("scan-threads", "off"))
+            .unwrap_or_else(|| {
+                eprintln!("--scan-threads must be off|auto|<count>; using off");
+                ScanParallelism::Serial
+            }),
         seed: args.get_u64("seed", 42).unwrap_or(42),
     }
 }

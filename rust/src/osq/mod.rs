@@ -10,3 +10,4 @@ pub mod distance;
 pub mod klt;
 pub mod quantizer;
 pub mod segment;
+pub mod simd;

@@ -1,0 +1,598 @@
+//! CPU-feature-dispatched SIMD scan kernels (ROADMAP: "SIMD kernels
+//! behind the scan-engine seam").
+//!
+//! The two QP hot loops — the fused Hamming XOR+POPCNT scan
+//! ([`BinaryIndex::hamming_scan_hist`]) and the blocked columnar LB
+//! gather ([`OsqIndex::lb_sq_scan_blocked`]) — each get an AVX2
+//! (`std::arch::x86_64`) and a NEON (`std::arch::aarch64`)
+//! implementation here. "Bang for the Buck" (PAPERS.md) shows these scan
+//! kernels dominate cost/performance for quantized search on commodity
+//! cloud CPUs, which is exactly the hardware class a QP Lambda runs on.
+//!
+//! # Dispatch strategy
+//!
+//! Feature detection runs **once, at engine construction**
+//! ([`Kernels::detect`], called by `NativeScanEngine::new`), not per
+//! scan: the detected [`KernelKind`] is stored in the engine and every
+//! kernel call is a direct match on that enum — no per-call `cpuid`, no
+//! function-pointer indirection the optimizer can't see through. The
+//! scalar code in `osq::binary` / `osq::quantizer` is the portable
+//! fallback and the semantic oracle: property tests pin both SIMD paths
+//! **bit-identical** to it (`--no-default-features` compiles the scalar
+//! path only).
+//!
+//! # Why bit-identical is achievable
+//!
+//! * Hamming distances are integer XOR+POPCNT — exact on every path.
+//! * The LB kernel vectorizes **across candidates** (one lane per
+//!   candidate), never across dimensions: each candidate's accumulator
+//!   receives its per-dimension LUT values as the same sequence of
+//!   scalar f32 adds in ascending-`j` order as the scalar kernel, so
+//!   float results match bit-for-bit (no reassociation, no FMA).
+//!
+//! # Safety invariants of the `unsafe` blocks
+//!
+//! * Every `#[target_feature(enable = "avx2")]` function is only
+//!   reachable through [`Kernels`] whose `KernelKind::Avx2` variant is
+//!   only constructed after `is_x86_feature_detected!("avx2")` returned
+//!   true (NEON is part of the aarch64 baseline target).
+//! * The AVX2 window gather (`_mm256_i32gather_epi32`, scale 1) reads 4
+//!   bytes at `block + k*G + seg` for the 8 rows of one step; it is only
+//!   issued under the `seg + 4 <= G` guard, so the furthest read ends at
+//!   `(k+7)*G + seg + 4 <= block.len()`. Dimensions whose final segment
+//!   window would overrun the row take the scalar tail path — the same
+//!   split the scalar kernel makes.
+//! * The LUT gather (`_mm256_i32gather_ps`, scale 4) uses code indices
+//!   `<= mask = (1 << B[j]) - 1`; the kernel asserts `mask < m1` for
+//!   every dimension up front (allocate_bits caps B at 8, so the assert
+//!   only fires on corrupt index files — where the scalar kernel's slice
+//!   index would panic too, just later and per-row).
+//! * Unaligned vector loads/stores use the `loadu`/`storeu` variants
+//!   exclusively; nothing here assumes alignment.
+
+use crate::osq::binary::BinaryIndex;
+use crate::osq::distance::AdcTable;
+use crate::osq::quantizer::OsqIndex;
+use crate::osq::segment::DimAccessor;
+
+/// Which kernel implementation a scan engine dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable scalar/auto-vectorized Rust (always available; the oracle).
+    Scalar,
+    /// AVX2 + nibble-LUT popcount (x86_64, runtime-detected).
+    Avx2,
+    /// NEON `vcnt` popcount + vectorized accumulate (aarch64 baseline).
+    Neon,
+}
+
+/// Detect the best available kernel once (engine construction time).
+pub fn detect() -> KernelKind {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return KernelKind::Avx2;
+        }
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return KernelKind::Neon;
+        }
+    }
+    KernelKind::Scalar
+}
+
+/// The dispatch table a scan engine holds: selected once, `Copy`, and
+/// shared freely with shard workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Kernels {
+    pub kind: KernelKind,
+}
+
+impl Default for Kernels {
+    fn default() -> Self {
+        Self::detect()
+    }
+}
+
+impl Kernels {
+    /// Runtime-detected best kernels for this CPU.
+    pub fn detect() -> Self {
+        Self { kind: detect() }
+    }
+
+    /// Force the portable scalar kernels (ablation / oracle).
+    pub fn scalar() -> Self {
+        Self { kind: KernelKind::Scalar }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self.kind {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Neon => "neon",
+        }
+    }
+
+    /// Fused Hamming scan + cutoff histogram — dispatched variant of
+    /// [`BinaryIndex::hamming_scan_hist`], bit-identical output.
+    pub fn hamming_scan_hist(
+        &self,
+        bin: &BinaryIndex,
+        q_words: &[u64],
+        rows: &[u32],
+        out: &mut Vec<u32>,
+        hist: &mut Vec<usize>,
+    ) {
+        match self.kind {
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            // SAFETY: Avx2 is only constructed after runtime detection.
+            KernelKind::Avx2 => unsafe {
+                avx2::hamming_scan_hist(bin, q_words, rows, out, hist)
+            },
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            // SAFETY: NEON is part of the aarch64 baseline target.
+            KernelKind::Neon => unsafe {
+                neon::hamming_scan_hist(bin, q_words, rows, out, hist)
+            },
+            _ => bin.hamming_scan_hist(q_words, rows, out, hist),
+        }
+    }
+
+    /// Blocked columnar LB scan — dispatched variant of
+    /// [`OsqIndex::lb_sq_scan_blocked`], bit-identical output.
+    pub fn lb_sq_scan_blocked(
+        &self,
+        idx: &OsqIndex,
+        lut: &AdcTable,
+        rows: &[u32],
+        accessors: &[DimAccessor],
+        block: &mut Vec<u8>,
+        acc: &mut Vec<f32>,
+    ) {
+        match self.kind {
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            // SAFETY: Avx2 is only constructed after runtime detection.
+            KernelKind::Avx2 => unsafe {
+                avx2::lb_sq_scan_blocked(idx, lut, rows, accessors, block, acc)
+            },
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            // SAFETY: NEON is part of the aarch64 baseline target.
+            KernelKind::Neon => unsafe {
+                neon::lb_sq_scan_blocked(idx, lut, rows, accessors, block, acc)
+            },
+            _ => idx.lb_sq_scan_blocked(lut, rows, accessors, block, acc),
+        }
+    }
+}
+
+/// Gather one [`crate::osq::quantizer::LB_BLOCK_ROWS`]-sized block of
+/// packed rows into the contiguous scratch buffer (shared by the AVX2
+/// and NEON blocked kernels; the scalar kernel has its own inline copy).
+#[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[inline]
+fn gather_block(packed: &[u8], g: usize, block_rows: &[u32], block: &mut Vec<u8>) {
+    block.clear();
+    for &r in block_rows {
+        let r = r as usize;
+        block.extend_from_slice(&packed[r * g..(r + 1) * g]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 (x86_64)
+// ---------------------------------------------------------------------
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use super::*;
+    use crate::osq::binary::hamming_words;
+    use crate::osq::quantizer::LB_BLOCK_ROWS;
+    use std::arch::x86_64::*;
+
+    /// Per-64-bit-lane popcount: nibble shuffle-LUT + `psadbw`
+    /// horizontal byte sum (the classic Mula kernel).
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn popcnt_epi64(v: __m256i) -> __m256i {
+        #[rustfmt::skip]
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low_mask = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low_mask);
+        let cnt =
+            _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+    }
+
+    /// 4 candidates per step: their code words land one-per-64-bit-lane,
+    /// XOR against the broadcast query word, lane popcounts accumulate.
+    /// Integer throughout — exactly the scalar result.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn hamming_scan_hist(
+        bin: &BinaryIndex,
+        q_words: &[u64],
+        rows: &[u32],
+        out: &mut Vec<u32>,
+        hist: &mut Vec<usize>,
+    ) {
+        out.clear();
+        out.reserve(rows.len());
+        hist.clear();
+        hist.resize(bin.d + 2, 0);
+        let words = bin.words;
+        let codes: &[u64] = &bin.codes;
+        let mut quads = rows.chunks_exact(4);
+        for quad in quads.by_ref() {
+            let b0 = quad[0] as usize * words;
+            let b1 = quad[1] as usize * words;
+            let b2 = quad[2] as usize * words;
+            let b3 = quad[3] as usize * words;
+            let mut acc = _mm256_setzero_si256();
+            for (w, &qw) in q_words.iter().enumerate() {
+                let v = _mm256_set_epi64x(
+                    codes[b3 + w] as i64,
+                    codes[b2 + w] as i64,
+                    codes[b1 + w] as i64,
+                    codes[b0 + w] as i64,
+                );
+                let x = _mm256_xor_si256(v, _mm256_set1_epi64x(qw as i64));
+                acc = _mm256_add_epi64(acc, popcnt_epi64(x));
+            }
+            let mut h4 = [0u64; 4];
+            _mm256_storeu_si256(h4.as_mut_ptr() as *mut __m256i, acc);
+            for &h in &h4 {
+                // lane order == candidate order (setr semantics of set_epi64x)
+                hist[(h as usize).min(bin.d + 1)] += 1;
+                out.push(h as u32);
+            }
+        }
+        for &r in quads.remainder() {
+            let h = hamming_words(q_words, bin.row(r as usize));
+            hist[(h as usize).min(bin.d + 1)] += 1;
+            out.push(h);
+        }
+    }
+
+    /// Blocked columnar LB scan, 8 candidates per step per dimension:
+    /// byte-offset gather of the u32 code windows (one per row), shared
+    /// shift/mask, LUT float gather, one add per lane.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2 is available. See the module docs for the
+    /// gather bounds argument.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn lb_sq_scan_blocked(
+        idx: &OsqIndex,
+        lut: &AdcTable,
+        rows: &[u32],
+        accessors: &[DimAccessor],
+        block: &mut Vec<u8>,
+        acc: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(accessors.len(), idx.d);
+        acc.clear();
+        acc.resize(rows.len(), 0.0);
+        let g = idx.layout.segments_per_vector();
+        let m1 = lut.m1;
+        // The LUT gather below has no bounds check, so the scalar path's
+        // implicit panic-on-overflow must become an explicit guard: every
+        // possible code (<= mask) must index inside the m1-row column.
+        // Violations can only come from corrupt/hand-crafted index files
+        // (allocate_bits caps at 8 bits, but SegmentLayout admits 16).
+        for a in accessors {
+            assert!((a.mask as usize) < m1, "dimension mask {} overflows LUT rows {m1}", a.mask);
+        }
+        let packed: &[u8] = &idx.packed;
+        // byte offsets of 8 consecutive block rows for the window gather
+        let row_offsets = _mm256_setr_epi32(
+            0,
+            g as i32,
+            2 * g as i32,
+            3 * g as i32,
+            4 * g as i32,
+            5 * g as i32,
+            6 * g as i32,
+            7 * g as i32,
+        );
+        for (block_rows, block_acc) in
+            rows.chunks(LB_BLOCK_ROWS).zip(acc.chunks_mut(LB_BLOCK_ROWS))
+        {
+            gather_block(packed, g, block_rows, block);
+            let nb = block_rows.len();
+            let base = block.as_ptr();
+            for (j, a) in accessors.iter().enumerate() {
+                if a.mask == 0 {
+                    continue; // zero-bit dims carry no code, LB contribution 0
+                }
+                let seg = a.seg as usize;
+                let shift = a.shift;
+                let mask = a.mask;
+                let lut_col = &lut.table[j * m1..(j + 1) * m1];
+                if seg + 4 <= g {
+                    let shift_cnt = _mm_cvtsi32_si128(shift as i32);
+                    let mask_v = _mm256_set1_epi32(mask as i32);
+                    let mut k = 0usize;
+                    while k + 8 <= nb {
+                        // SAFETY: reads [k*g+seg, (k+7)*g+seg+4) ⊂ block
+                        // because k+8 <= nb and seg+4 <= g.
+                        let win = _mm256_i32gather_epi32::<1>(
+                            base.add(k * g + seg) as *const i32,
+                            row_offsets,
+                        );
+                        let code =
+                            _mm256_and_si256(_mm256_srl_epi32(win, shift_cnt), mask_v);
+                        // SAFETY: code <= mask <= 255 < m1 (see module docs)
+                        let vals = _mm256_i32gather_ps::<4>(lut_col.as_ptr(), code);
+                        let accp = block_acc.as_mut_ptr().add(k);
+                        _mm256_storeu_ps(accp, _mm256_add_ps(_mm256_loadu_ps(accp), vals));
+                        k += 8;
+                    }
+                    for t in k..nb {
+                        let brow = &block[t * g..(t + 1) * g];
+                        let window =
+                            u32::from_le_bytes(brow[seg..seg + 4].try_into().unwrap());
+                        block_acc[t] += lut_col[((window >> shift) & mask) as usize];
+                    }
+                } else {
+                    // safe tail path (code window overruns the row end) —
+                    // identical to the scalar kernel's else-branch
+                    for (out, brow) in block_acc.iter_mut().zip(block.chunks_exact(g)) {
+                        let mut window = 0u32;
+                        for (t, &byte) in brow[seg..].iter().enumerate() {
+                            window |= (byte as u32) << (8 * t);
+                        }
+                        *out += lut_col[((window >> shift) & mask) as usize];
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON (aarch64)
+// ---------------------------------------------------------------------
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    use super::*;
+    use crate::osq::quantizer::LB_BLOCK_ROWS;
+    use std::arch::aarch64::*;
+
+    /// XOR + `vcnt` popcount over one row, 128 bits (2 words) per step.
+    ///
+    /// # Safety
+    /// `a` and `b` must have equal length (NEON is baseline on aarch64).
+    unsafe fn hamming_row(a: &[u64], b: &[u64]) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        let pairs = a.len() / 2;
+        let mut sum = vdupq_n_u64(0);
+        for k in 0..pairs {
+            // SAFETY: 2*k+1 < a.len() — 16 readable bytes at both pointers
+            let va = vld1q_u64(a.as_ptr().add(2 * k));
+            let vb = vld1q_u64(b.as_ptr().add(2 * k));
+            let x = veorq_u64(va, vb);
+            let cnt = vcntq_u8(vreinterpretq_u8_u64(x));
+            sum = vaddq_u64(sum, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(cnt))));
+        }
+        let mut h = vgetq_lane_u64::<0>(sum) + vgetq_lane_u64::<1>(sum);
+        if a.len() % 2 == 1 {
+            let last = a.len() - 1;
+            h += (a[last] ^ b[last]).count_ones() as u64;
+        }
+        h as u32
+    }
+
+    /// Fused Hamming scan + histogram (NEON popcount per row).
+    ///
+    /// # Safety
+    /// NEON baseline on aarch64; no further preconditions.
+    pub unsafe fn hamming_scan_hist(
+        bin: &BinaryIndex,
+        q_words: &[u64],
+        rows: &[u32],
+        out: &mut Vec<u32>,
+        hist: &mut Vec<usize>,
+    ) {
+        out.clear();
+        out.reserve(rows.len());
+        hist.clear();
+        hist.resize(bin.d + 2, 0);
+        for &r in rows {
+            let h = hamming_row(q_words, bin.row(r as usize));
+            hist[(h as usize).min(bin.d + 1)] += 1;
+            out.push(h);
+        }
+    }
+
+    /// Blocked columnar LB scan: scalar code extraction + LUT gather
+    /// (aarch64 has no gather instruction), vectorized 4-lane
+    /// accumulate. One f32 add per candidate per dimension, ascending
+    /// `j` — bit-identical to scalar.
+    ///
+    /// # Safety
+    /// NEON baseline on aarch64; the loadu/storeu-style `vld1q/vst1q`
+    /// pairs read/write exactly the 4 lanes guarded by `k + 4 <= nb`.
+    pub unsafe fn lb_sq_scan_blocked(
+        idx: &OsqIndex,
+        lut: &AdcTable,
+        rows: &[u32],
+        accessors: &[DimAccessor],
+        block: &mut Vec<u8>,
+        acc: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(accessors.len(), idx.d);
+        acc.clear();
+        acc.resize(rows.len(), 0.0);
+        let g = idx.layout.segments_per_vector();
+        let m1 = lut.m1;
+        let packed: &[u8] = &idx.packed;
+        for (block_rows, block_acc) in
+            rows.chunks(LB_BLOCK_ROWS).zip(acc.chunks_mut(LB_BLOCK_ROWS))
+        {
+            gather_block(packed, g, block_rows, block);
+            let nb = block_rows.len();
+            for (j, a) in accessors.iter().enumerate() {
+                if a.mask == 0 {
+                    continue;
+                }
+                let seg = a.seg as usize;
+                let shift = a.shift;
+                let mask = a.mask;
+                let lut_col = &lut.table[j * m1..(j + 1) * m1];
+                if seg + 4 <= g {
+                    let mut k = 0usize;
+                    let mut vals = [0f32; 4];
+                    while k + 4 <= nb {
+                        for (lane, v) in vals.iter_mut().enumerate() {
+                            let base = (k + lane) * g + seg;
+                            let window = u32::from_le_bytes(
+                                block[base..base + 4].try_into().unwrap(),
+                            );
+                            *v = lut_col[((window >> shift) & mask) as usize];
+                        }
+                        let accp = block_acc.as_mut_ptr().add(k);
+                        // SAFETY: k + 4 <= nb == block_acc.len()
+                        vst1q_f32(accp, vaddq_f32(vld1q_f32(accp), vld1q_f32(vals.as_ptr())));
+                        k += 4;
+                    }
+                    for t in k..nb {
+                        let base = t * g + seg;
+                        let window =
+                            u32::from_le_bytes(block[base..base + 4].try_into().unwrap());
+                        block_acc[t] += lut_col[((window >> shift) & mask) as usize];
+                    }
+                } else {
+                    for (out, brow) in block_acc.iter_mut().zip(block.chunks_exact(g)) {
+                        let mut window = 0u32;
+                        for (t, &byte) in brow[seg..].iter().enumerate() {
+                            window |= (byte as u32) << (8 * t);
+                        }
+                        *out += lut_col[((window >> shift) & mask) as usize];
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::osq::quantizer::{OsqIndex, OsqOptions};
+    use crate::util::matrix::Matrix;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Random partition data with a few constant columns so the bit
+    /// allocator produces 0-bit dims (mask == 0 accessor paths) and the
+    /// binary index produces always-zero signature bits.
+    fn awkward_matrix(n: usize, d: usize, rng: &mut Rng) -> Matrix {
+        Matrix::from_rows_fn(n, d, |_, row| {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = if j % 7 == 3 { 1.25 } else { rng.normal() };
+            }
+        })
+    }
+
+    #[test]
+    fn detect_is_stable_and_named() {
+        let a = Kernels::detect();
+        let b = Kernels::detect();
+        assert_eq!(a, b, "detection must be deterministic");
+        assert!(!a.name().is_empty());
+        assert_eq!(Kernels::scalar().kind, KernelKind::Scalar);
+    }
+
+    #[test]
+    fn prop_simd_hamming_bit_identical_to_scalar() {
+        let simd = Kernels::detect();
+        let scalar = Kernels::scalar();
+        // non-multiple-of-lane dims: stress the 64-bit word padding, the
+        // 4-candidate quad remainder, and odd word counts (NEON tail)
+        prop::check("simd-hamming-vs-scalar", 40, |g| {
+            let d = g.choose(&[1usize, 7, 37, 64, 65, 96, 128, 130, 190]);
+            let n = g.usize_in(1, 300);
+            let mut rng = Rng::new(g.seed ^ 0xA5);
+            let m = awkward_matrix(n, d, &mut rng);
+            let bin = crate::osq::binary::BinaryIndex::build(&m);
+            let q: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let qw = bin.encode_query(&q);
+            let rows: Vec<u32> = (0..n as u32).filter(|_| g.bool()).collect();
+            let (mut h_simd, mut hist_simd) = (vec![9u32; 3], vec![9usize; 3]);
+            let (mut h_ref, mut hist_ref) = (Vec::new(), Vec::new());
+            simd.hamming_scan_hist(&bin, &qw, &rows, &mut h_simd, &mut hist_simd);
+            scalar.hamming_scan_hist(&bin, &qw, &rows, &mut h_ref, &mut hist_ref);
+            if h_simd != h_ref {
+                return Err(format!("distances diverge ({})", simd.name()));
+            }
+            if hist_simd != hist_ref {
+                return Err(format!("histograms diverge ({})", simd.name()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_simd_lb_bit_identical_to_scalar() {
+        let simd = Kernels::detect();
+        let scalar = Kernels::scalar();
+        prop::check("simd-lb-vs-scalar", 25, |g| {
+            let d = g.choose(&[3usize, 11, 16, 29, 64, 96]);
+            let n = g.usize_in(2, 400);
+            let mut rng = Rng::new(g.seed ^ 0x5A);
+            let m = awkward_matrix(n, d, &mut rng);
+            let use_klt = g.bool();
+            let idx = OsqIndex::build(
+                &m,
+                &OsqOptions { use_klt, ..Default::default() },
+                &mut rng,
+            );
+            let q = m.row(g.usize_in(0, n - 1)).to_vec();
+            let lut = idx.adc_table(&idx.query_frame(&q));
+            let accessors = idx.layout.dim_accessors();
+            // duplicated, unsorted rows straddling the 8-lane step and the
+            // 256-row block boundary
+            let mut rows: Vec<u32> = (0..n as u32).rev().filter(|_| g.bool()).collect();
+            if n > 1 {
+                rows.push(1);
+                rows.push(1);
+            }
+            let (mut blk_a, mut acc_a) = (Vec::new(), Vec::new());
+            let (mut blk_b, mut acc_b) = (Vec::new(), Vec::new());
+            simd.lb_sq_scan_blocked(&idx, &lut, &rows, &accessors, &mut blk_a, &mut acc_a);
+            scalar.lb_sq_scan_blocked(&idx, &lut, &rows, &accessors, &mut blk_b, &mut acc_b);
+            if acc_a.len() != acc_b.len() {
+                return Err("length mismatch".into());
+            }
+            for (i, (x, y)) in acc_a.iter().zip(&acc_b).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!(
+                        "row {i}: {} gives {x}, scalar gives {y} (bits differ)",
+                        simd.name()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dispatched_hamming_handles_empty_rows() {
+        let mut rng = Rng::new(3);
+        let m = awkward_matrix(10, 33, &mut rng);
+        let bin = crate::osq::binary::BinaryIndex::build(&m);
+        let qw = bin.encode_query(m.row(0));
+        let (mut h, mut hist) = (vec![1u32], vec![1usize]);
+        Kernels::detect().hamming_scan_hist(&bin, &qw, &[], &mut h, &mut hist);
+        assert!(h.is_empty());
+        assert_eq!(hist.len(), 35);
+        assert!(hist.iter().all(|&c| c == 0));
+    }
+}

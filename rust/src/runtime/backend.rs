@@ -1,10 +1,20 @@
 //! The QP scan engine: one batch-oriented trait, two implementations.
 //!
-//! * [`NativeScanEngine`] — the scalar/auto-vectorized Rust kernels
-//!   (`osq::binary`, `osq::distance`, the blocked columnar LB scan in
-//!   `osq::quantizer`).
+//! * [`NativeScanEngine`] — the in-process kernels, in two dispatch
+//!   dimensions selected once at construction: the *instruction set*
+//!   ([`Kernels`]: runtime-detected AVX2/NEON from `osq::simd`, scalar
+//!   fallback) and the *parallelism* ([`ScanParallelism`]: shard each
+//!   item's candidate rows across a `util::threadpool::ThreadPool`, one
+//!   `ScanScratch` per worker, for multi-vCPU FaaS sizes — paper §3.2).
 //! * [`XlaScanEngine`] — the AOT path: the same math lowered from
 //!   JAX/Pallas and executed through PJRT (`runtime::Engine`).
+//!
+//! Every configuration — scalar, SIMD, sharded, and their combinations —
+//! produces **bit-identical survivor sets and LB distances**: Hamming
+//! math is integer, the SIMD LB kernel vectorizes across candidates
+//! only, and the sharded path merges per-shard histograms before the
+//! H_perc cutoff so the cut is computed over the full row set exactly as
+//! in the serial path (shards then concatenate in row order).
 //!
 //! # The batch API
 //!
@@ -27,13 +37,15 @@
 //! cutoff selection runs on the host in both cases) and to float
 //! tolerance on LB distances — enforced by `rust/tests/runtime_xla.rs`.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::osq::binary::{hamming_cutoff, hamming_histogram};
 use crate::osq::distance::AdcTable;
 use crate::osq::quantizer::OsqIndex;
 use crate::osq::segment::DimAccessor;
+use crate::osq::simd::Kernels;
 use crate::runtime::Engine;
+use crate::util::threadpool::{num_cpus, ThreadPool};
 
 /// One query's slice of a batched partition scan.
 #[derive(Clone, Copy, Debug)]
@@ -112,10 +124,99 @@ pub trait ScanEngine: Send + Sync {
     );
 }
 
-/// Pure-Rust implementation (always available).
-pub struct NativeScanEngine;
+/// How a `NativeScanEngine` spreads one item's candidate rows over
+/// worker threads (the "sharded QP" knob: one QP function sized at
+/// multiple vCPUs splits its scan across them, paper §3.2).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ScanParallelism {
+    /// Everything on the calling thread (the PR 1 behaviour).
+    #[default]
+    Serial,
+    /// A fixed worker count (model a 2/4/8-vCPU function size).
+    Threads(usize),
+    /// One worker per logical CPU of the host.
+    Auto,
+}
+
+impl ScanParallelism {
+    /// Resolved shard/worker count (>= 1).
+    pub fn resolve(&self) -> usize {
+        match self {
+            ScanParallelism::Serial => 1,
+            ScanParallelism::Threads(n) => (*n).max(1),
+            ScanParallelism::Auto => num_cpus(),
+        }
+    }
+
+    /// Parse a CLI value: "off"/"serial" | "auto" | a thread count.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" | "serial" | "1" | "" => Some(ScanParallelism::Serial),
+            "auto" => Some(ScanParallelism::Auto),
+            n => n.parse::<usize>().ok().map(ScanParallelism::Threads),
+        }
+    }
+}
+
+/// Minimum candidate rows per shard. An item is sharded only when it
+/// has at least two shards' worth (`2 *` this) of rows — below that,
+/// fork/join overhead beats the win and the sharded engine falls back
+/// to the serial path; above it, the shard count is capped so every
+/// shard keeps at least this many rows.
+pub const MIN_ROWS_PER_SHARD: usize = 1024;
+
+/// In-process implementation (always available): cpufeature-dispatched
+/// kernels + optional row sharding. See the module docs for the
+/// bit-identity argument across configurations.
+pub struct NativeScanEngine {
+    kernels: Kernels,
+    shards: usize,
+    pool: Option<ThreadPool>,
+    /// Per-worker scratch bank, recycled across items and requests (the
+    /// sharded counterpart of the caller's single `ScanScratch`).
+    worker_scratch: Mutex<Vec<ScanScratch>>,
+}
+
+impl Default for NativeScanEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 impl NativeScanEngine {
+    /// Best detected kernels, serial execution.
+    pub fn new() -> Self {
+        Self::with_options(Kernels::detect(), ScanParallelism::Serial)
+    }
+
+    /// Portable scalar kernels, serial execution (the PR 1 baseline;
+    /// benches and property tests use it as the oracle).
+    pub fn scalar() -> Self {
+        Self::with_options(Kernels::scalar(), ScanParallelism::Serial)
+    }
+
+    /// Best detected kernels + the given sharding.
+    pub fn with_parallelism(parallelism: ScanParallelism) -> Self {
+        Self::with_options(Kernels::detect(), parallelism)
+    }
+
+    /// Full control over both dispatch dimensions.
+    pub fn with_options(kernels: Kernels, parallelism: ScanParallelism) -> Self {
+        let shards = parallelism.resolve();
+        let pool = (shards > 1).then(|| ThreadPool::new(shards));
+        Self { kernels, shards, pool, worker_scratch: Mutex::new(Vec::new()) }
+    }
+
+    /// Name of the selected instruction-set kernels.
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernels.name()
+    }
+
+    /// Resolved shard count (1 = serial).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
     /// Raw Hamming + LB distances of one query over explicit rows — the
     /// contract tests and the backend-ablation bench. Requires
     /// `begin_partition` to have run on `scratch` for this `idx`.
@@ -128,14 +229,16 @@ impl NativeScanEngine {
         scratch: &mut ScanScratch,
     ) -> (Vec<u32>, Vec<f32>) {
         idx.binary.encode_query_into(q_raw, &mut scratch.q_words);
-        idx.binary.hamming_scan_hist(
+        self.kernels.hamming_scan_hist(
+            &idx.binary,
             &scratch.q_words,
             rows,
             &mut scratch.hamming,
             &mut scratch.hist,
         );
         scratch.lut.rebuild(q_frame, &idx.quantizers, idx.m1);
-        idx.lb_sq_scan_blocked(
+        self.kernels.lb_sq_scan_blocked(
+            idx,
             &scratch.lut,
             rows,
             &scratch.accessors,
@@ -143,6 +246,100 @@ impl NativeScanEngine {
             &mut scratch.acc,
         );
         (scratch.hamming.clone(), scratch.acc.clone())
+    }
+
+    /// Sharded scan of one item: candidate rows split into contiguous
+    /// chunks, one pool worker + one `ScanScratch` per chunk. Phase 1
+    /// computes per-chunk Hamming distances and histograms; the
+    /// histograms merge into the *request-global* histogram so the
+    /// H_perc cutoff is the same distance the serial path selects.
+    /// Phase 2 filters each chunk by that shared cutoff and runs the LB
+    /// kernel on its survivors. Concatenating the chunks in order
+    /// reproduces the serial survivor order and (since LB values are
+    /// per-candidate) the exact serial distances. Results land in
+    /// `scratch.survivors` / `scratch.acc`.
+    fn scan_item_sharded(
+        &self,
+        pool: &ThreadPool,
+        idx: &OsqIndex,
+        item: &ScanItem<'_>,
+        scratch: &mut ScanScratch,
+    ) {
+        let n_shards = self.shards.min(item.rows.len().div_ceil(MIN_ROWS_PER_SHARD)).max(1);
+        let chunk_len = item.rows.len().div_ceil(n_shards);
+        let chunks: Vec<&[u32]> = item.rows.chunks(chunk_len).collect();
+        let mut workers: Vec<ScanScratch> = {
+            let mut bank = self.worker_scratch.lock().unwrap();
+            (0..chunks.len()).map(|_| bank.pop().unwrap_or_default()).collect()
+        };
+        let kernels = self.kernels;
+        if item.prune && item.keep < item.rows.len() {
+            idx.binary.encode_query_into(item.q_raw, &mut scratch.q_words);
+            let q_words: &[u64] = &scratch.q_words;
+            pool.scope(|s| {
+                for (ws, rows) in workers.iter_mut().zip(&chunks) {
+                    let rows: &[u32] = rows;
+                    s.execute(move || {
+                        kernels.hamming_scan_hist(
+                            &idx.binary,
+                            q_words,
+                            rows,
+                            &mut ws.hamming,
+                            &mut ws.hist,
+                        );
+                    });
+                }
+            });
+            scratch.hist.clear();
+            scratch.hist.resize(idx.d + 2, 0);
+            for ws in &workers {
+                for (total, &c) in scratch.hist.iter_mut().zip(&ws.hist) {
+                    *total += c;
+                }
+            }
+            let cut = hamming_cutoff(&scratch.hist, item.keep) as u32;
+            scratch.lut.rebuild(item.q_frame, &idx.quantizers, idx.m1);
+            let lut: &AdcTable = &scratch.lut;
+            let accessors: &[DimAccessor] = &scratch.accessors;
+            pool.scope(|s| {
+                for (ws, rows) in workers.iter_mut().zip(&chunks) {
+                    let rows: &[u32] = rows;
+                    s.execute(move || {
+                        ws.survivors.clear();
+                        for (k, &h) in ws.hamming.iter().enumerate() {
+                            if h <= cut {
+                                ws.survivors.push(rows[k]);
+                            }
+                        }
+                        let ScanScratch { survivors, block, acc, .. } = ws;
+                        kernels.lb_sq_scan_blocked(idx, lut, survivors, accessors, block, acc);
+                    });
+                }
+            });
+        } else {
+            scratch.lut.rebuild(item.q_frame, &idx.quantizers, idx.m1);
+            let lut: &AdcTable = &scratch.lut;
+            let accessors: &[DimAccessor] = &scratch.accessors;
+            pool.scope(|s| {
+                for (ws, rows) in workers.iter_mut().zip(&chunks) {
+                    let rows: &[u32] = rows;
+                    s.execute(move || {
+                        ws.survivors.clear();
+                        ws.survivors.extend_from_slice(rows);
+                        let ScanScratch { survivors, block, acc, .. } = ws;
+                        kernels.lb_sq_scan_blocked(idx, lut, survivors, accessors, block, acc);
+                    });
+                }
+            });
+        }
+        // deterministic merge: chunk order == original row order
+        scratch.survivors.clear();
+        scratch.acc.clear();
+        for ws in &workers {
+            scratch.survivors.extend_from_slice(&ws.survivors);
+            scratch.acc.extend_from_slice(&ws.acc);
+        }
+        self.worker_scratch.lock().unwrap().append(&mut workers);
     }
 }
 
@@ -168,12 +365,20 @@ impl ScanEngine for NativeScanEngine {
                 emit(i, &[], &[]);
                 continue;
             }
+            if let Some(pool) = &self.pool {
+                if item.rows.len() >= MIN_ROWS_PER_SHARD * 2 {
+                    self.scan_item_sharded(pool, idx, item, scratch);
+                    emit(i, &scratch.survivors, &scratch.acc);
+                    continue;
+                }
+            }
             // ---- low-bit Hamming cut (§2.4.3), fused with the cutoff
             // histogram: one pass over the packed codes produces both the
             // distances and the H_perc selection state.
             let survivors: &[u32] = if item.prune && item.keep < item.rows.len() {
                 idx.binary.encode_query_into(item.q_raw, &mut scratch.q_words);
-                idx.binary.hamming_scan_hist(
+                self.kernels.hamming_scan_hist(
+                    &idx.binary,
                     &scratch.q_words,
                     item.rows,
                     &mut scratch.hamming,
@@ -193,7 +398,8 @@ impl ScanEngine for NativeScanEngine {
             // ---- fine-grained LB distances (§2.4.4): per-query LUT into
             // reused storage, then the blocked columnar scan.
             scratch.lut.rebuild(item.q_frame, &idx.quantizers, idx.m1);
-            idx.lb_sq_scan_blocked(
+            self.kernels.lb_sq_scan_blocked(
+                idx,
                 &scratch.lut,
                 survivors,
                 &scratch.accessors,
@@ -321,14 +527,18 @@ impl ScanEngine for XlaScanEngine {
 }
 
 /// Pick the engine by name: "xla" (requires artifacts for `d`),
-/// "native", or "auto" (xla when available).
+/// "native" (detected kernels), "scalar" (portable-kernel ablation), or
+/// "auto" (xla when available). `parallelism` applies to the native
+/// engines (the XLA path batches on-device instead).
 pub fn select_engine(
     name: &str,
     engine: Option<Arc<Engine>>,
     d: usize,
+    parallelism: ScanParallelism,
 ) -> Arc<dyn ScanEngine> {
     match name {
-        "native" => Arc::new(NativeScanEngine),
+        "native" => Arc::new(NativeScanEngine::with_parallelism(parallelism)),
+        "scalar" => Arc::new(NativeScanEngine::with_options(Kernels::scalar(), parallelism)),
         "xla" => {
             let engine = engine.expect("xla engine requested but no PJRT engine loaded");
             assert!(engine.supports(d), "no artifacts for d={d}; run `make artifacts`");
@@ -336,7 +546,7 @@ pub fn select_engine(
         }
         _ => match engine {
             Some(e) if e.supports(d) => Arc::new(XlaScanEngine::new(e)),
-            _ => Arc::new(NativeScanEngine),
+            _ => Arc::new(NativeScanEngine::with_parallelism(parallelism)),
         },
     }
 }
@@ -377,7 +587,7 @@ mod tests {
         // select_by_hamming_with_ties survivors + lb_sq_scan distances
         let (ds, idx) = small_index();
         let mut scratch = ScanScratch::new();
-        let engine = NativeScanEngine;
+        let engine = NativeScanEngine::new();
         engine.begin_partition(&idx, &mut scratch);
         let mut rng = Rng::new(9);
         for trial in 0..6 {
@@ -414,7 +624,7 @@ mod tests {
     fn no_prune_passes_all_rows_through() {
         let (ds, idx) = small_index();
         let mut scratch = ScanScratch::new();
-        let engine = NativeScanEngine;
+        let engine = NativeScanEngine::new();
         engine.begin_partition(&idx, &mut scratch);
         let q = ds.vectors.row(5).to_vec();
         let qf = idx.query_frame(&q);
@@ -433,7 +643,7 @@ mod tests {
     fn empty_rows_emit_empty() {
         let (ds, idx) = small_index();
         let mut scratch = ScanScratch::new();
-        let engine = NativeScanEngine;
+        let engine = NativeScanEngine::new();
         engine.begin_partition(&idx, &mut scratch);
         let q = ds.vectors.row(0).to_vec();
         let qf = idx.query_frame(&q);
@@ -450,7 +660,7 @@ mod tests {
     fn batch_emits_every_item_in_order() {
         let (ds, idx) = small_index();
         let mut scratch = ScanScratch::new();
-        let engine = NativeScanEngine;
+        let engine = NativeScanEngine::new();
         engine.begin_partition(&idx, &mut scratch);
         let queries: Vec<Vec<f32>> = (0..5).map(|i| ds.vectors.row(i * 7).to_vec()).collect();
         let frames: Vec<Vec<f32>> = queries.iter().map(|q| idx.query_frame(q)).collect();
@@ -480,7 +690,7 @@ mod tests {
     fn scratch_reuse_across_batches_is_clean() {
         // results must not depend on what a previous batch left in scratch
         let (ds, idx) = small_index();
-        let engine = NativeScanEngine;
+        let engine = NativeScanEngine::new();
         let q = ds.vectors.row(11).to_vec();
         let qf = idx.query_frame(&q);
         let rows: Vec<u32> = (0..300).collect();

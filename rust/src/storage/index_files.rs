@@ -83,12 +83,17 @@ pub fn vector_range(d: usize, id: u64) -> (usize, usize) {
 
 /// Decode one vector fetched via `vector_range`.
 pub fn decode_vector(bytes: &[u8], d: usize) -> Vec<f32> {
-    assert_eq!(bytes.len(), d * 4);
-    let mut v = vec![0f32; d];
-    for (j, chunk) in bytes.chunks_exact(4).enumerate() {
-        v[j] = f32::from_le_bytes(chunk.try_into().unwrap());
-    }
+    let mut v = Vec::new();
+    decode_vector_into(bytes, d, &mut v);
     v
+}
+
+/// Decode into a reusable buffer — the QP refinement path decodes R·k
+/// vectors per item and reuses one scratch allocation for all of them.
+pub fn decode_vector_into(bytes: &[u8], d: usize, out: &mut Vec<f32>) {
+    assert_eq!(bytes.len(), d * 4);
+    out.clear();
+    out.extend(bytes.chunks_exact(4).map(|chunk| f32::from_le_bytes(chunk.try_into().unwrap())));
 }
 
 #[cfg(test)]

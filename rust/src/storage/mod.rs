@@ -165,6 +165,39 @@ impl FileStore {
         self.params.simulate_latency(modeled);
         Some(out)
     }
+
+    /// Request-wide coalesced random read: all `ranges` are issued as a
+    /// single batch (Lambada's parallel-I/O lesson — one dispatch
+    /// amortizes the per-read setup), so the whole batch pays ONE
+    /// first-byte latency plus bandwidth-serial transfer of the total
+    /// bytes, vs one first-byte charge *per range* in
+    /// [`FileStore::read_many`]. Billed bytes are identical; the op
+    /// counter records one read. Bytes land in `out` concatenated in
+    /// range order (`out` is cleared first). Returns false — leaving
+    /// `out` empty and charging nothing — if the key is missing or any
+    /// range is out of bounds.
+    pub fn read_coalesced(&self, key: &str, ranges: &[(usize, usize)], out: &mut Vec<u8>) -> bool {
+        out.clear();
+        let Some(file) = self.files.read().unwrap().get(key).cloned() else {
+            return false;
+        };
+        let mut total = 0usize;
+        for &(offset, len) in ranges {
+            if offset + len > file.len() {
+                return false;
+            }
+            total += len;
+        }
+        out.reserve(total);
+        for &(offset, len) in ranges {
+            out.extend_from_slice(&file[offset..offset + len]);
+        }
+        self.ledger.record_efs_read(total as u64);
+        self.params.simulate_latency(
+            self.params.efs_first_byte_s + total as f64 / self.params.efs_bandwidth_bps,
+        );
+        true
+    }
 }
 
 #[cfg(test)]
@@ -208,6 +241,34 @@ mod tests {
         let many = efs.read_many("vectors.bin", &[(0, 2), (100, 3)]).unwrap();
         assert_eq!(many, vec![vec![0, 1], vec![100, 101, 102]]);
         assert_eq!(ledger.efs_bytes.load(Ordering::Relaxed), 9);
+    }
+
+    #[test]
+    fn coalesced_read_matches_read_many_and_bills_one_op() {
+        let (_, efs, ledger) = setup();
+        let data: Vec<u8> = (0..=255).collect();
+        efs.put("vectors.bin", data);
+        let ranges = [(0usize, 2usize), (100, 3), (250, 6)];
+        let ops_before = ledger.efs_reads.load(Ordering::Relaxed);
+        let mut blob = vec![7u8; 3]; // dirty scratch must not leak through
+        assert!(efs.read_coalesced("vectors.bin", &ranges, &mut blob));
+        assert_eq!(blob, vec![0, 1, 100, 101, 102, 250, 251, 252, 253, 254, 255]);
+        // one op, same bytes as the per-range reads would bill
+        assert_eq!(ledger.efs_reads.load(Ordering::Relaxed), ops_before + 1);
+        assert_eq!(ledger.efs_bytes.load(Ordering::Relaxed), 11);
+        // out-of-range and missing keys charge nothing
+        assert!(!efs.read_coalesced("vectors.bin", &[(0, 2), (251, 6)], &mut blob));
+        assert!(blob.is_empty());
+        assert!(!efs.read_coalesced("missing", &[(0, 1)], &mut blob));
+        assert_eq!(ledger.efs_bytes.load(Ordering::Relaxed), 11);
+        // the batch pays one first-byte charge, not one per range
+        let p = SimParams::default();
+        let serial: f64 = ranges
+            .iter()
+            .map(|&(_, len)| p.efs_first_byte_s + len as f64 / p.efs_bandwidth_bps)
+            .sum();
+        let batched = p.efs_first_byte_s + 11.0 / p.efs_bandwidth_bps;
+        assert!(batched < serial / 2.0, "batched {batched} vs serial {serial}");
     }
 
     #[test]

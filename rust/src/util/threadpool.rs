@@ -7,16 +7,21 @@
 //! server baselines, where the paper's point is precisely that a *bounded*
 //! number of vCPUs causes contention.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::marker::PhantomData;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// A fixed-size worker pool. Jobs queue when all workers are busy — this
-/// models a `c7i.4xlarge` (16 vCPU) or `c7i.16xlarge` (64 vCPU) server.
+/// models a `c7i.4xlarge` (16 vCPU) or `c7i.16xlarge` (64 vCPU) server,
+/// or the vCPU allotment of one FaaS function (the sharded scan engine).
+/// The sender sits behind a mutex so the pool itself is `Sync` and can be
+/// driven from several request threads at once.
 pub struct ThreadPool {
-    sender: Option<mpsc::Sender<Job>>,
+    sender: Mutex<Option<mpsc::Sender<Job>>>,
     workers: Vec<thread::JoinHandle<()>>,
     inflight: Arc<(Mutex<usize>, Condvar)>,
 }
@@ -55,7 +60,12 @@ impl ThreadPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        Self { sender: Some(sender), workers, inflight }
+        Self { sender: Mutex::new(Some(sender)), workers, inflight }
+    }
+
+    /// Number of workers.
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
     }
 
     /// Submit a job.
@@ -65,6 +75,8 @@ impl ThreadPool {
             *lock.lock().unwrap() += 1;
         }
         self.sender
+            .lock()
+            .unwrap()
             .as_ref()
             .expect("pool shut down")
             .send(Box::new(job))
@@ -79,14 +91,76 @@ impl ThreadPool {
             n = cvar.wait(n).unwrap();
         }
     }
+
+    /// Run a batch of jobs that may borrow from the caller's stack
+    /// (`std::thread::scope`, but over the pool's fixed workers instead
+    /// of fresh OS threads). `scope` returns only after every job
+    /// submitted through the [`PoolScope`] has finished — also on the
+    /// panic path — which is what makes lending non-`'static` borrows to
+    /// the workers sound. A panicking job is caught on the worker (the
+    /// worker survives for unrelated jobs) and re-raised here.
+    ///
+    /// Scopes from different threads may overlap on one pool; each waits
+    /// only for its own jobs.
+    pub fn scope<'env, R>(&self, f: impl FnOnce(&PoolScope<'_, 'env>) -> R) -> R {
+        let scope = PoolScope {
+            pool: self,
+            wg: WaitGroup::new(),
+            panicked: Arc::new(AtomicBool::new(false)),
+            _env: PhantomData,
+        };
+        // Wait even when `f` unwinds, so borrowed data outlives the jobs.
+        struct WaitGuard<'a>(&'a WaitGroup);
+        impl Drop for WaitGuard<'_> {
+            fn drop(&mut self) {
+                self.0.wait();
+            }
+        }
+        let guard = WaitGuard(&scope.wg);
+        let out = f(&scope);
+        drop(guard); // blocks until all scoped jobs signalled done
+        if scope.panicked.load(Ordering::SeqCst) {
+            panic!("scoped pool job panicked");
+        }
+        out
+    }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        drop(self.sender.take()); // close the channel; workers exit
+        drop(self.sender.lock().unwrap().take()); // close the channel; workers exit
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// Handle for submitting borrowed jobs inside [`ThreadPool::scope`].
+/// `'env` is invariant and pinned to the data the jobs may borrow.
+pub struct PoolScope<'pool, 'env> {
+    pool: &'pool ThreadPool,
+    wg: WaitGroup,
+    panicked: Arc<AtomicBool>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env> PoolScope<'_, 'env> {
+    /// Submit a job that may borrow data alive for `'env`.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'env) {
+        self.wg.add(1);
+        let wg = self.wg.clone();
+        let panicked = Arc::clone(&self.panicked);
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(job);
+        // SAFETY: `scope` (including its panic-path guard) blocks until
+        // this job calls `wg.done()`, so the closure and everything it
+        // borrows outlive its execution despite the erased lifetime.
+        let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
+        self.pool.execute(move || {
+            if std::panic::catch_unwind(AssertUnwindSafe(job)).is_err() {
+                panicked.store(true, Ordering::SeqCst);
+            }
+            wg.done();
+        });
     }
 }
 
@@ -212,6 +286,67 @@ mod tests {
         });
         wg.wait();
         h.join().unwrap();
+    }
+
+    #[test]
+    fn scope_borrows_stack_data() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<u64> = (0..64).collect();
+        let mut partials = vec![0u64; 4];
+        pool.scope(|s| {
+            for (chunk, out) in data.chunks(16).zip(partials.iter_mut()) {
+                s.execute(move || {
+                    *out = chunk.iter().sum();
+                });
+            }
+        });
+        assert_eq!(partials.iter().sum::<u64>(), (0..64).sum::<u64>());
+    }
+
+    #[test]
+    fn overlapping_scopes_wait_only_for_their_own_jobs() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let hits = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let pool = Arc::clone(&pool);
+            let hits = Arc::clone(&hits);
+            handles.push(thread::spawn(move || {
+                let mut local = [0u64; 8];
+                pool.scope(|s| {
+                    for v in local.iter_mut() {
+                        s.execute(move || *v = 1);
+                    }
+                });
+                hits.fetch_add(local.iter().sum(), Ordering::SeqCst);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn scope_propagates_job_panics_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.execute(|| panic!("boom"));
+            });
+        }));
+        assert!(r.is_err(), "scope must re-raise the job panic");
+        // the worker that caught the panic keeps serving
+        let c = Arc::new(AtomicU64::new(0));
+        pool.scope(|s| {
+            for _ in 0..8 {
+                let c = Arc::clone(&c);
+                s.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(c.load(Ordering::SeqCst), 8);
     }
 
     #[test]

@@ -34,7 +34,7 @@ fn xla_backend_end_to_end_matches_native() {
         &ds,
         &BuildOptions::for_profile(profile),
         SquashConfig::for_profile(profile),
-        Arc::new(NativeScanEngine),
+        Arc::new(NativeScanEngine::new()),
     );
     let native_out = native_sys.run_batch(&queries);
 

@@ -23,7 +23,7 @@ fn build_system(n: usize, seed: u64, cfg: SquashConfig) -> (squash::data::Datase
         &ds,
         &BuildOptions::for_profile(profile),
         cfg,
-        Arc::new(NativeScanEngine),
+        Arc::new(NativeScanEngine::new()),
     );
     (ds, sys)
 }

@@ -53,7 +53,7 @@ fn scan_once(
 fn xla_matches_native_survivors_and_lb() {
     let Some(engine) = engine() else { return };
     let (ds, idx) = build_index(1500, 10);
-    let native = NativeScanEngine;
+    let native = NativeScanEngine::new();
     let xla = XlaScanEngine::new(engine);
     assert!(xla.supports(16));
 
@@ -94,7 +94,7 @@ fn xla_batch_request_matches_native_itemwise() {
     // scan_batch call each (scratch reused across items)
     let Some(engine) = engine() else { return };
     let (ds, idx) = build_index(1200, 30);
-    let native = NativeScanEngine;
+    let native = NativeScanEngine::new();
     let xla = XlaScanEngine::new(engine);
     let mut rng = Rng::new(31);
     let queries: Vec<Vec<f32>> =

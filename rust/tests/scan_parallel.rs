@@ -1,0 +1,175 @@
+//! Engine-level equivalence of the scan configurations: the sharded
+//! (multi-worker) and SIMD-dispatched `NativeScanEngine` variants must
+//! emit bit-identical survivor sets and LB distances to the serial
+//! scalar engine on multi-item `ScanRequest`s — the contract that makes
+//! `ScanParallelism` and kernel dispatch pure performance knobs.
+
+use squash::data::profiles::by_name;
+use squash::data::synthetic::generate;
+use squash::osq::simd::Kernels;
+use squash::runtime::backend::{
+    NativeScanEngine, ScanEngine, ScanItem, ScanParallelism, ScanRequest, ScanScratch,
+    MIN_ROWS_PER_SHARD,
+};
+use squash::util::rng::Rng;
+
+/// Run a request through an engine, materializing every emission.
+fn run(
+    engine: &NativeScanEngine,
+    idx: &squash::osq::quantizer::OsqIndex,
+    req: &ScanRequest<'_>,
+    scratch: &mut ScanScratch,
+) -> Vec<(usize, Vec<u32>, Vec<f32>)> {
+    let mut out = Vec::new();
+    engine.scan_batch(idx, req, scratch, &mut |i, s, lb| {
+        out.push((i, s.to_vec(), lb.to_vec()));
+    });
+    out
+}
+
+fn build_fixture() -> (squash::data::Dataset, squash::osq::quantizer::OsqIndex) {
+    // enough rows that full-row items clear the sharding threshold
+    let n = (MIN_ROWS_PER_SHARD * 3).max(3000);
+    let ds = generate(by_name("test").unwrap(), n, 11);
+    let mut rng = Rng::new(7);
+    let idx = squash::osq::quantizer::OsqIndex::build(
+        &ds.vectors,
+        &squash::osq::quantizer::OsqOptions::default(),
+        &mut rng,
+    );
+    (ds, idx)
+}
+
+/// A multi-item request mixing prune on/off, large and small candidate
+/// sets (small ones exercise the sharded engine's serial fallback), and
+/// different keep counts.
+fn build_items<'a>(
+    queries: &'a [Vec<f32>],
+    frames: &'a [Vec<f32>],
+    row_sets: &'a [Vec<u32>],
+) -> Vec<ScanItem<'a>> {
+    let mut items = Vec::new();
+    for (qi, (q, f)) in queries.iter().zip(frames).enumerate() {
+        let rows = &row_sets[qi % row_sets.len()];
+        let keep = match qi % 4 {
+            0 => rows.len() / 10,      // deep cut
+            1 => rows.len() / 2,       // shallow cut
+            2 => rows.len(),           // keep == len: prune short-circuits
+            _ => 37.min(rows.len()),   // tiny keep
+        }
+        .max(1);
+        items.push(ScanItem {
+            q_raw: q,
+            q_frame: f,
+            rows,
+            prune: qi % 3 != 2,
+            keep,
+        });
+    }
+    items
+}
+
+#[test]
+fn sharded_engine_matches_serial_bit_for_bit() {
+    let (ds, idx) = build_fixture();
+    let n = ds.vectors.n();
+    let mut rng = Rng::new(21);
+    let queries: Vec<Vec<f32>> =
+        (0..8).map(|_| ds.vectors.row(rng.gen_range(n)).to_vec()).collect();
+    let frames: Vec<Vec<f32>> = queries.iter().map(|q| idx.query_frame(q)).collect();
+    let row_sets: Vec<Vec<u32>> = vec![
+        (0..n as u32).collect(),                          // all rows (sharded)
+        (0..n as u32).filter(|r| r % 3 != 0).collect(),   // filtered (sharded)
+        (0..600u32).collect(),                            // small (serial fallback)
+    ];
+    let items = build_items(&queries, &frames, &row_sets);
+    let req = ScanRequest { items };
+
+    let serial = NativeScanEngine::new();
+    let mut s_scratch = ScanScratch::new();
+    serial.begin_partition(&idx, &mut s_scratch);
+    let want = run(&serial, &idx, &req, &mut s_scratch);
+
+    for shards in [2usize, 4, 7] {
+        let sharded = NativeScanEngine::with_parallelism(ScanParallelism::Threads(shards));
+        assert_eq!(sharded.shards(), shards);
+        let mut p_scratch = ScanScratch::new();
+        sharded.begin_partition(&idx, &mut p_scratch);
+        // run twice: the second pass reuses the engine's worker-scratch
+        // bank and the caller scratch, which must not change results
+        for pass in 0..2 {
+            let got = run(&sharded, &idx, &req, &mut p_scratch);
+            assert_eq!(got.len(), want.len(), "emission count ({shards} shards)");
+            for ((gi, gs, glb), (wi, ws, wlb)) in got.iter().zip(&want) {
+                assert_eq!(gi, wi, "emission order ({shards} shards, pass {pass})");
+                assert_eq!(gs, ws, "item {gi} survivors ({shards} shards, pass {pass})");
+                assert_eq!(
+                    glb.len(),
+                    wlb.len(),
+                    "item {gi} lb length ({shards} shards, pass {pass})"
+                );
+                for (a, b) in glb.iter().zip(wlb) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "item {gi}: sharded LB not bit-identical ({shards} shards)"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_engine_matches_scalar_engine_on_requests() {
+    let (ds, idx) = build_fixture();
+    let n = ds.vectors.n();
+    let mut rng = Rng::new(33);
+    let queries: Vec<Vec<f32>> =
+        (0..6).map(|_| ds.vectors.row(rng.gen_range(n)).to_vec()).collect();
+    let frames: Vec<Vec<f32>> = queries.iter().map(|q| idx.query_frame(q)).collect();
+    let row_sets: Vec<Vec<u32>> = vec![
+        (0..n as u32).collect(),
+        (0..n as u32).rev().filter(|r| r % 5 != 1).collect(), // unsorted-ish
+        (0..130u32).collect(),                                // lane-tail sizes
+    ];
+    let items = build_items(&queries, &frames, &row_sets);
+    let req = ScanRequest { items };
+
+    let scalar = NativeScanEngine::scalar();
+    let simd = NativeScanEngine::new(); // detected kernels (scalar where none)
+    let mut a_scratch = ScanScratch::new();
+    let mut b_scratch = ScanScratch::new();
+    scalar.begin_partition(&idx, &mut a_scratch);
+    simd.begin_partition(&idx, &mut b_scratch);
+    let want = run(&scalar, &idx, &req, &mut a_scratch);
+    let got = run(&simd, &idx, &req, &mut b_scratch);
+    assert_eq!(got.len(), want.len());
+    for ((gi, gs, glb), (_, ws, wlb)) in got.iter().zip(&want) {
+        assert_eq!(gs, ws, "item {gi} survivors ({} kernels)", simd.kernel_name());
+        for (a, b) in glb.iter().zip(wlb) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "item {gi}: {} LB not bit-identical to scalar",
+                simd.kernel_name()
+            );
+        }
+    }
+}
+
+#[test]
+fn parallelism_knob_resolves_sanely() {
+    assert_eq!(ScanParallelism::Serial.resolve(), 1);
+    assert_eq!(ScanParallelism::Threads(0).resolve(), 1);
+    assert_eq!(ScanParallelism::Threads(6).resolve(), 6);
+    assert!(ScanParallelism::Auto.resolve() >= 1);
+    assert_eq!(ScanParallelism::parse("off"), Some(ScanParallelism::Serial));
+    assert_eq!(ScanParallelism::parse("serial"), Some(ScanParallelism::Serial));
+    assert_eq!(ScanParallelism::parse("auto"), Some(ScanParallelism::Auto));
+    assert_eq!(ScanParallelism::parse("4"), Some(ScanParallelism::Threads(4)));
+    assert_eq!(ScanParallelism::parse("nope"), None);
+    // detected kernels are stable and nameable through the engine
+    assert_eq!(NativeScanEngine::new().kernel_name(), Kernels::detect().name());
+    assert_eq!(NativeScanEngine::scalar().kernel_name(), "scalar");
+}
