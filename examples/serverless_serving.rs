@@ -8,10 +8,11 @@
 //!     cargo run --release --example serverless_serving -- \
 //!         [--profile sift] [--n 100000] [--queries 1000] [--n-qa 84] \
 //!         [--backend auto|native|scalar|xla] [--scan-threads off|auto|N] \
-//!         [--time-scale 1.0] [--gt 200]
+//!         [--qp-shards off|auto|N] [--time-scale 1.0] [--gt 200]
 
 use squash::bench::{measure_squash, Env, EnvOptions};
 use squash::coordinator::tree::TreeConfig;
+use squash::coordinator::QpSharding;
 use squash::runtime::backend::ScanParallelism;
 use squash::data::ground_truth::{exact_batch, mean_recall};
 use squash::util::cli::Args;
@@ -29,6 +30,8 @@ fn main() {
         backend: args.get_or("backend", "auto").to_string(),
         scan_parallelism: ScanParallelism::parse(args.get_or("scan-threads", "off"))
             .expect("--scan-threads must be off|auto|<count>"),
+        qp_sharding: QpSharding::parse(args.get_or("qp-shards", "off"))
+            .expect("--qp-shards must be off|auto|<count>"),
         seed: args.get_u64("seed", 42).unwrap(),
     };
     let n_qa = args.get_usize("n-qa", 84).unwrap();

@@ -6,6 +6,7 @@
 
 use squash::bench::{measure_squash, Env, EnvOptions, RunStats};
 use squash::coordinator::tree::TreeConfig;
+use squash::coordinator::QpSharding;
 
 fn main() {
     println!("=== Figure 10: runtime + cost vs N_QA (SIFT-like, 500 queries) ===\n");
@@ -39,4 +40,32 @@ fn main() {
          340 pays invocation overhead ✓",
         best.0
     );
+
+    // Multi-function QP scatter at the sweet-spot tree: elastic CPU past
+    // a single function's ceiling, bought with S× the QP invocations and
+    // the extra per-shard cold starts — the Fig-10 trade-off, continued
+    // along the within-partition axis.
+    println!("\nmulti-function QP scatter ablation (N_QA = 84):");
+    println!("{}", RunStats::header());
+    env.with_config(|c| c.tree = TreeConfig::for_n_qa(84).unwrap());
+    for (label, sharding) in [
+        ("qp-shards off", QpSharding::Off),
+        ("qp-shards 2", QpSharding::Fixed(2)),
+        ("qp-shards 4", QpSharding::Fixed(4)),
+    ] {
+        env.with_config(|c| {
+            c.qp_shards = sharding;
+            c.qp_shard_min_rows = 1024;
+        });
+        env.platform.reset_containers(); // fresh fleet per configuration
+        let cold = measure_squash(&env, &format!("{label} cold"), 0);
+        let warm = measure_squash(&env, &format!("{label} warm"), 0);
+        println!("{cold}");
+        println!("{warm}");
+        println!(
+            "    qp invocations so far: {} ({} to shard functions)",
+            env.ledger.invocations_qp.load(std::sync::atomic::Ordering::Relaxed),
+            env.ledger.qp_shard_invocations(),
+        );
+    }
 }

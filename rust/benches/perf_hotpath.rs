@@ -13,6 +13,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use squash::attrs::mask::predicate_mask;
+use squash::bench::{Env, EnvOptions};
+use squash::coordinator::QpSharding;
 use squash::attrs::predicate::parse_predicate;
 use squash::attrs::quantize::AttributeIndex;
 use squash::data::profiles::by_name;
@@ -294,6 +296,47 @@ fn main() {
             }
         }
     }
+
+    // 7b. multi-function QP scatter ablation: the full simulated-platform
+    //     batch path (CO → QA → QP), one QP function per partition
+    //     request vs a 3-shard scatter with the QA-side histogram merge.
+    //     time-scale 0: measures real compute + scatter/merge overhead,
+    //     not modeled network sleeps. Bit-identity is asserted before the
+    //     clock starts.
+    println!("\nmulti-function QP scatter (test profile, 6k rows, 24 queries, batch e2e):");
+    let mk_env = |sharding: QpSharding| {
+        let mut env = Env::setup(&EnvOptions {
+            profile: "test",
+            n: 6000,
+            n_queries: 24,
+            time_scale: 0.0,
+            qp_sharding: sharding,
+            ..Default::default()
+        });
+        env.with_config(|c| c.qp_shard_min_rows = 64);
+        env
+    };
+    let env_single = mk_env(QpSharding::Off);
+    let env_sharded = mk_env(QpSharding::Fixed(3));
+    let want = env_single.sys.run_batch(&env_single.queries).results;
+    let got = env_sharded.sys.run_batch(&env_sharded.queries).results;
+    assert_eq!(want, got, "3-shard scatter diverges from the single-QP path");
+    let r_single = bench_fn("qp single-function (24q batch)", T, || {
+        black_box(env_single.sys.run_batch(&env_single.queries).results.len());
+    });
+    println!("{r_single}");
+    json_rows.push(json_row("qp_request_single", &r_single));
+    let r_scatter = bench_fn("qp 3-shard scatter  (24q batch)", T, || {
+        black_box(env_sharded.sys.run_batch(&env_sharded.queries).results.len());
+    });
+    println!("{r_scatter}");
+    json_rows.push(json_row("qp_request_scatter3", &r_scatter));
+    println!(
+        "    scatter vs single: {:.2}x (platform sim at time-scale 0; \
+         invocation overhead is real compute here)",
+        r_single.mean_s / r_scatter.mean_s
+    );
+    speedups.push(("qp_scatter3_vs_single", Json::num(r_single.mean_s / r_scatter.mean_s)));
 
     // machine-readable perf trajectory (tracked across PRs)
     let report = Json::obj(vec![

@@ -36,6 +36,8 @@ pub struct EnvOptions {
     pub backend: String,
     /// row sharding inside each QP scan (native backends)
     pub scan_parallelism: ScanParallelism,
+    /// multi-function QP scatter (coordinator-level row sharding)
+    pub qp_sharding: crate::coordinator::QpSharding,
     pub seed: u64,
 }
 
@@ -49,7 +51,11 @@ impl Default for EnvOptions {
             time_scale: 1.0,
             dre: true,
             backend: "native".to_string(),
-            scan_parallelism: ScanParallelism::Serial,
+            // both knobs honour the CI environment overrides
+            // (SQUASH_SCAN_THREADS / SQUASH_QP_SHARDS) by default
+            scan_parallelism: ScanParallelism::from_env().unwrap_or(ScanParallelism::Serial),
+            qp_sharding: crate::coordinator::QpSharding::from_env()
+                .unwrap_or(crate::coordinator::QpSharding::Off),
             seed: 42,
         }
     }
@@ -83,7 +89,8 @@ impl Env {
         let pjrt_engine = Engine::load_default().ok().map(Arc::new);
         let engine: Arc<dyn ScanEngine> =
             select_engine(&opts.backend, pjrt_engine, profile.d, opts.scan_parallelism);
-        let cfg = SquashConfig::for_profile(profile);
+        let mut cfg = SquashConfig::for_profile(profile);
+        cfg.qp_shards = opts.qp_sharding;
         let sys = SquashSystem::build(
             &ds,
             &BuildOptions::for_profile(profile),

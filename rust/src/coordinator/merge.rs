@@ -1,8 +1,65 @@
 //! MPI-style result reduction (paper §2.4.5): per-partition local top-k
 //! lists are merged into the global top-k by merge-sorting the ascending
-//! result lists.
+//! result lists — plus the histogram-merge step of the multi-function QP
+//! scatter ([`merge_shard_scans`]).
 
-use crate::coordinator::payload::QueryResult;
+use crate::coordinator::payload::{QpShardItemOut, QueryResult};
+use crate::osq::binary::hamming_cutoff;
+
+/// Merge one item's per-shard partial scans into the request-global
+/// survivor/LB lists — the same histogram-merge trick the sharded
+/// `NativeScanEngine` uses in-process, lifted to the function boundary.
+///
+/// For a pruned item: sum the shard histograms into the request-global
+/// Hamming histogram, select the H_perc cutoff from it with the
+/// request-global `keep`, then keep each shard's survivors at distance
+/// ≤ that cutoff, concatenated in shard order. Shards filtered with a
+/// *conservative local* cutoff (same `keep`, fewer rows ⇒ cutoff ≥ the
+/// merged one), so no global survivor is ever missing, and re-filtering
+/// here reproduces exactly the single-scan survivor set in row order.
+/// LB distances are per-candidate, so the kept values are bit-identical.
+///
+/// For an unpruned item the shards returned every row: plain
+/// concatenation.
+pub fn merge_shard_scans(
+    parts: &[&QpShardItemOut],
+    keep: usize,
+    pruned: bool,
+) -> (Vec<u32>, Vec<f32>) {
+    let n_total: usize = parts.iter().map(|p| p.survivors.len()).sum();
+    let mut survivors = Vec::with_capacity(n_total);
+    let mut lb = Vec::with_capacity(n_total);
+    if pruned {
+        let hist_len = parts.iter().map(|p| p.hist.len()).max().unwrap_or(0);
+        if hist_len == 0 {
+            // every shard's slice of this item was empty: nothing to cut
+            return (survivors, lb);
+        }
+        let mut merged = vec![0usize; hist_len];
+        for p in parts {
+            for (total, &c) in merged.iter_mut().zip(&p.hist) {
+                *total += c as usize;
+            }
+        }
+        let cut = hamming_cutoff(&merged, keep.max(1)) as u32;
+        for p in parts {
+            debug_assert_eq!(p.survivors.len(), p.hamming.len());
+            debug_assert_eq!(p.survivors.len(), p.lb.len());
+            for (k, &h) in p.hamming.iter().enumerate() {
+                if h <= cut {
+                    survivors.push(p.survivors[k]);
+                    lb.push(p.lb[k]);
+                }
+            }
+        }
+    } else {
+        for p in parts {
+            survivors.extend_from_slice(&p.survivors);
+            lb.extend_from_slice(&p.lb);
+        }
+    }
+    (survivors, lb)
+}
 
 /// Merge any number of ascending (id, distance) lists into the global
 /// ascending top-k. Deterministic tie-break on id.
@@ -79,6 +136,52 @@ mod tests {
         let a = vec![(7u64, 0.5f32)];
         let b = vec![(3u64, 0.5f32)];
         assert_eq!(merge_topk(&[a, b], 2), vec![(3, 0.5), (7, 0.5)]);
+    }
+
+    #[test]
+    fn shard_scan_merge_applies_global_cutoff() {
+        // shard A kept rows up to its local cutoff 2, shard B up to 3;
+        // merged histogram says the global cut for keep=3 is 1
+        let a = QpShardItemOut {
+            hist: vec![1, 1, 1, 0],
+            survivors: vec![0, 1, 2],
+            hamming: vec![1, 0, 2],
+            lb: vec![0.1, 0.2, 0.3],
+        };
+        let b = QpShardItemOut {
+            hist: vec![1, 1, 0, 1],
+            survivors: vec![10, 11, 12],
+            hamming: vec![0, 3, 1],
+            lb: vec![0.4, 0.5, 0.6],
+        };
+        let (surv, lb) = merge_shard_scans(&[&a, &b], 3, true);
+        // cut = 1: rows at hamming ≤ 1 in shard order, row order preserved
+        assert_eq!(surv, vec![0, 1, 10, 12]);
+        assert_eq!(lb, vec![0.1, 0.2, 0.4, 0.6]);
+        // keep beyond the total row count keeps everything
+        let (surv, _) = merge_shard_scans(&[&a, &b], 100, true);
+        assert_eq!(surv, vec![0, 1, 2, 10, 11, 12]);
+    }
+
+    #[test]
+    fn shard_scan_merge_unpruned_concatenates() {
+        let a = QpShardItemOut {
+            hist: vec![],
+            survivors: vec![5, 6],
+            hamming: vec![],
+            lb: vec![1.0, 2.0],
+        };
+        let b = QpShardItemOut {
+            hist: vec![],
+            survivors: vec![7],
+            hamming: vec![],
+            lb: vec![3.0],
+        };
+        let (surv, lb) = merge_shard_scans(&[&a, &b], 1, false);
+        assert_eq!(surv, vec![5, 6, 7]);
+        assert_eq!(lb, vec![1.0, 2.0, 3.0]);
+        let (surv, lb) = merge_shard_scans(&[], 1, true);
+        assert!(surv.is_empty() && lb.is_empty());
     }
 
     #[test]

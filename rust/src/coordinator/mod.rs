@@ -11,6 +11,30 @@
 //! hot-spot math runs through the batched `runtime::backend::ScanEngine`
 //! (XLA artifacts or native), one `ScanRequest` + reusable `ScanScratch`
 //! per QP invocation.
+//!
+//! # Multi-function QP scatter/merge
+//!
+//! One partition's scan is normally one QP invocation, capped by a
+//! single function's vCPU ceiling. With [`QpSharding`] enabled, a QA
+//! whose `QpRequest` covers more than `qp_shard_min_rows` candidate rows
+//! *scatters* it over S separate QP shard functions
+//! (`squash-processor-{p}-shard-{s}of{S}` — each with its own container
+//! pool, cold/warm lifecycle, DRE-retained index copy, and payload
+//! billing under `Role::QpShard`), shard s receiving the s-th contiguous
+//! slice of every item's candidate rows plus the request-global
+//! `(prune, keep)` decision. Each shard runs the partial-scan pipeline
+//! (`ScanEngine::scan_batch_partial`): Hamming scan + histogram over its
+//! rows, a *conservative* shard-local H_perc cut (same `keep`, fewer
+//! rows ⇒ cutoff ≥ the global one), and LB distances for its survivors.
+//! The QA then merges the per-shard histograms into the request-global
+//! histogram **before** applying the H_perc cutoff
+//! (`merge::merge_shard_scans`) — the same histogram-merge trick the
+//! sharded `NativeScanEngine` uses in-process, lifted to the function
+//! boundary — so the merged survivor set, shortlists and refined results
+//! are bit-identical to the single-QP path (shards concatenate in row
+//! order; LB distances are per-candidate). The shortlist + refinement
+//! stage after the merge runs QA-side through the exact same code the QP
+//! handler uses; its modeled EFS latency is billed to the QA role.
 
 pub mod merge;
 pub mod payload;
@@ -37,6 +61,51 @@ use crate::storage::{index_files, FileStore, ObjectStore, SimParams};
 use crate::util::rng::Rng;
 use crate::util::ser::{Reader, SerError, Writer};
 use crate::util::timer::Stopwatch;
+
+/// Multi-function QP scatter: how many QP *functions* split one
+/// partition's request (see the module docs). Distinct from
+/// `runtime::backend::ScanParallelism`, which shards rows across worker
+/// threads *inside* one function — the two compose.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QpSharding {
+    /// One QP function per partition request (the classic path).
+    #[default]
+    Off,
+    /// Scale the shard count with the request's candidate row count:
+    /// one shard per `qp_shard_min_rows` rows, capped at 8 functions.
+    Auto,
+    /// A fixed shard-function count.
+    Fixed(usize),
+}
+
+impl QpSharding {
+    /// Parse a CLI value: "off" | "auto" | a shard count.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" | "1" | "" => Some(QpSharding::Off),
+            "auto" => Some(QpSharding::Auto),
+            n => n.parse::<usize>().ok().map(QpSharding::Fixed),
+        }
+    }
+
+    /// Sharding from the `SQUASH_QP_SHARDS` environment variable — the
+    /// CI knob that runs the whole test suite through the scatter path
+    /// (results are bit-identical, so forcing it globally is safe).
+    /// `None` when unset or unparsable.
+    pub fn from_env() -> Option<Self> {
+        std::env::var("SQUASH_QP_SHARDS").ok().and_then(|v| Self::parse(&v))
+    }
+
+    /// Resolved shard-function count (≥ 1) for a request covering
+    /// `total_rows` candidate rows.
+    pub fn resolve(&self, total_rows: usize, min_rows: usize) -> usize {
+        match self {
+            QpSharding::Off => 1,
+            QpSharding::Fixed(n) => (*n).max(1),
+            QpSharding::Auto => (total_rows / min_rows.max(1)).clamp(1, 8),
+        }
+    }
+}
 
 /// Query-path configuration (paper §5.3 operating point by default).
 #[derive(Clone, Debug)]
@@ -65,6 +134,13 @@ pub struct SquashConfig {
     /// T-threshold condition). 1 = the paper's literal L7; >1 trades a few
     /// extra visits for recall robustness under highly selective filters.
     pub gather_factor: usize,
+    /// multi-function QP scatter (Off = one QP per partition request)
+    pub qp_shards: QpSharding,
+    /// minimum candidate rows in a partition request before it is
+    /// scattered across shard functions (scatter overhead — extra
+    /// invocations, S payload copies, QA-side merge — only pays off on
+    /// large scans); overridable via `SQUASH_QP_SHARD_MIN_ROWS`
+    pub qp_shard_min_rows: usize,
 }
 
 impl Default for SquashConfig {
@@ -81,6 +157,11 @@ impl Default for SquashConfig {
             rebalance: false,
             use_cache: false,
             gather_factor: 3,
+            qp_shards: QpSharding::from_env().unwrap_or(QpSharding::Off),
+            qp_shard_min_rows: std::env::var("SQUASH_QP_SHARD_MIN_ROWS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(8192),
         }
     }
 }

@@ -275,6 +275,127 @@ impl QpResponse {
     }
 }
 
+// ---------------------------------------------------------------------
+// QP shard request / response (multi-function scatter)
+// ---------------------------------------------------------------------
+
+/// One query's slice of a *sharded* partition scan: this shard's
+/// contiguous range of the item's candidate rows, plus the scan decision
+/// the QA made from the FULL candidate set (`prune`, `keep`) — a shard
+/// must never re-derive them from its own sub-range.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QpShardItem {
+    /// global query index (response correlation / diagnostics)
+    pub query_idx: usize,
+    pub vector: Vec<f32>,
+    /// this shard's contiguous slice of the item's filter-passing rows
+    pub rows: Vec<u32>,
+    /// request-global pruning decision
+    pub prune: bool,
+    /// request-global H_perc keep count (over ALL the item's rows)
+    pub keep: usize,
+}
+
+/// Request to one QP shard function (`squash-processor-{p}-shard-{s}of{S}`):
+/// the s-th row-range slice of every item of a partition's `QpRequest`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QpShardRequest {
+    pub partition: usize,
+    /// shard index in `0..n_shards`
+    pub shard: usize,
+    pub n_shards: usize,
+    pub items: Vec<QpShardItem>,
+}
+
+impl QpShardRequest {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.usize(self.partition);
+        w.usize(self.shard);
+        w.usize(self.n_shards);
+        w.usize(self.items.len());
+        for it in &self.items {
+            w.usize(it.query_idx);
+            w.f32_slice(&it.vector);
+            w.u32_slice(&it.rows);
+            w.u8(it.prune as u8);
+            w.usize(it.keep);
+        }
+        w.into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, SerError> {
+        let mut r = Reader::new(bytes);
+        let partition = r.usize()?;
+        let shard = r.usize()?;
+        let n_shards = r.usize()?;
+        let n = r.usize()?;
+        let mut items = Vec::with_capacity(n);
+        for _ in 0..n {
+            items.push(QpShardItem {
+                query_idx: r.usize()?,
+                vector: r.f32_vec()?,
+                rows: r.u32_vec()?,
+                prune: r.u8()? != 0,
+                keep: r.usize()?,
+            });
+        }
+        Ok(Self { partition, shard, n_shards, items })
+    }
+}
+
+/// One item's partial scan result from a shard (see
+/// `runtime::backend::PartialScan`): the shard-local Hamming histogram
+/// plus the conservative survivor set with per-survivor Hamming and LB
+/// distances. The QA merges histograms across shards, re-applies the
+/// request-global cutoff, and concatenates survivors in shard order
+/// (= row order).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QpShardItemOut {
+    /// d + 2 Hamming buckets over the shard's rows; empty when unpruned
+    pub hist: Vec<u32>,
+    pub survivors: Vec<u32>,
+    /// parallel to `survivors`; empty when unpruned
+    pub hamming: Vec<u32>,
+    /// parallel to `survivors`
+    pub lb: Vec<f32>,
+}
+
+/// Response from a QP shard function, items in request order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QpShardResponse {
+    pub items: Vec<QpShardItemOut>,
+}
+
+impl QpShardResponse {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.usize(self.items.len());
+        for it in &self.items {
+            w.u32_slice(&it.hist);
+            w.u32_slice(&it.survivors);
+            w.u32_slice(&it.hamming);
+            w.f32_slice(&it.lb);
+        }
+        w.into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, SerError> {
+        let mut r = Reader::new(bytes);
+        let n = r.usize()?;
+        let mut items = Vec::with_capacity(n);
+        for _ in 0..n {
+            items.push(QpShardItemOut {
+                hist: r.u32_vec()?,
+                survivors: r.u32_vec()?,
+                hamming: r.u32_vec()?,
+                lb: r.f32_vec()?,
+            });
+        }
+        Ok(Self { items })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -339,6 +460,44 @@ mod tests {
         assert_eq!(QpRequest::from_bytes(&req.to_bytes()).unwrap(), req);
         let resp = QpResponse { results: vec![(11, vec![(100, 0.25)])] };
         assert_eq!(QpResponse::from_bytes(&resp.to_bytes()).unwrap(), resp);
+    }
+
+    #[test]
+    fn qp_shard_roundtrip() {
+        let req = QpShardRequest {
+            partition: 2,
+            shard: 1,
+            n_shards: 3,
+            items: vec![
+                QpShardItem {
+                    query_idx: 4,
+                    vector: vec![0.5, -1.5],
+                    rows: vec![10, 11, 12],
+                    prune: true,
+                    keep: 7,
+                },
+                QpShardItem {
+                    query_idx: 5,
+                    vector: vec![2.0, 3.0],
+                    rows: vec![],
+                    prune: false,
+                    keep: 1,
+                },
+            ],
+        };
+        assert_eq!(QpShardRequest::from_bytes(&req.to_bytes()).unwrap(), req);
+        let resp = QpShardResponse {
+            items: vec![
+                QpShardItemOut {
+                    hist: vec![0, 2, 1],
+                    survivors: vec![10, 12],
+                    hamming: vec![1, 1],
+                    lb: vec![0.25, 0.75],
+                },
+                QpShardItemOut::default(),
+            ],
+        };
+        assert_eq!(QpShardResponse::from_bytes(&resp.to_bytes()).unwrap(), resp);
     }
 
     #[test]

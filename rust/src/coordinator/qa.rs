@@ -17,16 +17,17 @@ use std::sync::Arc;
 
 use crate::attrs::mask::predicate_mask;
 use crate::attrs::quantize::AttributeIndex;
-use crate::coordinator::merge::merge_topk;
+use crate::coordinator::merge::{merge_shard_scans, merge_topk};
 use crate::coordinator::payload::{
-    QaRequest, QaResponse, QpItem, QpRequest, QpResponse, QueryResult,
+    QaRequest, QaResponse, QpItem, QpRequest, QpResponse, QpShardItem, QpShardItemOut,
+    QpShardRequest, QpShardResponse, QueryResult,
 };
 use crate::coordinator::{qp, SystemCtx};
 use crate::cost::Role;
 use crate::data::workload::Query;
 use crate::partition::selection::{rebalance_batch, select_partitions};
 use crate::partition::PartitionLayout;
-use crate::storage::index_files;
+use crate::storage::{index_files, take_modeled_extra};
 use crate::util::bitmap::Bitmap;
 
 /// Invoke one QA function synchronously (used by the CO and by parent
@@ -154,7 +155,7 @@ fn process_own_queries(
                 .map(|qp_req| {
                     let ctx = ctx.clone();
                     let req = qp_req.clone();
-                    scope.spawn(move || qp::invoke_qp(&ctx, req))
+                    scope.spawn(move || dispatch_qp(&ctx, layout, req))
                 })
                 .collect();
             // overlap: prepare the next sub-batch while QPs run
@@ -210,6 +211,134 @@ fn prepare_batch(
     }
 }
 
+/// Route one partition request: scatter across QP shard functions when
+/// the candidate row count clears the threshold and sharding is on,
+/// else the classic single-QP invocation.
+fn dispatch_qp(ctx: &Arc<SystemCtx>, layout: &PartitionLayout, req: QpRequest) -> QpResponse {
+    let total_rows: usize = req.items.iter().map(|it| it.local_rows.len()).sum();
+    let shards = ctx.cfg.qp_shards.resolve(total_rows, ctx.cfg.qp_shard_min_rows);
+    if shards <= 1 || total_rows <= ctx.cfg.qp_shard_min_rows {
+        return qp::invoke_qp(ctx, req);
+    }
+    // Payload-cap guard: grow S until every shard request AND its
+    // worst-case response fit under the synchronous-invocation cap (any
+    // S is bit-identical, so this is purely a feasibility adjustment).
+    // When the row-independent framing alone cannot fit, fall back to
+    // `invoke_qp`'s item-wave split.
+    match cap_bounded_shards(ctx.platform.config.max_payload_bytes, ctx.d, &req.items, shards) {
+        Some(shards) => scatter_qp(ctx, layout, req, shards),
+        None => qp::invoke_qp(ctx, req),
+    }
+}
+
+/// Smallest shard count ≥ `requested` whose per-shard `QpShardRequest`
+/// and worst-case `QpShardResponse` both encode under `cap` bytes, or
+/// `None` when the row-independent framing (query vectors, histograms,
+/// length prefixes) alone exceeds the cap — sharding cannot shrink
+/// those, so the caller must item-split instead. The size model mirrors
+/// the payload encoders exactly, with +1-row slack per item for
+/// ceil-rounded chunking; the response bound assumes every row survives
+/// the conservative shard-local cut (12 bytes each: row + hamming + lb).
+fn cap_bounded_shards(cap: usize, d: usize, items: &[QpItem], requested: usize) -> Option<usize> {
+    let total_rows: usize = items.iter().map(|it| it.local_rows.len()).sum();
+    // request: 32-byte header; per item 33 + 4·|vector| framing + rows
+    let req_fixed: usize =
+        32 + items.iter().map(|it| 33 + 4 * it.vector.len() + 4).sum::<usize>();
+    // response: 8-byte header; per item the histogram (d + 2 u32s) and
+    // three length-prefixed per-survivor slices
+    let resp_fixed: usize = 8 + items.len() * (32 + 4 * (d + 2) + 12);
+    if req_fixed >= cap || resp_fixed >= cap {
+        return None;
+    }
+    let need_req = (4 * total_rows).div_ceil(cap - req_fixed);
+    let need_resp = (12 * total_rows).div_ceil(cap - resp_fixed);
+    Some(requested.max(need_req).max(need_resp).max(1))
+}
+
+/// Multi-function QP scatter/merge (see the `coordinator` module docs):
+/// split every item's candidate rows into `shards` contiguous ranges,
+/// invoke one QP shard function per range concurrently, merge the
+/// per-shard Hamming histograms *before* applying the request-global
+/// H_perc cutoff, then run the exact single-QP shortlist + refinement
+/// code over the merged survivors — bit-identical results, elastic CPU.
+fn scatter_qp(
+    ctx: &Arc<SystemCtx>,
+    layout: &PartitionLayout,
+    req: QpRequest,
+    shards: usize,
+) -> QpResponse {
+    // the scan decision (prune? keep how many?) comes from the FULL
+    // candidate set — a shard must never re-derive it from its sub-range
+    let plans: Vec<(bool, usize)> = req
+        .items
+        .iter()
+        .map(|it| {
+            let (prune, keep) = qp::scan_plan(&ctx.cfg, it.local_rows.len(), it.k);
+            // keep == all rows: the cut is a no-op; skip the Hamming pass
+            (prune && keep < it.local_rows.len(), keep)
+        })
+        .collect();
+
+    let shard_reqs: Vec<QpShardRequest> = (0..shards)
+        .map(|shard| QpShardRequest {
+            partition: req.partition,
+            shard,
+            n_shards: shards,
+            items: req
+                .items
+                .iter()
+                .zip(&plans)
+                .map(|(it, &(prune, keep))| {
+                    // same contiguous chunking for every shard index, so
+                    // concatenating shard survivors reproduces row order
+                    let chunk = it.local_rows.len().div_ceil(shards);
+                    let lo = (shard * chunk).min(it.local_rows.len());
+                    let hi = ((shard + 1) * chunk).min(it.local_rows.len());
+                    QpShardItem {
+                        query_idx: it.query_idx,
+                        vector: it.vector.clone(),
+                        rows: it.local_rows[lo..hi].to_vec(),
+                        prune,
+                        keep,
+                    }
+                })
+                .collect(),
+        })
+        .collect();
+
+    // scatter: one synchronous invocation per shard, concurrently
+    let responses: Vec<QpShardResponse> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shard_reqs
+            .into_iter()
+            .map(|sr| {
+                let ctx = ctx.clone();
+                scope.spawn(move || qp::invoke_qp_shard(&ctx, sr))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("qp shard thread")).collect()
+    });
+
+    // merge: request-global histogram cutoff per item, then the SAME
+    // shortlist + refinement path as the single-QP handler
+    let globals = &layout.globals[req.partition];
+    let mut shortlists: Vec<(usize, QueryResult)> = Vec::with_capacity(req.items.len());
+    for (i, (item, &(pruned, keep))) in req.items.iter().zip(&plans).enumerate() {
+        let parts: Vec<&QpShardItemOut> = responses.iter().map(|r| &r.items[i]).collect();
+        let (survivors, lb) = merge_shard_scans(&parts, keep, pruned);
+        shortlists.push((i, qp::lb_shortlist(&ctx.cfg, item, globals, &survivors, &lb)));
+    }
+    let results = qp::finalize_results(ctx, &req, shortlists);
+
+    // The merge + refinement ran QA-side, outside any invocation wrapper:
+    // bill its modeled (unslept) I/O latency — the coalesced EFS read —
+    // to this QA, mirroring how the single-QP path bills it into the QP.
+    let extra = take_modeled_extra();
+    if extra > 0.0 {
+        ctx.ledger.record_runtime(Role::QueryAllocator, ctx.platform.config.memory_qa_mb, extra);
+    }
+    QpResponse { results }
+}
+
 /// Merge-sort reduce of per-partition results (§2.4.5).
 fn reduce_batch(batch: &PreparedBatch, partials: Vec<QpResponse>) -> Vec<(usize, QueryResult)> {
     let mut per_query: std::collections::HashMap<usize, Vec<QueryResult>> =
@@ -229,4 +358,41 @@ fn reduce_batch(batch: &PreparedBatch, partials: Vec<QpResponse>) -> Vec<(usize,
         .collect();
     out.sort_by_key(|&(qi, _)| qi);
     out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(rows: usize, d: usize) -> QpItem {
+        QpItem {
+            query_idx: 0,
+            vector: vec![0.0; d],
+            local_rows: (0..rows as u32).collect(),
+            k: 10,
+        }
+    }
+
+    #[test]
+    fn cap_guard_grows_shards_to_fit() {
+        let items = vec![item(4096, 16)];
+        // generous cap: the requested count passes through unchanged
+        assert_eq!(cap_bounded_shards(6 * 1024 * 1024, 16, &items, 3), Some(3));
+        // tight cap: the worst-case response (12 B/row) forces more shards
+        let s = cap_bounded_shards(8 * 1024, 16, &items, 2).unwrap();
+        assert!(s > 2, "8 KB cap must force more than 2 shards, got {s}");
+        // with that S, the modeled per-shard payloads really fit
+        let rows_per_shard = 4096usize.div_ceil(s);
+        assert!(32 + 33 + 4 * 16 + 4 * rows_per_shard <= 8 * 1024, "request over cap");
+        assert!(8 + 32 + 4 * 18 + 12 * rows_per_shard <= 8 * 1024, "response over cap");
+    }
+
+    #[test]
+    fn cap_guard_refuses_when_framing_alone_overflows() {
+        // 200 items: per-item framing (vector + prefixes) exceeds a 4 KB
+        // cap before any rows are counted — sharding can't help, the
+        // dispatcher must fall back to invoke_qp's item-wave split
+        let many: Vec<QpItem> = (0..200).map(|_| item(1, 16)).collect();
+        assert_eq!(cap_bounded_shards(4 * 1024, 16, &many, 2), None);
+    }
 }

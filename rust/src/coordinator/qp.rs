@@ -27,22 +27,143 @@
 //! boundaries) is valid for the whole request. When the configured
 //! engine is a sharded `NativeScanEngine` (`ScanParallelism`), the scan
 //! additionally fans each item's candidate rows across the QP's vCPUs.
+//!
+//! Two more entry points live here beside the classic handler:
+//! * [`invoke_qp`] transparently splits a request whose encoding
+//!   exceeds the synchronous-invocation payload cap into item waves;
+//! * [`qp_shard_handler`] is the *shard* function body of the
+//!   multi-function QP scatter (`squash-processor-{p}-shard-{s}of{S}`,
+//!   `Role::QpShard`): the partial-scan pipeline over one row range,
+//!   returning histograms + conservative survivors for the QA-side
+//!   merge (see the `coordinator` module docs).
 
 use std::sync::Arc;
 
-use crate::coordinator::payload::{QpRequest, QpResponse, QueryResult};
-use crate::coordinator::{PartitionFile, SystemCtx};
+use crate::coordinator::payload::{
+    QpItem, QpRequest, QpResponse, QpShardItemOut, QpShardRequest, QpShardResponse, QueryResult,
+};
+use crate::coordinator::{PartitionFile, SquashConfig, SystemCtx};
 use crate::cost::Role;
 use crate::osq::distance::top_k_smallest;
 use crate::runtime::backend::{ScanItem, ScanRequest, ScanScratch};
 use crate::storage::index_files;
 use crate::util::matrix::l2_sq;
 
-/// Invoke the QP for one partition synchronously.
+/// The request-global scan decision for one item: whether the low-bit
+/// Hamming cut applies and how many candidates it keeps. Shared by the
+/// single-QP handler and the QA's scatter planner so a scattered request
+/// makes exactly the decision the whole-request scan would have made.
+pub(crate) fn scan_plan(cfg: &SquashConfig, n_rows: usize, k: usize) -> (bool, usize) {
+    // Pruning pays off when the filter left many candidates ("this is
+    // particularly important when the filter predicate is not highly
+    // restrictive"); tiny candidate sets go straight to the LB scan.
+    let prune_floor = (4 * k * cfg.refine_ratio).max(64);
+    // keep H_perc of candidates but never fewer than R·k (the
+    // refinement budget must stay fillable)
+    let keep = ((n_rows as f64 * cfg.h_keep).ceil() as usize)
+        .max(k * cfg.refine_ratio)
+        .min(n_rows);
+    (cfg.prune && n_rows > prune_floor, keep)
+}
+
+/// One item's LB shortlist (global ids, ascending LB distance): the
+/// R·k-candidate refinement input. Shared by the single-QP handler and
+/// the QA-side scatter merge — both must rank identically.
+pub(crate) fn lb_shortlist(
+    cfg: &SquashConfig,
+    item: &QpItem,
+    globals: &[u64],
+    survivors: &[u32],
+    lb: &[f32],
+) -> QueryResult {
+    let shortlist_len = (item.k * cfg.refine_ratio).max(item.k);
+    top_k_smallest(
+        lb.iter().enumerate().map(|(s, &d)| (globals[survivors[s] as usize], d)),
+        shortlist_len.min(survivors.len()),
+    )
+}
+
+/// Turn per-item shortlists into final per-query results: post-refine on
+/// full-precision vectors when configured, else truncate the LB ordering
+/// to k. Shared by the single-QP handler and the QA-side scatter merge.
+pub(crate) fn finalize_results(
+    ctx: &Arc<SystemCtx>,
+    req: &QpRequest,
+    shortlists: Vec<(usize, QueryResult)>,
+) -> Vec<(usize, QueryResult)> {
+    if ctx.cfg.refine {
+        refine_request(ctx, req, shortlists)
+    } else {
+        shortlists
+            .into_iter()
+            .map(|(i, mut s)| {
+                let item = &req.items[i];
+                s.truncate(item.k);
+                (item.query_idx, s)
+            })
+            .collect()
+    }
+}
+
+/// Encoded size of a `QpRequest` header / item (see
+/// `QpRequest::to_bytes`: u64 length prefixes + 4-byte elements).
+const QP_REQ_HEADER_BYTES: usize = 16;
+fn encoded_item_bytes(it: &QpItem) -> usize {
+    8 + (8 + 4 * it.vector.len()) + (8 + 4 * it.local_rows.len()) + 8
+}
+
+/// Invoke the QP for one partition synchronously. A request whose
+/// encoding exceeds the synchronous-invocation payload cap is split into
+/// item waves, each invoked separately (items are independent — each
+/// appears in exactly one wave, so concatenating the responses is
+/// exact). A *single item* that alone exceeds the cap cannot be
+/// item-split and panics with advice to enable `--qp-shards`, which
+/// slices requests along the row axis instead.
 pub fn invoke_qp(ctx: &Arc<SystemCtx>, req: QpRequest) -> QpResponse {
+    let cap = ctx.platform.config.max_payload_bytes;
+    // size from the model, not a throwaway serialization: an over-cap
+    // request would otherwise be encoded (> cap bytes) only to be
+    // discarded and re-encoded per wave
+    let total_bytes =
+        QP_REQ_HEADER_BYTES + req.items.iter().map(encoded_item_bytes).sum::<usize>();
+    if total_bytes <= cap {
+        let bytes = req.to_bytes();
+        debug_assert_eq!(bytes.len(), total_bytes, "QpRequest size model out of sync");
+        return invoke_qp_encoded(ctx, &req, bytes);
+    }
+    let partition = req.partition;
+    let mut results = Vec::with_capacity(req.items.len());
+    let mut wave: Vec<QpItem> = Vec::new();
+    let mut wave_bytes = QP_REQ_HEADER_BYTES;
+    for item in req.items {
+        let item_bytes = encoded_item_bytes(&item);
+        assert!(
+            QP_REQ_HEADER_BYTES + item_bytes <= cap,
+            "query {} alone exceeds the {cap}-byte QP payload cap ({} candidate rows); \
+             enable --qp-shards to split the request along the row axis",
+            item.query_idx,
+            item.local_rows.len(),
+        );
+        if wave_bytes + item_bytes > cap {
+            let wave_req = QpRequest { partition, items: std::mem::take(&mut wave) };
+            let bytes = wave_req.to_bytes();
+            results.extend(invoke_qp_encoded(ctx, &wave_req, bytes).results);
+            wave_bytes = QP_REQ_HEADER_BYTES;
+        }
+        wave_bytes += item_bytes;
+        wave.push(item);
+    }
+    if !wave.is_empty() {
+        let wave_req = QpRequest { partition, items: wave };
+        let bytes = wave_req.to_bytes();
+        results.extend(invoke_qp_encoded(ctx, &wave_req, bytes).results);
+    }
+    QpResponse { results }
+}
+
+fn invoke_qp_encoded(ctx: &Arc<SystemCtx>, req: &QpRequest, bytes: Vec<u8>) -> QpResponse {
     let function = format!("squash-processor-{}", req.partition);
     let ctx2 = ctx.clone();
-    let bytes = req.to_bytes();
     let out = ctx
         .platform
         .invoke(&function, Role::QueryProcessor, &bytes, move |ictx, payload| {
@@ -51,6 +172,70 @@ pub fn invoke_qp(ctx: &Arc<SystemCtx>, req: QpRequest) -> QpResponse {
         })
         .expect("qp invocation");
     QpResponse::from_bytes(&out).expect("qp response decode")
+}
+
+/// Invoke one QP *shard* function synchronously (multi-function scatter;
+/// see the module docs in `coordinator`). Every (partition, shard, S)
+/// triple is its own function — own container pool, own DRE-retained
+/// index copy, own cold/warm lifecycle — billed under `Role::QpShard`.
+pub fn invoke_qp_shard(ctx: &Arc<SystemCtx>, req: QpShardRequest) -> QpShardResponse {
+    let function =
+        format!("squash-processor-{}-shard-{}of{}", req.partition, req.shard, req.n_shards);
+    let ctx2 = ctx.clone();
+    let bytes = req.to_bytes();
+    let out = ctx
+        .platform
+        .invoke(&function, Role::QpShard, &bytes, move |ictx, payload| {
+            let req = QpShardRequest::from_bytes(payload).expect("qp shard request decode");
+            qp_shard_handler(&ctx2, ictx, req).to_bytes()
+        })
+        .expect("qp shard invocation");
+    QpShardResponse::from_bytes(&out).expect("qp shard response decode")
+}
+
+/// The QP shard function body: the partial-scan pipeline over this
+/// shard's row ranges. No shortlist, no refinement — those need the
+/// request-global survivor set, which only exists after the QA merges
+/// the shard histograms.
+pub fn qp_shard_handler(
+    ctx: &Arc<SystemCtx>,
+    ictx: &mut crate::faas::InvocationCtx,
+    req: QpShardRequest,
+) -> QpShardResponse {
+    let file = load_partition(ctx, ictx, req.partition);
+    let idx = &file.index;
+
+    let frames: Vec<Vec<f32>> = req
+        .items
+        .iter()
+        .map(|it| if it.rows.is_empty() { Vec::new() } else { idx.query_frame(&it.vector) })
+        .collect();
+    let items: Vec<ScanItem<'_>> = req
+        .items
+        .iter()
+        .zip(&frames)
+        .map(|(it, qf)| ScanItem {
+            q_raw: &it.vector,
+            q_frame: qf,
+            rows: &it.rows,
+            prune: it.prune,
+            keep: it.keep,
+        })
+        .collect();
+    let scan_req = ScanRequest { items };
+
+    let mut scratch = ScanScratch::new();
+    ctx.engine.begin_partition(idx, &mut scratch);
+    let mut out = Vec::with_capacity(req.items.len());
+    ctx.engine.scan_batch_partial(idx, &scan_req, &mut scratch, &mut |_, p| {
+        out.push(QpShardItemOut {
+            hist: p.hist.iter().map(|&c| c as u32).collect(),
+            survivors: p.survivors.to_vec(),
+            hamming: p.hamming.to_vec(),
+            lb: p.lb.to_vec(),
+        });
+    });
+    QpShardResponse { items: out }
 }
 
 /// The QP function body.
@@ -80,22 +265,8 @@ pub fn qp_handler(
 
     let mut items = Vec::with_capacity(req.items.len());
     for (it, qf) in req.items.iter().zip(&frames) {
-        // Pruning pays off when the filter left many candidates ("this is
-        // particularly important when the filter predicate is not highly
-        // restrictive"); tiny candidate sets go straight to the LB scan.
-        let prune_floor = (4 * it.k * ctx.cfg.refine_ratio).max(64);
-        // keep H_perc of candidates but never fewer than R·k (the
-        // refinement budget must stay fillable)
-        let keep = ((it.local_rows.len() as f64 * ctx.cfg.h_keep).ceil() as usize)
-            .max(it.k * ctx.cfg.refine_ratio)
-            .min(it.local_rows.len());
-        items.push(ScanItem {
-            q_raw: &it.vector,
-            q_frame: qf,
-            rows: &it.local_rows,
-            prune: ctx.cfg.prune && it.local_rows.len() > prune_floor,
-            keep,
-        });
+        let (prune, keep) = scan_plan(&ctx.cfg, it.local_rows.len(), it.k);
+        items.push(ScanItem { q_raw: &it.vector, q_frame: qf, rows: &it.local_rows, prune, keep });
     }
     let scan_req = ScanRequest { items };
 
@@ -106,31 +277,11 @@ pub fn qp_handler(
     // the whole request's EFS reads coalesce into one batched call.
     let mut shortlists: Vec<(usize, QueryResult)> = Vec::with_capacity(req.items.len());
     ctx.engine.scan_batch(idx, &scan_req, &mut scratch, &mut |i, survivors, lb| {
-        let item = &req.items[i];
-        let shortlist_len = (item.k * ctx.cfg.refine_ratio).max(item.k);
-        let shortlist = top_k_smallest(
-            lb.iter()
-                .enumerate()
-                .map(|(s, &d)| (file.globals[survivors[s] as usize], d)),
-            shortlist_len.min(survivors.len()),
-        );
-        shortlists.push((i, shortlist));
+        shortlists.push((i, lb_shortlist(&ctx.cfg, &req.items[i], &file.globals, survivors, lb)));
     });
 
     // ---- optional post-refinement (§2.4.5), request-wide ---------------
-    let results = if ctx.cfg.refine {
-        refine_request(ctx, &req, shortlists)
-    } else {
-        shortlists
-            .into_iter()
-            .map(|(i, mut s)| {
-                let item = &req.items[i];
-                s.truncate(item.k);
-                (item.query_idx, s)
-            })
-            .collect()
-    };
-    QpResponse { results }
+    QpResponse { results: finalize_results(ctx, &req, shortlists) }
 }
 
 /// Load the partition index bundle, preferring retained data (DRE).

@@ -1,7 +1,9 @@
 //! Lightweight result cache (paper §3.2 / §5.6): saves results of
 //! earlier queries and short-circuits repeated requests. Disabled by
 //! default; enabled only for the Table-3 caching comparison against
-//! Vexless, exactly as in the paper.
+//! Vexless, exactly as in the paper. Optionally capacity-bounded with
+//! least-recently-used eviction ([`ResultCache::with_capacity`]) — a
+//! long-running deployment cannot grow the retained map without bound.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -20,31 +22,86 @@ fn query_key(q: &Query) -> u64 {
     h
 }
 
-/// Thread-safe exact-match result cache.
-#[derive(Default)]
+struct Entry {
+    result: QueryResult,
+    /// logical clock value of the last touch (get or insert)
+    last_used: AtomicU64,
+}
+
+/// Thread-safe exact-match result cache with optional LRU bound.
 pub struct ResultCache {
-    map: RwLock<HashMap<u64, QueryResult>>,
+    map: RwLock<HashMap<u64, Entry>>,
+    /// monotone logical clock driving LRU recency
+    tick: AtomicU64,
+    capacity: usize,
     pub hits: AtomicU64,
     pub misses: AtomicU64,
 }
 
+impl Default for ResultCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl ResultCache {
+    /// Unbounded cache (the paper's Table-3 protocol).
     pub fn new() -> Self {
-        Self::default()
+        Self::with_capacity(usize::MAX)
+    }
+
+    /// Cache holding at most `capacity` entries; inserting beyond that
+    /// evicts the least-recently-used entry (a get refreshes recency).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            map: RwLock::new(HashMap::new()),
+            tick: AtomicU64::new(0),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     pub fn get(&self, q: &Query) -> Option<QueryResult> {
         let key = query_key(q);
-        let got = self.map.read().unwrap().get(&key).cloned();
-        match &got {
-            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
-            None => self.misses.fetch_add(1, Ordering::Relaxed),
-        };
-        got
+        let map = self.map.read().unwrap();
+        match map.get(&key) {
+            Some(entry) => {
+                // refresh recency under the read lock: the clock is
+                // atomic, so concurrent gets never lose the touch
+                entry
+                    .last_used
+                    .store(self.tick.fetch_add(1, Ordering::Relaxed) + 1, Ordering::Relaxed);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(entry.result.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
     }
 
     pub fn put(&self, q: &Query, result: QueryResult) {
-        self.map.write().unwrap().insert(query_key(q), result);
+        let key = query_key(q);
+        let mut map = self.map.write().unwrap();
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        map.insert(key, Entry { result, last_used: AtomicU64::new(tick) });
+        if map.len() > self.capacity {
+            // O(n) LRU scan: capacities are small relative to the scan
+            // work a hit saves, and eviction runs only on overflow
+            let victim = map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                .map(|(k, _)| *k);
+            if let Some(victim) = victim {
+                map.remove(&victim);
+            }
+        }
     }
 
     /// Drop all entries and reset counters (benchmark protocol reuse).
@@ -111,5 +168,100 @@ mod tests {
         assert!(c.get(&query(vec![1.0, 2.0], "a0<6", 10)).is_none());
         assert!(c.get(&query(vec![1.0, 2.0], "a0<5", 11)).is_none());
         assert!(c.get(&base).is_some());
+    }
+
+    #[test]
+    fn eviction_respects_capacity_and_lru_order() {
+        let c = ResultCache::with_capacity(2);
+        assert_eq!(c.capacity(), 2);
+        let q1 = query(vec![1.0], "", 10);
+        let q2 = query(vec![2.0], "", 10);
+        let q3 = query(vec![3.0], "", 10);
+        c.put(&q1, vec![(1, 0.1)]);
+        c.put(&q2, vec![(2, 0.2)]);
+        assert_eq!(c.len(), 2);
+        // touch q1 so q2 becomes the least recently used…
+        assert!(c.get(&q1).is_some());
+        c.put(&q3, vec![(3, 0.3)]);
+        // …and is the one evicted on overflow
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&q2).is_none(), "LRU entry must be evicted");
+        assert!(c.get(&q1).is_some());
+        assert!(c.get(&q3).is_some());
+    }
+
+    #[test]
+    fn overwrite_does_not_evict_and_unbounded_never_evicts() {
+        let c = ResultCache::with_capacity(2);
+        let q1 = query(vec![1.0], "", 10);
+        let q2 = query(vec![2.0], "", 10);
+        c.put(&q1, vec![(1, 0.1)]);
+        c.put(&q2, vec![(2, 0.2)]);
+        c.put(&q1, vec![(9, 0.9)]); // same key: replace, no overflow
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&q1).unwrap(), vec![(9, 0.9)]);
+        assert!(c.get(&q2).is_some());
+
+        let unbounded = ResultCache::new();
+        for i in 0..100 {
+            unbounded.put(&query(vec![i as f32], "", 10), vec![(i, 0.0)]);
+        }
+        assert_eq!(unbounded.len(), 100);
+    }
+
+    #[test]
+    fn clear_resets_counters_and_capacity_one_holds_newest() {
+        let c = ResultCache::with_capacity(1);
+        let q1 = query(vec![1.0], "", 10);
+        let q2 = query(vec![2.0], "", 10);
+        c.put(&q1, vec![(1, 0.1)]);
+        c.put(&q2, vec![(2, 0.2)]);
+        assert_eq!(c.len(), 1);
+        assert!(c.get(&q1).is_none());
+        assert!(c.get(&q2).is_some());
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.hits.load(Ordering::Relaxed), 0);
+        assert_eq!(c.misses.load(Ordering::Relaxed), 0);
+        assert_eq!(c.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn cache_hit_adds_nothing_to_the_ledger() {
+        // the ledger effect of a hit: a repeated batch answered from the
+        // cache performs NO invocations, S3 GETs, EFS reads, or payload
+        // transfers — the whole serverless path is short-circuited
+        use crate::coordinator::{BuildOptions, SquashConfig, SquashSystem};
+        use crate::data::profiles::by_name;
+        use crate::data::synthetic::generate;
+        use crate::data::workload::{generate_workload, WorkloadOptions};
+        use crate::runtime::backend::NativeScanEngine;
+        use std::sync::Arc;
+
+        let ds = generate(by_name("test").unwrap(), 900, 41);
+        let cfg = SquashConfig { use_cache: true, ..Default::default() };
+        let sys = SquashSystem::build_default(
+            &ds,
+            &BuildOptions::default(),
+            cfg,
+            Arc::new(NativeScanEngine::new()),
+        );
+        let w =
+            generate_workload(&ds, &WorkloadOptions { n_queries: 5, ..Default::default() }, 42);
+        let first = sys.run_batch(&w.queries);
+        let ledger = &sys.ctx.ledger;
+        let snap = (
+            ledger.total_invocations(),
+            ledger.s3_gets.load(Ordering::Relaxed),
+            ledger.efs_reads.load(Ordering::Relaxed),
+            ledger.payload_bytes.load(Ordering::Relaxed),
+        );
+        let second = sys.run_batch(&w.queries);
+        assert_eq!(first.results, second.results);
+        assert_eq!(ledger.total_invocations(), snap.0, "hit must not invoke");
+        assert_eq!(ledger.s3_gets.load(Ordering::Relaxed), snap.1, "hit must not GET");
+        assert_eq!(ledger.efs_reads.load(Ordering::Relaxed), snap.2, "hit must not read EFS");
+        assert_eq!(ledger.payload_bytes.load(Ordering::Relaxed), snap.3);
+        assert!(sys.ctx.cache.hit_rate() > 0.0);
     }
 }

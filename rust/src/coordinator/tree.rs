@@ -113,11 +113,23 @@ mod tests {
     use super::*;
     use crate::util::prop;
 
+    /// Closed form of Alg 2 L1: N_QA = F·(F^l_max − 1)/(F − 1) (= l_max
+    /// when F = 1).
+    fn n_qa_closed_form(f: usize, l_max: usize) -> usize {
+        if f == 1 {
+            return l_max;
+        }
+        f * (f.pow(l_max as u32) - 1) / (f - 1)
+    }
+
     #[test]
     fn paper_configurations() {
+        // the paper-table cases of `for_n_qa` as assertions: each (F, l)
+        // produces its documented N_QA, which matches the closed form
         for (f, l, n) in [(10, 1, 10), (4, 2, 20), (4, 3, 84), (5, 3, 155), (6, 3, 258), (4, 4, 340)]
         {
             assert_eq!(TreeConfig::new(f, l).n_qa(), n, "F={f} l={l}");
+            assert_eq!(n_qa_closed_form(f, l), n, "closed form F={f} l={l}");
             assert_eq!(TreeConfig::for_n_qa(n), Some(TreeConfig::new(f, l)));
         }
         assert!(TreeConfig::for_n_qa(7).is_none());
@@ -192,6 +204,72 @@ mod tests {
                         }
                     }
                     frontier.push((cid, clevel));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_closed_form_spans_and_disjoint_subtrees() {
+        // random (F, l_max): N_QA matches the closed form, span
+        // telescopes (span(l) = 1 + F·span(l+1), N_QA = F·span(1)), and
+        // every node's child subtree ID ranges are contiguous, disjoint,
+        // and exactly partition the parent's range below its own id
+        prop::check("tree-closed-form-spans", 40, |g| {
+            let f = g.usize_in(1, 7);
+            let l_max = g.usize_in(1, 4);
+            let cfg = TreeConfig::new(f, l_max);
+            let n = cfg.n_qa();
+            if n != n_qa_closed_form(f, l_max) {
+                return Err(format!("n_qa {n} != closed form (F={f}, l={l_max})"));
+            }
+            // span telescoping
+            if cfg.span(l_max) != 1 {
+                return Err("span(l_max) != 1".into());
+            }
+            for level in 1..l_max {
+                if cfg.span(level) != 1 + f * cfg.span(level + 1) {
+                    return Err(format!("span({level}) does not telescope"));
+                }
+            }
+            if n != f * cfg.span(1) {
+                return Err("n_qa != F * span(1)".into());
+            }
+            // child ranges: contiguous, disjoint, covering the parent
+            let mut frontier = vec![(-1i64, 0usize)];
+            while let Some((id, level)) = frontier.pop() {
+                let children = cfg.children(id, level);
+                if level < l_max && children.len() != f {
+                    return Err(format!("node {id} level {level}: {} children", children.len()));
+                }
+                // the subtree below the parent's own id
+                let (range_lo, range_hi) = if id < 0 {
+                    (0usize, n - 1)
+                } else {
+                    let (lo, hi) = cfg.subtree_range(id, level);
+                    (lo + 1, hi) // parent occupies `lo` itself
+                };
+                let mut next = range_lo;
+                for &(cid, clevel) in &children {
+                    let (clo, chi) = cfg.subtree_range(cid, clevel);
+                    if clo != next {
+                        return Err(format!(
+                            "child {cid} of {id}: range starts at {clo}, want {next}"
+                        ));
+                    }
+                    if chi < clo {
+                        return Err(format!("child {cid}: inverted range"));
+                    }
+                    next = chi + 1;
+                    frontier.push((cid, clevel));
+                }
+                if !children.is_empty() && next != range_hi + 1 {
+                    return Err(format!(
+                        "children of {id} cover up to {}, want {}",
+                        next - 1,
+                        range_hi
+                    ));
                 }
             }
             Ok(())

@@ -24,6 +24,12 @@ pub enum Role {
     Coordinator,
     QueryAllocator,
     QueryProcessor,
+    /// A row-range shard of one partition's QP work (multi-function QP
+    /// scatter). Billed exactly like a QueryProcessor — same memory
+    /// class, counted inside N_QP for Eq 5 — but additionally tracked by
+    /// a dedicated invocation counter so the scatter's fan-out cost is
+    /// observable in the ledger.
+    QpShard,
 }
 
 /// Thread-safe accumulator of every billable event in a run.
@@ -33,6 +39,9 @@ pub struct CostLedger {
     pub invocations_co: AtomicU64,
     pub invocations_qa: AtomicU64,
     pub invocations_qp: AtomicU64,
+    /// subset of `invocations_qp` issued to QP *shard* functions
+    /// (multi-function scatter); every shard invocation bumps both
+    pub invocations_qp_shard: AtomicU64,
     pub cold_starts: AtomicU64,
     /// MB-seconds by role, stored as micro-MB-seconds for atomicity
     mbs_co_micro: AtomicU64,
@@ -59,11 +68,21 @@ impl CostLedger {
             Role::Coordinator => &self.invocations_co,
             Role::QueryAllocator => &self.invocations_qa,
             Role::QueryProcessor => &self.invocations_qp,
+            Role::QpShard => {
+                // a shard invocation IS a QP invocation for Eq 5 ...
+                self.invocations_qp_shard.fetch_add(1, Ordering::Relaxed);
+                &self.invocations_qp
+            }
         }
         .fetch_add(1, Ordering::Relaxed);
         if cold {
             self.cold_starts.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// QP invocations that went to shard functions (scatter diagnostics).
+    pub fn qp_shard_invocations(&self) -> u64 {
+        self.invocations_qp_shard.load(Ordering::Relaxed)
     }
 
     /// Record a function execution: `seconds` of billed runtime at
@@ -73,7 +92,8 @@ impl CostLedger {
         match role {
             Role::Coordinator => &self.mbs_co_micro,
             Role::QueryAllocator => &self.mbs_qa_micro,
-            Role::QueryProcessor => &self.mbs_qp_micro,
+            // ... and its runtime lands in the QP bucket of Eq 6
+            Role::QueryProcessor | Role::QpShard => &self.mbs_qp_micro,
         }
         .fetch_add(micro, Ordering::Relaxed);
         self.runtimes.lock().unwrap().push((role, seconds));
@@ -97,7 +117,7 @@ impl CostLedger {
         let micro = match role {
             Role::Coordinator => &self.mbs_co_micro,
             Role::QueryAllocator => &self.mbs_qa_micro,
-            Role::QueryProcessor => &self.mbs_qp_micro,
+            Role::QueryProcessor | Role::QpShard => &self.mbs_qp_micro,
         };
         micro.load(Ordering::Relaxed) as f64 / 1e6
     }
@@ -210,6 +230,24 @@ mod tests {
         assert_eq!(r.invocations, 385);
         assert!((r.c_invoc - 385.0 * p.lambda_per_invocation).abs() < 1e-15);
         assert_eq!(r.cold_starts, 1);
+    }
+
+    #[test]
+    fn qp_shard_role_counts_as_qp_and_is_tracked() {
+        let l = CostLedger::new();
+        let p = Pricing::aws_eu_west_1();
+        l.record_invocation(Role::QueryProcessor, false);
+        l.record_invocation(Role::QpShard, true);
+        l.record_invocation(Role::QpShard, false);
+        // Eq 5 sees 3 QP invocations; the shard sub-counter sees 2
+        assert_eq!(l.invocations_qp.load(Ordering::Relaxed), 3);
+        assert_eq!(l.qp_shard_invocations(), 2);
+        assert_eq!(l.total_invocations(), 3);
+        assert_eq!(l.report(&p).cold_starts, 1);
+        // shard runtime lands in the QP MB-seconds bucket (Eq 6)
+        l.record_runtime(Role::QpShard, 1770, 1.0);
+        assert!((l.mb_seconds(Role::QueryProcessor) - 1770.0).abs() < 1e-6);
+        assert_eq!(l.mb_seconds(Role::QueryProcessor), l.mb_seconds(Role::QpShard));
     }
 
     #[test]

@@ -134,7 +134,9 @@ impl Platform {
         match role {
             Role::Coordinator => self.config.memory_co_mb,
             Role::QueryAllocator => self.config.memory_qa_mb,
-            Role::QueryProcessor => self.config.memory_qp_mb,
+            // QP shard functions are deployed at the QP memory size: each
+            // one runs the same scan kernels over a row sub-range
+            Role::QueryProcessor | Role::QpShard => self.config.memory_qp_mb,
         }
     }
 
@@ -193,6 +195,14 @@ impl Platform {
             function,
         };
         let response = handler(&mut ctx, payload);
+        // AWS enforces the same cap on synchronous *responses*; the
+        // failed invocation's container is dropped, not repooled.
+        if response.len() > self.config.max_payload_bytes {
+            return Err(FaasError::PayloadTooLarge(
+                response.len(),
+                self.config.max_payload_bytes,
+            ));
+        }
 
         // response payload transfer
         let transfer_out = response.len() as f64 / self.config.payload_bandwidth_bps;
@@ -212,6 +222,20 @@ impl Platform {
     /// Number of idle containers for a function (tests/diagnostics).
     pub fn pool_size(&self, function: &str) -> usize {
         self.pools.lock().unwrap().get(function).map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Distinct function pools whose name starts with `prefix`
+    /// (tests/diagnostics: e.g. counting the per-shard QP fleets of one
+    /// partition — each shard function owns its own containers and DRE
+    /// store, so the multi-function scatter must create one pool per
+    /// shard, never share one).
+    pub fn pools_with_prefix(&self, prefix: &str) -> usize {
+        self.pools
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(name, pool)| name.starts_with(prefix) && !pool.is_empty())
+            .count()
     }
 
     /// Drop all containers — simulates a cold fleet / redeployment.
@@ -327,11 +351,50 @@ mod tests {
     }
 
     #[test]
+    fn shard_functions_get_distinct_pools_and_dre_stores() {
+        // the multi-function QP scatter names one function per row-range
+        // shard; each must cold-start its own container and retain its
+        // own copy of the partition index
+        let p = platform(true);
+        for s in 0..3usize {
+            let f = format!("squash-processor-4-shard-{s}of3");
+            p.invoke(&f, Role::QpShard, b"", |ctx, _| {
+                assert!(ctx.dre_get::<usize>("partition-4").is_none());
+                ctx.dre_put("partition-4", Arc::new(s));
+                vec![]
+            })
+            .unwrap();
+        }
+        assert_eq!(p.pools_with_prefix("squash-processor-4-shard-"), 3);
+        assert_eq!(p.pools_with_prefix("squash-processor-4"), 3);
+        assert_eq!(p.pools_with_prefix("squash-processor-9"), 0);
+        assert_eq!(p.cold_invocations.load(Ordering::Relaxed), 3);
+        // warm reuse stays within the shard's own pool
+        p.invoke("squash-processor-4-shard-1of3", Role::QpShard, b"", |ctx, _| {
+            assert_eq!(*ctx.dre_get::<usize>("partition-4").unwrap(), 1);
+            vec![]
+        })
+        .unwrap();
+        assert_eq!(p.warm_invocations.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
     fn payload_cap_enforced() {
         let p = platform(true);
         let big = vec![0u8; p.config.max_payload_bytes + 1];
         let r = p.invoke("f", Role::Coordinator, &big, |_, _| vec![]);
         assert!(matches!(r, Err(FaasError::PayloadTooLarge(_, _))));
+    }
+
+    #[test]
+    fn response_cap_enforced_too() {
+        let p = platform(true);
+        let n = p.config.max_payload_bytes + 1;
+        let r = p.invoke("f", Role::QueryProcessor, b"", move |_, _| vec![0u8; n]);
+        assert!(matches!(r, Err(FaasError::PayloadTooLarge(_, _))));
+        // an in-cap response still round-trips
+        let ok = p.invoke("f", Role::QueryProcessor, b"", |_, _| vec![1u8]).unwrap();
+        assert_eq!(ok, vec![1u8]);
     }
 
     #[test]

@@ -10,13 +10,17 @@
 //! Common options: --profile <test|sift|gist|sift10m|deep>, --n <rows>,
 //! --queries <count>, --n-qa <10|20|84|155|258|340>, --backend
 //! <native|scalar|xla|auto>, --scan-threads <off|auto|N> (shard each
-//! QP scan's candidate rows across N workers), --time-scale <f>,
-//! --no-dre, --seed <u64>.
+//! QP scan's candidate rows across N worker threads *inside* one QP
+//! function), --qp-shards <off|auto|N> (scatter each large partition
+//! request across N separate QP *functions*, merged bit-identically at
+//! the QA — see coordinator module docs), --time-scale <f>, --no-dre,
+//! --seed <u64>.
 
 use squash::baselines::server::InstanceType;
 use squash::bench::{measure_server, measure_squash, measure_system_x, Env, EnvOptions, RunStats};
 use squash::runtime::backend::ScanParallelism;
 use squash::coordinator::tree::TreeConfig;
+use squash::coordinator::QpSharding;
 use squash::cost::pricing::Pricing;
 use squash::cost::{server_daily_cost, system_x_query_cost};
 use squash::data::profiles::PROFILES;
@@ -59,6 +63,10 @@ fn env_opts(args: &Args) -> EnvOptions {
                 eprintln!("--scan-threads must be off|auto|<count>; using off");
                 ScanParallelism::Serial
             }),
+        qp_sharding: QpSharding::parse(args.get_or("qp-shards", "off")).unwrap_or_else(|| {
+            eprintln!("--qp-shards must be off|auto|<count>; using off");
+            QpSharding::Off
+        }),
         seed: args.get_u64("seed", 42).unwrap_or(42),
     }
 }

@@ -82,6 +82,8 @@ pub struct ScanScratch {
     hamming: Vec<u32>,
     hist: Vec<usize>,
     survivors: Vec<u32>,
+    /// Hamming distance per survivor (partial scans only)
+    surv_hamming: Vec<u32>,
     lut: AdcTable,
     acc: Vec<f32>,
     /// per-partition segment accessors (begin_partition)
@@ -104,6 +106,31 @@ impl ScanScratch {
     }
 }
 
+/// One item's scratch-backed *partial* scan result, emitted by
+/// [`ScanEngine::scan_batch_partial`] when this process holds only a
+/// row-range shard of the request (multi-function QP scatter). The
+/// caller merges per-shard histograms into the request-global histogram
+/// before selecting the H_perc cutoff, so the shard keeps a
+/// *conservative* superset of the final survivors: its local cutoff,
+/// computed from the shard histogram with the request-global `keep`, is
+/// always ≥ the merged cutoff (a shard's histogram counts are pointwise
+/// ≤ the merged counts, so the cumulative count reaches `keep` no
+/// earlier). Per-survivor Hamming distances travel along so the merger
+/// can re-filter by the exact global cutoff.
+#[derive(Clone, Copy, Debug)]
+pub struct PartialScan<'a> {
+    /// Full Hamming histogram of the shard's rows (d + 2 buckets; empty
+    /// when the item is not pruned).
+    pub hist: &'a [usize],
+    /// Rows at Hamming distance ≤ the shard-local conservative cutoff
+    /// (all rows when not pruned), in row order.
+    pub survivors: &'a [u32],
+    /// Hamming distance per survivor (empty when not pruned).
+    pub hamming: &'a [u32],
+    /// Squared LB distance per survivor.
+    pub lb: &'a [f32],
+}
+
 /// Abstract QP hot-spot compute over whole per-partition batches.
 pub trait ScanEngine: Send + Sync {
     fn name(&self) -> &'static str;
@@ -121,6 +148,24 @@ pub trait ScanEngine: Send + Sync {
         req: &ScanRequest<'_>,
         scratch: &mut ScanScratch,
         emit: &mut dyn FnMut(usize, &[u32], &[f32]),
+    );
+
+    /// Shard-local variant of [`scan_batch`](Self::scan_batch) for the
+    /// multi-function QP scatter: each item's `rows` are one shard's
+    /// contiguous row range and `keep` is the *request-global* keep
+    /// count. Pruned items always run the Hamming scan (even when `keep`
+    /// exceeds the shard's row count — the global decision was made from
+    /// the full candidate set) and emit their histogram, conservative
+    /// survivors, per-survivor Hamming distances, and LB distances; the
+    /// caller applies the merged-histogram cutoff. LB distances are
+    /// per-candidate, so values for survivors of the *global* cutoff are
+    /// bit-identical to a whole-request scan.
+    fn scan_batch_partial(
+        &self,
+        idx: &OsqIndex,
+        req: &ScanRequest<'_>,
+        scratch: &mut ScanScratch,
+        emit: &mut dyn FnMut(usize, PartialScan<'_>),
     );
 }
 
@@ -156,6 +201,14 @@ impl ScanParallelism {
             n => n.parse::<usize>().ok().map(ScanParallelism::Threads),
         }
     }
+
+    /// Parallelism from the `SQUASH_SCAN_THREADS` environment variable —
+    /// the CI knob that runs the whole test suite with sharded scans
+    /// (every configuration is bit-identical, so the knob is safe to
+    /// force globally). `None` when unset or unparsable.
+    pub fn from_env() -> Option<Self> {
+        std::env::var("SQUASH_SCAN_THREADS").ok().and_then(|v| Self::parse(&v))
+    }
 }
 
 /// Minimum candidate rows per shard. An item is sharded only when it
@@ -184,9 +237,14 @@ impl Default for NativeScanEngine {
 }
 
 impl NativeScanEngine {
-    /// Best detected kernels, serial execution.
+    /// Best detected kernels; serial execution unless the
+    /// `SQUASH_SCAN_THREADS` environment override is set (see
+    /// [`ScanParallelism::from_env`]).
     pub fn new() -> Self {
-        Self::with_options(Kernels::detect(), ScanParallelism::Serial)
+        Self::with_options(
+            Kernels::detect(),
+            ScanParallelism::from_env().unwrap_or(ScanParallelism::Serial),
+        )
     }
 
     /// Portable scalar kernels, serial execution (the PR 1 baseline;
@@ -409,6 +467,77 @@ impl ScanEngine for NativeScanEngine {
             emit(i, survivors, &scratch.acc);
         }
     }
+
+    fn scan_batch_partial(
+        &self,
+        idx: &OsqIndex,
+        req: &ScanRequest<'_>,
+        scratch: &mut ScanScratch,
+        emit: &mut dyn FnMut(usize, PartialScan<'_>),
+    ) {
+        // Always the serial path: the shard request itself IS the
+        // parallelism (one function invocation per row range), so the
+        // in-process pool is not consulted here.
+        for (i, item) in req.items.iter().enumerate() {
+            if item.rows.is_empty() {
+                emit(i, PartialScan { hist: &[], survivors: &[], hamming: &[], lb: &[] });
+                continue;
+            }
+            if item.prune {
+                idx.binary.encode_query_into(item.q_raw, &mut scratch.q_words);
+                self.kernels.hamming_scan_hist(
+                    &idx.binary,
+                    &scratch.q_words,
+                    item.rows,
+                    &mut scratch.hamming,
+                    &mut scratch.hist,
+                );
+                // conservative shard-local cut with the GLOBAL keep: never
+                // drops a candidate the merged-histogram cutoff would keep
+                let cut = hamming_cutoff(&scratch.hist, item.keep.max(1)) as u32;
+                scratch.survivors.clear();
+                scratch.surv_hamming.clear();
+                for (k, &h) in scratch.hamming.iter().enumerate() {
+                    if h <= cut {
+                        scratch.survivors.push(item.rows[k]);
+                        scratch.surv_hamming.push(h);
+                    }
+                }
+                scratch.lut.rebuild(item.q_frame, &idx.quantizers, idx.m1);
+                self.kernels.lb_sq_scan_blocked(
+                    idx,
+                    &scratch.lut,
+                    &scratch.survivors,
+                    &scratch.accessors,
+                    &mut scratch.block,
+                    &mut scratch.acc,
+                );
+                emit(
+                    i,
+                    PartialScan {
+                        hist: &scratch.hist,
+                        survivors: &scratch.survivors,
+                        hamming: &scratch.surv_hamming,
+                        lb: &scratch.acc,
+                    },
+                );
+            } else {
+                scratch.lut.rebuild(item.q_frame, &idx.quantizers, idx.m1);
+                self.kernels.lb_sq_scan_blocked(
+                    idx,
+                    &scratch.lut,
+                    item.rows,
+                    &scratch.accessors,
+                    &mut scratch.block,
+                    &mut scratch.acc,
+                );
+                emit(
+                    i,
+                    PartialScan { hist: &[], survivors: item.rows, hamming: &[], lb: &scratch.acc },
+                );
+            }
+        }
+    }
 }
 
 /// XLA/PJRT implementation executing the AOT artifacts.
@@ -522,6 +651,55 @@ impl ScanEngine for XlaScanEngine {
             }
             let lb = self.lb_artifact(idx, item.q_frame, scratch);
             emit(i, &scratch.survivors, &lb);
+        }
+    }
+
+    fn scan_batch_partial(
+        &self,
+        idx: &OsqIndex,
+        req: &ScanRequest<'_>,
+        scratch: &mut ScanScratch,
+        emit: &mut dyn FnMut(usize, PartialScan<'_>),
+    ) {
+        for (i, item) in req.items.iter().enumerate() {
+            if item.rows.is_empty() {
+                emit(i, PartialScan { hist: &[], survivors: &[], hamming: &[], lb: &[] });
+                continue;
+            }
+            if item.prune {
+                scratch.rows_usize.clear();
+                scratch.rows_usize.extend(item.rows.iter().map(|&r| r as usize));
+                let h = self.hamming_artifact(idx, item.q_raw, scratch);
+                // histogram + conservative local cutoff on the host,
+                // identically to the native partial scan
+                hamming_histogram(&h, idx.d, &mut scratch.hist);
+                let cut = hamming_cutoff(&scratch.hist, item.keep.max(1)) as u32;
+                scratch.survivors.clear();
+                scratch.surv_hamming.clear();
+                scratch.surv_usize.clear();
+                for (k, &hd) in h.iter().enumerate() {
+                    if hd <= cut {
+                        scratch.survivors.push(item.rows[k]);
+                        scratch.surv_hamming.push(hd);
+                        scratch.surv_usize.push(item.rows[k] as usize);
+                    }
+                }
+                let lb = self.lb_artifact(idx, item.q_frame, scratch);
+                emit(
+                    i,
+                    PartialScan {
+                        hist: &scratch.hist,
+                        survivors: &scratch.survivors,
+                        hamming: &scratch.surv_hamming,
+                        lb: &lb,
+                    },
+                );
+            } else {
+                scratch.surv_usize.clear();
+                scratch.surv_usize.extend(item.rows.iter().map(|&r| r as usize));
+                let lb = self.lb_artifact(idx, item.q_frame, scratch);
+                emit(i, PartialScan { hist: &[], survivors: item.rows, hamming: &[], lb: &lb });
+            }
         }
     }
 }
@@ -714,5 +892,64 @@ mod tests {
         );
         let reused = run_one(&engine, &idx, item, &mut dirty);
         assert_eq!(clean, reused);
+    }
+
+    #[test]
+    fn partial_scans_merge_to_the_full_scan() {
+        // engine-level contract behind the multi-function QP scatter:
+        // chunk the rows, scan each chunk partially, merge histograms,
+        // re-cut globally, concatenate — bit-identical to one full scan
+        let (ds, idx) = small_index();
+        let engine = NativeScanEngine::new();
+        let mut scratch = ScanScratch::new();
+        engine.begin_partition(&idx, &mut scratch);
+        let mut rng = Rng::new(17);
+        for (trial, n_chunks) in [(0usize, 2usize), (1, 3), (2, 5)] {
+            let q = ds.vectors.row(rng.gen_range(ds.n())).to_vec();
+            let qf = idx.query_frame(&q);
+            let rows: Vec<u32> = (0..ds.n() as u32).filter(|_| rng.gen_range(4) > 0).collect();
+            let keep = (rows.len() / 7).max(1);
+            let full_item =
+                ScanItem { q_raw: &q, q_frame: &qf, rows: &rows, prune: true, keep };
+            let (want_surv, want_lb) = run_one(&engine, &idx, full_item, &mut scratch);
+
+            // partial scan per contiguous chunk, global keep
+            let chunk_len = rows.len().div_ceil(n_chunks);
+            let mut merged_hist = vec![0usize; idx.d + 2];
+            let mut parts: Vec<(Vec<u32>, Vec<u32>, Vec<f32>)> = Vec::new();
+            for chunk in rows.chunks(chunk_len) {
+                let req = ScanRequest {
+                    items: vec![ScanItem {
+                        q_raw: &q,
+                        q_frame: &qf,
+                        rows: chunk,
+                        prune: true,
+                        keep,
+                    }],
+                };
+                engine.scan_batch_partial(&idx, &req, &mut scratch, &mut |_, p| {
+                    for (b, &c) in merged_hist.iter_mut().zip(p.hist) {
+                        *b += c;
+                    }
+                    parts.push((p.survivors.to_vec(), p.hamming.to_vec(), p.lb.to_vec()));
+                });
+            }
+            let cut = hamming_cutoff(&merged_hist, keep) as u32;
+            let mut surv = Vec::new();
+            let mut lb = Vec::new();
+            for (s, h, l) in &parts {
+                for (k, &hd) in h.iter().enumerate() {
+                    if hd <= cut {
+                        surv.push(s[k]);
+                        lb.push(l[k]);
+                    }
+                }
+            }
+            assert_eq!(surv, want_surv, "trial {trial}: merged survivors differ");
+            assert_eq!(lb.len(), want_lb.len());
+            for (a, b) in lb.iter().zip(&want_lb) {
+                assert_eq!(a.to_bits(), b.to_bits(), "trial {trial}: merged LB differs");
+            }
+        }
     }
 }

@@ -1,0 +1,154 @@
+//! Payload-cap behaviour at the QP boundary, pinned: a `QpRequest`
+//! whose encoding exceeds `FaasConfig::max_payload_bytes` is split into
+//! item waves (results identical, more QP invocations); a single item
+//! that alone exceeds the cap cannot be item-split and fails loudly,
+//! pointing at `--qp-shards` (which slices along the row axis instead);
+//! and with the scatter enabled, shard requests stay under caps the
+//! unsharded request would have needed waves for.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use squash::coordinator::payload::{QpItem, QpRequest};
+use squash::coordinator::{qp, BuildOptions, QpSharding, SquashConfig, SquashSystem};
+use squash::cost::CostLedger;
+use squash::data::profiles::by_name;
+use squash::data::synthetic::generate;
+use squash::data::workload::{generate_workload, Query, WorkloadOptions};
+use squash::data::Dataset;
+use squash::faas::{FaasConfig, Platform};
+use squash::runtime::backend::NativeScanEngine;
+use squash::storage::{FileStore, ObjectStore, SimParams};
+
+fn fixture() -> (Dataset, Vec<Query>) {
+    let ds = generate(by_name("test").unwrap(), 2000, 91);
+    // match-all predicates maximize candidate rows per item → big payloads
+    let queries = generate_workload(
+        &ds,
+        &WorkloadOptions { n_queries: 12, selectivity: 1.0, ..Default::default() },
+        92,
+    )
+    .queries;
+    (ds, queries)
+}
+
+fn build_with_cap(ds: &Dataset, cfg: SquashConfig, cap: usize) -> SquashSystem {
+    let ledger = Arc::new(CostLedger::new());
+    let params = SimParams::instant();
+    let platform = Arc::new(Platform::new(
+        FaasConfig { max_payload_bytes: cap, ..Default::default() },
+        params.clone(),
+        ledger.clone(),
+    ));
+    let s3 = Arc::new(ObjectStore::new(params.clone(), ledger.clone()));
+    let efs = Arc::new(FileStore::new(params, ledger.clone()));
+    SquashSystem::build(
+        ds,
+        &BuildOptions::default(),
+        cfg,
+        platform,
+        s3,
+        efs,
+        Arc::new(NativeScanEngine::new()),
+    )
+}
+
+fn single_qp_config() -> SquashConfig {
+    SquashConfig { qp_shards: QpSharding::Off, ..Default::default() }
+}
+
+/// A hand-built multi-item request: 12 items × 250 candidate rows
+/// (valid local rows for any balanced partition of the 2000-row
+/// fixture) ≈ 13 KB encoded — over an 8 KB cap, but with every item
+/// individually far below it.
+fn multi_item_request(ds: &Dataset) -> QpRequest {
+    QpRequest {
+        partition: 1,
+        items: (0..12)
+            .map(|i| QpItem {
+                query_idx: i,
+                vector: ds.vectors.row(i * 50).to_vec(),
+                local_rows: (0..250u32).collect(),
+                k: 10,
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn oversized_qp_request_splits_into_item_waves() {
+    let (ds, _) = fixture();
+    let cap = 8 * 1024;
+    let big = build_with_cap(&ds, single_qp_config(), 6 * 1024 * 1024);
+    let tiny = build_with_cap(&ds, single_qp_config(), cap);
+    let req = multi_item_request(&ds);
+    assert!(req.to_bytes().len() > cap, "fixture request must exceed the cap");
+
+    let want = qp::invoke_qp(&big.ctx, req.clone());
+    let before = tiny.ctx.ledger.invocations_qp.load(Ordering::Relaxed);
+    let got = qp::invoke_qp(&tiny.ctx, req);
+    let waves = tiny.ctx.ledger.invocations_qp.load(Ordering::Relaxed) - before;
+
+    assert_eq!(want, got, "item-wave splitting changed results");
+    assert!(waves >= 2, "must split into ≥ 2 waves, got {waves}");
+    assert_eq!(
+        big.ctx.ledger.invocations_qp.load(Ordering::Relaxed),
+        1,
+        "reference request must fit in one invocation"
+    );
+    assert_eq!(tiny.ctx.ledger.qp_shard_invocations(), 0, "no scatter in this config");
+}
+
+#[test]
+fn single_item_over_the_cap_fails_with_shard_guidance() {
+    let (ds, _) = fixture();
+    let cap = 4096;
+    let sys = build_with_cap(&ds, single_qp_config(), cap);
+    // one item whose row list alone encodes past the cap: item-wave
+    // splitting cannot help, only row sharding can
+    let req = QpRequest {
+        partition: 0,
+        items: vec![QpItem {
+            query_idx: 0,
+            vector: ds.vectors.row(0).to_vec(),
+            local_rows: (0..4096u32).map(|r| r % 200).collect(),
+            k: 10,
+        }],
+    };
+    assert!(req.to_bytes().len() > cap);
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {})); // silence the expected panic
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        qp::invoke_qp(&sys.ctx, req)
+    }));
+    std::panic::set_hook(prev_hook);
+    let err = result.expect_err("oversized single item must fail");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(
+        msg.contains("--qp-shards"),
+        "panic must point at the row-axis escape hatch, got: {msg}"
+    );
+}
+
+#[test]
+fn scatter_keeps_shard_requests_under_a_cap_the_single_path_would_blow() {
+    let (ds, queries) = fixture();
+    let reference = build_with_cap(&ds, single_qp_config(), 6 * 1024 * 1024);
+    let want = reference.run_batch(&queries).results;
+
+    // 16 KB cap + 4-way scatter: each shard request carries ~1/4 of the
+    // rows, fitting where the whole request might have needed waves
+    let cfg = SquashConfig {
+        qp_shards: QpSharding::Fixed(4),
+        qp_shard_min_rows: 8,
+        ..Default::default()
+    };
+    let sharded = build_with_cap(&ds, cfg, 16 * 1024);
+    let got = sharded.run_batch(&queries).results;
+    assert_eq!(want, got, "scatter under a tight cap changed results");
+    assert!(sharded.ctx.ledger.qp_shard_invocations() > 0);
+}

@@ -1,0 +1,189 @@
+//! Coordinator-level equivalence of the multi-function QP scatter: with
+//! `--qp-shards N`, one partition's request is split across N separate
+//! QP shard functions and the per-shard Hamming histograms are merged
+//! *before* the request-global H_perc cutoff — so survivor sets,
+//! shortlists, per-query ordering, and refined distances must be
+//! **bit-identical** to the single-QP path for every combination of
+//! prune × refine × attribute filters. The scatter must also be honest
+//! in the cost ledger: S shard invocations per scattered request, with
+//! distinct per-shard container pools paying their own cold starts.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use squash::coordinator::{BuildOptions, QpSharding, SquashConfig, SquashSystem};
+use squash::data::profiles::by_name;
+use squash::data::synthetic::generate;
+use squash::data::workload::{generate_workload, Query, WorkloadOptions};
+use squash::data::Dataset;
+use squash::runtime::backend::{NativeScanEngine, ScanParallelism};
+
+fn fixture() -> (Dataset, Vec<Query>) {
+    let ds = generate(by_name("test").unwrap(), 3000, 71);
+    // attribute-filtered queries plus match-all (pure ANN) queries: the
+    // scatter must be transparent to both
+    let mut queries = generate_workload(
+        &ds,
+        &WorkloadOptions { n_queries: 10, ..Default::default() },
+        72,
+    )
+    .queries;
+    queries.extend(
+        generate_workload(
+            &ds,
+            &WorkloadOptions { n_queries: 6, selectivity: 1.0, ..Default::default() },
+            73,
+        )
+        .queries,
+    );
+    (ds, queries)
+}
+
+fn config(prune: bool, refine: bool, shards: QpSharding) -> SquashConfig {
+    SquashConfig {
+        prune,
+        refine,
+        qp_shards: shards,
+        // tiny threshold so the small fixture actually scatters
+        qp_shard_min_rows: 8,
+        ..Default::default()
+    }
+}
+
+fn build(ds: &Dataset, cfg: SquashConfig) -> SquashSystem {
+    SquashSystem::build_default(
+        ds,
+        &BuildOptions::default(),
+        cfg,
+        Arc::new(NativeScanEngine::new()),
+    )
+}
+
+/// Flip the query-path config of a deployed system without rebuilding
+/// the indexes (they depend only on the dataset + build seed).
+fn with_config(sys: &mut SquashSystem, f: impl FnOnce(&mut SquashConfig)) {
+    let mut ctx = (*sys.ctx).clone_shallow();
+    f(&mut ctx.cfg);
+    sys.ctx = Arc::new(ctx);
+}
+
+fn assert_bit_identical(
+    want: &[Vec<(u64, f32)>],
+    got: &[Vec<(u64, f32)>],
+    label: &str,
+) {
+    assert_eq!(want.len(), got.len(), "{label}: result count");
+    for (qi, (a, b)) in want.iter().zip(got).enumerate() {
+        assert_eq!(a.len(), b.len(), "{label}: query {qi} result length");
+        for (rank, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.0, y.0, "{label}: query {qi} rank {rank} id");
+            assert_eq!(
+                x.1.to_bits(),
+                y.1.to_bits(),
+                "{label}: query {qi} rank {rank} distance not bit-identical"
+            );
+        }
+    }
+}
+
+#[test]
+fn scatter_is_bit_identical_across_prune_refine_and_shard_counts() {
+    let (ds, queries) = fixture();
+    let mut single = build(&ds, config(true, true, QpSharding::Off));
+    for n in [2usize, 3, 7] {
+        let mut sharded = build(&ds, config(true, true, QpSharding::Fixed(n)));
+        for (prune, refine) in [(true, true), (true, false), (false, true), (false, false)] {
+            let label = format!("shards={n} prune={prune} refine={refine}");
+            with_config(&mut single, |c| {
+                c.prune = prune;
+                c.refine = refine;
+            });
+            with_config(&mut sharded, |c| {
+                c.prune = prune;
+                c.refine = refine;
+            });
+            let want = single.run_batch(&queries).results;
+            let got = sharded.run_batch(&queries).results;
+            assert_bit_identical(&want, &got, &label);
+        }
+        assert!(
+            sharded.ctx.ledger.qp_shard_invocations() > 0,
+            "shards={n}: the scatter path never ran — fixture too small?"
+        );
+        assert_eq!(single.ctx.ledger.qp_shard_invocations(), 0);
+    }
+}
+
+#[test]
+fn scatter_composes_with_in_process_scan_threads() {
+    // coordinator-level function scatter on top of thread-sharded scans
+    // inside each function: still bit-identical to the serial single QP
+    let (ds, queries) = fixture();
+    let engine = || Arc::new(NativeScanEngine::with_parallelism(ScanParallelism::Threads(3)));
+    let single = SquashSystem::build_default(
+        &ds,
+        &BuildOptions::default(),
+        config(true, true, QpSharding::Off),
+        engine(),
+    );
+    let sharded = SquashSystem::build_default(
+        &ds,
+        &BuildOptions::default(),
+        config(true, true, QpSharding::Fixed(3)),
+        engine(),
+    );
+    let want = single.run_batch(&queries).results;
+    let got = sharded.run_batch(&queries).results;
+    assert_bit_identical(&want, &got, "scan-threads=3 + qp-shards=3");
+}
+
+#[test]
+fn auto_sharding_matches_single_path_too() {
+    let (ds, queries) = fixture();
+    let single = build(&ds, config(true, true, QpSharding::Off));
+    let auto = build(&ds, config(true, true, QpSharding::Auto));
+    let want = single.run_batch(&queries).results;
+    let got = auto.run_batch(&queries).results;
+    assert_bit_identical(&want, &got, "qp-shards=auto");
+}
+
+#[test]
+fn ledger_shows_s_shard_invocations_and_extra_cold_starts() {
+    let (ds, queries) = fixture();
+    // single-QA tree: per-partition container creation is sequential
+    // across sub-batches, so cold-start counts are deterministic (no
+    // concurrency races inflating either side of the comparison)
+    let tree = squash::coordinator::tree::TreeConfig::new(1, 1);
+    let flat = |shards| SquashConfig { tree, ..config(true, true, shards) };
+    let single = build(&ds, flat(QpSharding::Off));
+    single.run_batch(&queries);
+    let single_cold = single.ctx.ledger.cold_starts.load(Ordering::Relaxed);
+    assert_eq!(single.ctx.ledger.qp_shard_invocations(), 0);
+
+    let s = 3usize;
+    let sharded = build(&ds, flat(QpSharding::Fixed(s)));
+    sharded.run_batch(&queries);
+    let ledger = &sharded.ctx.ledger;
+    let shard_inv = ledger.qp_shard_invocations();
+    assert!(shard_inv > 0, "no request scattered");
+    // every scattered request fans out to exactly S shard functions
+    assert_eq!(shard_inv % s as u64, 0, "shard invocations {shard_inv} not a multiple of {s}");
+    // shard invocations ARE QP invocations for Eq 5
+    assert!(ledger.invocations_qp.load(Ordering::Relaxed) >= shard_inv);
+    // per-shard fleets pay their own cold starts: strictly more than the
+    // single-function run on the identical workload
+    let sharded_cold = ledger.cold_starts.load(Ordering::Relaxed);
+    assert!(
+        sharded_cold > single_cold,
+        "sharded run must cold-start extra shard containers ({sharded_cold} vs {single_cold})"
+    );
+    // and at least one partition owns S distinct shard-function pools
+    let platform = &sharded.ctx.platform;
+    let scattered_partition = (0..sharded.ctx.n_partitions).find(|p| {
+        platform.pools_with_prefix(&format!("squash-processor-{p}-shard-")) == s
+    });
+    assert!(
+        scattered_partition.is_some(),
+        "no partition shows {s} distinct shard-function container pools"
+    );
+}

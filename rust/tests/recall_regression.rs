@@ -1,0 +1,63 @@
+//! Deterministic recall-regression floors: a fixed-seed synthetic
+//! dataset through the full `SquashSystem::run_batch` path, with pinned
+//! minimum recall@10 for every prune × refine combination. The whole
+//! stack is seeded, so these numbers are exactly reproducible — a future
+//! hot-path "optimization" that silently trades accuracy (a botched
+//! cutoff, a lossy shortlist, a broken merge) fails here instead of
+//! shipping. Floors are set with margin below the measured values; they
+//! are regression tripwires, not targets.
+
+use squash::bench::{measure_squash, Env, EnvOptions};
+
+fn recall_for(prune: bool, refine: bool) -> f64 {
+    let opts = EnvOptions {
+        profile: "test",
+        n: 2000,
+        n_queries: 24,
+        time_scale: 0.0,
+        seed: 2024,
+        ..Default::default()
+    };
+    let mut env = Env::setup(&opts);
+    env.with_config(|c| {
+        c.prune = prune;
+        c.refine = refine;
+    });
+    let r = measure_squash(&env, "recall-floor", 10).recall;
+    assert!(r.is_finite(), "recall must be measured");
+    r
+}
+
+#[test]
+fn recall_floor_prune_on_refine_on() {
+    let r = recall_for(true, true);
+    assert!(r >= 0.80, "recall@10 with prune+refine fell to {r}");
+}
+
+#[test]
+fn recall_floor_prune_off_refine_on() {
+    let r = recall_for(false, true);
+    assert!(r >= 0.80, "recall@10 without pruning fell to {r}");
+}
+
+#[test]
+fn recall_floor_prune_on_refine_off() {
+    // LB-ordering only: weaker, but must stay usable
+    let r = recall_for(true, false);
+    assert!(r >= 0.50, "recall@10 with prune, no refine fell to {r}");
+}
+
+#[test]
+fn recall_floor_prune_off_refine_off() {
+    let r = recall_for(false, false);
+    assert!(r >= 0.50, "recall@10 without prune or refine fell to {r}");
+}
+
+#[test]
+fn recall_is_exactly_reproducible() {
+    // identical seeds ⇒ identical recall to the last bit: the floors
+    // above measure a deterministic quantity, not a noisy estimate
+    let a = recall_for(true, true);
+    let b = recall_for(true, true);
+    assert_eq!(a.to_bits(), b.to_bits(), "recall not deterministic: {a} vs {b}");
+}
