@@ -33,6 +33,9 @@ fn main() {
         qp_sharding: QpSharding::parse(args.get_or("qp-shards", "off"))
             .expect("--qp-shards must be off|auto|<count>"),
         seed: args.get_u64("seed", 42).unwrap(),
+        // chaos + hedging keep their env-driven defaults
+        // (SQUASH_CHAOS_SEED / SQUASH_HEDGE)
+        ..Default::default()
     };
     let n_qa = args.get_usize("n-qa", 84).unwrap();
     let gt_queries = args.get_usize("gt", 200).unwrap();

@@ -4,17 +4,19 @@
 //! variants incl. the blocked batch kernel and its SIMD dispatch,
 //! dimensional extraction, filter-mask build), result merging, the
 //! scalar/SIMD/sharded scan-engine ablation vs the seed-style per-query
-//! path on a multi-query QP request, and the native-vs-XLA engine
-//! ablation on identical inputs. Key results are additionally written to
-//! `BENCH_hotpath.json` so the perf trajectory is machine-trackable
-//! across PRs.
+//! path on a multi-query QP request, the hedged-vs-unhedged scatter
+//! makespan ablation under the deterministic chaos tail model, and the
+//! native-vs-XLA engine ablation on identical inputs. Key results are
+//! additionally written to `BENCH_hotpath.json` so the perf trajectory
+//! is machine-trackable across PRs.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use squash::attrs::mask::predicate_mask;
 use squash::bench::{Env, EnvOptions};
-use squash::coordinator::QpSharding;
+use squash::coordinator::{HedgePolicy, QpSharding};
+use squash::faas::ChaosConfig;
 use squash::attrs::predicate::parse_predicate;
 use squash::attrs::quantize::AttributeIndex;
 use squash::data::profiles::by_name;
@@ -338,6 +340,58 @@ fn main() {
     );
     speedups.push(("qp_scatter3_vs_single", Json::num(r_single.mean_s / r_scatter.mean_s)));
 
+    // 7c. hedged scatter under the deterministic tail model: seeded
+    //     lognormal jitter + cold-start-class spikes on every invocation;
+    //     each scatter records its (unhedged, hedged) modeled-makespan
+    //     pair, so ONE run carries the whole ablation. Virtual-clock
+    //     quantities — wall time plays no part.
+    println!("\nhedged scatter tail ablation (chaos seed 7, sigma 0.6, 25% spikes of 500 ms):");
+    let chaos = ChaosConfig {
+        tail_sigma: 0.6,
+        spike_prob: 0.25,
+        spike_s: 0.5,
+        ..ChaosConfig::with_seed(7)
+    };
+    let mut env_hedged = Env::setup(&EnvOptions {
+        profile: "test",
+        n: 6000,
+        n_queries: 24,
+        time_scale: 0.0,
+        qp_sharding: QpSharding::Fixed(3),
+        chaos,
+        hedge: HedgePolicy::Quantile(0.95),
+        ..Default::default()
+    });
+    env_hedged.with_config(|c| c.qp_shard_min_rows = 64);
+    for _ in 0..3 {
+        black_box(env_hedged.sys.run_batch(&env_hedged.queries).results.len());
+    }
+    let n_scatters = env_hedged.ledger.scatter_makespans().len();
+    let (u50, h50) = env_hedged.ledger.makespan_percentile(50.0);
+    let (u99, h99) = env_hedged.ledger.makespan_percentile(99.0);
+    // hedged ≤ unhedged pointwise per scatter ⇒ ≤ per order statistic
+    assert!(h99 <= u99, "hedged p99 {h99} exceeds unhedged p99 {u99}");
+    let hedges = env_hedged.ledger.hedged_invocations.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "{n_scatters} scatters: makespan p50 {:.1} -> {:.1} ms, p99 {:.1} -> {:.1} ms \
+         ({:.1}% p99 cut; {hedges} hedges, {:.0} ms billed waste)",
+        u50 * 1e3,
+        h50 * 1e3,
+        u99 * 1e3,
+        h99 * 1e3,
+        (1.0 - h99 / u99.max(1e-12)) * 100.0,
+        env_hedged.ledger.hedge_wasted_s() * 1e3,
+    );
+    let hedge_ablation = Json::obj(vec![
+        ("scatters", Json::num(n_scatters as f64)),
+        ("makespan_p50_unhedged_s", Json::num(u50)),
+        ("makespan_p99_unhedged_s", Json::num(u99)),
+        ("makespan_p50_hedged_s", Json::num(h50)),
+        ("makespan_p99_hedged_s", Json::num(h99)),
+        ("hedged_invocations", Json::num(hedges as f64)),
+        ("hedge_wasted_s", Json::num(env_hedged.ledger.hedge_wasted_s())),
+    ]);
+
     // machine-readable perf trajectory (tracked across PRs)
     let report = Json::obj(vec![
         ("bench", Json::str("perf_hotpath")),
@@ -349,6 +403,7 @@ fn main() {
         ("shards", Json::num(sharded_engine.shards() as f64)),
         ("results", Json::Arr(json_rows)),
         ("speedups", Json::obj(speedups)),
+        ("hedge_ablation", hedge_ablation),
     ]);
     match std::fs::write("BENCH_hotpath.json", report.to_string_pretty()) {
         Ok(()) => println!("\nwrote BENCH_hotpath.json"),

@@ -74,9 +74,13 @@ impl VexlessLike {
             let index = self.index.clone();
             let cache = self.cache.clone();
             let query = q.clone();
+            // invoke_retrying: chaos-injected failures retry like every
+            // SQUASH path, keeping baseline comparisons alive under
+            // SQUASH_FAILURE_PROB
+            let function = "vexless-search";
             let resp = self
                 .platform
-                .invoke("vexless-search", Role::QueryProcessor, &[0u8; 64], move |_ictx, _p| {
+                .invoke_retrying(function, Role::QueryProcessor, &[0u8; 64], move |_ictx, _p| {
                     let res = match cache.get(&query) {
                         Some(hit) => hit,
                         None => {
@@ -93,7 +97,8 @@ impl VexlessLike {
                     }
                     w.into_bytes()
                 })
-                .expect("vexless invoke");
+                .expect("vexless invoke")
+                .response;
             let mut r = crate::util::ser::Reader::new(&resp);
             let n = r.usize().unwrap();
             let out: Vec<(u64, f32)> =

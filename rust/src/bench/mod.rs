@@ -38,6 +38,10 @@ pub struct EnvOptions {
     pub scan_parallelism: ScanParallelism,
     /// multi-function QP scatter (coordinator-level row sharding)
     pub qp_sharding: crate::coordinator::QpSharding,
+    /// deterministic tail-latency / fault injection (`--chaos-seed`)
+    pub chaos: crate::faas::ChaosConfig,
+    /// straggler hedging for the QP scatter (`--hedge off|pN`)
+    pub hedge: crate::coordinator::HedgePolicy,
     pub seed: u64,
 }
 
@@ -51,11 +55,15 @@ impl Default for EnvOptions {
             time_scale: 1.0,
             dre: true,
             backend: "native".to_string(),
-            // both knobs honour the CI environment overrides
-            // (SQUASH_SCAN_THREADS / SQUASH_QP_SHARDS) by default
+            // all four knobs honour the CI environment overrides
+            // (SQUASH_SCAN_THREADS / SQUASH_QP_SHARDS / SQUASH_CHAOS_SEED
+            // / SQUASH_HEDGE) by default
             scan_parallelism: ScanParallelism::from_env().unwrap_or(ScanParallelism::Serial),
             qp_sharding: crate::coordinator::QpSharding::from_env()
                 .unwrap_or(crate::coordinator::QpSharding::Off),
+            chaos: crate::faas::ChaosConfig::from_env(),
+            hedge: crate::coordinator::HedgePolicy::from_env()
+                .unwrap_or(crate::coordinator::HedgePolicy::Off),
             seed: 42,
         }
     }
@@ -80,7 +88,7 @@ impl Env {
         let ledger = Arc::new(CostLedger::new());
         let params = SimParams { time_scale: opts.time_scale, ..Default::default() };
         let platform = Arc::new(Platform::new(
-            FaasConfig { dre_enabled: opts.dre, ..Default::default() },
+            FaasConfig { dre_enabled: opts.dre, chaos: opts.chaos, ..Default::default() },
             params.clone(),
             ledger.clone(),
         ));
@@ -91,6 +99,7 @@ impl Env {
             select_engine(&opts.backend, pjrt_engine, profile.d, opts.scan_parallelism);
         let mut cfg = SquashConfig::for_profile(profile);
         cfg.qp_shards = opts.qp_sharding;
+        cfg.hedge = opts.hedge;
         let sys = SquashSystem::build(
             &ds,
             &BuildOptions::for_profile(profile),

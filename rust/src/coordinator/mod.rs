@@ -35,6 +35,44 @@
 //! order; LB distances are per-candidate). The shortlist + refinement
 //! stage after the merge runs QA-side through the exact same code the QP
 //! handler uses; its modeled EFS latency is billed to the QA role.
+//!
+//! # Straggler hedging: the virtual-completion-time hedge join
+//!
+//! The scatter's merge waits on the slowest of S shard functions, so
+//! query latency is governed by the FaaS tail. With
+//! [`HedgePolicy::Quantile`] the QA joins the shards on their *modeled*
+//! completion times (the deterministic virtual clock
+//! `faas::Invocation::modeled_s` — startup + transfers + storage I/O +
+//! chaos jitter, never wall time): all shards launch at virtual t = 0;
+//! when the straggler's completion time exceeds the hedge quantile of
+//! its siblings' completion times, a duplicate invocation of that shard
+//! is (actually) launched at the quantile instant — against a separate
+//! `…-hedge` function pool, because the primary's container is still
+//! busy at that point on the virtual clock — and the join takes
+//! min(primary, hedge). Shard responses are idempotent, so whichever
+//! copy wins, results stay bit-identical; the hedge's response is
+//! asserted equal in debug builds. Billing is honest about Lambda
+//! semantics: a synchronous invocation cannot be cancelled, so both
+//! copies bill in full, and the duplicate's whole modeled duration — the
+//! extra cost hedging added — is recorded in
+//! `CostLedger::{hedged_invocations, hedge_wasted_s}`; every scatter
+//! additionally records its `(unhedged, hedged)` modeled makespan pair,
+//! so one run carries its own tail-latency ablation. Shards that die
+//! from chaos-injected failures are retried with fresh chaos draws, the
+//! failing container dropped from the pool (`Platform::invoke_retrying`),
+//! and the retry's modeled time appended serially to the virtual clock.
+//!
+//! `QpSharding::Auto` closes the loop on the same clock: every QP /
+//! QP-shard invocation reports `(partition, rows, modeled seconds)` into
+//! `cost::throughput::ThroughputBook`, and the next request for that
+//! partition picks S = ⌈rows / (rows_per_s · target latency)⌉
+//! ([`QpSharding::resolve_adaptive`]) instead of the fixed cap of 8.
+//! Results are bit-identical for *any* S, so `Auto` can never change
+//! answers; but under a multi-QA tree, sibling QAs racing on a
+//! partition's EWMA may pick different S run-to-run, so *ledger-count*
+//! determinism (invocation totals, chaos digests) is only guaranteed
+//! when per-partition request order is serialized — a single-QA tree,
+//! as `tests/{chaos,autotune}.rs` pin, or `Off`/`Fixed` sharding.
 
 pub mod merge;
 pub mod payload;
@@ -71,14 +109,22 @@ pub enum QpSharding {
     /// One QP function per partition request (the classic path).
     #[default]
     Off,
-    /// Scale the shard count with the request's candidate row count:
-    /// one shard per `qp_shard_min_rows` rows, capped at 8 functions.
+    /// Ledger-driven: learn each partition's scan throughput (rows/s,
+    /// `cost::throughput` EWMA over recent runtime samples) and pick S so
+    /// each shard's modeled latency lands near
+    /// `SquashConfig::qp_target_shard_latency_s`. Before any sample
+    /// exists, fall back to the row-count heuristic of
+    /// [`QpSharding::resolve`].
     Auto,
     /// A fixed shard-function count.
     Fixed(usize),
 }
 
 impl QpSharding {
+    /// Safety ceiling for ledger-driven `Auto`: even a wildly pessimistic
+    /// throughput estimate cannot fan one request out past this.
+    pub const AUTO_MAX_SHARDS: usize = 16;
+
     /// Parse a CLI value: "off" | "auto" | a shard count.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
@@ -97,13 +143,83 @@ impl QpSharding {
     }
 
     /// Resolved shard-function count (≥ 1) for a request covering
-    /// `total_rows` candidate rows.
+    /// `total_rows` candidate rows — the throughput-blind heuristic
+    /// (`Auto`: one shard per `min_rows` rows, capped at 8). Kept as the
+    /// warm-up fallback of [`QpSharding::resolve_adaptive`].
     pub fn resolve(&self, total_rows: usize, min_rows: usize) -> usize {
         match self {
             QpSharding::Off => 1,
             QpSharding::Fixed(n) => (*n).max(1),
             QpSharding::Auto => (total_rows / min_rows.max(1)).clamp(1, 8),
         }
+    }
+
+    /// Ledger-driven resolution: with a learned `rows_per_s` estimate for
+    /// the partition, `Auto` picks the smallest S whose per-shard row
+    /// count scans inside `target_s` modeled seconds
+    /// (S = ⌈rows / (rows_per_s · target)⌉, clamped to
+    /// [`Self::AUTO_MAX_SHARDS`]); without one it falls back to
+    /// [`QpSharding::resolve`]. `Off`/`Fixed` ignore the estimate. Any S
+    /// is bit-identical, so adaptivity only moves cost/latency, never
+    /// results.
+    pub fn resolve_adaptive(
+        &self,
+        total_rows: usize,
+        min_rows: usize,
+        rows_per_s: Option<f64>,
+        target_s: f64,
+    ) -> usize {
+        match (self, rows_per_s) {
+            (QpSharding::Auto, Some(rps)) if rps > 0.0 && target_s > 0.0 => {
+                let per_shard_budget = rps * target_s;
+                ((total_rows as f64 / per_shard_budget).ceil() as usize)
+                    .clamp(1, Self::AUTO_MAX_SHARDS)
+            }
+            _ => self.resolve(total_rows, min_rows),
+        }
+    }
+}
+
+/// Straggler hedging for the multi-function QP scatter (see the module
+/// docs): when the last outstanding shard's modeled completion time
+/// exceeds the given quantile of its siblings' completion times, a
+/// duplicate invocation is launched and the join takes
+/// min(primary, hedge) on the virtual clock.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum HedgePolicy {
+    /// Never hedge (the classic scatter join).
+    #[default]
+    Off,
+    /// Hedge when the straggler exceeds this quantile (in (0, 1]) of the
+    /// other shards' modeled completion times — `p95` ⇒ `0.95`.
+    Quantile(f64),
+}
+
+impl HedgePolicy {
+    /// Parse a CLI value: "off" | "pN" (e.g. "p95", "p50").
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" | "" => Some(HedgePolicy::Off),
+            _ => {
+                let pct: f64 = s.strip_prefix('p')?.parse().ok()?;
+                if pct > 0.0 && pct <= 100.0 {
+                    Some(HedgePolicy::Quantile(pct / 100.0))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Hedging from the `SQUASH_HEDGE` environment variable (the CI knob
+    /// that turns it on suite-wide; hedged results are bit-identical by
+    /// construction). `None` when unset or unparsable.
+    pub fn from_env() -> Option<Self> {
+        std::env::var("SQUASH_HEDGE").ok().and_then(|v| Self::parse(&v))
+    }
+
+    pub fn enabled(&self) -> bool {
+        matches!(self, HedgePolicy::Quantile(_))
     }
 }
 
@@ -141,6 +257,12 @@ pub struct SquashConfig {
     /// invocations, S payload copies, QA-side merge — only pays off on
     /// large scans); overridable via `SQUASH_QP_SHARD_MIN_ROWS`
     pub qp_shard_min_rows: usize,
+    /// target per-shard modeled latency for ledger-driven
+    /// `QpSharding::Auto` (seconds); overridable via
+    /// `SQUASH_QP_TARGET_LATENCY_S`
+    pub qp_target_shard_latency_s: f64,
+    /// straggler hedging for the QP scatter (`--hedge off|pN`)
+    pub hedge: HedgePolicy,
 }
 
 impl Default for SquashConfig {
@@ -162,6 +284,11 @@ impl Default for SquashConfig {
                 .ok()
                 .and_then(|v| v.parse().ok())
                 .unwrap_or(8192),
+            qp_target_shard_latency_s: std::env::var("SQUASH_QP_TARGET_LATENCY_S")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0.05),
+            hedge: HedgePolicy::from_env().unwrap_or(HedgePolicy::Off),
         }
     }
 }
@@ -402,11 +529,14 @@ impl SquashSystem {
         let queries_owned: Vec<Query> = queries.to_vec();
         let out = ctx
             .platform
-            .invoke("squash-coordinator", Role::Coordinator, &enc.into_bytes(), move |_ictx, _p| {
-                co_handler(&ctx2, &queries_owned).to_bytes()
-            })
+            .invoke_retrying(
+                "squash-coordinator",
+                Role::Coordinator,
+                &enc.into_bytes(),
+                move |_ictx, _p| co_handler(&ctx2, &queries_owned).to_bytes(),
+            )
             .expect("coordinator invocation");
-        QaResponse::from_bytes(&out).expect("coordinator response decode")
+        QaResponse::from_bytes(&out.response).expect("coordinator response decode")
     }
 }
 
@@ -450,6 +580,47 @@ mod tests {
     use crate::data::synthetic::generate;
     use crate::data::workload::{generate_workload, WorkloadOptions};
     use crate::runtime::backend::NativeScanEngine;
+
+    #[test]
+    fn hedge_policy_parsing() {
+        assert_eq!(HedgePolicy::parse("off"), Some(HedgePolicy::Off));
+        assert_eq!(HedgePolicy::parse(""), Some(HedgePolicy::Off));
+        assert_eq!(HedgePolicy::parse("p95"), Some(HedgePolicy::Quantile(0.95)));
+        assert_eq!(HedgePolicy::parse("p50"), Some(HedgePolicy::Quantile(0.50)));
+        match HedgePolicy::parse("p99.9") {
+            Some(HedgePolicy::Quantile(q)) => assert!((q - 0.999).abs() < 1e-12, "q={q}"),
+            other => panic!("p99.9 must parse as a quantile, got {other:?}"),
+        }
+        assert_eq!(HedgePolicy::parse("95"), None);
+        assert_eq!(HedgePolicy::parse("p-3"), None);
+        assert_eq!(HedgePolicy::parse("p101"), None);
+        // p0 would degenerate to "hedge every scatter at t=min": rejected
+        assert_eq!(HedgePolicy::parse("p0"), None);
+        assert!(!HedgePolicy::Off.enabled());
+        assert!(HedgePolicy::Quantile(0.95).enabled());
+    }
+
+    #[test]
+    fn adaptive_sharding_targets_per_shard_latency() {
+        let auto = QpSharding::Auto;
+        // no estimate yet: the warm-up heuristic (rows/min_rows, cap 8)
+        assert_eq!(auto.resolve_adaptive(100_000, 8192, None, 0.05), auto.resolve(100_000, 8192));
+        // 100k rows at 200k rows/s with a 0.1 s budget ⇒ 20k rows/shard ⇒ 5
+        assert_eq!(auto.resolve_adaptive(100_000, 8192, Some(200_000.0), 0.1), 5);
+        // a pessimistic estimate is clamped to the safety ceiling
+        assert_eq!(
+            auto.resolve_adaptive(100_000, 8192, Some(100.0), 0.1),
+            QpSharding::AUTO_MAX_SHARDS
+        );
+        // fast partitions need no scatter at all
+        assert_eq!(auto.resolve_adaptive(1000, 8192, Some(1e9), 0.1), 1);
+        // Off / Fixed ignore the estimate entirely
+        assert_eq!(QpSharding::Off.resolve_adaptive(100_000, 8192, Some(100.0), 0.1), 1);
+        assert_eq!(QpSharding::Fixed(3).resolve_adaptive(100_000, 8192, Some(100.0), 0.1), 3);
+        // degenerate inputs fall back rather than dividing by zero
+        assert_eq!(auto.resolve_adaptive(100_000, 8192, Some(0.0), 0.1), 8);
+        assert_eq!(auto.resolve_adaptive(100_000, 8192, Some(1e5), 0.0), 8);
+    }
 
     #[test]
     fn partition_file_roundtrip() {

@@ -22,13 +22,14 @@ use crate::coordinator::payload::{
     QaRequest, QaResponse, QpItem, QpRequest, QpResponse, QpShardItem, QpShardItemOut,
     QpShardRequest, QpShardResponse, QueryResult,
 };
-use crate::coordinator::{qp, SystemCtx};
+use crate::coordinator::{qp, HedgePolicy, SystemCtx};
 use crate::cost::Role;
 use crate::data::workload::Query;
 use crate::partition::selection::{rebalance_batch, select_partitions};
 use crate::partition::PartitionLayout;
 use crate::storage::{index_files, take_modeled_extra};
 use crate::util::bitmap::Bitmap;
+use crate::util::stats::percentile_sorted;
 
 /// Invoke one QA function synchronously (used by the CO and by parent
 /// QAs for their children).
@@ -37,12 +38,12 @@ pub fn invoke_qa(ctx: &Arc<SystemCtx>, req: QaRequest) -> QaResponse {
     let bytes = req.to_bytes();
     let out = ctx
         .platform
-        .invoke("squash-qa", Role::QueryAllocator, &bytes, move |ictx, payload| {
+        .invoke_retrying("squash-qa", Role::QueryAllocator, &bytes, move |ictx, payload| {
             let req = QaRequest::from_bytes(payload).expect("qa request decode");
             qa_handler(&ctx2, ictx, req).to_bytes()
         })
         .expect("qa invocation");
-    QaResponse::from_bytes(&out).expect("qa response decode")
+    QaResponse::from_bytes(&out.response).expect("qa response decode")
 }
 
 /// The QA function body.
@@ -213,10 +214,17 @@ fn prepare_batch(
 
 /// Route one partition request: scatter across QP shard functions when
 /// the candidate row count clears the threshold and sharding is on,
-/// else the classic single-QP invocation.
+/// else the classic single-QP invocation. `Auto` sharding is
+/// ledger-driven: the partition's learned rows/s (EWMA over recent
+/// runtime samples) sizes S for the target per-shard latency.
 fn dispatch_qp(ctx: &Arc<SystemCtx>, layout: &PartitionLayout, req: QpRequest) -> QpResponse {
     let total_rows: usize = req.items.iter().map(|it| it.local_rows.len()).sum();
-    let shards = ctx.cfg.qp_shards.resolve(total_rows, ctx.cfg.qp_shard_min_rows);
+    let shards = ctx.cfg.qp_shards.resolve_adaptive(
+        total_rows,
+        ctx.cfg.qp_shard_min_rows,
+        ctx.ledger.throughput.rows_per_s(req.partition),
+        ctx.cfg.qp_target_shard_latency_s,
+    );
     if shards <= 1 || total_rows <= ctx.cfg.qp_shard_min_rows {
         return qp::invoke_qp(ctx, req);
     }
@@ -306,17 +314,25 @@ fn scatter_qp(
         })
         .collect();
 
-    // scatter: one synchronous invocation per shard, concurrently
-    let responses: Vec<QpShardResponse> = std::thread::scope(|scope| {
+    // scatter: one synchronous invocation per shard, concurrently; each
+    // returns its response plus its modeled completion time (all shards
+    // launch at virtual t = 0)
+    let outcomes: Vec<(QpShardResponse, f64)> = std::thread::scope(|scope| {
         let handles: Vec<_> = shard_reqs
-            .into_iter()
+            .iter()
             .map(|sr| {
                 let ctx = ctx.clone();
-                scope.spawn(move || qp::invoke_qp_shard(&ctx, sr))
+                scope.spawn(move || qp::invoke_qp_shard(&ctx, sr, false))
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("qp shard thread")).collect()
     });
+    // feed the Auto-sharding throughput estimator per shard invocation
+    for (sr, (_, modeled_s)) in shard_reqs.iter().zip(&outcomes) {
+        let rows: usize = sr.items.iter().map(|it| it.rows.len()).sum();
+        ctx.ledger.throughput.record(req.partition, rows, *modeled_s);
+    }
+    let responses = hedged_join(ctx, &shard_reqs, outcomes);
 
     // merge: request-global histogram cutoff per item, then the SAME
     // shortlist + refinement path as the single-QP handler
@@ -337,6 +353,70 @@ fn scatter_qp(
         ctx.ledger.record_runtime(Role::QueryAllocator, ctx.platform.config.memory_qa_mb, extra);
     }
     QpResponse { results }
+}
+
+/// The virtual-completion-time hedge join (see the `coordinator` module
+/// docs). All shards launched at virtual t = 0 and completed at their
+/// modeled times; when the last outstanding shard exceeds the hedge
+/// quantile of its siblings' completion times, a duplicate invocation is
+/// launched at that quantile instant (against the shard's `…-hedge`
+/// pool — the primary's container is still busy on the virtual clock)
+/// and the shard's effective completion becomes min(primary, hedge).
+/// Responses are idempotent, so the join never changes results — only
+/// the modeled makespan and the ledger's hedge counters. Every scatter
+/// records its `(unhedged, hedged)` makespan pair; with hedging off the
+/// two are equal.
+fn hedged_join(
+    ctx: &Arc<SystemCtx>,
+    shard_reqs: &[QpShardRequest],
+    outcomes: Vec<(QpShardResponse, f64)>,
+) -> Vec<QpShardResponse> {
+    let times: Vec<f64> = outcomes.iter().map(|&(_, t)| t).collect();
+    // the last outstanding shard: max modeled completion time, ties
+    // broken toward the lowest shard index for determinism
+    let straggler = times
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1).then(b.0.cmp(&a.0)))
+        .map(|(i, _)| i)
+        .expect("scatter with no shards");
+    let unhedged = times[straggler];
+    let mut hedged = unhedged;
+    let mut responses: Vec<QpShardResponse> = outcomes.into_iter().map(|(r, _)| r).collect();
+    if let HedgePolicy::Quantile(q) = ctx.cfg.hedge {
+        if times.len() >= 2 {
+            let mut others: Vec<f64> = times
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != straggler)
+                .map(|(_, &t)| t)
+                .collect();
+            others.sort_by(|a, b| a.total_cmp(b));
+            let t_fire = percentile_sorted(&others, q * 100.0);
+            if unhedged > t_fire {
+                let (hedge_resp, d_h) =
+                    qp::invoke_qp_shard(ctx, &shard_reqs[straggler], true);
+                debug_assert_eq!(
+                    hedge_resp, responses[straggler],
+                    "hedge duplicate diverged from the primary shard response"
+                );
+                let hedge_done = t_fire + d_h;
+                // cancel-on-first-response: the QA proceeds at the winner's
+                // completion, but Lambda cannot cancel either copy — the
+                // duplicate's full duration is billed whether it wins or
+                // not, and that duration IS the cost hedging added (the
+                // primary would have run and billed regardless)
+                if hedge_done < unhedged {
+                    responses[straggler] = hedge_resp;
+                }
+                ctx.ledger.record_hedge(d_h);
+                let second = others.last().copied().unwrap_or(0.0);
+                hedged = second.max(unhedged.min(hedge_done));
+            }
+        }
+    }
+    ctx.ledger.record_scatter_makespan(unhedged, hedged);
+    responses
 }
 
 /// Merge-sort reduce of per-partition results (§2.4.5).

@@ -166,31 +166,49 @@ fn invoke_qp_encoded(ctx: &Arc<SystemCtx>, req: &QpRequest, bytes: Vec<u8>) -> Q
     let ctx2 = ctx.clone();
     let out = ctx
         .platform
-        .invoke(&function, Role::QueryProcessor, &bytes, move |ictx, payload| {
+        .invoke_retrying(&function, Role::QueryProcessor, &bytes, move |ictx, payload| {
             let req = QpRequest::from_bytes(payload).expect("qp request decode");
             qp_handler(&ctx2, ictx, req).to_bytes()
         })
         .expect("qp invocation");
-    QpResponse::from_bytes(&out).expect("qp response decode")
+    // feed the Auto-sharding throughput estimator: this partition just
+    // scanned `rows` candidates in `modeled_s` virtual seconds
+    let rows: usize = req.items.iter().map(|it| it.local_rows.len()).sum();
+    ctx.ledger.throughput.record(req.partition, rows, out.modeled_s);
+    QpResponse::from_bytes(&out.response).expect("qp response decode")
 }
 
 /// Invoke one QP *shard* function synchronously (multi-function scatter;
 /// see the module docs in `coordinator`). Every (partition, shard, S)
 /// triple is its own function — own container pool, own DRE-retained
 /// index copy, own cold/warm lifecycle — billed under `Role::QpShard`.
-pub fn invoke_qp_shard(ctx: &Arc<SystemCtx>, req: QpShardRequest) -> QpShardResponse {
-    let function =
-        format!("squash-processor-{}-shard-{}of{}", req.partition, req.shard, req.n_shards);
+/// Chaos-injected failures are retried with the failing container
+/// excluded; the returned modeled seconds include the failed attempts
+/// (serial on the virtual clock). With `hedge` set, the invocation runs
+/// against the shard's separate `…-hedge` function pool — the duplicate
+/// of the hedged join cannot reuse the primary's container, which is
+/// still busy at hedge-launch time on the virtual clock.
+pub fn invoke_qp_shard(
+    ctx: &Arc<SystemCtx>,
+    req: &QpShardRequest,
+    hedge: bool,
+) -> (QpShardResponse, f64) {
+    let suffix = if hedge { "-hedge" } else { "" };
+    let function = format!(
+        "squash-processor-{}-shard-{}of{}{suffix}",
+        req.partition, req.shard, req.n_shards
+    );
     let ctx2 = ctx.clone();
     let bytes = req.to_bytes();
     let out = ctx
         .platform
-        .invoke(&function, Role::QpShard, &bytes, move |ictx, payload| {
+        .invoke_retrying(&function, Role::QpShard, &bytes, move |ictx, payload| {
             let req = QpShardRequest::from_bytes(payload).expect("qp shard request decode");
             qp_shard_handler(&ctx2, ictx, req).to_bytes()
         })
         .expect("qp shard invocation");
-    QpShardResponse::from_bytes(&out).expect("qp shard response decode")
+    let resp = QpShardResponse::from_bytes(&out.response).expect("qp shard response decode");
+    (resp, out.modeled_s)
 }
 
 /// The QP shard function body: the partial-scan pipeline over this

@@ -12,6 +12,7 @@
 //! component (FaaS platform, object store, file store) updates.
 
 pub mod pricing;
+pub mod throughput;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -54,6 +55,24 @@ pub struct CostLedger {
     pub efs_bytes: AtomicU64,
     // payload traffic (diagnostics, not billed by AWS Lambda)
     pub payload_bytes: AtomicU64,
+    /// invocations that failed (chaos-injected or over-cap response);
+    /// billed like any synchronous invocation, counted for diagnostics
+    pub failed_invocations: AtomicU64,
+    /// duplicate invocations launched by the hedged scatter (a subset of
+    /// `invocations_qp_shard`; each also bumps the role counters)
+    pub hedged_invocations: AtomicU64,
+    /// modeled seconds billed for hedge duplicates — Lambda cannot cancel
+    /// a running invocation, so the duplicate bills in full whether it
+    /// wins the join or not; this is the extra cost hedging adds (the
+    /// primary runs and bills regardless). Stored as integer micros so
+    /// concurrent recording order cannot perturb the sum.
+    hedge_wasted_micros: AtomicU64,
+    /// per-scatter `(unhedged, hedged)` modeled makespans — the virtual
+    /// completion time of the slowest shard with and without the hedge
+    scatter_makespans: Mutex<Vec<(f64, f64)>>,
+    /// per-partition rows/s learned from QP runtime samples (feeds
+    /// `QpSharding::Auto`)
+    pub throughput: throughput::ThroughputBook,
     /// per-role wall runtimes (seconds), for reports
     runtimes: Mutex<Vec<(Role, f64)>>,
 }
@@ -111,6 +130,103 @@ impl CostLedger {
 
     pub fn record_payload(&self, bytes: u64) {
         self.payload_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// A failed (billed) invocation: chaos-injected or over-cap response.
+    pub fn record_failed_invocation(&self) {
+        self.failed_invocations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One hedge fired: a duplicate invocation whose full modeled
+    /// duration `wasted_s` is billed win or lose (cancel-on-first-response
+    /// only ends the *join*; Lambda keeps billing both copies).
+    pub fn record_hedge(&self, wasted_s: f64) {
+        self.hedged_invocations.fetch_add(1, Ordering::Relaxed);
+        self.hedge_wasted_micros.fetch_add((wasted_s * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Total modeled seconds billed for hedge duplicates — the cost side
+    /// of the hedging trade-off.
+    pub fn hedge_wasted_s(&self) -> f64 {
+        self.hedge_wasted_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// One scatter's modeled makespans: the virtual completion time of
+    /// its slowest shard without (`unhedged_s`) and with (`hedged_s`) the
+    /// hedge. Recorded even when hedging is off (then the two are equal),
+    /// so every run carries its own ablation.
+    pub fn record_scatter_makespan(&self, unhedged_s: f64, hedged_s: f64) {
+        self.scatter_makespans.lock().unwrap().push((unhedged_s, hedged_s));
+    }
+
+    /// All recorded `(unhedged, hedged)` scatter makespans, sorted for
+    /// deterministic downstream percentile math (recording order under a
+    /// concurrent QA tree is scheduler-dependent; the multiset is not).
+    pub fn scatter_makespans(&self) -> Vec<(f64, f64)> {
+        let mut v = self.scatter_makespans.lock().unwrap().clone();
+        v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        v
+    }
+
+    /// Percentile over the recorded scatter makespans, per column:
+    /// `(unhedged, hedged)` values at percentile `p` (0.0 before any
+    /// scatter). Columns are sorted independently; hedged ≤ unhedged
+    /// holds pointwise per scatter, hence per order statistic too. The
+    /// shared primitive behind `chaos_summary`, the serve report and the
+    /// bench ablations.
+    pub fn makespan_percentile(&self, p: f64) -> (f64, f64) {
+        Self::makespan_percentile_of(&self.scatter_makespans(), p)
+    }
+
+    /// [`CostLedger::makespan_percentile`] over an already-taken
+    /// `scatter_makespans()` snapshot, for callers computing several
+    /// percentiles without re-locking the ledger per call.
+    pub fn makespan_percentile_of(pairs: &[(f64, f64)], p: f64) -> (f64, f64) {
+        let (mut u, mut h): (Vec<f64>, Vec<f64>) = pairs.iter().copied().unzip();
+        u.sort_by(|a, b| a.total_cmp(b));
+        h.sort_by(|a, b| a.total_cmp(b));
+        (
+            crate::util::stats::percentile_sorted(&u, p),
+            crate::util::stats::percentile_sorted(&h, p),
+        )
+    }
+
+    /// Deterministic ledger digest for chaos reproducibility checks: only
+    /// counters and modeled (virtual-clock) quantities appear — never
+    /// wall-clock durations — so two runs with the same chaos seed must
+    /// produce byte-identical summaries.
+    pub fn chaos_summary(&self) -> String {
+        let makespans = self.scatter_makespans();
+        let n_scatters = makespans.len();
+        let (u50, h50) = Self::makespan_percentile_of(&makespans, 50.0);
+        let (u99, h99) = Self::makespan_percentile_of(&makespans, 99.0);
+        format!(
+            "invocations co={} qa={} qp={} qp_shard={} failed={} hedged={}\n\
+             hedge_wasted_s={:.6}\n\
+             cold_starts={}\n\
+             storage s3_gets={} s3_bytes={} efs_reads={} efs_bytes={} payload_bytes={}\n\
+             scatters={} makespan_unhedged p50={:.9} p99={:.9}\n\
+             scatters={} makespan_hedged   p50={:.9} p99={:.9}\n",
+            self.invocations_co.load(Ordering::Relaxed),
+            self.invocations_qa.load(Ordering::Relaxed),
+            self.invocations_qp.load(Ordering::Relaxed),
+            self.invocations_qp_shard.load(Ordering::Relaxed),
+            self.failed_invocations.load(Ordering::Relaxed),
+            self.hedged_invocations.load(Ordering::Relaxed),
+            self.hedge_wasted_s(),
+            self.cold_starts.load(Ordering::Relaxed),
+            self.s3_gets.load(Ordering::Relaxed),
+            self.s3_bytes.load(Ordering::Relaxed),
+            self.efs_reads.load(Ordering::Relaxed),
+            self.efs_bytes.load(Ordering::Relaxed),
+            self.payload_bytes.load(Ordering::Relaxed),
+            n_scatters,
+            u50,
+            u99,
+            n_scatters,
+            h50,
+            h99,
+        )
     }
 
     pub fn mb_seconds(&self, role: Role) -> f64 {
@@ -294,6 +410,47 @@ mod tests {
         assert!(server_daily_cost(p.c7i_16xlarge_hourly, 2) > server_daily_cost(p.c7i_4xlarge_hourly, 2));
         // GIST (960d) queries cost more than SIFT (128d) queries
         assert!(system_x_query_cost(&p, 960, 10) > system_x_query_cost(&p, 128, 10));
+    }
+
+    #[test]
+    fn hedge_and_scatter_accounting() {
+        let l = CostLedger::new();
+        l.record_hedge(0.125);
+        l.record_hedge(0.375);
+        assert_eq!(l.hedged_invocations.load(Ordering::Relaxed), 2);
+        assert!((l.hedge_wasted_s() - 0.5).abs() < 1e-6);
+        l.record_failed_invocation();
+        assert_eq!(l.failed_invocations.load(Ordering::Relaxed), 1);
+        // makespans come back sorted regardless of recording order
+        l.record_scatter_makespan(0.9, 0.4);
+        l.record_scatter_makespan(0.2, 0.2);
+        assert_eq!(l.scatter_makespans(), vec![(0.2, 0.2), (0.9, 0.4)]);
+        // per-column percentiles: u ∈ {0.2, 0.9}, h ∈ {0.2, 0.4}
+        let (u50, h50) = l.makespan_percentile(50.0);
+        assert!((u50 - 0.55).abs() < 1e-12 && (h50 - 0.3).abs() < 1e-12, "{u50} {h50}");
+        assert_eq!(l.makespan_percentile(100.0), (0.9, 0.4));
+        assert_eq!(CostLedger::new().makespan_percentile(99.0), (0.0, 0.0));
+    }
+
+    #[test]
+    fn chaos_summary_is_deterministic_and_wall_clock_free() {
+        let run = || {
+            let l = CostLedger::new();
+            l.record_invocation(Role::QueryProcessor, true);
+            l.record_invocation(Role::QpShard, false);
+            l.record_scatter_makespan(0.75, 0.3);
+            l.record_scatter_makespan(0.1, 0.1);
+            l.record_hedge(0.45);
+            l.record_s3_get(1024);
+            // wall-clock runtimes must NOT appear in the digest
+            l.record_runtime(Role::QueryProcessor, 1770, std::f64::consts::PI);
+            l.chaos_summary()
+        };
+        let a = run();
+        assert_eq!(a, run(), "identical event streams must digest identically");
+        assert!(a.contains("hedged=1"));
+        assert!(a.contains("qp_shard=1"));
+        assert!(!a.contains("3.14"), "wall-clock runtime leaked into the chaos digest:\n{a}");
     }
 
     #[test]

@@ -1,0 +1,121 @@
+//! Per-partition scan-throughput estimation from ledger runtime samples.
+//!
+//! `QpSharding::Auto` needs to answer "how many shard functions does this
+//! request need so each shard lands near the target latency?" — which
+//! requires knowing how fast a QP invocation chews through candidate
+//! rows. [`ThroughputBook`] learns that online: every QP / QP-shard
+//! invocation reports `(partition, rows, modeled seconds)` and the book
+//! folds it into a per-partition EWMA of rows/s. The estimate is a convex
+//! combination of observed rates, so it is always bracketed by the
+//! fastest and slowest sample seen — the "monotone-sane" property pinned
+//! by `tests/autotune.rs`.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Exponentially weighted moving average over positive samples.
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha), "alpha {alpha} outside [0, 1]");
+        Self { alpha, value: None }
+    }
+
+    /// Fold one sample in: `v ← α·x + (1−α)·v` (first sample seeds v).
+    pub fn push(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        });
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Default smoothing: recent invocations dominate (a warm container's
+/// rate matters more than its cold predecessor's) without letting one
+/// straggler swing the estimate.
+pub const DEFAULT_ALPHA: f64 = 0.3;
+
+/// Thread-safe per-partition rows/s EWMAs, fed by the cost ledger.
+#[derive(Debug, Default)]
+pub struct ThroughputBook {
+    per_partition: Mutex<HashMap<usize, Ewma>>,
+}
+
+impl ThroughputBook {
+    /// Record one scan invocation: `rows` candidate rows processed in
+    /// `modeled_s` modeled seconds. Degenerate samples (no rows, zero
+    /// duration) are skipped rather than poisoning the estimate.
+    pub fn record(&self, partition: usize, rows: usize, modeled_s: f64) {
+        if rows == 0 || modeled_s <= 0.0 {
+            return;
+        }
+        self.per_partition
+            .lock()
+            .unwrap()
+            .entry(partition)
+            .or_insert_with(|| Ewma::new(DEFAULT_ALPHA))
+            .push(rows as f64 / modeled_s);
+    }
+
+    /// Current rows/s estimate for a partition (`None` before any sample).
+    pub fn rows_per_s(&self, partition: usize) -> Option<f64> {
+        self.per_partition.lock().unwrap().get(&partition).and_then(|e| e.value())
+    }
+
+    /// Number of partitions with at least one sample (diagnostics).
+    pub fn partitions_observed(&self) -> usize {
+        self.per_partition.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_stays_within_sample_envelope() {
+        let mut e = Ewma::new(0.3);
+        assert_eq!(e.value(), None);
+        for x in [10.0, 2.0, 8.0, 4.0] {
+            e.push(x);
+            let v = e.value().unwrap();
+            assert!((2.0..=10.0).contains(&v), "estimate {v} escaped the sample envelope");
+        }
+    }
+
+    #[test]
+    fn ewma_tracks_a_level_shift() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..20 {
+            e.push(100.0);
+        }
+        assert!((e.value().unwrap() - 100.0).abs() < 1e-9);
+        for _ in 0..20 {
+            e.push(400.0);
+        }
+        assert!(e.value().unwrap() > 390.0, "EWMA must converge to the new level");
+    }
+
+    #[test]
+    fn book_per_partition_isolation_and_degenerate_samples() {
+        let b = ThroughputBook::default();
+        assert_eq!(b.rows_per_s(0), None);
+        b.record(0, 1000, 0.01); // 100k rows/s
+        b.record(1, 1000, 0.1); // 10k rows/s
+        b.record(2, 0, 0.1); // skipped
+        b.record(2, 10, 0.0); // skipped
+        assert!((b.rows_per_s(0).unwrap() - 100_000.0).abs() < 1e-6);
+        assert!((b.rows_per_s(1).unwrap() - 10_000.0).abs() < 1e-6);
+        assert_eq!(b.rows_per_s(2), None);
+        assert_eq!(b.partitions_observed(), 2);
+    }
+}

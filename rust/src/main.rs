@@ -13,14 +13,22 @@
 //! QP scan's candidate rows across N worker threads *inside* one QP
 //! function), --qp-shards <off|auto|N> (scatter each large partition
 //! request across N separate QP *functions*, merged bit-identically at
-//! the QA — see coordinator module docs), --time-scale <f>, --no-dre,
-//! --seed <u64>.
+//! the QA — see coordinator module docs; `auto` is ledger-driven:
+//! learned rows/s picks S for a target per-shard latency),
+//! --hedge <off|pN> (duplicate the scatter's last outstanding shard when
+//! it exceeds the pN quantile of its siblings' modeled completion
+//! times), --chaos-seed <u64> (deterministic tail-latency / fault
+//! injection; same seed ⇒ same tail), --tail-sigma <f> (lognormal σ of
+//! the chaos overhead jitter), --spike-prob <f> / --failure-prob <f>
+//! (chaos stall and failure injection rates), --time-scale <f>,
+//! --no-dre, --seed <u64>.
 
 use squash::baselines::server::InstanceType;
 use squash::bench::{measure_server, measure_squash, measure_system_x, Env, EnvOptions, RunStats};
 use squash::runtime::backend::ScanParallelism;
 use squash::coordinator::tree::TreeConfig;
-use squash::coordinator::QpSharding;
+use squash::coordinator::{HedgePolicy, QpSharding};
+use squash::faas::ChaosConfig;
 use squash::cost::pricing::Pricing;
 use squash::cost::{server_daily_cost, system_x_query_cost};
 use squash::data::profiles::PROFILES;
@@ -67,6 +75,48 @@ fn env_opts(args: &Args) -> EnvOptions {
             eprintln!("--qp-shards must be off|auto|<count>; using off");
             QpSharding::Off
         }),
+        chaos: {
+            // --chaos-seed enables the model; SQUASH_CHAOS_SEED is the
+            // fallback. The shape flags apply to either source.
+            let mut c = match args.get_u64_opt("chaos-seed") {
+                Ok(Some(seed)) => ChaosConfig::with_seed(seed),
+                Ok(None) => ChaosConfig::from_env(),
+                Err(e) => {
+                    eprintln!("{e}; chaos disabled");
+                    ChaosConfig::off()
+                }
+            };
+            if c.enabled() {
+                match args.get_f64("tail-sigma", c.tail_sigma) {
+                    Ok(s) => c.tail_sigma = s,
+                    Err(e) => eprintln!("{e}; using {}", c.tail_sigma),
+                }
+                match args.get_f64("spike-prob", c.spike_prob) {
+                    Ok(p) => c.spike_prob = p,
+                    Err(e) => eprintln!("{e}; using {}", c.spike_prob),
+                }
+                match args.get_f64("failure-prob", c.failure_prob) {
+                    Ok(p) => c.failure_prob = p,
+                    Err(e) => eprintln!("{e}; using {}", c.failure_prob),
+                }
+            } else {
+                for flag in ["tail-sigma", "spike-prob", "failure-prob"] {
+                    if args.get(flag).is_some() {
+                        eprintln!("--{flag} ignored: chaos is disabled (pass --chaos-seed)");
+                    }
+                }
+            }
+            c
+        },
+        hedge: match args.get("hedge") {
+            Some(v) => HedgePolicy::parse(v).unwrap_or_else(|| {
+                eprintln!("--hedge must be off|pN (e.g. p95); using off");
+                HedgePolicy::Off
+            }),
+            // no flag: honour the SQUASH_HEDGE environment override, like
+            // the other three parallel/chaos knobs
+            None => HedgePolicy::from_env().unwrap_or(HedgePolicy::Off),
+        },
         seed: args.get_u64("seed", 42).unwrap_or(42),
     }
 }
@@ -100,6 +150,22 @@ fn cmd_serve(args: &Args) -> i32 {
     println!("{}", RunStats::header());
     println!("{stats}");
     println!("cost detail: {}", stats.cost);
+    let n_scatters = env.ledger.scatter_makespans().len();
+    if n_scatters > 0 {
+        let (u50, h50) = env.ledger.makespan_percentile(50.0);
+        let (u99, h99) = env.ledger.makespan_percentile(99.0);
+        println!(
+            "scatter makespans ({n_scatters} scatters, modeled ms): \
+             unhedged p50={:.1} p99={:.1}  hedged p50={:.1} p99={:.1}  \
+             ({} hedges, {:.1} ms duplicate bill)",
+            u50 * 1e3,
+            u99 * 1e3,
+            h50 * 1e3,
+            h99 * 1e3,
+            env.ledger.hedged_invocations.load(std::sync::atomic::Ordering::Relaxed),
+            env.ledger.hedge_wasted_s() * 1e3,
+        );
+    }
     if args.has_flag("baselines") {
         println!("{}", measure_system_x(&env, truth_k));
         println!("{}", measure_server(&env, InstanceType::C7i4xlarge, truth_k));

@@ -48,11 +48,26 @@ thread_local! {
     /// billed even when `time_scale < 1` (unit tests run at scale 0 with
     /// full-fidelity billing).
     static MODELED_EXTRA: std::cell::Cell<f64> = const { std::cell::Cell::new(0.0) };
+    /// *Full* modeled seconds accumulated on this thread, independent of
+    /// `time_scale` — the deterministic virtual clock behind the chaos /
+    /// hedging machinery. Where MODELED_EXTRA holds only the unslept
+    /// remainder (a billing correction), this cell holds the whole
+    /// modeled duration, so a modeled completion time can be
+    /// reconstructed identically at any time scale.
+    static MODELED_TOTAL: std::cell::Cell<f64> = const { std::cell::Cell::new(0.0) };
 }
 
 /// Drain the current thread's modeled-latency surplus (see MODELED_EXTRA).
 pub fn take_modeled_extra() -> f64 {
     MODELED_EXTRA.with(|c| c.take())
+}
+
+/// Drain the current thread's full modeled-seconds clock (see
+/// MODELED_TOTAL). The FaaS platform resets this at invocation entry and
+/// drains it at exit, yielding the invocation's *modeled* duration —
+/// deterministic, unlike wall time.
+pub fn take_modeled_total() -> f64 {
+    MODELED_TOTAL.with(|c| c.take())
 }
 
 impl SimParams {
@@ -70,6 +85,7 @@ impl SimParams {
             std::thread::sleep(Duration::from_secs_f64(modeled_s * self.time_scale));
         }
         MODELED_EXTRA.with(|c| c.set(c.get() + modeled_s * (1.0 - scale)));
+        MODELED_TOTAL.with(|c| c.set(c.get() + modeled_s));
         modeled_s
     }
 }

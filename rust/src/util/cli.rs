@@ -102,6 +102,20 @@ impl Args {
                 .map_err(|_| CliError::InvalidValue(name.to_string(), v.to_string())),
         }
     }
+
+    /// Presence-sensitive u64 option: `None` when absent (vs `get_u64`,
+    /// which folds absence into a default). Used by knobs whose presence
+    /// alone changes behaviour, e.g. `--chaos-seed` enabling the tail
+    /// model.
+    pub fn get_u64_opt(&self, name: &str) -> Result<Option<u64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError::InvalidValue(name.to_string(), v.to_string())),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -133,6 +147,14 @@ mod tests {
         let a = parse("run --k ten");
         assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
         assert!(a.get_usize("k", 0).is_err());
+    }
+
+    #[test]
+    fn optional_u64_distinguishes_absence() {
+        let a = parse("serve --chaos-seed 7");
+        assert_eq!(a.get_u64_opt("chaos-seed").unwrap(), Some(7));
+        assert_eq!(a.get_u64_opt("missing").unwrap(), None);
+        assert!(parse("serve --chaos-seed lucky").get_u64_opt("chaos-seed").is_err());
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! Ledger-driven QP shard auto-tuning (`QpSharding::Auto`): the
+//! coordinator learns each partition's scan throughput (rows/s EWMA over
+//! recent runtime samples, `cost::throughput`) and picks the shard count
+//! S to hit a target per-shard modeled latency instead of the old fixed
+//! cap of 8. Pinned here:
+//!
+//! 1. **Closed-loop convergence.** Driving `resolve_adaptive` against a
+//!    simulated partition (fixed true throughput + per-invocation
+//!    overhead) through the same feedback path the QA uses — choose S,
+//!    observe per-shard latency, record rows/s, repeat — the chosen S
+//!    stabilizes after a warm-up burst and the per-shard latency lands
+//!    inside the target band, with one fewer shard overshooting it.
+//! 2. **EWMA sanity.** The throughput estimate is a convex combination
+//!    of its samples, so under *any* sample order it stays inside the
+//!    [min, max] envelope of the observed rates — shuffling history can
+//!    bias the estimate but never eject it from the data.
+//! 3. **End-to-end determinism.** Two identical systems running `Auto`
+//!    make identical shard decisions (same scatter fan-out, same results
+//!    bit-for-bit): the estimator feeds on modeled durations only, never
+//!    wall time.
+
+use std::sync::Arc;
+
+use squash::coordinator::tree::TreeConfig;
+use squash::coordinator::{BuildOptions, QpSharding, SquashConfig, SquashSystem};
+use squash::cost::throughput::{Ewma, ThroughputBook};
+use squash::data::profiles::by_name;
+use squash::data::synthetic::generate;
+use squash::data::workload::{generate_workload, WorkloadOptions};
+use squash::runtime::backend::NativeScanEngine;
+use squash::util::prop;
+
+#[test]
+fn auto_sharding_converges_to_the_target_latency_band() {
+    // simulated partition: each shard function scans at `rps_true` rows/s
+    // plus a fixed per-invocation overhead — the same l(S) = o + r/(S·R)
+    // shape the modeled platform produces
+    let rows = 100_000usize;
+    let rps_true = 100_000.0;
+    let overhead_s = 0.01;
+    let target_s = 0.3;
+    let min_rows = 8192;
+
+    let book = ThroughputBook::default();
+    let auto = QpSharding::Auto;
+    let mut chosen: Vec<(usize, f64)> = Vec::new();
+    for _ in 0..12 {
+        let s = auto.resolve_adaptive(rows, min_rows, book.rows_per_s(0), target_s);
+        let per_shard_rows = rows.div_ceil(s);
+        let latency = overhead_s + per_shard_rows as f64 / rps_true;
+        for _ in 0..s {
+            book.record(0, per_shard_rows, latency);
+        }
+        chosen.push((s, latency));
+    }
+
+    // warm-up burst: with no samples the first round is the blind
+    // row-count heuristic (the old fixed-cap-8 behaviour)
+    assert_eq!(chosen[0].0, auto.resolve(rows, min_rows), "round 0 must use the fallback");
+    // convergence: the back half of the rounds all agree
+    let (s_final, lat_final) = *chosen.last().unwrap();
+    assert!(
+        chosen[6..].iter().all(|&(s, _)| s == s_final),
+        "S did not stabilize: {chosen:?}"
+    );
+    assert!(s_final >= 2, "this workload needs a real scatter, got S={s_final}");
+    // the per-shard modeled latency lands inside the target band
+    assert!(
+        lat_final <= target_s * 1.05,
+        "converged latency {lat_final} overshoots the {target_s}s target"
+    );
+    assert!(
+        lat_final >= target_s * 0.5,
+        "converged latency {lat_final} wastes fan-out far below the {target_s}s target"
+    );
+    // minimality: one fewer shard would overshoot the target
+    let lat_coarser = overhead_s + rows.div_ceil(s_final - 1) as f64 / rps_true;
+    assert!(
+        lat_coarser > target_s,
+        "S={s_final} is not minimal: S-1 would still meet the target ({lat_coarser})"
+    );
+}
+
+#[test]
+fn auto_sharding_saturates_at_the_cap_when_the_target_is_unreachable() {
+    // target far below the per-invocation overhead floor: no S can reach
+    // it, so the loop must pin at the safety ceiling and stay there
+    let rows = 50_000usize;
+    let rps_true = 1_000_000.0;
+    let overhead_s = 0.02;
+    let target_s = 0.001;
+    let book = ThroughputBook::default();
+    let auto = QpSharding::Auto;
+    let mut last = 0usize;
+    for round in 0..8 {
+        let s = auto.resolve_adaptive(rows, 8192, book.rows_per_s(3), target_s);
+        let per_shard_rows = rows.div_ceil(s);
+        let latency = overhead_s + per_shard_rows as f64 / rps_true;
+        for _ in 0..s {
+            book.record(3, per_shard_rows, latency);
+        }
+        if round >= 2 {
+            assert_eq!(
+                s,
+                QpSharding::AUTO_MAX_SHARDS,
+                "unreachable target must saturate at the cap, got {s} in round {round}"
+            );
+        }
+        last = s;
+    }
+    assert_eq!(last, QpSharding::AUTO_MAX_SHARDS);
+}
+
+#[test]
+fn ewma_estimate_stays_in_the_sample_envelope_under_any_order() {
+    prop::check("ewma-envelope", 100, |g| {
+        let n = g.usize_in(1, 40);
+        let mut samples: Vec<f64> =
+            (0..n).map(|_| g.f32_in(0.5, 5000.0) as f64).collect();
+        g.rng.shuffle(&mut samples);
+        let mut e = Ewma::new(g.f32_in(0.05, 1.0) as f64);
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &x in &samples {
+            lo = lo.min(x);
+            hi = hi.max(x);
+            e.push(x);
+            let v = e.value().unwrap();
+            // convex combination: the estimate can never leave the
+            // envelope of the samples folded in so far
+            if !(lo..=hi).contains(&v) {
+                return Err(format!("estimate {v} escaped envelope [{lo}, {hi}]"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn throughput_book_orders_partitions_sanely() {
+    prop::check("throughput-book-envelope", 50, |g| {
+        let book = ThroughputBook::default();
+        let n = g.usize_in(1, 20);
+        let mut rates: Vec<f64> = Vec::new();
+        for _ in 0..n {
+            let rows = g.usize_in(1, 100_000);
+            let secs = g.f32_in(0.001, 2.0) as f64;
+            rates.push(rows as f64 / secs);
+            book.record(0, rows, secs);
+        }
+        let est = book.rows_per_s(0).unwrap();
+        let lo = rates.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = rates.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        // tolerate rounding at the envelope edges
+        if est < lo * (1.0 - 1e-12) || est > hi * (1.0 + 1e-12) {
+            return Err(format!("estimate {est} outside [{lo}, {hi}]"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn auto_scatter_is_deterministic_end_to_end() {
+    let ds = generate(by_name("test").unwrap(), 2500, 81);
+    let queries = generate_workload(
+        &ds,
+        &WorkloadOptions { n_queries: 12, ..Default::default() },
+        82,
+    )
+    .queries;
+    let run = || {
+        let cfg = SquashConfig {
+            // single-QA tree keeps per-function invocation order — and so
+            // the modeled durations feeding the estimator — deterministic
+            tree: TreeConfig::new(1, 1),
+            qp_shards: QpSharding::Auto,
+            qp_shard_min_rows: 8,
+            // a tight target pushes Auto into real multi-shard scatters
+            // even at this fixture's scale
+            qp_target_shard_latency_s: 0.002,
+            ..Default::default()
+        };
+        let sys = SquashSystem::build_default(
+            &ds,
+            &BuildOptions::default(),
+            cfg,
+            Arc::new(NativeScanEngine::new()),
+        );
+        let mut shard_counts = Vec::new();
+        let mut all_results = Vec::new();
+        for _ in 0..3 {
+            all_results.push(sys.run_batch(&queries).results);
+            shard_counts.push(sys.ctx.ledger.qp_shard_invocations());
+        }
+        (shard_counts, all_results)
+    };
+    let (counts_a, results_a) = run();
+    let (counts_b, results_b) = run();
+    // the estimator feeds on modeled durations only: identical systems
+    // make identical adaptive decisions, run after run
+    assert_eq!(counts_a, counts_b, "Auto shard decisions must be deterministic");
+    assert_eq!(results_a, results_b, "Auto results must be deterministic");
+    // and the adaptive path actually scattered somewhere
+    assert!(*counts_a.last().unwrap() > 0, "Auto never scattered in this fixture");
+}

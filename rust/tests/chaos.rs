@@ -1,0 +1,256 @@
+//! Deterministic tail-latency chaos harness: the seeded
+//! `faas::LatencyModel` (lognormal overhead jitter, cold-start-class
+//! spikes, injected invocation failures) exercised end-to-end through
+//! the hedged QP scatter. Pinned properties:
+//!
+//! 1. **Results are invariant to the tail.** Under any chaos seed ×
+//!    hedge setting × shard count — including injected failures forcing
+//!    shard retries — query results are bit-identical to the
+//!    zero-variance unhedged run. Chaos moves modeled time and cost,
+//!    never answers.
+//! 2. **Hedging never hurts the modeled makespan.** Per scatter,
+//!    `hedged ≤ unhedged` on the virtual clock (the hedge join takes
+//!    min(primary, hedge)), and under a heavy tail some hedges win
+//!    strictly.
+//! 3. **The whole ledger replays byte-identically.** Two runs with the
+//!    same chaos seed produce identical `CostLedger::chaos_summary()`
+//!    digests; the digest is also written to a file so CI can diff two
+//!    independent processes.
+//!
+//! The fixture pins a single-QA tree: per-function invocation order —
+//! hence the per-function chaos draw sequence — is then deterministic.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use squash::coordinator::tree::TreeConfig;
+use squash::coordinator::{
+    BuildOptions, HedgePolicy, QpSharding, SquashConfig, SquashSystem,
+};
+use squash::cost::CostLedger;
+use squash::data::profiles::by_name;
+use squash::data::synthetic::generate;
+use squash::data::workload::{generate_workload, Query, WorkloadOptions};
+use squash::data::Dataset;
+use squash::faas::{ChaosConfig, FaasConfig, LatencyModel, Platform};
+use squash::runtime::backend::NativeScanEngine;
+use squash::storage::{FileStore, ObjectStore, SimParams};
+
+fn fixture() -> (Dataset, Vec<Query>) {
+    let ds = generate(by_name("test").unwrap(), 3000, 71);
+    // attribute-filtered plus match-all queries: the tail machinery must
+    // be transparent to both
+    let mut queries = generate_workload(
+        &ds,
+        &WorkloadOptions { n_queries: 10, ..Default::default() },
+        72,
+    )
+    .queries;
+    queries.extend(
+        generate_workload(
+            &ds,
+            &WorkloadOptions { n_queries: 6, selectivity: 1.0, ..Default::default() },
+            73,
+        )
+        .queries,
+    );
+    (ds, queries)
+}
+
+/// A heavy, clearly-visible tail: frequent spikes and wide jitter.
+fn heavy_tail(seed: u64, failure_prob: f64) -> ChaosConfig {
+    ChaosConfig {
+        tail_sigma: 0.6,
+        spike_prob: 0.25,
+        spike_s: 0.5,
+        failure_prob,
+        ..ChaosConfig::with_seed(seed)
+    }
+}
+
+fn build_sys(
+    ds: &Dataset,
+    chaos: ChaosConfig,
+    hedge: HedgePolicy,
+    shards: QpSharding,
+) -> SquashSystem {
+    let cfg = SquashConfig {
+        // single-QA tree: deterministic per-function invocation order
+        tree: TreeConfig::new(1, 1),
+        qp_shards: shards,
+        // low threshold so the small fixture actually scatters
+        qp_shard_min_rows: 8,
+        hedge,
+        ..Default::default()
+    };
+    let ledger = Arc::new(CostLedger::new());
+    let params = SimParams::instant();
+    let platform = Arc::new(Platform::new(
+        FaasConfig { chaos, ..Default::default() },
+        params.clone(),
+        ledger.clone(),
+    ));
+    let s3 = Arc::new(ObjectStore::new(params.clone(), ledger.clone()));
+    let efs = Arc::new(FileStore::new(params, ledger.clone()));
+    SquashSystem::build(
+        ds,
+        &BuildOptions::default(),
+        cfg,
+        platform,
+        s3,
+        efs,
+        Arc::new(NativeScanEngine::new()),
+    )
+}
+
+fn assert_bit_identical(want: &[Vec<(u64, f32)>], got: &[Vec<(u64, f32)>], label: &str) {
+    assert_eq!(want.len(), got.len(), "{label}: result count");
+    for (qi, (a, b)) in want.iter().zip(got).enumerate() {
+        assert_eq!(a.len(), b.len(), "{label}: query {qi} result length");
+        for (rank, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.0, y.0, "{label}: query {qi} rank {rank} id");
+            assert_eq!(
+                x.1.to_bits(),
+                y.1.to_bits(),
+                "{label}: query {qi} rank {rank} distance not bit-identical"
+            );
+        }
+    }
+}
+
+/// A chaos seed whose very first draw for the QA function injects a
+/// failure — guaranteeing the retry path runs at least once per run.
+fn seed_with_certain_qa_failure(failure_prob: f64) -> u64 {
+    (0u64..)
+        .find(|&s| {
+            let chaos = ChaosConfig { failure_prob, ..ChaosConfig::with_seed(s) };
+            LatencyModel::new(chaos).draw("squash-qa", 0).fail
+        })
+        .expect("some seed fails the first QA draw")
+}
+
+#[test]
+fn results_are_bit_identical_under_any_chaos_hedge_and_shard_setting() {
+    let (ds, queries) = fixture();
+    let baseline = build_sys(&ds, ChaosConfig::off(), HedgePolicy::Off, QpSharding::Off);
+    let want = baseline.run_batch(&queries).results;
+
+    let fail_seed = seed_with_certain_qa_failure(0.08);
+    let scenarios: [(u64, &str, usize, f64); 3] = [
+        (7, "p95", 2, 0.0),
+        (fail_seed, "p50", 3, 0.08), // injected failures force retries
+        (9001, "p95", 7, 0.0),
+    ];
+    for (seed, hedge, n, failure_prob) in scenarios {
+        let label = format!("chaos-seed={seed} hedge={hedge} shards={n} fail={failure_prob}");
+        let sys = build_sys(
+            &ds,
+            heavy_tail(seed, failure_prob),
+            HedgePolicy::parse(hedge).unwrap(),
+            QpSharding::Fixed(n),
+        );
+        let got = sys.run_batch(&queries).results;
+        assert_bit_identical(&want, &got, &label);
+        let ledger = &sys.ctx.ledger;
+        assert!(ledger.qp_shard_invocations() > 0, "{label}: scatter never ran");
+        if failure_prob > 0.0 {
+            assert!(
+                ledger.failed_invocations.load(Ordering::Relaxed) > 0,
+                "{label}: the failure seed must inject at least one failure"
+            );
+        }
+    }
+}
+
+#[test]
+fn hedged_makespan_never_exceeds_unhedged_for_the_same_seed() {
+    let (ds, queries) = fixture();
+    let mut any_strict_win = false;
+    for seed in [7u64, 8, 9] {
+        let sys = build_sys(
+            &ds,
+            heavy_tail(seed, 0.0),
+            HedgePolicy::parse("p95").unwrap(),
+            QpSharding::Fixed(3),
+        );
+        sys.run_batch(&queries);
+        let makespans = sys.ctx.ledger.scatter_makespans();
+        assert!(!makespans.is_empty(), "seed {seed}: no scatter makespans recorded");
+        for &(unhedged, hedged) in &makespans {
+            assert!(
+                hedged <= unhedged,
+                "seed {seed}: hedge join worsened a scatter: {hedged} > {unhedged}"
+            );
+        }
+        let hedges = sys.ctx.ledger.hedged_invocations.load(Ordering::Relaxed);
+        assert!(hedges > 0, "seed {seed}: a tail this heavy must fire hedges");
+        // cancel-on-first-response billing: every hedge records its waste
+        assert!(sys.ctx.ledger.hedge_wasted_s() > 0.0);
+        any_strict_win |= makespans.iter().any(|&(u, h)| h < u);
+        if any_strict_win {
+            break;
+        }
+    }
+    // 25% spike probability: across these seeds some spiked straggler
+    // must meet an unspiked duplicate, and that hedge wins the join
+    assert!(any_strict_win, "no hedge ever won the join under a heavy tail");
+}
+
+#[test]
+fn hedging_off_records_equal_makespan_columns() {
+    let (ds, queries) = fixture();
+    let sys = build_sys(&ds, heavy_tail(7, 0.0), HedgePolicy::Off, QpSharding::Fixed(3));
+    sys.run_batch(&queries);
+    let makespans = sys.ctx.ledger.scatter_makespans();
+    assert!(!makespans.is_empty());
+    for &(u, h) in &makespans {
+        assert_eq!(u.to_bits(), h.to_bits(), "hedge-off columns must coincide");
+    }
+    assert_eq!(sys.ctx.ledger.hedged_invocations.load(Ordering::Relaxed), 0);
+    assert_eq!(sys.ctx.ledger.hedge_wasted_s(), 0.0);
+}
+
+#[test]
+fn same_chaos_seed_replays_the_ledger_byte_identically() {
+    let (ds, queries) = fixture();
+    let run = || {
+        let sys = build_sys(
+            &ds,
+            heavy_tail(7, 0.02),
+            HedgePolicy::parse("p95").unwrap(),
+            QpSharding::Fixed(3),
+        );
+        sys.run_batch(&queries);
+        sys.ctx.ledger.chaos_summary()
+    };
+    let first = run();
+    let second = run();
+    assert_eq!(
+        first, second,
+        "two runs with the same chaos seed must produce byte-identical ledger summaries"
+    );
+    // emit the digest so CI can diff two independent test processes
+    let path = std::env::var("SQUASH_CHAOS_LEDGER_OUT")
+        .unwrap_or_else(|_| "chaos_ledger_summary.txt".to_string());
+    std::fs::write(&path, &first).expect("write chaos ledger summary");
+}
+
+#[test]
+fn different_chaos_seeds_produce_different_tails() {
+    let (ds, queries) = fixture();
+    let digest = |seed: u64| {
+        let sys = build_sys(
+            &ds,
+            heavy_tail(seed, 0.0),
+            HedgePolicy::parse("p95").unwrap(),
+            QpSharding::Fixed(3),
+        );
+        let out = sys.run_batch(&queries);
+        (sys.ctx.ledger.chaos_summary(), out.results)
+    };
+    let (a, results_a) = digest(7);
+    let (b, results_b) = digest(8);
+    assert_ne!(a, b, "distinct seeds should draw distinct tails");
+    // ... while results stay identical across seeds, of course
+    assert_bit_identical(&results_a, &results_b, "cross-seed results");
+}

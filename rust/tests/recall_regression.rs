@@ -8,17 +8,22 @@
 //! are regression tripwires, not targets.
 
 use squash::bench::{measure_squash, Env, EnvOptions};
+use squash::coordinator::{HedgePolicy, QpSharding};
+use squash::faas::ChaosConfig;
 
-fn recall_for(prune: bool, refine: bool) -> f64 {
-    let opts = EnvOptions {
+fn recall_opts() -> EnvOptions {
+    EnvOptions {
         profile: "test",
         n: 2000,
         n_queries: 24,
         time_scale: 0.0,
         seed: 2024,
         ..Default::default()
-    };
-    let mut env = Env::setup(&opts);
+    }
+}
+
+fn recall_for(prune: bool, refine: bool) -> f64 {
+    let mut env = Env::setup(&recall_opts());
     env.with_config(|c| {
         c.prune = prune;
         c.refine = refine;
@@ -51,6 +56,37 @@ fn recall_floor_prune_on_refine_off() {
 fn recall_floor_prune_off_refine_off() {
     let r = recall_for(false, false);
     assert!(r >= 0.50, "recall@10 without prune or refine fell to {r}");
+}
+
+#[test]
+fn recall_floors_hold_under_chaos_hedging_and_scatter() {
+    // `--hedge p95 --chaos-seed 7` with a 3-way scatter: the whole tail
+    // machinery — jittered modeled latencies, hedge duplicates, shard
+    // retries — must never alter accuracy. The floors are the same as
+    // the quiet runs', and recall is *bit-identical* to the quiet run:
+    // chaos moves modeled time and cost, never results.
+    let chaotic = || {
+        let opts = EnvOptions {
+            chaos: ChaosConfig::with_seed(7),
+            hedge: HedgePolicy::parse("p95").unwrap(),
+            qp_sharding: QpSharding::Fixed(3),
+            ..recall_opts()
+        };
+        let mut env = Env::setup(&opts);
+        // low scatter threshold: the filtered fixture leaves only a few
+        // dozen candidate rows per request, and they must still scatter
+        env.with_config(|c| c.qp_shard_min_rows = 8);
+        let r = measure_squash(&env, "recall-chaos", 10).recall;
+        (r, env.ledger.qp_shard_invocations())
+    };
+    let (r, shard_invocations) = chaotic();
+    assert!(shard_invocations > 0, "fixture must exercise the scatter path");
+    assert!(r >= 0.80, "recall@10 under chaos+hedging fell to {r}");
+    assert_eq!(
+        r.to_bits(),
+        recall_for(true, true).to_bits(),
+        "tail machinery altered accuracy: chaos {r} vs quiet run"
+    );
 }
 
 #[test]
