@@ -1,10 +1,14 @@
 //! Cost-model explorer (paper §3.5 + Fig 8 intuition): measure SQUASH's
 //! per-query cost live on a small deployment, then extrapolate daily
 //! cost across query volumes against System-X's read-unit tariff and
-//! provisioned servers, printing the crossover points.
+//! provisioned servers, printing the crossover points. Ends with an
+//! open-loop contention teaser: the same deployment under rising
+//! offered QPS on a capped fleet, fused vs unfused (full sweep:
+//! `squash load` / `cargo bench --bench load_sweep`).
 //!
 //!     cargo run --release --example cost_explorer -- [--profile test]
 
+use squash::bench::load::{configure_for_load, point_header, point_line, run_point, LoadOptions};
 use squash::bench::{measure_squash, Env, EnvOptions};
 use squash::cost::pricing::Pricing;
 use squash::cost::{server_daily_cost, system_x_query_cost};
@@ -56,4 +60,23 @@ fn main() {
         cross_small / 1e6,
         cross_large / 1e6
     );
+
+    // Per-query cost above assumed an idle fleet. Under load, queueing
+    // on the capped fleet and (with fusion) amortized invocations move
+    // the cost per 1k queries — modeled on the virtual clock, so the
+    // table replays byte-identically.
+    println!("\ncost under open-loop load (fleet cap 4, fusion window 2 ms):");
+    println!("{}", point_header());
+    for qps in [50.0, 200.0, 800.0] {
+        for (mode, window_ms) in [("unfused", 0.0), ("fused", 2.0)] {
+            let lopts = LoadOptions { fuse_window_ms: window_ms, ..Default::default() };
+            let mut o = opts.clone();
+            o.virtual_pools = true;
+            o.max_containers = lopts.max_containers;
+            let mut fleet = Env::setup(&o);
+            configure_for_load(&mut fleet);
+            let point = run_point(&fleet, qps, &lopts);
+            println!("{}", point_line(mode, &point.stats));
+        }
+    }
 }

@@ -1,0 +1,61 @@
+//! Open-loop load sweep: the hockey-stick plot. Offered QPS rises over
+//! a capped container fleet on the virtual clock; each point reports
+//! sustained throughput, latency percentiles and deterministic modeled
+//! cost per 1k queries, with a fused-vs-unfused ablation of the
+//! cross-request fusion window. Results land in `BENCH_load.json`
+//! (schema: `squash::bench::load` module docs). Fully seeded: the same
+//! invocation replays byte-identical curves.
+//!
+//! Env knobs (CI smoke uses small values): SQUASH_LOAD_N (dataset rows),
+//! SQUASH_LOAD_QUERIES (queries per point), SQUASH_LOAD_QPS
+//! (comma-separated sweep points), SQUASH_LOAD_OUT (output path).
+
+use squash::bench::load::{point_header, point_line, run_sweep, LoadOptions};
+use squash::bench::EnvOptions;
+
+fn env_or(name: &str, default: &str) -> String {
+    std::env::var(name).unwrap_or_else(|_| default.to_string())
+}
+
+fn main() {
+    let n: usize = env_or("SQUASH_LOAD_N", "3000").parse().expect("SQUASH_LOAD_N");
+    let n_queries: usize =
+        env_or("SQUASH_LOAD_QUERIES", "64").parse().expect("SQUASH_LOAD_QUERIES");
+    let qps: Vec<f64> = env_or("SQUASH_LOAD_QPS", "20,50,100,200,400")
+        .split(',')
+        .map(|s| s.trim().parse().expect("SQUASH_LOAD_QPS"))
+        .collect();
+    let out = env_or("SQUASH_LOAD_OUT", "BENCH_load.json");
+
+    let base = EnvOptions {
+        profile: "test",
+        n,
+        n_queries,
+        time_scale: 0.0, // the sweep measures the virtual clock
+        ..Default::default()
+    };
+    let opts = LoadOptions { qps, ..Default::default() };
+
+    println!("=== open-loop load sweep (fleet cap {}, poisson arrivals) ===", opts.max_containers);
+    println!("fusion window: {} ms; {} queries per point\n", opts.fuse_window_ms, n_queries);
+    let sweep = run_sweep(&base, &opts);
+    println!("{}", point_header());
+    for p in &sweep.unfused {
+        println!("{}", point_line("unfused", &p.stats));
+    }
+    for p in &sweep.fused {
+        println!("{}", point_line("fused", &p.stats));
+    }
+
+    // the ablation headline: sustained throughput at the heaviest load
+    let last_u = sweep.unfused.last().expect("points").stats.achieved_qps;
+    let last_f = sweep.fused.last().expect("points").stats.achieved_qps;
+    println!(
+        "\nat the heaviest offered load: fused {last_f:.1} QPS vs unfused {last_u:.1} QPS \
+         ({:.2}x)",
+        last_f / last_u.max(1e-9)
+    );
+
+    std::fs::write(&out, sweep.json.to_string_pretty()).expect("write BENCH_load.json");
+    println!("wrote {out}");
+}

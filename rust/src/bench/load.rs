@@ -1,0 +1,525 @@
+//! Open-loop concurrent traffic engine: seeded arrival processes, the
+//! cross-request fusion window, and the QPS sweep behind
+//! `BENCH_load.json`.
+//!
+//! The batch harness in [`crate::bench`] answers "how fast is one batch?";
+//! this module answers "what happens to latency, cost and cold starts as
+//! *offered* load rises?". Queries arrive on the shared virtual clock
+//! ([`crate::storage::virtual_now`]) according to a seeded arrival
+//! process, contend for a capped container fleet
+//! (`FaasConfig::virtual_pools` + `max_containers`), and optionally fuse:
+//! co-resident queries arriving within `--fuse-window` modeled
+//! milliseconds are coalesced into one coordinator batch, which the QA
+//! turns into a single QP invocation per partition (shared gather blocks,
+//! one LUT rebuild, one coalesced refinement read). Fusion moves
+//! invocation counts and modeled time, never answers: each fused query's
+//! results stay bit-identical to its unfused run.
+//!
+//! # Modeling approximation
+//!
+//! The engine is a serial discrete-event approximation: queries (or fused
+//! groups) are executed one after another in arrival order, with the
+//! virtual clock rewound to each group's dispatch instant and container
+//! contention resolved through per-container `free_at` stamps. Requests
+//! therefore only contend with containers created by *earlier* arrivals —
+//! a container cold-started by a later query can never serve an earlier
+//! one, so cold starts are slightly over-estimated right at the knee.
+//! This keeps the whole sweep single-timeline-deterministic: the same
+//! seed replays to a byte-identical ledger digest.
+//!
+//! # `BENCH_load.json` schema
+//!
+//! ```json
+//! {
+//!   "bench": "load",
+//!   "profile": "test", "n": 3000, "queries": 64, "seed": 42,
+//!   "arrival": "poisson", "fuse_window_ms": 2.0, "max_containers": 4,
+//!   "modes": [
+//!     { "mode": "unfused",
+//!       "points": [
+//!         { "offered_qps": 50, "achieved_qps": 48.7,
+//!           "mean_ms": 12.1, "p50_ms": 9.8, "p90_ms": 21.0,
+//!           "p99_ms": 35.2, "max_ms": 41.0,
+//!           "invocations": 640, "cold_starts": 12,
+//!           "queued": 31, "queue_delay_s": 0.18,
+//!           "fused_groups": 64, "max_group_size": 1,
+//!           "cost_per_1k_queries": 0.0021 } ] },
+//!     { "mode": "fused", "points": [ ... ] }
+//!   ]
+//! }
+//! ```
+//!
+//! Each point is measured on a fresh environment (fresh ledger, fresh
+//! fleet), so points are independent and the sweep order cannot leak
+//! state. `achieved_qps` is sustained throughput — queries over the span
+//! from first arrival to last completion — which flattens into the
+//! hockey-stick once offered load passes fleet capacity. Costs come from
+//! the ledger's *modeled* (virtual-clock) MB-second buckets plus the
+//! deterministic invocation / S3 / EFS counters, never from wall time.
+
+use crate::bench::{Env, EnvOptions};
+use crate::coordinator::payload::QueryResult;
+use crate::coordinator::tree::TreeConfig;
+use crate::storage::{set_virtual_now, virtual_now};
+use crate::util::json::Json;
+use crate::util::rng::{mix64, Rng};
+use crate::util::stats::percentile_sorted;
+
+/// Shape of the arrival process driving the open loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalProfile {
+    /// Memoryless arrivals at a constant rate (exponential gaps).
+    Poisson,
+    /// Diurnal + bursty shaping inspired by the Azure Functions 2021
+    /// traces: a compressed sinusoidal "day" with a burst window at the
+    /// start of each cycle, modulating the Poisson rate. The *average*
+    /// rate tracks the nominal QPS; instantaneous rate swings ~6x.
+    Trace,
+}
+
+impl ArrivalProfile {
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "poisson" => Some(Self::Poisson),
+            "trace" => Some(Self::Trace),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Poisson => "poisson",
+            Self::Trace => "trace",
+        }
+    }
+}
+
+/// One compressed "day" of the trace profile, in virtual seconds.
+const TRACE_DAY_S: f64 = 40.0;
+
+/// Instantaneous rate multiplier of the trace profile at virtual time
+/// `t`: a sinusoid with unit mean (trough 0.45x, peak 1.55x) times a
+/// 2.5x burst during the first eighth of each compressed day.
+fn trace_weight(t: f64) -> f64 {
+    let phase = t / TRACE_DAY_S * std::f64::consts::TAU;
+    let diurnal = 0.45 + 1.1 * (0.5 - 0.5 * phase.cos());
+    if (t / TRACE_DAY_S).fract() < 0.125 {
+        diurnal * 2.5
+    } else {
+        diurnal
+    }
+}
+
+/// Seeded arrival instants (virtual seconds, ascending) for `n` queries
+/// at nominal rate `qps`. The seed is mixed with the rate so sweep
+/// points draw independent streams.
+pub fn arrival_times(profile: ArrivalProfile, n: usize, qps: f64, seed: u64) -> Vec<f64> {
+    assert!(qps > 0.0, "offered qps must be positive");
+    let mut rng = Rng::new(seed ^ mix64(qps.to_bits()));
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rate = match profile {
+            ArrivalProfile::Poisson => qps,
+            ArrivalProfile::Trace => qps * trace_weight(t),
+        };
+        // inverse-CDF exponential gap; 1 - u is never 0 since u < 1
+        t += -(1.0 - rng.f64()).ln() / rate;
+        out.push(t);
+    }
+    out
+}
+
+/// Fusion groups over ascending arrivals: each group opens at its first
+/// member's arrival and admits every query arriving within `window_s`;
+/// it dispatches when the window closes (`open + window_s`), so members
+/// pay the hold time — the honest cost side of the fusion tradeoff. A
+/// zero window degenerates to one group per query dispatched on arrival.
+/// Returns `(start, end_exclusive, dispatch_t)` index ranges.
+pub fn fuse_groups(arrivals: &[f64], window_s: f64) -> Vec<(usize, usize, f64)> {
+    let mut groups = Vec::new();
+    let mut i = 0;
+    while i < arrivals.len() {
+        let open = arrivals[i];
+        let mut j = i + 1;
+        while j < arrivals.len() && arrivals[j] <= open + window_s {
+            j += 1;
+        }
+        groups.push((i, j, open + window_s));
+        i = j;
+    }
+    groups
+}
+
+/// Per-query outcome of one load run, in arrival order.
+#[derive(Clone, Debug)]
+pub struct QueryOutcome {
+    pub arrival_s: f64,
+    pub completion_s: f64,
+    /// completion − arrival: queueing + hold + modeled service time
+    pub latency_s: f64,
+    pub result: QueryResult,
+}
+
+/// Aggregate statistics of one sweep point.
+#[derive(Clone, Debug)]
+pub struct LoadPoint {
+    pub offered_qps: f64,
+    /// queries / (last completion − first arrival): sustained throughput
+    pub achieved_qps: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub invocations: u64,
+    pub cold_starts: u64,
+    pub queued: u64,
+    pub queue_delay_s: f64,
+    pub fused_groups: usize,
+    pub max_group_size: usize,
+    /// deterministic modeled cost per 1000 queries (USD)
+    pub cost_per_1k_queries: f64,
+}
+
+impl LoadPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offered_qps", Json::num(self.offered_qps)),
+            ("achieved_qps", Json::num(self.achieved_qps)),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p90_ms", Json::num(self.p90_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("max_ms", Json::num(self.max_ms)),
+            ("invocations", Json::num(self.invocations as f64)),
+            ("cold_starts", Json::num(self.cold_starts as f64)),
+            ("queued", Json::num(self.queued as f64)),
+            ("queue_delay_s", Json::num(self.queue_delay_s)),
+            ("fused_groups", Json::num(self.fused_groups as f64)),
+            ("max_group_size", Json::num(self.max_group_size as f64)),
+            ("cost_per_1k_queries", Json::num(self.cost_per_1k_queries)),
+        ])
+    }
+}
+
+/// One executed sweep point: per-query outcomes plus the aggregates.
+#[derive(Clone, Debug)]
+pub struct PointRun {
+    pub outcomes: Vec<QueryOutcome>,
+    pub stats: LoadPoint,
+}
+
+/// Load-engine knobs on top of an [`EnvOptions`] environment.
+#[derive(Clone, Debug)]
+pub struct LoadOptions {
+    /// offered-QPS sweep points, ascending
+    pub qps: Vec<f64>,
+    /// fusion window in modeled milliseconds (0 = fusion off)
+    pub fuse_window_ms: f64,
+    /// fleet cap per function (0 = uncapped; no queueing, only cold
+    /// starts scale with load)
+    pub max_containers: usize,
+    pub arrival: ArrivalProfile,
+    /// arrival-process seed (independent of the dataset seed)
+    pub seed: u64,
+}
+
+impl Default for LoadOptions {
+    fn default() -> Self {
+        Self {
+            qps: vec![20.0, 50.0, 100.0, 200.0, 400.0],
+            fuse_window_ms: 2.0,
+            max_containers: 4,
+            arrival: ArrivalProfile::Poisson,
+            seed: 42,
+        }
+    }
+}
+
+/// Pin the query path to the load-engine operating shape: a single-QA
+/// tree (the engine itself is the concurrency source, not the QA
+/// fan-out), no sub-batch interleaving and no result cache — the two
+/// features that would couple co-resident queries beyond the uniform-k
+/// gather target and break the fused-vs-unfused bit-identity invariant.
+pub fn configure_for_load(env: &mut Env) {
+    env.with_config(|c| {
+        c.tree = TreeConfig::new(1, 1);
+        c.interleave = false;
+        c.use_cache = false;
+    });
+}
+
+/// Deterministic ledger snapshot for per-point deltas: only counters and
+/// virtual-clock quantities, never wall time.
+#[derive(Clone, Copy, Debug, Default)]
+struct DetSnapshot {
+    invocations: u64,
+    cold_starts: u64,
+    queued: u64,
+    queue_delay_s: f64,
+    modeled_mbs: f64,
+    s3_gets: u64,
+    efs_bytes: u64,
+}
+
+impl DetSnapshot {
+    fn take(env: &Env) -> Self {
+        use std::sync::atomic::Ordering;
+        let l = &env.ledger;
+        Self {
+            invocations: l.total_invocations(),
+            cold_starts: l.cold_starts.load(Ordering::Relaxed),
+            queued: l.queued_invocations.load(Ordering::Relaxed),
+            queue_delay_s: l.queue_delay_s(),
+            modeled_mbs: l.modeled_mb_seconds_total(),
+            s3_gets: l.s3_gets.load(Ordering::Relaxed),
+            efs_bytes: l.efs_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Execute one offered-QPS point over the env's workload: seeded
+/// arrivals, fusion windowing, serial dispatch over the virtual clock.
+pub fn run_point(env: &Env, offered_qps: f64, opts: &LoadOptions) -> PointRun {
+    let queries = &env.queries;
+    let arrivals = arrival_times(opts.arrival, queries.len(), offered_qps, opts.seed);
+    let window_s = opts.fuse_window_ms / 1e3;
+    let groups = fuse_groups(&arrivals, window_s);
+
+    let before = DetSnapshot::take(env);
+    let mut outcomes: Vec<Option<QueryOutcome>> = vec![None; queries.len()];
+    for &(start, end, dispatch_t) in &groups {
+        // open-loop semantics: the group enters the system at its own
+        // dispatch instant regardless of where earlier work left the
+        // clock — busy containers are represented by `free_at` stamps,
+        // so rewinding is safe and queueing emerges in the fleet
+        set_virtual_now(dispatch_t);
+        let out = env.sys.run_batch(&queries[start..end]);
+        let completion = virtual_now();
+        for (off, result) in out.results.into_iter().enumerate() {
+            let i = start + off;
+            outcomes[i] = Some(QueryOutcome {
+                arrival_s: arrivals[i],
+                completion_s: completion,
+                latency_s: completion - arrivals[i],
+                result,
+            });
+        }
+    }
+    let after = DetSnapshot::take(env);
+
+    let outcomes: Vec<QueryOutcome> =
+        outcomes.into_iter().map(|o| o.expect("every query ran")).collect();
+    let mut lat_ms: Vec<f64> = outcomes.iter().map(|o| o.latency_s * 1e3).collect();
+    lat_ms.sort_by(|a, b| a.total_cmp(b));
+    let span_s = outcomes.iter().map(|o| o.completion_s).fold(0.0, f64::max)
+        - arrivals.first().copied().unwrap_or(0.0);
+
+    let p = &env.pricing;
+    let cost = (after.invocations - before.invocations) as f64 * p.lambda_per_invocation
+        + (after.modeled_mbs - before.modeled_mbs) * p.lambda_per_mb_second
+        + (after.s3_gets - before.s3_gets) as f64 * p.s3_per_get
+        + (after.efs_bytes - before.efs_bytes) as f64 * p.efs_per_byte;
+
+    let stats = LoadPoint {
+        offered_qps,
+        achieved_qps: queries.len() as f64 / span_s.max(1e-9),
+        mean_ms: crate::util::stats::mean(&lat_ms),
+        p50_ms: percentile_sorted(&lat_ms, 50.0),
+        p90_ms: percentile_sorted(&lat_ms, 90.0),
+        p99_ms: percentile_sorted(&lat_ms, 99.0),
+        max_ms: lat_ms.last().copied().unwrap_or(0.0),
+        invocations: after.invocations - before.invocations,
+        cold_starts: after.cold_starts - before.cold_starts,
+        queued: after.queued - before.queued,
+        queue_delay_s: after.queue_delay_s - before.queue_delay_s,
+        fused_groups: groups.len(),
+        max_group_size: groups.iter().map(|&(s, e, _)| e - s).max().unwrap_or(0),
+        cost_per_1k_queries: cost / queries.len().max(1) as f64 * 1e3,
+    };
+    PointRun { outcomes, stats }
+}
+
+/// Build a fresh fleet-mode environment for one sweep point.
+fn point_env(base: &EnvOptions, opts: &LoadOptions) -> Env {
+    let mut env_opts = base.clone();
+    env_opts.virtual_pools = true;
+    env_opts.max_containers = opts.max_containers;
+    let mut env = Env::setup(&env_opts);
+    configure_for_load(&mut env);
+    env
+}
+
+/// Sweep offered QPS for one fusion window. Each point runs on a fresh
+/// environment so points are independent and order cannot leak state.
+pub fn run_mode(base: &EnvOptions, opts: &LoadOptions, fuse_window_ms: f64) -> Vec<PointRun> {
+    let mode_opts = LoadOptions { fuse_window_ms, ..opts.clone() };
+    mode_opts
+        .qps
+        .iter()
+        .map(|&qps| {
+            let env = point_env(base, &mode_opts);
+            run_point(&env, qps, &mode_opts)
+        })
+        .collect()
+}
+
+/// The full fused-vs-unfused ablation: both mode curves plus the
+/// assembled `BENCH_load.json` document.
+pub struct SweepOutput {
+    pub unfused: Vec<PointRun>,
+    pub fused: Vec<PointRun>,
+    pub json: Json,
+}
+
+/// Run the fused-vs-unfused QPS sweep (see the module docs for the
+/// emitted schema).
+pub fn run_sweep(base: &EnvOptions, opts: &LoadOptions) -> SweepOutput {
+    let mode_json = |name: &str, points: &[PointRun]| {
+        Json::obj(vec![
+            ("mode", Json::str(name)),
+            ("points", Json::Arr(points.iter().map(|p| p.stats.to_json()).collect())),
+        ])
+    };
+    let unfused = run_mode(base, opts, 0.0);
+    let fused = run_mode(base, opts, opts.fuse_window_ms);
+    let json = Json::obj(vec![
+        ("bench", Json::str("load")),
+        ("profile", Json::str(base.profile)),
+        ("n", Json::num(base.n as f64)),
+        ("queries", Json::num(base.n_queries as f64)),
+        ("seed", Json::num(opts.seed as f64)),
+        ("arrival", Json::str(opts.arrival.name())),
+        ("fuse_window_ms", Json::num(opts.fuse_window_ms)),
+        ("max_containers", Json::num(opts.max_containers as f64)),
+        (
+            "modes",
+            Json::Arr(vec![mode_json("unfused", &unfused), mode_json("fused", &fused)]),
+        ),
+    ]);
+    SweepOutput { unfused, fused, json }
+}
+
+/// Fixed-width table line for one sweep point (CLI / bench output).
+pub fn point_line(mode: &str, p: &LoadPoint) -> String {
+    format!(
+        "{:<8} {:>9.1} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>7} {:>6} {:>6} {:>6} {:>12.6}",
+        mode,
+        p.offered_qps,
+        p.achieved_qps,
+        p.p50_ms,
+        p.p99_ms,
+        p.max_ms,
+        p.invocations,
+        p.cold_starts,
+        p.queued,
+        p.max_group_size,
+        p.cost_per_1k_queries,
+    )
+}
+
+/// Header matching [`point_line`].
+pub fn point_header() -> String {
+    format!(
+        "{:<8} {:>9} {:>9} {:>9} {:>9} {:>9} {:>7} {:>6} {:>6} {:>6} {:>12}",
+        "mode", "offered", "achieved", "p50(ms)", "p99(ms)", "max(ms)", "invoc", "cold", "queue",
+        "group", "$/1k"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_times_are_ascending_and_seeded() {
+        for profile in [ArrivalProfile::Poisson, ArrivalProfile::Trace] {
+            let a = arrival_times(profile, 200, 100.0, 7);
+            let b = arrival_times(profile, 200, 100.0, 7);
+            assert_eq!(a, b, "same seed must replay the same arrivals");
+            assert!(a.windows(2).all(|w| w[0] < w[1]), "arrivals must ascend");
+            let c = arrival_times(profile, 200, 100.0, 8);
+            assert_ne!(a, c, "different seeds must differ");
+        }
+    }
+
+    #[test]
+    fn arrival_rate_tracks_nominal_qps() {
+        let a = arrival_times(ArrivalProfile::Poisson, 4000, 100.0, 3);
+        let rate = a.len() as f64 / a.last().unwrap();
+        assert!((rate - 100.0).abs() < 10.0, "poisson rate {rate} far from 100");
+        let t = arrival_times(ArrivalProfile::Trace, 4000, 100.0, 3);
+        let rate = t.len() as f64 / t.last().unwrap();
+        assert!((50.0..200.0).contains(&rate), "trace rate {rate} unmoored from 100");
+    }
+
+    #[test]
+    fn trace_weight_shape() {
+        // burst window at the start of the day, trough mid-day
+        assert!(trace_weight(1.0) > trace_weight(TRACE_DAY_S * 0.6));
+        // periodic
+        assert!((trace_weight(3.0) - trace_weight(3.0 + TRACE_DAY_S)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fuse_groups_window_semantics() {
+        // dyadic instants so window sums compare exactly
+        let arrivals = [0.0, 0.125, 0.1875, 1.0, 1.25, 4.0];
+        // zero window: every query alone, dispatched on arrival
+        let solo = fuse_groups(&arrivals, 0.0);
+        assert_eq!(solo.len(), arrivals.len());
+        for (g, &(s, e, d)) in solo.iter().enumerate() {
+            assert_eq!((s, e), (g, g + 1));
+            assert_eq!(d, arrivals[g]);
+        }
+        // 0.25s window: the boundary arrival at exactly open+window joins
+        let fused = fuse_groups(&arrivals, 0.25);
+        assert_eq!(fused, vec![(0, 3, 0.25), (3, 5, 1.25), (5, 6, 4.25)]);
+        // groups partition the index range
+        let covered: usize = fused.iter().map(|&(s, e, _)| e - s).sum();
+        assert_eq!(covered, arrivals.len());
+    }
+
+    #[test]
+    fn point_run_smoke_and_determinism() {
+        let base = EnvOptions {
+            profile: "test",
+            n: 1200,
+            n_queries: 12,
+            time_scale: 0.0,
+            ..Default::default()
+        };
+        let opts = LoadOptions {
+            qps: vec![2000.0],
+            fuse_window_ms: 5.0,
+            max_containers: 2,
+            ..Default::default()
+        };
+        // 2000 QPS against a 5ms window: ~10 arrivals per window, so
+        // fusion actually coalesces
+        let run = |window_ms: f64| {
+            let o = LoadOptions { fuse_window_ms: window_ms, ..opts.clone() };
+            let env = point_env(&base, &o);
+            run_point(&env, 2000.0, &o)
+        };
+        let fused = run(5.0);
+        let fused2 = run(5.0);
+        let unfused = run(0.0);
+        assert_eq!(fused.outcomes.len(), 12);
+        assert!(fused.stats.achieved_qps > 0.0);
+        assert!(fused.stats.invocations > 0);
+        assert!(fused.stats.max_group_size > 1, "no fusion at 2000 QPS x 5ms");
+        assert_eq!(unfused.stats.max_group_size, 1);
+        assert!(fused.stats.invocations < unfused.stats.invocations);
+        // same seed => byte-identical latencies and results
+        for (a, b) in fused.outcomes.iter().zip(&fused2.outcomes) {
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+            assert_eq!(a.result, b.result);
+        }
+        // fusion must not change any query's answer
+        for (a, b) in fused.outcomes.iter().zip(&unfused.outcomes) {
+            assert_eq!(a.result, b.result, "fusion changed a query result");
+        }
+    }
+}

@@ -1,6 +1,10 @@
 //! Shared experiment harness: dataset/system setup, measured runs and
 //! report formatting used by `rust/benches/*` (one per paper
-//! table/figure), the examples, and the CLI.
+//! table/figure), the examples, and the CLI. The open-loop traffic
+//! engine (seeded arrivals, fusion windows, QPS sweeps) lives in
+//! [`load`].
+
+pub mod load;
 
 use std::sync::Arc;
 
@@ -42,6 +46,11 @@ pub struct EnvOptions {
     pub chaos: crate::faas::ChaosConfig,
     /// straggler hedging for the QP scatter (`--hedge off|pN`)
     pub hedge: crate::coordinator::HedgePolicy,
+    /// event-driven fleet mode: containers carry virtual-time `free_at`
+    /// stamps and concurrent requests contend (`FaasConfig::virtual_pools`)
+    pub virtual_pools: bool,
+    /// fleet cap per function in fleet mode (0 = uncapped)
+    pub max_containers: usize,
     pub seed: u64,
 }
 
@@ -64,6 +73,8 @@ impl Default for EnvOptions {
             chaos: crate::faas::ChaosConfig::from_env(),
             hedge: crate::coordinator::HedgePolicy::from_env()
                 .unwrap_or(crate::coordinator::HedgePolicy::Off),
+            virtual_pools: false,
+            max_containers: 0,
             seed: 42,
         }
     }
@@ -88,7 +99,13 @@ impl Env {
         let ledger = Arc::new(CostLedger::new());
         let params = SimParams { time_scale: opts.time_scale, ..Default::default() };
         let platform = Arc::new(Platform::new(
-            FaasConfig { dre_enabled: opts.dre, chaos: opts.chaos, ..Default::default() },
+            FaasConfig {
+                dre_enabled: opts.dre,
+                chaos: opts.chaos,
+                virtual_pools: opts.virtual_pools,
+                max_containers: opts.max_containers,
+                ..Default::default()
+            },
             params.clone(),
             ledger.clone(),
         ));

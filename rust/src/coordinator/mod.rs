@@ -73,6 +73,20 @@
 //! determinism (invocation totals, chaos digests) is only guaranteed
 //! when per-partition request order is serialized — a single-QA tree,
 //! as `tests/{chaos,autotune}.rs` pin, or `Off`/`Fixed` sharding.
+//!
+//! # One timeline, many requests
+//!
+//! Every scatter/join in this tree (CO → root QAs, QA → children, QA →
+//! QPs, QP scatter → shards) propagates the *absolute* virtual clock
+//! ([`crate::storage::virtual_now`]): spawners seed workers with their
+//! current instant and resume at the max completion across the join.
+//! A single `run_batch` is thereby one request on a fleet-wide timeline,
+//! and the open-loop traffic engine ([`crate::bench::load`]) can run
+//! many of them against the fleet-mode FaaS platform
+//! (`FaasConfig::virtual_pools`), where container contention, queueing
+//! delay and load-dependent cold starts all play out on that clock. See
+//! `coordinator::qa` for the cross-request query-fusion path that
+//! exploits co-residency.
 
 pub mod merge;
 pub mod payload;
@@ -95,7 +109,7 @@ use crate::osq::quantizer::{OsqIndex, OsqOptions};
 use crate::partition::kmeans::{balanced_kmeans, KMeansOptions};
 use crate::partition::{calibrate_threshold, PartitionLayout};
 use crate::runtime::backend::ScanEngine;
-use crate::storage::{index_files, FileStore, ObjectStore, SimParams};
+use crate::storage::{index_files, set_virtual_now, virtual_now, FileStore, ObjectStore, SimParams};
 use crate::util::rng::Rng;
 use crate::util::ser::{Reader, SerError, Writer};
 use crate::util::timer::Stopwatch;
@@ -562,12 +576,21 @@ fn co_handler(ctx: &Arc<SystemCtx>, queries: &[Query]) -> QaResponse {
                 queries: queries[qs..qe].to_vec(),
             };
             let ctx = ctx.clone();
-            handles.push(scope.spawn(move || qa::invoke_qa(&ctx, req)));
+            let vt = virtual_now();
+            handles.push(scope.spawn(move || {
+                // root QAs open at the CO's instant on the timeline
+                set_virtual_now(vt);
+                (qa::invoke_qa(&ctx, req), virtual_now())
+            }));
         }
+        // event-driven join: the CO resumes at the latest root completion
+        let mut end_vt = virtual_now();
         for h in handles {
-            let resp = h.join().expect("root QA thread");
+            let (resp, child_end) = h.join().expect("root QA thread");
+            end_vt = end_vt.max(child_end);
             all.results.extend(resp.results);
         }
+        set_virtual_now(end_vt);
     });
     all.results.sort_by_key(|&(qi, _)| qi);
     all

@@ -12,6 +12,32 @@
 //! while the QPs of batch i are in flight, the QA prepares (filters +
 //! selects partitions for) batch i+1, overlapping communication with
 //! computation.
+//!
+//! # Event-driven joins and cross-request query fusion
+//!
+//! Every scatter here (child QAs, per-partition QPs, QP shards) is an
+//! **event-driven join over modeled completion times**: the spawning
+//! thread captures its position on the absolute virtual clock
+//! ([`crate::storage::virtual_now`]), seeds each worker thread with it,
+//! and resumes at the *latest* completion across the fan-out — so under
+//! the fleet-mode FaaS platform, concurrent requests observe each
+//! other's container occupancy through one shared timeline.
+//!
+//! Cross-request **query fusion** rides on the batched QP payloads:
+//! co-resident queries that arrive within the traffic engine's
+//! `--fuse-window` (see [`crate::bench::load`]) enter one QA batch, and
+//! [`prepare_batch`] then emits a *single* `QpRequest` per visited
+//! partition carrying one [`QpItem`] per fused query — one invocation,
+//! one LUT rebuild, shared gather blocks, and one coalesced EFS
+//! refinement read for the whole group. Because partition selection and
+//! the scan plan are computed per query (the only batch-coupled input,
+//! the over-gather target `max(k)·gather_factor`, is invariant for
+//! uniform-k workloads), each fused query's results are bit-identical to
+//! its unfused run; fusion moves invocation counts and modeled time,
+//! never answers. The throughput samples a fused invocation feeds back
+//! are normalized per query (`ThroughputBook::record_fused`), and `Auto`
+//! shard sizing uses per-query rows, so fusion never skews the
+//! ledger-driven auto-tuner.
 
 use std::sync::Arc;
 
@@ -27,7 +53,7 @@ use crate::cost::Role;
 use crate::data::workload::Query;
 use crate::partition::selection::{rebalance_batch, select_partitions};
 use crate::partition::PartitionLayout;
-use crate::storage::{index_files, take_modeled_extra};
+use crate::storage::{index_files, set_virtual_now, take_modeled_extra, virtual_now};
 use crate::util::bitmap::Bitmap;
 use crate::util::stats::percentile_sorted;
 
@@ -72,7 +98,13 @@ pub fn qa_handler(
                 queries: req.queries[qs - req.q_offset..qe - req.q_offset].to_vec(),
             };
             let ctx = ctx.clone();
-            child_handles.push(scope.spawn(move || invoke_qa(&ctx, child_req)));
+            let vt = virtual_now();
+            child_handles.push(scope.spawn(move || {
+                // children open at the parent's instant on the timeline
+                set_virtual_now(vt);
+                let resp = invoke_qa(&ctx, child_req);
+                (resp, virtual_now())
+            }));
         }
 
         // ---- 2. own slice: load shared indexes (DRE first) ----------
@@ -87,11 +119,16 @@ pub fn qa_handler(
             response.results.extend(own_results);
         }
 
-        // ---- 5. gather child subtree results --------------------------
+        // ---- 5. gather child subtree results: an event-driven join —
+        // this QA resumes at the latest modeled completion across its own
+        // work and every child subtree
+        let mut end_vt = virtual_now();
         for h in child_handles {
-            let child = h.join().expect("child QA thread");
+            let (child, child_end) = h.join().expect("child QA thread");
+            end_vt = end_vt.max(child_end);
             response.results.extend(child.results);
         }
+        set_virtual_now(end_vt);
     });
     response
 }
@@ -148,15 +185,20 @@ fn process_own_queries(
     let mut prepared: Option<PreparedBatch> = batches.first().map(|b| prepare_batch(ctx, attrs, layout, b));
     let mut next_idx = 1;
     while let Some(batch) = prepared.take() {
-        // fire QPs for this batch on background threads
-        let partials = std::thread::scope(|scope| {
+        // fire QPs for this batch on background threads, each opening at
+        // this QA's current virtual instant
+        let vt = virtual_now();
+        let (partials, end_vt) = std::thread::scope(|scope| {
             let handles: Vec<_> = batch
                 .qp_requests
                 .iter()
                 .map(|qp_req| {
                     let ctx = ctx.clone();
                     let req = qp_req.clone();
-                    scope.spawn(move || dispatch_qp(&ctx, layout, req))
+                    scope.spawn(move || {
+                        set_virtual_now(vt);
+                        (dispatch_qp(&ctx, layout, req), virtual_now())
+                    })
                 })
                 .collect();
             // overlap: prepare the next sub-batch while QPs run
@@ -164,8 +206,17 @@ fn process_own_queries(
                 prepared = Some(prepare_batch(ctx, attrs, layout, batches[next_idx]));
                 next_idx += 1;
             }
-            handles.into_iter().map(|h| h.join().expect("qp thread")).collect::<Vec<QpResponse>>()
+            let mut end = vt;
+            let mut partials = Vec::with_capacity(handles.len());
+            for h in handles {
+                let (resp, t) = h.join().expect("qp thread");
+                end = end.max(t);
+                partials.push(resp);
+            }
+            (partials, end)
         });
+        // event-driven join over the batch's modeled completion times
+        set_virtual_now(end_vt);
         // reduce: merge per-partition lists per query
         results.extend(reduce_batch(&batch, partials));
     }
@@ -219,8 +270,14 @@ fn prepare_batch(
 /// runtime samples) sizes S for the target per-shard latency.
 fn dispatch_qp(ctx: &Arc<SystemCtx>, layout: &PartitionLayout, req: QpRequest) -> QpResponse {
     let total_rows: usize = req.items.iter().map(|it| it.local_rows.len()).sum();
+    // Auto sizes shards by *per-query* rows — the unit the throughput
+    // book learns (`record_fused`). Sizing by the fused sum would count
+    // each co-resident query's candidate rows as extra scan work for the
+    // row cut and over-shard exactly when traffic is heaviest.
+    let rows_per_query: usize =
+        req.items.iter().map(|it| it.local_rows.len()).max().unwrap_or(0);
     let shards = ctx.cfg.qp_shards.resolve_adaptive(
-        total_rows,
+        rows_per_query,
         ctx.cfg.qp_shard_min_rows,
         ctx.ledger.throughput.rows_per_s(req.partition),
         ctx.cfg.qp_target_shard_latency_s,
@@ -316,23 +373,31 @@ fn scatter_qp(
 
     // scatter: one synchronous invocation per shard, concurrently; each
     // returns its response plus its modeled completion time (all shards
-    // launch at virtual t = 0)
+    // launch at this scatter's virtual instant)
+    let vt0 = virtual_now();
     let outcomes: Vec<(QpShardResponse, f64)> = std::thread::scope(|scope| {
         let handles: Vec<_> = shard_reqs
             .iter()
             .map(|sr| {
                 let ctx = ctx.clone();
-                scope.spawn(move || qp::invoke_qp_shard(&ctx, sr, false))
+                scope.spawn(move || {
+                    set_virtual_now(vt0);
+                    qp::invoke_qp_shard(&ctx, sr, false)
+                })
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("qp shard thread")).collect()
     });
-    // feed the Auto-sharding throughput estimator per shard invocation
+    // feed the Auto-sharding throughput estimator per shard invocation,
+    // normalized per co-resident query (fusion must not inflate the rate)
     for (sr, (_, modeled_s)) in shard_reqs.iter().zip(&outcomes) {
         let rows: usize = sr.items.iter().map(|it| it.rows.len()).sum();
-        ctx.ledger.throughput.record(req.partition, rows, *modeled_s);
+        ctx.ledger.throughput.record_fused(req.partition, rows, sr.items.len(), *modeled_s);
     }
-    let responses = hedged_join(ctx, &shard_reqs, outcomes);
+    let (responses, makespan) = hedged_join(ctx, &shard_reqs, outcomes);
+    // event-driven join: the QA resumes at the scatter's modeled
+    // completion, so the merge + refinement I/O below lands after it
+    set_virtual_now(vt0 + makespan);
 
     // merge: request-global histogram cutoff per item, then the SAME
     // shortlist + refinement path as the single-QP handler
@@ -365,12 +430,13 @@ fn scatter_qp(
 /// Responses are idempotent, so the join never changes results — only
 /// the modeled makespan and the ledger's hedge counters. Every scatter
 /// records its `(unhedged, hedged)` makespan pair; with hedging off the
-/// two are equal.
+/// two are equal. Returns the responses plus the hedged makespan so the
+/// caller can advance its virtual clock to the scatter's completion.
 fn hedged_join(
     ctx: &Arc<SystemCtx>,
     shard_reqs: &[QpShardRequest],
     outcomes: Vec<(QpShardResponse, f64)>,
-) -> Vec<QpShardResponse> {
+) -> (Vec<QpShardResponse>, f64) {
     let times: Vec<f64> = outcomes.iter().map(|&(_, t)| t).collect();
     // the last outstanding shard: max modeled completion time, ties
     // broken toward the lowest shard index for determinism
@@ -416,7 +482,7 @@ fn hedged_join(
         }
     }
     ctx.ledger.record_scatter_makespan(unhedged, hedged);
-    responses
+    (responses, hedged)
 }
 
 /// Merge-sort reduce of per-partition results (§2.4.5).

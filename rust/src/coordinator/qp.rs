@@ -172,9 +172,12 @@ fn invoke_qp_encoded(ctx: &Arc<SystemCtx>, req: &QpRequest, bytes: Vec<u8>) -> Q
         })
         .expect("qp invocation");
     // feed the Auto-sharding throughput estimator: this partition just
-    // scanned `rows` candidates in `modeled_s` virtual seconds
+    // scanned `rows` candidates in `modeled_s` virtual seconds. A fused
+    // request carries one item per co-resident query over one shared
+    // invocation, so the sample is normalized per query — otherwise the
+    // rate would inflate with the fusion degree and skew Auto sizing.
     let rows: usize = req.items.iter().map(|it| it.local_rows.len()).sum();
-    ctx.ledger.throughput.record(req.partition, rows, out.modeled_s);
+    ctx.ledger.throughput.record_fused(req.partition, rows, req.items.len(), out.modeled_s);
     QpResponse::from_bytes(&out.response).expect("qp response decode")
 }
 

@@ -67,6 +67,21 @@ pub struct CostLedger {
     /// primary runs and bills regardless). Stored as integer micros so
     /// concurrent recording order cannot perturb the sum.
     hedge_wasted_micros: AtomicU64,
+    /// invocations that queued for a container under fleet-mode load
+    /// (`FaasConfig::virtual_pools` at the `max_containers` cap)
+    pub queued_invocations: AtomicU64,
+    /// total virtual seconds requests spent waiting for a container,
+    /// stored as integer micros. Kept separate from every service-time
+    /// quantity (makespans, runtimes, throughput samples): queueing is a
+    /// property of offered load, not of the work, and folding it in would
+    /// silently inflate the hedge/autotune bookkeeping under load.
+    queue_delay_micros: AtomicU64,
+    /// modeled (virtual-clock) MB-seconds by role, micro-MB-seconds — the
+    /// deterministic counterpart of the wall-clock `mbs_*_micro` buckets,
+    /// so load-sweep cost curves replay byte-identically across runs
+    modeled_mbs_co_micro: AtomicU64,
+    modeled_mbs_qa_micro: AtomicU64,
+    modeled_mbs_qp_micro: AtomicU64,
     /// per-scatter `(unhedged, hedged)` modeled makespans — the virtual
     /// completion time of the slowest shard with and without the hedge
     scatter_makespans: Mutex<Vec<(f64, f64)>>,
@@ -116,6 +131,49 @@ impl CostLedger {
         }
         .fetch_add(micro, Ordering::Relaxed);
         self.runtimes.lock().unwrap().push((role, seconds));
+    }
+
+    /// Record a function execution's *modeled* runtime: the deterministic
+    /// virtual-clock counterpart of [`CostLedger::record_runtime`] (which
+    /// bills wall time and therefore cannot replay bit-identically). The
+    /// load-sweep cost curves are computed from these buckets.
+    pub fn record_modeled_runtime(&self, role: Role, memory_mb: u32, seconds: f64) {
+        let micro = (seconds * memory_mb as f64 * 1e6) as u64;
+        match role {
+            Role::Coordinator => &self.modeled_mbs_co_micro,
+            Role::QueryAllocator => &self.modeled_mbs_qa_micro,
+            Role::QueryProcessor | Role::QpShard => &self.modeled_mbs_qp_micro,
+        }
+        .fetch_add(micro, Ordering::Relaxed);
+    }
+
+    /// Modeled (virtual-clock) MB-seconds for a role — deterministic.
+    pub fn modeled_mb_seconds(&self, role: Role) -> f64 {
+        let micro = match role {
+            Role::Coordinator => &self.modeled_mbs_co_micro,
+            Role::QueryAllocator => &self.modeled_mbs_qa_micro,
+            Role::QueryProcessor | Role::QpShard => &self.modeled_mbs_qp_micro,
+        };
+        micro.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Total modeled MB-seconds across all roles.
+    pub fn modeled_mb_seconds_total(&self) -> f64 {
+        self.modeled_mb_seconds(Role::Coordinator)
+            + self.modeled_mb_seconds(Role::QueryAllocator)
+            + self.modeled_mb_seconds(Role::QueryProcessor)
+    }
+
+    /// One fleet-mode request waited `delay_s` virtual seconds for a
+    /// container (see the `queue_delay_micros` field docs).
+    pub fn record_queue_delay(&self, delay_s: f64) {
+        self.queued_invocations.fetch_add(1, Ordering::Relaxed);
+        self.queue_delay_micros.fetch_add((delay_s * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Total virtual seconds spent queueing for containers.
+    pub fn queue_delay_s(&self) -> f64 {
+        self.queue_delay_micros.load(Ordering::Relaxed) as f64 / 1e6
     }
 
     pub fn record_s3_get(&self, bytes: u64) {
@@ -204,6 +262,8 @@ impl CostLedger {
             "invocations co={} qa={} qp={} qp_shard={} failed={} hedged={}\n\
              hedge_wasted_s={:.6}\n\
              cold_starts={}\n\
+             queued={} queue_delay_s={:.6}\n\
+             modeled_mbs co={:.6} qa={:.6} qp={:.6}\n\
              storage s3_gets={} s3_bytes={} efs_reads={} efs_bytes={} payload_bytes={}\n\
              scatters={} makespan_unhedged p50={:.9} p99={:.9}\n\
              scatters={} makespan_hedged   p50={:.9} p99={:.9}\n",
@@ -215,6 +275,11 @@ impl CostLedger {
             self.hedged_invocations.load(Ordering::Relaxed),
             self.hedge_wasted_s(),
             self.cold_starts.load(Ordering::Relaxed),
+            self.queued_invocations.load(Ordering::Relaxed),
+            self.queue_delay_s(),
+            self.modeled_mb_seconds(Role::Coordinator),
+            self.modeled_mb_seconds(Role::QueryAllocator),
+            self.modeled_mb_seconds(Role::QueryProcessor),
             self.s3_gets.load(Ordering::Relaxed),
             self.s3_bytes.load(Ordering::Relaxed),
             self.efs_reads.load(Ordering::Relaxed),
@@ -442,6 +507,9 @@ mod tests {
             l.record_scatter_makespan(0.1, 0.1);
             l.record_hedge(0.45);
             l.record_s3_get(1024);
+            l.record_queue_delay(0.25);
+            // modeled runtimes are virtual-clock quantities: digestable
+            l.record_modeled_runtime(Role::QueryProcessor, 1000, 0.5);
             // wall-clock runtimes must NOT appear in the digest
             l.record_runtime(Role::QueryProcessor, 1770, std::f64::consts::PI);
             l.chaos_summary()
@@ -450,7 +518,25 @@ mod tests {
         assert_eq!(a, run(), "identical event streams must digest identically");
         assert!(a.contains("hedged=1"));
         assert!(a.contains("qp_shard=1"));
+        assert!(a.contains("queued=1 queue_delay_s=0.250000"));
+        assert!(a.contains("qp=500.000000"), "modeled MB-s missing:\n{a}");
         assert!(!a.contains("3.14"), "wall-clock runtime leaked into the chaos digest:\n{a}");
+    }
+
+    #[test]
+    fn queue_delay_and_modeled_runtime_accounting() {
+        let l = CostLedger::new();
+        l.record_queue_delay(0.5);
+        l.record_queue_delay(1.25);
+        assert_eq!(l.queued_invocations.load(Ordering::Relaxed), 2);
+        assert!((l.queue_delay_s() - 1.75).abs() < 1e-6);
+        // modeled buckets mirror the wall buckets' role mapping but stay
+        // independent of them
+        l.record_modeled_runtime(Role::QpShard, 1770, 1.0);
+        l.record_modeled_runtime(Role::Coordinator, 512, 2.0);
+        assert!((l.modeled_mb_seconds(Role::QueryProcessor) - 1770.0).abs() < 1e-6);
+        assert!((l.modeled_mb_seconds_total() - (1770.0 + 1024.0)).abs() < 1e-6);
+        assert_eq!(l.mb_seconds(Role::QueryProcessor), 0.0, "wall buckets untouched");
     }
 
     #[test]

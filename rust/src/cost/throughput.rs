@@ -66,6 +66,28 @@ impl ThroughputBook {
             .push(rows as f64 / modeled_s);
     }
 
+    /// Record one *fused* scan invocation carrying `n_queries` co-resident
+    /// queries whose candidate rows sum to `total_rows`, served in one
+    /// `modeled_s` (one startup, one LUT rebuild, shared I/O). The book's
+    /// unit is "rows *one* query scans per second": feeding the raw
+    /// `(total_rows, modeled_s)` sample would count the shared partition
+    /// pass once per fused query, inflating the estimate ~n_queries× and
+    /// leaving `QpSharding::Auto` sizing against a rate no single query
+    /// ever sees. Normalizing the rows per query keeps fused and unfused
+    /// samples in the same unit, so fusion can never skew shard counts.
+    pub fn record_fused(
+        &self,
+        partition: usize,
+        total_rows: usize,
+        n_queries: usize,
+        modeled_s: f64,
+    ) {
+        if n_queries == 0 {
+            return;
+        }
+        self.record(partition, total_rows / n_queries, modeled_s);
+    }
+
     /// Current rows/s estimate for a partition (`None` before any sample).
     pub fn rows_per_s(&self, partition: usize) -> Option<f64> {
         self.per_partition.lock().unwrap().get(&partition).and_then(|e| e.value())
@@ -117,5 +139,24 @@ mod tests {
         assert!((b.rows_per_s(1).unwrap() - 10_000.0).abs() < 1e-6);
         assert_eq!(b.rows_per_s(2), None);
         assert_eq!(b.partitions_observed(), 2);
+    }
+
+    #[test]
+    fn fused_samples_normalize_to_per_query_rate() {
+        let unfused = ThroughputBook::default();
+        let fused = ThroughputBook::default();
+        // one query scanning 1000 rows in 10 ms ...
+        unfused.record(0, 1000, 0.01);
+        // ... vs four co-resident queries sharing one invocation: 4000
+        // summed rows in the same shared 10 ms
+        fused.record_fused(0, 4000, 4, 0.01);
+        assert_eq!(
+            unfused.rows_per_s(0).unwrap(),
+            fused.rows_per_s(0).unwrap(),
+            "fusion must not inflate the per-query rows/s estimate"
+        );
+        // degenerate fused sample is skipped like any other
+        fused.record_fused(0, 100, 0, 0.01);
+        assert!((fused.rows_per_s(0).unwrap() - 100_000.0).abs() < 1e-6);
     }
 }

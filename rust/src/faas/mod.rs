@@ -35,6 +35,37 @@
 //! failing container is dropped — never repooled — and
 //! [`Platform::invoke_retrying`] retries with fresh draws, so a retry
 //! can never land on the container that just failed.
+//!
+//! # Event-driven fleet mode (`FaasConfig::virtual_pools`)
+//!
+//! The per-scatter synchronous join above assumes an idle fleet: every
+//! idle container is equally available the instant `invoke` is called.
+//! The open-loop traffic engine ([`crate::bench::load`]) instead runs N
+//! concurrent queries over one absolute virtual timeline
+//! ([`crate::storage::virtual_now`]), and in-flight requests must
+//! *contend* for containers. With `virtual_pools: true` each container
+//! carries a `free_at` timestamp on that timeline and the pool becomes a
+//! small event queue:
+//!
+//! * a request arriving at virtual time `t` takes an idle container
+//!   (`free_at ≤ t`; the most recently freed wins, ties to lowest id —
+//!   deterministic, LIFO-warm like Lambda),
+//! * else, if the fleet is under `max_containers` (0 = unlimited), it
+//!   cold-starts a new container — cold-start probability is thereby a
+//!   *function of offered load*, not a constant,
+//! * else it queues on the earliest-freeing container; the wait is
+//!   recorded as [`Invocation::queue_delay_s`] and in the ledger's
+//!   queue-delay counters, deliberately kept out of `modeled_s` so
+//!   service-time bookkeeping (hedge decisions, makespans, throughput
+//!   EWMAs) stays meaningful under load.
+//!
+//! On release the container is stamped `free_at = virtual_now()` (entry
+//! time + queue + modeled service time). Fleet mode expects same-function
+//! invocations to be *serialized in real time* (the load engine processes
+//! arrivals in order; the single-QA tree keeps per-function order
+//! deterministic) — virtual concurrency is modeled by `free_at`, not by
+//! physical thread overlap. With `virtual_pools: false` (the default)
+//! acquisition is byte-identical to the pre-fleet simulator.
 
 pub mod dre;
 
@@ -43,7 +74,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::cost::{CostLedger, Role};
-use crate::storage::{take_modeled_extra, take_modeled_total, SimParams};
+use crate::storage::{
+    advance_virtual_now, take_modeled_extra, take_modeled_total, virtual_now, SimParams,
+};
 use crate::util::rng::{mix64, Rng};
 use dre::DreStore;
 
@@ -203,6 +236,15 @@ pub struct FaasConfig {
     /// deterministic tail-latency / fault injection (off by default;
     /// `Default` honours `SQUASH_CHAOS_SEED` so CI can force it suite-wide)
     pub chaos: ChaosConfig,
+    /// event-driven fleet mode: containers carry `free_at` timestamps on
+    /// the absolute virtual clock and requests contend for them (see the
+    /// module docs). Off by default — acquisition then stays
+    /// byte-identical to the pre-fleet simulator.
+    pub virtual_pools: bool,
+    /// per-function container cap in fleet mode (0 = unlimited). At the
+    /// cap, arrivals queue on the earliest-freeing container instead of
+    /// cold-starting — the saturation knee of the load curves.
+    pub max_containers: usize,
 }
 
 impl Default for FaasConfig {
@@ -217,6 +259,8 @@ impl Default for FaasConfig {
             max_payload_bytes: 6 * 1024 * 1024,
             dre_enabled: true,
             chaos: ChaosConfig::from_env(),
+            virtual_pools: false,
+            max_containers: 0,
         }
     }
 }
@@ -228,6 +272,9 @@ pub struct Container {
     pub id: u64,
     pub invocations: u64,
     pub retained: DreStore,
+    /// virtual time at which this container becomes idle again (fleet
+    /// mode only; stays 0 when `virtual_pools` is off)
+    pub free_at: f64,
 }
 
 /// Handler context: what a function sees during one invocation.
@@ -289,6 +336,11 @@ impl std::error::Error for FaasError {}
 pub struct Invocation {
     pub response: Vec<u8>,
     pub modeled_s: f64,
+    /// virtual seconds this request waited for a container before its
+    /// startup began (fleet mode; always 0 otherwise). Deliberately kept
+    /// *out* of `modeled_s`, which remains pure service time, so hedge
+    /// joins and throughput samples don't silently inflate under load.
+    pub queue_delay_s: f64,
 }
 
 /// The Lambda-like platform: per-function container pools.
@@ -411,21 +463,23 @@ impl Platform {
             id
         };
         let draw = self.latency.draw(function, invocation_id);
-        // acquire container
-        let (mut container, cold) = {
+        // acquire container (fleet mode contends on the virtual timeline)
+        let vt = virtual_now();
+        let (mut container, cold, queue_delay_s) = {
             let mut pools = self.pools.lock().unwrap();
-            match pools.get_mut(function).and_then(|v| v.pop()) {
-                Some(c) => (c, false),
-                None => (
-                    Container {
-                        id: self.next_container.fetch_add(1, Ordering::Relaxed),
-                        invocations: 0,
-                        retained: DreStore::new(),
-                    },
-                    true,
-                ),
+            if self.config.virtual_pools {
+                self.acquire_fleet(pools.entry(function.to_string()).or_default(), vt)
+            } else {
+                match pools.get_mut(function).and_then(|v| v.pop()) {
+                    Some(c) => (c, false, 0.0),
+                    None => (self.new_container(), true, 0.0),
+                }
             }
         };
+        if queue_delay_s > 0.0 {
+            advance_virtual_now(queue_delay_s);
+            self.ledger.record_queue_delay(queue_delay_s);
+        }
         self.ledger.record_invocation(role, cold);
         if cold {
             self.cold_invocations.fetch_add(1, Ordering::Relaxed);
@@ -452,6 +506,7 @@ impl Platform {
             let modeled_s = take_modeled_total();
             let billed = start.elapsed().as_secs_f64() + extra;
             self.ledger.record_runtime(role, self.memory_for(role), billed);
+            self.ledger.record_modeled_runtime(role, self.memory_for(role), modeled_s);
             self.ledger.record_failed_invocation();
             let function = function.to_string();
             return Err(FaasError::InjectedFailure { function, modeled_s });
@@ -471,10 +526,11 @@ impl Platform {
         // not repooled.
         if response.len() > self.config.max_payload_bytes {
             let extra = take_modeled_extra();
-            take_modeled_total();
+            let modeled_s = take_modeled_total();
             self.ledger.record_payload(response.len() as u64);
             let billed = start.elapsed().as_secs_f64() + extra;
             self.ledger.record_runtime(role, self.memory_for(role), billed);
+            self.ledger.record_modeled_runtime(role, self.memory_for(role), modeled_s);
             self.ledger.record_failed_invocation();
             return Err(FaasError::PayloadTooLarge(
                 response.len(),
@@ -492,10 +548,56 @@ impl Platform {
         let modeled_s = take_modeled_total();
         let billed = start.elapsed().as_secs_f64() + extra;
         self.ledger.record_runtime(role, self.memory_for(role), billed);
+        self.ledger.record_modeled_runtime(role, self.memory_for(role), modeled_s);
 
-        // release container to the pool (warm for the next invocation)
+        // release container to the pool (warm for the next invocation);
+        // fleet mode stamps when it frees up on the virtual timeline
+        if self.config.virtual_pools {
+            container.free_at = virtual_now();
+        }
         self.pools.lock().unwrap().entry(function.to_string()).or_default().push(container);
-        Ok(Invocation { response, modeled_s })
+        Ok(Invocation { response, modeled_s, queue_delay_s })
+    }
+
+    fn new_container(&self) -> Container {
+        Container {
+            id: self.next_container.fetch_add(1, Ordering::Relaxed),
+            invocations: 0,
+            retained: DreStore::new(),
+            free_at: 0.0,
+        }
+    }
+
+    /// Fleet-mode acquisition (see the module docs): take an idle
+    /// container — the most recently freed, ties to lowest id — else cold
+    /// start while under `max_containers`, else queue on the
+    /// earliest-freeing container and report the wait. Fully
+    /// deterministic: selection depends only on `(free_at, id)`, never on
+    /// pool insertion order.
+    fn acquire_fleet(&self, pool: &mut Vec<Container>, vt: f64) -> (Container, bool, f64) {
+        let idle = pool
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.free_at <= vt)
+            .max_by(|(_, a), (_, b)| a.free_at.total_cmp(&b.free_at).then(b.id.cmp(&a.id)))
+            .map(|(i, _)| i);
+        if let Some(i) = idle {
+            return (pool.swap_remove(i), false, 0.0);
+        }
+        let cap = self.config.max_containers;
+        if cap == 0 || pool.len() < cap {
+            return (self.new_container(), true, 0.0);
+        }
+        // everything virtually busy at the cap: queue on the earliest free
+        let i = pool
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.free_at.total_cmp(&b.free_at).then(a.id.cmp(&b.id)))
+            .map(|(i, _)| i)
+            .expect("a positive cap implies a non-empty pool here");
+        let c = pool.swap_remove(i);
+        let delay = (c.free_at - vt).max(0.0);
+        (c, false, delay)
     }
 
     /// Number of idle containers for a function (tests/diagnostics).
@@ -794,6 +896,58 @@ mod tests {
         let n = noisy.ledger.mb_seconds(Role::QueryProcessor);
         assert!(n >= q, "chaos must only add latency: {n} < {q}");
         assert!(n > q, "σ=0.8 + 50% spikes over 20 invocations must show up");
+    }
+
+    fn fleet_platform(cap: usize) -> Platform {
+        let ledger = Arc::new(CostLedger::new());
+        Platform::new(
+            FaasConfig { virtual_pools: true, max_containers: cap, ..Default::default() },
+            SimParams::instant(),
+            ledger,
+        )
+    }
+
+    #[test]
+    fn fleet_mode_queues_at_the_container_cap() {
+        use crate::storage::set_virtual_now;
+        let p = fleet_platform(1);
+        set_virtual_now(0.0);
+        let first = p.invoke_retrying("f", Role::QueryProcessor, b"x", |_, _| vec![1]).unwrap();
+        assert_eq!(first.queue_delay_s, 0.0);
+        let busy_until = virtual_now();
+        assert!(busy_until >= p.config.cold_start_s);
+        // a second arrival at t=0 finds the only container busy until
+        // `busy_until` and must wait exactly that long
+        set_virtual_now(0.0);
+        let second = p.invoke_retrying("f", Role::QueryProcessor, b"x", |_, _| vec![2]).unwrap();
+        assert_eq!(second.queue_delay_s.to_bits(), busy_until.to_bits());
+        assert_eq!(p.cold_invocations.load(Ordering::Relaxed), 1);
+        assert_eq!(p.warm_invocations.load(Ordering::Relaxed), 1);
+        // the wait is ledgered separately and never inflates service time
+        assert!((p.ledger.queue_delay_s() - busy_until).abs() < 1e-5);
+        assert!(second.modeled_s < p.config.cold_start_s, "queued run must start warm");
+        assert!(virtual_now() > busy_until, "the wait advances the virtual clock");
+    }
+
+    #[test]
+    fn fleet_mode_cold_starts_scale_with_offered_load_below_cap() {
+        use crate::storage::set_virtual_now;
+        let p = fleet_platform(2);
+        set_virtual_now(0.0);
+        p.invoke("f", Role::QueryProcessor, b"", |_, _| vec![]).unwrap();
+        // a concurrent arrival (t = 0 again) finds the fleet busy but
+        // under the cap: offered load itself forces the second cold start
+        set_virtual_now(0.0);
+        let inv = p.invoke_retrying("f", Role::QueryProcessor, b"", |_, _| vec![]).unwrap();
+        assert_eq!(inv.queue_delay_s, 0.0);
+        assert_eq!(p.cold_invocations.load(Ordering::Relaxed), 2);
+        // once both are idle again, arrivals reuse containers warm
+        let now = virtual_now();
+        set_virtual_now(now + 1.0);
+        p.invoke("f", Role::QueryProcessor, b"", |_, _| vec![]).unwrap();
+        assert_eq!(p.cold_invocations.load(Ordering::Relaxed), 2);
+        assert_eq!(p.warm_invocations.load(Ordering::Relaxed), 1);
+        assert_eq!(p.pool_size("f"), 2);
     }
 
     #[test]

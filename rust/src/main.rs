@@ -6,6 +6,17 @@
 //!                                      report QPS / latency / cost / recall
 //!   query   --predicate "a0<50 & a2>10" [...]   single hybrid query demo
 //!   cost    [--volume 100000]          daily-cost model comparison (Fig 8)
+//!   load    [--qps 20,50,100,200,400] [--fuse-window 2] [--max-containers 4]
+//!           [--arrival poisson|trace] [--out BENCH_load.json]
+//!                                      open-loop QPS sweep over the virtual
+//!                                      clock: seeded arrivals contend for a
+//!                                      capped container fleet, with a
+//!                                      fused-vs-unfused ablation of the
+//!                                      cross-request fusion window (modeled
+//!                                      ms; co-resident queries coalesce into
+//!                                      one QP invocation per partition).
+//!                                      Writes throughput / p50 / p99 /
+//!                                      cost-per-1k curves to --out.
 //!
 //! Common options: --profile <test|sift|gist|sift10m|deep>, --n <rows>,
 //! --queries <count>, --n-qa <10|20|84|155|258|340>, --backend
@@ -24,6 +35,7 @@
 //! --no-dre, --seed <u64>.
 
 use squash::baselines::server::InstanceType;
+use squash::bench::load::{point_header, point_line, run_sweep, ArrivalProfile, LoadOptions};
 use squash::bench::{measure_server, measure_squash, measure_system_x, Env, EnvOptions, RunStats};
 use squash::runtime::backend::ScanParallelism;
 use squash::coordinator::tree::TreeConfig;
@@ -47,9 +59,10 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("query") => cmd_query(&args),
         Some("cost") => cmd_cost(&args),
+        Some("load") => cmd_load(&args),
         _ => {
             eprintln!(
-                "usage: squash <info|serve|query|cost> [options]   (see doc comment in rust/src/main.rs)"
+                "usage: squash <info|serve|query|cost|load> [options]   (see doc comment in rust/src/main.rs)"
             );
             2
         }
@@ -197,6 +210,64 @@ fn cmd_query(args: &Args) -> i32 {
         println!("{:>3}. id={id:<8} dist={dist:<12.4} attrs=[{}]", rank + 1, attrs.join(", "));
     }
     0
+}
+
+fn cmd_load(args: &Args) -> i32 {
+    let mut opts = env_opts(args);
+    // the sweep measures the virtual clock; real sleeping adds nothing
+    opts.time_scale = args.get_f64("time-scale", 0.0).unwrap_or(0.0);
+    if opts.n_queries == 100 && args.get("queries").is_none() {
+        opts.n_queries = 64;
+    }
+    let qps: Vec<f64> = args
+        .get_or("qps", "20,50,100,200,400")
+        .split(',')
+        .filter_map(|s| s.trim().parse::<f64>().ok())
+        .filter(|&q| q > 0.0)
+        .collect();
+    if qps.is_empty() {
+        eprintln!("--qps must be a comma-separated list of positive rates");
+        return 2;
+    }
+    let Some(arrival) = ArrivalProfile::from_name(args.get_or("arrival", "poisson")) else {
+        eprintln!("--arrival must be poisson|trace");
+        return 2;
+    };
+    let lopts = LoadOptions {
+        qps,
+        fuse_window_ms: args.get_f64("fuse-window", 2.0).unwrap_or(2.0),
+        max_containers: args.get_usize("max-containers", 4).unwrap_or(4),
+        arrival,
+        seed: opts.seed,
+    };
+    eprintln!(
+        "load sweep on {} (n={}, {} queries/point, fleet cap {}, window {} ms, {} arrivals)...",
+        opts.profile,
+        opts.n,
+        opts.n_queries,
+        lopts.max_containers,
+        lopts.fuse_window_ms,
+        arrival.name()
+    );
+    let sweep = run_sweep(&opts, &lopts);
+    println!("{}", point_header());
+    for p in &sweep.unfused {
+        println!("{}", point_line("unfused", &p.stats));
+    }
+    for p in &sweep.fused {
+        println!("{}", point_line("fused", &p.stats));
+    }
+    let out = args.get_or("out", "BENCH_load.json").to_string();
+    match std::fs::write(&out, sweep.json.to_string_pretty()) {
+        Ok(()) => {
+            println!("wrote {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_cost(args: &Args) -> i32 {

@@ -55,6 +55,13 @@ thread_local! {
     /// modeled duration, so a modeled completion time can be
     /// reconstructed identically at any time scale.
     static MODELED_TOTAL: std::cell::Cell<f64> = const { std::cell::Cell::new(0.0) };
+    /// *Absolute* fleet-wide virtual time on this thread. Unlike
+    /// MODELED_TOTAL (reset per invocation, yielding per-invocation
+    /// durations), VIRTUAL_NOW is never reset: it is seeded from a parent
+    /// thread at spawn (see the coordinator's scatter/join sites) and
+    /// advanced by every `simulate_latency` call, so concurrent requests
+    /// share one event-driven timeline the FaaS fleet can contend on.
+    static VIRTUAL_NOW: std::cell::Cell<f64> = const { std::cell::Cell::new(0.0) };
 }
 
 /// Drain the current thread's modeled-latency surplus (see MODELED_EXTRA).
@@ -68,6 +75,26 @@ pub fn take_modeled_extra() -> f64 {
 /// deterministic, unlike wall time.
 pub fn take_modeled_total() -> f64 {
     MODELED_TOTAL.with(|c| c.take())
+}
+
+/// Current thread's absolute virtual time in modeled seconds (see
+/// VIRTUAL_NOW). Starts at 0 on a fresh thread; parents seed children via
+/// [`set_virtual_now`] when spawning so a scatter's shards all open at
+/// the parent's timeline position.
+pub fn virtual_now() -> f64 {
+    VIRTUAL_NOW.with(|c| c.get())
+}
+
+/// Set the absolute virtual clock on this thread (spawn-site seeding and
+/// join-site advancement to the max of children).
+pub fn set_virtual_now(t: f64) {
+    VIRTUAL_NOW.with(|c| c.set(t));
+}
+
+/// Advance the absolute virtual clock by `dt` modeled seconds (queueing
+/// delays and other waits that are not `simulate_latency` I/O).
+pub fn advance_virtual_now(dt: f64) {
+    VIRTUAL_NOW.with(|c| c.set(c.get() + dt));
 }
 
 impl SimParams {
@@ -86,6 +113,7 @@ impl SimParams {
         }
         MODELED_EXTRA.with(|c| c.set(c.get() + modeled_s * (1.0 - scale)));
         MODELED_TOTAL.with(|c| c.set(c.get() + modeled_s));
+        VIRTUAL_NOW.with(|c| c.set(c.get() + modeled_s));
         modeled_s
     }
 }
@@ -295,6 +323,22 @@ mod tests {
         // bigger objects take longer; first-byte dominates small reads
         assert!(s3.modeled_get_latency(1 << 30) > s3.modeled_get_latency(1 << 10));
         assert!(p.s3_first_byte_s > p.efs_first_byte_s * 10.0);
+    }
+
+    #[test]
+    fn virtual_clock_advances_and_is_settable() {
+        let base = virtual_now();
+        let p = SimParams::instant();
+        p.simulate_latency(0.25);
+        assert_eq!(virtual_now(), base + 0.25);
+        advance_virtual_now(0.5);
+        assert_eq!(virtual_now(), base + 0.75);
+        set_virtual_now(3.0);
+        assert_eq!(virtual_now(), 3.0);
+        // per-invocation accumulators drain; the absolute clock does not
+        take_modeled_extra();
+        take_modeled_total();
+        assert_eq!(virtual_now(), 3.0);
     }
 
     #[test]

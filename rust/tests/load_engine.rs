@@ -1,0 +1,179 @@
+//! Open-loop traffic engine, end-to-end. Pinned properties:
+//!
+//! 1. **Seeded arrivals replay byte-identically.** Two runs of the same
+//!    sweep point produce bit-equal per-query latencies and identical
+//!    ledger digests; the digest is written to a file so CI can diff two
+//!    independent processes (the chaos-harness pattern).
+//! 2. **Fusion moves time and cost, never answers.** Across fusion
+//!    window × QP sharding × chaos seed, every query's results are
+//!    bit-identical to its unfused, unsharded, chaos-free run.
+//! 3. **Tail latency is monotone in offered load.** On a capped fleet,
+//!    p99 latency can only grow as offered QPS rises past saturation,
+//!    and the heaviest point must actually queue.
+//! 4. **Fusion pays off under overload.** At the heaviest swept load the
+//!    fused configuration sustains strictly higher throughput than the
+//!    unfused one — the amortized invocations buy real completions.
+
+use squash::bench::load::{configure_for_load, run_point, ArrivalProfile, LoadOptions, PointRun};
+use squash::bench::{Env, EnvOptions};
+use squash::coordinator::QpSharding;
+use squash::faas::ChaosConfig;
+
+fn base_opts() -> EnvOptions {
+    EnvOptions {
+        profile: "test",
+        n: 1500,
+        n_queries: 24,
+        time_scale: 0.0,
+        ..Default::default()
+    }
+}
+
+fn load_opts(fuse_window_ms: f64) -> LoadOptions {
+    LoadOptions {
+        qps: vec![200.0],
+        fuse_window_ms,
+        max_containers: 2,
+        arrival: ArrivalProfile::Poisson,
+        seed: 42,
+    }
+}
+
+/// Fresh fleet-mode environment pinned to the load-engine query shape.
+fn load_env(base: &EnvOptions, opts: &LoadOptions) -> Env {
+    let mut o = base.clone();
+    o.virtual_pools = true;
+    o.max_containers = opts.max_containers;
+    let mut env = Env::setup(&o);
+    configure_for_load(&mut env);
+    env
+}
+
+fn run(base: &EnvOptions, opts: &LoadOptions, qps: f64) -> (PointRun, String) {
+    let env = load_env(base, opts);
+    let point = run_point(&env, qps, opts);
+    (point, env.ledger.chaos_summary())
+}
+
+#[test]
+fn seeded_arrivals_replay_the_ledger_byte_identically() {
+    let base = base_opts();
+    let opts = load_opts(2.0);
+    let (a, digest_a) = run(&base, &opts, 200.0);
+    let (b, digest_b) = run(&base, &opts, 200.0);
+    assert_eq!(
+        digest_a, digest_b,
+        "two runs of the same sweep point must replay the ledger byte-identically"
+    );
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits(), "arrival not replayed");
+        assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits(), "latency not replayed");
+        assert_eq!(x.result, y.result, "results not replayed");
+    }
+    // a different arrival seed must actually change the timeline
+    let (_, digest_c) = run(&base, &LoadOptions { seed: 43, ..opts }, 200.0);
+    assert_ne!(digest_a, digest_c, "distinct arrival seeds should draw distinct timelines");
+    // emit the digest so CI can diff two independent test processes
+    let path = std::env::var("SQUASH_LOAD_LEDGER_OUT")
+        .unwrap_or_else(|_| "load_ledger_summary.txt".to_string());
+    std::fs::write(&path, &digest_a).expect("write load ledger summary");
+}
+
+#[test]
+fn fusion_is_bit_identical_across_window_shards_and_chaos() {
+    let base = base_opts();
+    // the reference: unfused, unsharded, chaos-free
+    let (want, _) = run(&base, &load_opts(0.0), 200.0);
+
+    let heavy = ChaosConfig {
+        tail_sigma: 0.6,
+        spike_prob: 0.25,
+        spike_s: 0.5,
+        ..ChaosConfig::with_seed(7)
+    };
+    let scenarios: [(f64, Option<usize>, Option<ChaosConfig>); 5] = [
+        (2.0, None, None),
+        (10.0, None, Some(heavy)),
+        (0.0, Some(3), None),
+        (2.0, Some(3), None),
+        (10.0, Some(3), Some(heavy)),
+    ];
+    for (window_ms, shards, chaos) in scenarios {
+        let label = format!("window={window_ms}ms shards={shards:?} chaos={}", chaos.is_some());
+        let mut b = base.clone();
+        if let Some(n) = shards {
+            b.qp_sharding = QpSharding::Fixed(n);
+        }
+        if let Some(c) = chaos {
+            b.chaos = c;
+        }
+        let opts = load_opts(window_ms);
+        let mut env = load_env(&b, &opts);
+        if shards.is_some() {
+            // low threshold so the small fixture actually scatters
+            env.with_config(|c| c.qp_shard_min_rows = 8);
+        }
+        let got = run_point(&env, 200.0, &opts);
+        assert_eq!(want.outcomes.len(), got.outcomes.len(), "{label}: query count");
+        for (qi, (a, g)) in want.outcomes.iter().zip(&got.outcomes).enumerate() {
+            assert_eq!(a.result.len(), g.result.len(), "{label}: query {qi} result length");
+            for (rank, (x, y)) in a.result.iter().zip(&g.result).enumerate() {
+                assert_eq!(x.0, y.0, "{label}: query {qi} rank {rank} id");
+                assert_eq!(
+                    x.1.to_bits(),
+                    y.1.to_bits(),
+                    "{label}: query {qi} rank {rank} distance not bit-identical"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn p99_latency_is_monotone_in_offered_load() {
+    let base = base_opts();
+    let opts = load_opts(0.0);
+    // widely spaced points spanning below-knee to far past saturation
+    let sweep: Vec<_> = [50.0, 400.0, 3200.0]
+        .iter()
+        .map(|&qps| run(&base, &opts, qps).0.stats)
+        .collect();
+    for pair in sweep.windows(2) {
+        assert!(
+            pair[1].p99_ms >= pair[0].p99_ms * 0.999,
+            "p99 fell as offered load rose: {:.3}ms @ {} QPS -> {:.3}ms @ {} QPS",
+            pair[0].p99_ms,
+            pair[0].offered_qps,
+            pair[1].p99_ms,
+            pair[1].offered_qps
+        );
+    }
+    let top = sweep.last().unwrap();
+    assert!(top.queued > 0, "far past saturation the capped fleet must queue");
+    assert!(top.queue_delay_s > 0.0);
+}
+
+#[test]
+fn fusion_sustains_higher_throughput_under_overload() {
+    let base = EnvOptions { n_queries: 32, ..base_opts() };
+    let qps = 2000.0;
+    let (unfused, _) = run(&base, &load_opts(0.0), qps);
+    let (fused, _) = run(&base, &load_opts(10.0), qps);
+    assert!(
+        fused.stats.max_group_size > 1,
+        "overload x 10ms window must coalesce (max group {})",
+        fused.stats.max_group_size
+    );
+    assert!(
+        fused.stats.invocations < unfused.stats.invocations,
+        "fusion must amortize invocations: fused {} vs unfused {}",
+        fused.stats.invocations,
+        unfused.stats.invocations
+    );
+    assert!(
+        fused.stats.achieved_qps > unfused.stats.achieved_qps,
+        "fused must sustain strictly higher throughput at overload: fused {:.1} vs unfused {:.1}",
+        fused.stats.achieved_qps,
+        unfused.stats.achieved_qps
+    );
+}
