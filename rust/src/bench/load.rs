@@ -43,7 +43,9 @@
 //!           "invocations": 640, "cold_starts": 12,
 //!           "queued": 31, "queue_delay_s": 0.18,
 //!           "fused_groups": 64, "max_group_size": 1,
-//!           "cost_per_1k_queries": 0.0021 } ] },
+//!           "cost_per_1k_queries": 0.0021,
+//!           "degraded": 0, "availability": 1.0,
+//!           "mean_coverage": 1.0 } ] },
 //!     { "mode": "fused", "points": [ ... ] }
 //!   ]
 //! }
@@ -158,6 +160,9 @@ pub struct QueryOutcome {
     pub completion_s: f64,
     /// completion − arrival: queueing + hold + modeled service time
     pub latency_s: f64,
+    /// fraction of the query's candidate rows that survived faults and
+    /// reached the merge (1.0 = full answer; < 1 = degraded)
+    pub coverage: f32,
     pub result: QueryResult,
 }
 
@@ -180,6 +185,12 @@ pub struct LoadPoint {
     pub max_group_size: usize,
     /// deterministic modeled cost per 1000 queries (USD)
     pub cost_per_1k_queries: f64,
+    /// queries answered at partial coverage (brownout, not blackout)
+    pub degraded: u64,
+    /// fraction of queries answered at full coverage
+    pub availability: f64,
+    /// mean coverage fraction over all queries (1.0 = no degradation)
+    pub mean_coverage: f64,
 }
 
 impl LoadPoint {
@@ -199,6 +210,9 @@ impl LoadPoint {
             ("fused_groups", Json::num(self.fused_groups as f64)),
             ("max_group_size", Json::num(self.max_group_size as f64)),
             ("cost_per_1k_queries", Json::num(self.cost_per_1k_queries)),
+            ("degraded", Json::num(self.degraded as f64)),
+            ("availability", Json::num(self.availability)),
+            ("mean_coverage", Json::num(self.mean_coverage)),
         ])
     }
 }
@@ -297,12 +311,18 @@ pub fn run_point(env: &Env, offered_qps: f64, opts: &LoadOptions) -> PointRun {
         set_virtual_now(dispatch_t);
         let out = env.sys.run_batch(&queries[start..end]);
         let completion = virtual_now();
+        // group-local degraded tags → per-query coverage fractions
+        let mut coverages = vec![1.0f32; end - start];
+        for &(local, cov) in &out.degraded {
+            coverages[local] = cov;
+        }
         for (off, result) in out.results.into_iter().enumerate() {
             let i = start + off;
             outcomes[i] = Some(QueryOutcome {
                 arrival_s: arrivals[i],
                 completion_s: completion,
                 latency_s: completion - arrivals[i],
+                coverage: coverages[off],
                 result,
             });
         }
@@ -337,6 +357,11 @@ pub fn run_point(env: &Env, offered_qps: f64, opts: &LoadOptions) -> PointRun {
         fused_groups: groups.len(),
         max_group_size: groups.iter().map(|&(s, e, _)| e - s).max().unwrap_or(0),
         cost_per_1k_queries: cost / queries.len().max(1) as f64 * 1e3,
+        degraded: outcomes.iter().filter(|o| o.coverage < 1.0).count() as u64,
+        availability: outcomes.iter().filter(|o| o.coverage >= 1.0).count() as f64
+            / outcomes.len().max(1) as f64,
+        mean_coverage: outcomes.iter().map(|o| o.coverage as f64).sum::<f64>()
+            / outcomes.len().max(1) as f64,
     };
     PointRun { outcomes, stats }
 }

@@ -5,6 +5,7 @@
 //! [`load`].
 
 pub mod load;
+pub mod resilience;
 
 use std::sync::Arc;
 
@@ -51,6 +52,15 @@ pub struct EnvOptions {
     pub virtual_pools: bool,
     /// fleet cap per function in fleet mode (0 = uncapped)
     pub max_containers: usize,
+    /// per-attempt invocation timeout in modeled seconds (∞ = none)
+    pub fn_timeout_s: f64,
+    /// retry budget + backoff policy (`RetryPolicy::legacy()` = the
+    /// pre-resilience immediate-retry loop)
+    pub retry: crate::faas::resilience::RetryPolicy,
+    /// per-function-pool circuit breaker (`BreakerConfig::off()` = none)
+    pub breaker: crate::faas::resilience::BreakerConfig,
+    /// end-to-end request deadline in modeled seconds (None = none)
+    pub deadline_s: Option<f64>,
     pub seed: u64,
 }
 
@@ -75,6 +85,10 @@ impl Default for EnvOptions {
                 .unwrap_or(crate::coordinator::HedgePolicy::Off),
             virtual_pools: false,
             max_containers: 0,
+            fn_timeout_s: f64::INFINITY,
+            retry: crate::faas::resilience::RetryPolicy::legacy(),
+            breaker: crate::faas::resilience::BreakerConfig::off(),
+            deadline_s: None,
             seed: 42,
         }
     }
@@ -104,6 +118,9 @@ impl Env {
                 chaos: opts.chaos,
                 virtual_pools: opts.virtual_pools,
                 max_containers: opts.max_containers,
+                fn_timeout_s: opts.fn_timeout_s,
+                retry: opts.retry,
+                breaker: opts.breaker,
                 ..Default::default()
             },
             params.clone(),
@@ -117,6 +134,7 @@ impl Env {
         let mut cfg = SquashConfig::for_profile(profile);
         cfg.qp_shards = opts.qp_sharding;
         cfg.hedge = opts.hedge;
+        cfg.deadline_s = opts.deadline_s;
         let sys = SquashSystem::build(
             &ds,
             &BuildOptions::for_profile(profile),

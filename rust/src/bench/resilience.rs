@@ -1,0 +1,422 @@
+//! Fault-rate resilience sweep: availability / recall / cost curves under
+//! seeded chaos, plus the retry-storm ablation, behind
+//! `BENCH_resilience.json`.
+//!
+//! The load engine ([`crate::bench::load`]) asks "what happens as offered
+//! load rises?"; this module asks "what happens as the *fault rate*
+//! rises?". Each point deploys a fresh protected environment — per-attempt
+//! timeouts, a standard retry budget with backoff, per-pool circuit
+//! breakers and an end-to-end batch deadline — then injects one fault
+//! class (hangs, mid-flight crashes, response corruption, or all three
+//! mixed) at a swept per-invocation probability. Lost work degrades
+//! gracefully: the QA merges surviving shards, the batch API tags partial
+//! answers with coverage fractions, and the curves report availability
+//! (fraction of queries at full coverage), mean coverage, recall@10 and
+//! modeled cost side by side.
+//!
+//! The retry-storm scenario pins the tentpole claim: under a high
+//! injected failure rate, budgets + breakers keep the fleet's total
+//! attempt count bounded and strictly below the unprotected
+//! retry-until-budget loop, while availability stays comparable.
+//!
+//! # `BENCH_resilience.json` schema
+//!
+//! ```json
+//! {
+//!   "bench": "resilience",
+//!   "profile": "test", "n": 3000, "queries": 32, "seed": 42,
+//!   "fn_timeout_s": 0.5, "deadline_s": 4.0,
+//!   "classes": [
+//!     { "class": "hang",
+//!       "points": [
+//!         { "rate": 0.02, "availability": 0.97, "mean_coverage": 0.99,
+//!           "degraded": 1, "recall_at_10": 0.93, "wall_s": 1.8,
+//!           "invocations": 212, "retries": 3, "timeouts": 2,
+//!           "crashes": 0, "corruptions": 0, "breaker_opens": 0,
+//!           "breaker_fast_fails": 0, "backoff_wait_s": 0.07,
+//!           "cost_per_1k_queries": 0.0034 } ] },
+//!     { "class": "crash", "points": [ ... ] },
+//!     { "class": "corrupt", "points": [ ... ] },
+//!     { "class": "mixed", "points": [ ... ] }
+//!   ],
+//!   "storm": {
+//!     "failure_prob": 0.35,
+//!     "protected":   { "invocations": 310, "failed": 70, "wall_s": 2.1,
+//!                      "availability": 0.94, "breaker_fast_fails": 12,
+//!                      "backoff_wait_s": 0.8 },
+//!     "unprotected": { "invocations": 520, "failed": 260, "wall_s": 3.9,
+//!                      "availability": 1.0, "breaker_fast_fails": 0,
+//!                      "backoff_wait_s": 0.0 }
+//!   }
+//! }
+//! ```
+//!
+//! Every point runs on a fresh environment (fresh ledger, fresh fleet,
+//! fresh breaker state), so points are independent and sweep order cannot
+//! leak state. All quantities are virtual-clock / counter deterministic:
+//! the same seed replays byte-identical curves.
+
+use std::sync::atomic::Ordering;
+
+use crate::bench::{Env, EnvOptions};
+use crate::data::ground_truth::{exact_batch, mean_recall};
+use crate::faas::resilience::{BreakerConfig, RetryPolicy};
+use crate::faas::ChaosConfig;
+use crate::util::json::Json;
+
+/// Fault classes the sweep injects one at a time (plus all together).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultClass {
+    /// invocation hangs; only the per-attempt timeout recovers it
+    Hang,
+    /// mid-flight crash after the handler ran; partial work is billed
+    Crash,
+    /// response payload corruption caught by the frame checksum
+    Corrupt,
+    /// all three at once (each at the point's rate)
+    Mixed,
+}
+
+impl FaultClass {
+    pub const ALL: [FaultClass; 4] =
+        [FaultClass::Hang, FaultClass::Crash, FaultClass::Corrupt, FaultClass::Mixed];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Hang => "hang",
+            Self::Crash => "crash",
+            Self::Corrupt => "corrupt",
+            Self::Mixed => "mixed",
+        }
+    }
+
+    /// Chaos model for this class at per-invocation probability `rate`.
+    pub fn chaos(&self, rate: f64, seed: u64) -> ChaosConfig {
+        let mut c = ChaosConfig::with_seed(seed);
+        match self {
+            Self::Hang => c.hang_prob = rate,
+            Self::Crash => c.crash_prob = rate,
+            Self::Corrupt => c.corrupt_prob = rate,
+            Self::Mixed => {
+                c.hang_prob = rate;
+                c.crash_prob = rate;
+                c.corrupt_prob = rate;
+            }
+        }
+        c
+    }
+}
+
+/// Sweep knobs on top of an [`EnvOptions`] environment.
+#[derive(Clone, Debug)]
+pub struct ResilienceOptions {
+    /// per-invocation fault probabilities, ascending (0 = control point)
+    pub rates: Vec<f64>,
+    /// per-attempt timeout in modeled seconds (recovers hangs)
+    pub fn_timeout_s: f64,
+    /// end-to-end batch deadline in modeled seconds
+    pub deadline_s: f64,
+    /// injected failure probability of the retry-storm scenario
+    pub storm_failure_prob: f64,
+    /// chaos seed (dataset/workload seeds come from the env options)
+    pub seed: u64,
+}
+
+impl Default for ResilienceOptions {
+    fn default() -> Self {
+        Self {
+            rates: vec![0.0, 0.02, 0.05, 0.1, 0.2],
+            fn_timeout_s: 0.5,
+            deadline_s: 4.0,
+            storm_failure_prob: 0.35,
+            seed: 42,
+        }
+    }
+}
+
+/// One measured point of the fault-rate sweep.
+#[derive(Clone, Debug)]
+pub struct ResiliencePoint {
+    pub class: FaultClass,
+    pub rate: f64,
+    /// fraction of queries answered at full coverage
+    pub availability: f64,
+    /// mean coverage fraction over all queries
+    pub mean_coverage: f64,
+    /// queries answered at partial coverage
+    pub degraded: u64,
+    pub recall_at_10: f64,
+    /// modeled batch makespan (virtual clock)
+    pub wall_s: f64,
+    pub invocations: u64,
+    pub retries: u64,
+    pub timeouts: u64,
+    pub crashes: u64,
+    pub corruptions: u64,
+    pub breaker_opens: u64,
+    pub breaker_fast_fails: u64,
+    pub backoff_wait_s: f64,
+    /// deterministic modeled cost per 1000 queries (USD)
+    pub cost_per_1k_queries: f64,
+}
+
+impl ResiliencePoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rate", Json::num(self.rate)),
+            ("availability", Json::num(self.availability)),
+            ("mean_coverage", Json::num(self.mean_coverage)),
+            ("degraded", Json::num(self.degraded as f64)),
+            ("recall_at_10", Json::num(self.recall_at_10)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("invocations", Json::num(self.invocations as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("timeouts", Json::num(self.timeouts as f64)),
+            ("crashes", Json::num(self.crashes as f64)),
+            ("corruptions", Json::num(self.corruptions as f64)),
+            ("breaker_opens", Json::num(self.breaker_opens as f64)),
+            ("breaker_fast_fails", Json::num(self.breaker_fast_fails as f64)),
+            ("backoff_wait_s", Json::num(self.backoff_wait_s)),
+            ("cost_per_1k_queries", Json::num(self.cost_per_1k_queries)),
+        ])
+    }
+}
+
+/// Protected environment options for one point: the full resilience
+/// stack (timeout + standard retry budget + breakers + deadline) over
+/// the given chaos model.
+fn protected_opts(base: &EnvOptions, chaos: ChaosConfig, opts: &ResilienceOptions) -> EnvOptions {
+    EnvOptions {
+        chaos,
+        fn_timeout_s: opts.fn_timeout_s,
+        retry: RetryPolicy::standard(),
+        breaker: BreakerConfig::on(),
+        deadline_s: Some(opts.deadline_s),
+        ..base.clone()
+    }
+}
+
+/// Counters-and-coverage measurement of one `run_batch` on a fresh env.
+fn measure(env: &Env, class: FaultClass, rate: f64) -> ResiliencePoint {
+    let before = env.ledger.report(&env.pricing);
+    let out = env.sys.run_batch(&env.queries);
+    let after = env.ledger.report(&env.pricing);
+    let cost = after.total() - before.total();
+
+    let n = env.queries.len().max(1) as f64;
+    let covered: f64 =
+        env.queries.len() as f64 - out.degraded.len() as f64;
+    let mean_coverage = (covered + out.degraded.iter().map(|&(_, c)| c as f64).sum::<f64>()) / n;
+
+    let truth = exact_batch(&env.ds, &env.queries, crate::util::threadpool::num_cpus());
+    let recall = mean_recall(&truth, &out.results, 10);
+
+    let l = &env.ledger;
+    ResiliencePoint {
+        class,
+        rate,
+        availability: covered / n,
+        mean_coverage,
+        degraded: out.degraded.len() as u64,
+        recall_at_10: recall,
+        wall_s: out.wall_s,
+        invocations: l.total_invocations(),
+        retries: l.retries.load(Ordering::Relaxed),
+        timeouts: l.timeouts.load(Ordering::Relaxed),
+        crashes: l.crashes.load(Ordering::Relaxed),
+        corruptions: l.corruptions.load(Ordering::Relaxed),
+        breaker_opens: l.breaker_open_events.load(Ordering::Relaxed),
+        breaker_fast_fails: l.breaker_fast_fails.load(Ordering::Relaxed),
+        backoff_wait_s: l.backoff_wait_s(),
+        cost_per_1k_queries: cost / n * 1e3,
+    }
+}
+
+/// Execute one (class, rate) point on a fresh protected environment.
+pub fn run_point(base: &EnvOptions, class: FaultClass, rate: f64, opts: &ResilienceOptions) -> ResiliencePoint {
+    let env = Env::setup(&protected_opts(base, class.chaos(rate, opts.seed), opts));
+    measure(&env, class, rate)
+}
+
+/// One side of the retry-storm ablation.
+#[derive(Clone, Debug)]
+pub struct StormSide {
+    pub invocations: u64,
+    pub failed: u64,
+    pub wall_s: f64,
+    pub availability: f64,
+    pub breaker_fast_fails: u64,
+    pub backoff_wait_s: f64,
+}
+
+impl StormSide {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("invocations", Json::num(self.invocations as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("availability", Json::num(self.availability)),
+            ("breaker_fast_fails", Json::num(self.breaker_fast_fails as f64)),
+            ("backoff_wait_s", Json::num(self.backoff_wait_s)),
+        ])
+    }
+}
+
+/// Retry-storm ablation: the same high injected-failure chaos, once with
+/// the full protection stack and once with the legacy immediate-retry
+/// loop (no budget discipline, no breakers, no timeout).
+pub fn run_storm(base: &EnvOptions, opts: &ResilienceOptions) -> (StormSide, StormSide) {
+    let chaos =
+        ChaosConfig { failure_prob: opts.storm_failure_prob, ..ChaosConfig::with_seed(opts.seed) };
+    let storm_side = |env_opts: &EnvOptions| {
+        let env = Env::setup(env_opts);
+        let p = measure(&env, FaultClass::Mixed, opts.storm_failure_prob);
+        let failed = env.ledger.failed_invocations.load(Ordering::Relaxed);
+        StormSide {
+            invocations: p.invocations,
+            failed,
+            wall_s: p.wall_s,
+            availability: p.availability,
+            breaker_fast_fails: p.breaker_fast_fails,
+            backoff_wait_s: p.backoff_wait_s,
+        }
+    };
+    let protected = storm_side(&protected_opts(base, chaos, opts));
+    let unprotected = storm_side(&EnvOptions { chaos, ..base.clone() });
+    (protected, unprotected)
+}
+
+/// The full sweep output: per-class curves, the storm ablation, and the
+/// assembled `BENCH_resilience.json` document.
+pub struct SweepOutput {
+    pub points: Vec<ResiliencePoint>,
+    pub storm_protected: StormSide,
+    pub storm_unprotected: StormSide,
+    pub json: Json,
+}
+
+/// Run the fault-rate sweep over every class plus the retry-storm
+/// ablation (see the module docs for the emitted schema).
+pub fn run_sweep(base: &EnvOptions, opts: &ResilienceOptions) -> SweepOutput {
+    let mut points = Vec::new();
+    let mut classes_json = Vec::new();
+    for class in FaultClass::ALL {
+        let class_points: Vec<ResiliencePoint> =
+            opts.rates.iter().map(|&r| run_point(base, class, r, opts)).collect();
+        classes_json.push(Json::obj(vec![
+            ("class", Json::str(class.name())),
+            ("points", Json::Arr(class_points.iter().map(|p| p.to_json()).collect())),
+        ]));
+        points.extend(class_points);
+    }
+    let (storm_protected, storm_unprotected) = run_storm(base, opts);
+    let json = Json::obj(vec![
+        ("bench", Json::str("resilience")),
+        ("profile", Json::str(base.profile)),
+        ("n", Json::num(base.n as f64)),
+        ("queries", Json::num(base.n_queries as f64)),
+        ("seed", Json::num(opts.seed as f64)),
+        ("fn_timeout_s", Json::num(opts.fn_timeout_s)),
+        ("deadline_s", Json::num(opts.deadline_s)),
+        ("classes", Json::Arr(classes_json)),
+        (
+            "storm",
+            Json::obj(vec![
+                ("failure_prob", Json::num(opts.storm_failure_prob)),
+                ("protected", storm_protected.to_json()),
+                ("unprotected", storm_unprotected.to_json()),
+            ]),
+        ),
+    ]);
+    SweepOutput { points, storm_protected, storm_unprotected, json }
+}
+
+/// Fixed-width table line for one sweep point (CLI / bench output).
+pub fn point_line(p: &ResiliencePoint) -> String {
+    format!(
+        "{:<8} {:>6.3} {:>7.4} {:>9.4} {:>9.4} {:>7} {:>7} {:>6} {:>6} {:>6} {:>12.6}",
+        p.class.name(),
+        p.rate,
+        p.availability,
+        p.mean_coverage,
+        p.recall_at_10,
+        p.invocations,
+        p.retries,
+        p.timeouts,
+        p.crashes,
+        p.corruptions,
+        p.cost_per_1k_queries,
+    )
+}
+
+/// Header matching [`point_line`].
+pub fn point_header() -> String {
+    format!(
+        "{:<8} {:>6} {:>7} {:>9} {:>9} {:>7} {:>7} {:>6} {:>6} {:>6} {:>12}",
+        "class", "rate", "avail", "coverage", "recall", "invoc", "retry", "tmout", "crash",
+        "corpt", "$/1k"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_base() -> EnvOptions {
+        EnvOptions {
+            profile: "test",
+            n: 1200,
+            n_queries: 8,
+            time_scale: 0.0,
+            ..Default::default()
+        }
+    }
+
+    /// Knobs generous enough that nothing fires spuriously under the
+    /// seeded tail (the sweep's tighter defaults are for the bench).
+    fn lenient() -> ResilienceOptions {
+        ResilienceOptions { fn_timeout_s: 30.0, deadline_s: 60.0, ..Default::default() }
+    }
+
+    #[test]
+    fn zero_rate_point_is_clean_and_fully_covered() {
+        let base = small_base();
+        let opts = lenient();
+        let p = run_point(&base, FaultClass::Mixed, 0.0, &opts);
+        assert_eq!(p.availability, 1.0);
+        assert_eq!(p.mean_coverage, 1.0);
+        assert_eq!(p.degraded, 0);
+        assert_eq!(p.timeouts + p.crashes + p.corruptions, 0);
+        assert!(p.recall_at_10 > 0.5, "clean recall {}", p.recall_at_10);
+    }
+
+    #[test]
+    fn faulty_point_degrades_gracefully_and_replays() {
+        let base = small_base();
+        let opts = ResilienceOptions { rates: vec![0.25], ..lenient() };
+        let a = run_point(&base, FaultClass::Crash, 0.25, &opts);
+        let b = run_point(&base, FaultClass::Crash, 0.25, &opts);
+        // seeded chaos replays byte-identically on a fresh env
+        assert_eq!(a.invocations, b.invocations);
+        assert_eq!(a.degraded, b.degraded);
+        assert_eq!(a.wall_s.to_bits(), b.wall_s.to_bits());
+        assert!(a.crashes > 0, "25% crash rate must fire at least once");
+        assert!(a.availability >= 0.0 && a.availability <= 1.0);
+        assert!(a.mean_coverage <= 1.0);
+    }
+
+    #[test]
+    fn storm_protection_bounds_the_attempt_count() {
+        let base = small_base();
+        let opts = ResilienceOptions { storm_failure_prob: 0.5, ..lenient() };
+        let (protected, unprotected) = run_storm(&base, &opts);
+        assert!(
+            protected.invocations < unprotected.invocations,
+            "protected {} must attempt less than unprotected {}",
+            protected.invocations,
+            unprotected.invocations
+        );
+        assert!(protected.backoff_wait_s > 0.0, "backoff must have been exercised");
+        assert!(unprotected.breaker_fast_fails == 0 && unprotected.backoff_wait_s == 0.0);
+    }
+}

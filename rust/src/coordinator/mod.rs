@@ -277,6 +277,15 @@ pub struct SquashConfig {
     pub qp_target_shard_latency_s: f64,
     /// straggler hedging for the QP scatter (`--hedge off|pN`)
     pub hedge: HedgePolicy,
+    /// end-to-end batch deadline in virtual seconds (`--deadline-ms`):
+    /// stamped as an absolute instant at `run_batch` entry, carried in
+    /// every CO→QA→QP payload and debited at each hop. `None` (the
+    /// default) reproduces the pre-resilience behavior exactly.
+    pub deadline_s: Option<f64>,
+    /// `--strict`: callers should reject degraded (partial-coverage)
+    /// batches via [`SquashSystem::run_batch_strict`] instead of
+    /// accepting tagged results.
+    pub strict: bool,
 }
 
 impl Default for SquashConfig {
@@ -303,6 +312,8 @@ impl Default for SquashConfig {
                 .and_then(|v| v.parse().ok())
                 .unwrap_or(0.05),
             hedge: HedgePolicy::from_env().unwrap_or(HedgePolicy::Off),
+            deadline_s: None,
+            strict: false,
         }
     }
 }
@@ -400,6 +411,12 @@ pub struct BatchOutput {
     pub results: Vec<QueryResult>,
     /// end-to-end wall seconds (CO invocation round trip)
     pub wall_s: f64,
+    /// `(query index, coverage fraction in [0, 1))` for queries whose
+    /// results are a partial merge — some of their candidate work was
+    /// lost to exhausted retry budgets, expired deadlines, or open
+    /// breakers. Empty (the invariant the zero-fault tests pin) when
+    /// every invocation succeeded.
+    pub degraded: Vec<(usize, f32)>,
 }
 
 /// The deployed system.
@@ -501,7 +518,15 @@ impl SquashSystem {
             live_idx.extend(0..queries.len());
         }
 
+        // the batch's absolute deadline on the virtual clock, stamped
+        // once at entry and carried through every hop's payload
+        let deadline = match ctx.cfg.deadline_s {
+            Some(d) => virtual_now() + d,
+            None => f64::INFINITY,
+        };
+
         let mut results: Vec<QueryResult> = vec![Vec::new(); queries.len()];
+        let mut degraded: Vec<(usize, f32)> = Vec::new();
         if !live_idx.is_empty() {
             // Chunk the live set so each CO request/response stays under
             // the synchronous-invocation payload cap (waves, like any
@@ -512,13 +537,21 @@ impl SquashSystem {
                 .min(live_idx.len());
             for wave in live_idx.chunks(max_wave) {
                 let live: Vec<Query> = wave.iter().map(|&i| queries[i].clone()).collect();
-                let response = self.invoke_coordinator(&live);
+                let response = self.invoke_coordinator(&live, deadline);
+                let wave_degraded: std::collections::HashSet<usize> =
+                    response.degraded.iter().map(|&(qi, _)| qi).collect();
                 for (local_idx, res) in response.results {
                     let global = wave[local_idx];
-                    if ctx.cfg.use_cache {
+                    // never cache a partial answer: a later cache hit
+                    // would replay the brownout at full health
+                    if ctx.cfg.use_cache && !wave_degraded.contains(&local_idx) {
                         ctx.cache.put(&queries[global], res.clone());
                     }
                     results[global] = res;
+                }
+                for (local_idx, cov) in response.degraded {
+                    degraded.push((wave[local_idx], cov));
+                    ctx.ledger.record_degraded_query();
                 }
             }
         }
@@ -527,12 +560,30 @@ impl SquashSystem {
                 results[i] = c;
             }
         }
-        BatchOutput { results, wall_s: sw.secs() }
+        degraded.sort_by_key(|&(qi, _)| qi);
+        BatchOutput { results, wall_s: sw.secs(), degraded }
+    }
+
+    /// [`SquashSystem::run_batch`] for `--strict` deployments: partial
+    /// coverage is an error, not a tagged result.
+    pub fn run_batch_strict(&self, queries: &[Query]) -> Result<BatchOutput, String> {
+        let out = self.run_batch(queries);
+        if let Some(&(qi, cov)) = out.degraded.first() {
+            return Err(format!(
+                "strict mode: {} of {} queries degraded (first: query {qi} at {:.3} coverage)",
+                out.degraded.len(),
+                queries.len(),
+                cov,
+            ));
+        }
+        Ok(out)
     }
 
     /// The CO function: splits the batch over the QA tree (Algorithm 2,
-    /// id = −1 case) and gathers the root QAs' responses.
-    fn invoke_coordinator(&self, queries: &[Query]) -> QaResponse {
+    /// id = −1 case) and gathers the root QAs' responses. A CO-level
+    /// loss (the whole batch's entry point) degrades every wave query to
+    /// zero coverage — the batch API itself stays infallible.
+    fn invoke_coordinator(&self, queries: &[Query], deadline: f64) -> QaResponse {
         let ctx = self.ctx.clone();
         let mut enc = Writer::new();
         enc.usize(queries.len());
@@ -541,22 +592,26 @@ impl SquashSystem {
         }
         let ctx2 = ctx.clone();
         let queries_owned: Vec<Query> = queries.to_vec();
-        let out = ctx
-            .platform
-            .invoke_retrying(
-                "squash-coordinator",
-                Role::Coordinator,
-                &enc.into_bytes(),
-                move |_ictx, _p| co_handler(&ctx2, &queries_owned).to_bytes(),
-            )
-            .expect("coordinator invocation");
-        QaResponse::from_bytes(&out.response).expect("coordinator response decode")
+        let out = ctx.platform.invoke_with_policy(
+            "squash-coordinator",
+            Role::Coordinator,
+            &enc.into_bytes(),
+            crate::faas::resilience::Deadline::at(deadline),
+            move |_ictx, _p| co_handler(&ctx2, &queries_owned, deadline).to_bytes(),
+        );
+        match out {
+            Ok(out) => QaResponse::from_bytes(&out.response).expect("coordinator response decode"),
+            Err(_) => QaResponse {
+                results: Vec::new(),
+                degraded: (0..queries.len()).map(|qi| (qi, 0.0)).collect(),
+            },
+        }
     }
 }
 
 /// CO handler body: launch the root QAs on threads, merge subtree
-/// responses.
-fn co_handler(ctx: &Arc<SystemCtx>, queries: &[Query]) -> QaResponse {
+/// responses (results and degraded-coverage tags alike).
+fn co_handler(ctx: &Arc<SystemCtx>, queries: &[Query], deadline: f64) -> QaResponse {
     let tree = ctx.cfg.tree;
     let q_total = queries.len();
     let children = tree.children(-1, 0);
@@ -573,14 +628,20 @@ fn co_handler(ctx: &Arc<SystemCtx>, queries: &[Query]) -> QaResponse {
                 level: clevel,
                 q_total,
                 q_offset: qs,
+                deadline,
                 queries: queries[qs..qe].to_vec(),
             };
             let ctx = ctx.clone();
             let vt = virtual_now();
             handles.push(scope.spawn(move || {
-                // root QAs open at the CO's instant on the timeline
+                // root QAs open at the CO's instant on the timeline;
+                // a lost root subtree degrades its whole query range
                 set_virtual_now(vt);
-                (qa::invoke_qa(&ctx, req), virtual_now())
+                let resp = qa::invoke_qa(&ctx, req).unwrap_or_else(|_| QaResponse {
+                    results: Vec::new(),
+                    degraded: (qs..qe).map(|qi| (qi, 0.0)).collect(),
+                });
+                (resp, virtual_now())
             }));
         }
         // event-driven join: the CO resumes at the latest root completion
@@ -589,10 +650,12 @@ fn co_handler(ctx: &Arc<SystemCtx>, queries: &[Query]) -> QaResponse {
             let (resp, child_end) = h.join().expect("root QA thread");
             end_vt = end_vt.max(child_end);
             all.results.extend(resp.results);
+            all.degraded.extend(resp.degraded);
         }
         set_virtual_now(end_vt);
     });
     all.results.sort_by_key(|&(qi, _)| qi);
+    all.degraded.sort_by_key(|&(qi, _)| qi);
     all
 }
 

@@ -131,6 +131,10 @@ pub struct QaRequest {
     pub q_total: usize,
     /// global index of `queries[0]`
     pub q_offset: usize,
+    /// absolute deadline on the `storage::virtual_now` clock, carried in
+    /// every hop's payload and debited at each invocation;
+    /// `f64::INFINITY` (the wire encoding of "none") never expires
+    pub deadline: f64,
     pub queries: Vec<Query>,
 }
 
@@ -141,6 +145,7 @@ impl QaRequest {
         w.usize(self.level);
         w.usize(self.q_total);
         w.usize(self.q_offset);
+        w.u64(self.deadline.to_bits());
         w.usize(self.queries.len());
         for q in &self.queries {
             write_query(&mut w, q);
@@ -154,23 +159,31 @@ impl QaRequest {
         let level = r.usize()?;
         let q_total = r.usize()?;
         let q_offset = r.usize()?;
+        let deadline = f64::from_bits(r.u64()?);
         let n = r.usize()?;
         let mut queries = Vec::with_capacity(n);
         for _ in 0..n {
             queries.push(read_query(&mut r)?);
         }
-        Ok(Self { id, level, q_total, q_offset, queries })
+        Ok(Self { id, level, q_total, q_offset, deadline, queries })
     }
 }
 
 /// Per-query result list: global vector ids + distances, ascending.
 pub type QueryResult = Vec<(u64, f32)>;
 
-/// Response from a QA: results for every query in its subtree.
+/// Response from a QA: results for every query in its subtree. When
+/// part of the subtree's budget was exhausted, `degraded` tags the
+/// affected queries with the fraction of their candidate work that
+/// actually completed (coverage < 1.0); their `results` entries are the
+/// best-effort merge of the surviving shards/partitions.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct QaResponse {
     /// (global query index, top-k results)
     pub results: Vec<(usize, QueryResult)>,
+    /// (global query index, coverage fraction in `[0, 1)`) for queries
+    /// whose answer is a partial merge; empty on a fully-covered batch
+    pub degraded: Vec<(usize, f32)>,
 }
 
 impl QaResponse {
@@ -184,6 +197,11 @@ impl QaResponse {
                 w.u64(id);
                 w.f32(dist);
             }
+        }
+        w.usize(self.degraded.len());
+        for &(qi, cov) in &self.degraded {
+            w.usize(qi);
+            w.f32(cov);
         }
         w.into_bytes()
     }
@@ -201,7 +219,12 @@ impl QaResponse {
             }
             results.push((qi, res));
         }
-        Ok(Self { results })
+        let d = r.usize()?;
+        let mut degraded = Vec::with_capacity(d);
+        for _ in 0..d {
+            degraded.push((r.usize()?, r.f32()?));
+        }
+        Ok(Self { results, degraded })
     }
 }
 
@@ -225,6 +248,9 @@ pub struct QpItem {
 #[derive(Clone, Debug, PartialEq)]
 pub struct QpRequest {
     pub partition: usize,
+    /// absolute virtual-time deadline forwarded from the QA
+    /// (`f64::INFINITY` = none)
+    pub deadline: f64,
     pub items: Vec<QpItem>,
 }
 
@@ -232,6 +258,7 @@ impl QpRequest {
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut w = Writer::new();
         w.usize(self.partition);
+        w.u64(self.deadline.to_bits());
         w.usize(self.items.len());
         for it in &self.items {
             w.usize(it.query_idx);
@@ -245,6 +272,7 @@ impl QpRequest {
     pub fn from_bytes(bytes: &[u8]) -> Result<Self, SerError> {
         let mut r = Reader::new(bytes);
         let partition = r.usize()?;
+        let deadline = f64::from_bits(r.u64()?);
         let n = r.usize()?;
         let mut items = Vec::with_capacity(n);
         for _ in 0..n {
@@ -255,7 +283,7 @@ impl QpRequest {
                 k: r.usize()?,
             });
         }
-        Ok(Self { partition, items })
+        Ok(Self { partition, deadline, items })
     }
 }
 
@@ -267,7 +295,7 @@ pub struct QpResponse {
 
 impl QpResponse {
     pub fn to_bytes(&self) -> Vec<u8> {
-        QaResponse { results: self.results.clone() }.to_bytes()
+        QaResponse { results: self.results.clone(), degraded: vec![] }.to_bytes()
     }
 
     pub fn from_bytes(bytes: &[u8]) -> Result<Self, SerError> {
@@ -304,6 +332,9 @@ pub struct QpShardRequest {
     /// shard index in `0..n_shards`
     pub shard: usize,
     pub n_shards: usize,
+    /// absolute virtual-time deadline forwarded from the QA
+    /// (`f64::INFINITY` = none)
+    pub deadline: f64,
     pub items: Vec<QpShardItem>,
 }
 
@@ -313,6 +344,7 @@ impl QpShardRequest {
         w.usize(self.partition);
         w.usize(self.shard);
         w.usize(self.n_shards);
+        w.u64(self.deadline.to_bits());
         w.usize(self.items.len());
         for it in &self.items {
             w.usize(it.query_idx);
@@ -329,6 +361,7 @@ impl QpShardRequest {
         let partition = r.usize()?;
         let shard = r.usize()?;
         let n_shards = r.usize()?;
+        let deadline = f64::from_bits(r.u64()?);
         let n = r.usize()?;
         let mut items = Vec::with_capacity(n);
         for _ in 0..n {
@@ -340,7 +373,7 @@ impl QpShardRequest {
                 keep: r.usize()?,
             });
         }
-        Ok(Self { partition, shard, n_shards, items })
+        Ok(Self { partition, shard, n_shards, deadline, items })
     }
 }
 
@@ -424,6 +457,7 @@ mod tests {
             level: 2,
             q_total: 1000,
             q_offset: 60,
+            deadline: 12.75,
             queries: vec![Query {
                 vector: vec![0.5; 4],
                 predicate: Predicate::match_all(2),
@@ -435,14 +469,21 @@ mod tests {
         assert_eq!(back.level, 2);
         assert_eq!(back.q_total, 1000);
         assert_eq!(back.q_offset, 60);
+        assert_eq!(back.deadline, 12.75);
         assert_eq!(back.queries.len(), 1);
+        // "no deadline" crosses the wire intact
+        let req = QaRequest { deadline: f64::INFINITY, ..req };
+        assert!(QaRequest::from_bytes(&req.to_bytes()).unwrap().deadline.is_infinite());
     }
 
     #[test]
     fn qa_response_roundtrip() {
         let resp = QaResponse {
             results: vec![(3, vec![(7, 0.5), (9, 1.5)]), (4, vec![])],
+            degraded: vec![],
         };
+        assert_eq!(QaResponse::from_bytes(&resp.to_bytes()).unwrap(), resp);
+        let resp = QaResponse { degraded: vec![(3, 0.5), (4, 0.0)], ..resp };
         assert_eq!(QaResponse::from_bytes(&resp.to_bytes()).unwrap(), resp);
     }
 
@@ -450,6 +491,7 @@ mod tests {
     fn qp_roundtrip() {
         let req = QpRequest {
             partition: 3,
+            deadline: f64::INFINITY,
             items: vec![QpItem {
                 query_idx: 11,
                 vector: vec![1.0, 2.0],
@@ -468,6 +510,7 @@ mod tests {
             partition: 2,
             shard: 1,
             n_shards: 3,
+            deadline: 0.125,
             items: vec![
                 QpShardItem {
                     query_idx: 4,
@@ -504,7 +547,7 @@ mod tests {
     fn empty_payloads() {
         let resp = QaResponse::default();
         assert_eq!(QaResponse::from_bytes(&resp.to_bytes()).unwrap(), resp);
-        let qp = QpRequest { partition: 0, items: vec![] };
+        let qp = QpRequest { partition: 0, deadline: f64::INFINITY, items: vec![] };
         assert_eq!(QpRequest::from_bytes(&qp.to_bytes()).unwrap(), qp);
     }
 }

@@ -51,6 +51,8 @@ use crate::coordinator::payload::{
 use crate::coordinator::{qp, HedgePolicy, SystemCtx};
 use crate::cost::Role;
 use crate::data::workload::Query;
+use crate::faas::resilience::Deadline;
+use crate::faas::FaasError;
 use crate::partition::selection::{rebalance_batch, select_partitions};
 use crate::partition::PartitionLayout;
 use crate::storage::{index_files, set_virtual_now, take_modeled_extra, virtual_now};
@@ -58,18 +60,25 @@ use crate::util::bitmap::Bitmap;
 use crate::util::stats::percentile_sorted;
 
 /// Invoke one QA function synchronously (used by the CO and by parent
-/// QAs for their children).
-pub fn invoke_qa(ctx: &Arc<SystemCtx>, req: QaRequest) -> QaResponse {
+/// QAs for their children). The request's deadline bounds every attempt
+/// of the platform's retry loop; `Err` means the whole subtree's answer
+/// was lost (retry budget, deadline, or an open breaker) and the caller
+/// degrades the subtree's queries to zero coverage.
+pub fn invoke_qa(ctx: &Arc<SystemCtx>, req: QaRequest) -> Result<QaResponse, FaasError> {
     let ctx2 = ctx.clone();
+    let deadline = Deadline::at(req.deadline);
     let bytes = req.to_bytes();
-    let out = ctx
-        .platform
-        .invoke_retrying("squash-qa", Role::QueryAllocator, &bytes, move |ictx, payload| {
+    let out = ctx.platform.invoke_with_policy(
+        "squash-qa",
+        Role::QueryAllocator,
+        &bytes,
+        deadline,
+        move |ictx, payload| {
             let req = QaRequest::from_bytes(payload).expect("qa request decode");
             qa_handler(&ctx2, ictx, req).to_bytes()
-        })
-        .expect("qa invocation");
-    QaResponse::from_bytes(&out.response).expect("qa response decode")
+        },
+    )?;
+    Ok(QaResponse::from_bytes(&out.response).expect("qa response decode"))
 }
 
 /// The QA function body.
@@ -95,6 +104,7 @@ pub fn qa_handler(
                 level: clevel,
                 q_total: req.q_total,
                 q_offset: qs,
+                deadline: req.deadline,
                 queries: req.queries[qs - req.q_offset..qe - req.q_offset].to_vec(),
             };
             let ctx = ctx.clone();
@@ -102,7 +112,13 @@ pub fn qa_handler(
             child_handles.push(scope.spawn(move || {
                 // children open at the parent's instant on the timeline
                 set_virtual_now(vt);
-                let resp = invoke_qa(&ctx, child_req);
+                let (qs, qe) = (child_req.q_offset, child_req.q_offset + child_req.queries.len());
+                // a lost child subtree degrades every query in its range
+                // to zero coverage instead of aborting the batch
+                let resp = invoke_qa(&ctx, child_req).unwrap_or_else(|_| QaResponse {
+                    results: Vec::new(),
+                    degraded: (qs..qe).map(|qi| (qi, 0.0)).collect(),
+                });
                 (resp, virtual_now())
             }));
         }
@@ -115,8 +131,10 @@ pub fn qa_handler(
             let own: Vec<(usize, &Query)> = (own_start..own_end)
                 .map(|qi| (qi, &req.queries[qi - req.q_offset]))
                 .collect();
-            let own_results = process_own_queries(ctx, &attrs, &layout, &own);
+            let (own_results, own_degraded) =
+                process_own_queries(ctx, &attrs, &layout, &own, req.deadline);
             response.results.extend(own_results);
+            response.degraded.extend(own_degraded);
         }
 
         // ---- 5. gather child subtree results: an event-driven join —
@@ -127,6 +145,7 @@ pub fn qa_handler(
             let (child, child_end) = h.join().expect("child QA thread");
             end_vt = end_vt.max(child_end);
             response.results.extend(child.results);
+            response.degraded.extend(child.degraded);
         }
         set_virtual_now(end_vt);
     });
@@ -169,20 +188,25 @@ struct PreparedBatch {
 }
 
 /// Steps 2–4 for the QA's own queries, with task interleaving across
-/// sub-batches.
+/// sub-batches. Returns the merged results plus the degraded tags —
+/// `(query, coverage)` for every query whose candidate rows were not
+/// fully scanned before its budget ran out.
 fn process_own_queries(
     ctx: &Arc<SystemCtx>,
     attrs: &AttributeIndex,
     layout: &PartitionLayout,
     own: &[(usize, &Query)],
-) -> Vec<(usize, QueryResult)> {
+    deadline: f64,
+) -> (Vec<(usize, QueryResult)>, Vec<(usize, f32)>) {
     let n_batches = if ctx.cfg.interleave { ctx.cfg.qa_batches.max(1) } else { 1 };
     let per = own.len().div_ceil(n_batches);
     let batches: Vec<&[(usize, &Query)]> = own.chunks(per.max(1)).collect();
 
     let mut results: Vec<(usize, QueryResult)> = Vec::with_capacity(own.len());
+    let mut degraded: Vec<(usize, f32)> = Vec::new();
     // prepare, then loop { invoke, prepare next, reduce } (§3.4)
-    let mut prepared: Option<PreparedBatch> = batches.first().map(|b| prepare_batch(ctx, attrs, layout, b));
+    let mut prepared: Option<PreparedBatch> =
+        batches.first().map(|b| prepare_batch(ctx, attrs, layout, b, deadline));
     let mut next_idx = 1;
     while let Some(batch) = prepared.take() {
         // fire QPs for this batch on background threads, each opening at
@@ -203,7 +227,7 @@ fn process_own_queries(
                 .collect();
             // overlap: prepare the next sub-batch while QPs run
             if next_idx < batches.len() {
-                prepared = Some(prepare_batch(ctx, attrs, layout, batches[next_idx]));
+                prepared = Some(prepare_batch(ctx, attrs, layout, batches[next_idx], deadline));
                 next_idx += 1;
             }
             let mut end = vt;
@@ -218,9 +242,11 @@ fn process_own_queries(
         // event-driven join over the batch's modeled completion times
         set_virtual_now(end_vt);
         // reduce: merge per-partition lists per query
-        results.extend(reduce_batch(&batch, partials));
+        let (merged, deg) = reduce_batch(&batch, partials);
+        results.extend(merged);
+        degraded.extend(deg);
     }
-    results
+    (results, degraded)
 }
 
 /// Attribute filtering + Algorithm 1 for one sub-batch; builds the
@@ -230,6 +256,7 @@ fn prepare_batch(
     attrs: &AttributeIndex,
     layout: &PartitionLayout,
     batch: &[(usize, &Query)],
+    deadline: f64,
 ) -> PreparedBatch {
     let vectors: Vec<Vec<f32>> = batch.iter().map(|(_, q)| q.vector.clone()).collect();
     let masks: Vec<Bitmap> =
@@ -255,7 +282,7 @@ fn prepare_batch(
                 k: batch[v.query].1.k,
             })
             .collect();
-        qp_requests.push(QpRequest { partition: p, items });
+        qp_requests.push(QpRequest { partition: p, deadline, items });
     }
     PreparedBatch {
         qp_requests,
@@ -263,12 +290,25 @@ fn prepare_batch(
     }
 }
 
+/// Per-item scan coverage of one partition dispatch:
+/// `(query index, candidate rows actually scanned, total candidate rows)`.
+type DispatchCoverage = Vec<(usize, usize, usize)>;
+
 /// Route one partition request: scatter across QP shard functions when
 /// the candidate row count clears the threshold and sharding is on,
 /// else the classic single-QP invocation. `Auto` sharding is
 /// ledger-driven: the partition's learned rows/s (EWMA over recent
 /// runtime samples) sizes S for the target per-shard latency.
-fn dispatch_qp(ctx: &Arc<SystemCtx>, layout: &PartitionLayout, req: QpRequest) -> QpResponse {
+///
+/// Alongside the response, reports per-query coverage: on the healthy
+/// path every item's candidate rows are fully scanned; a lost
+/// invocation (retry budget / deadline / breaker) zeroes the affected
+/// items' scanned counts instead of propagating the failure.
+fn dispatch_qp(
+    ctx: &Arc<SystemCtx>,
+    layout: &PartitionLayout,
+    req: QpRequest,
+) -> (QpResponse, DispatchCoverage) {
     let total_rows: usize = req.items.iter().map(|it| it.local_rows.len()).sum();
     // Auto sizes shards by *per-query* rows — the unit the throughput
     // book learns (`record_fused`). Sizing by the fused sum would count
@@ -283,7 +323,7 @@ fn dispatch_qp(ctx: &Arc<SystemCtx>, layout: &PartitionLayout, req: QpRequest) -
         ctx.cfg.qp_target_shard_latency_s,
     );
     if shards <= 1 || total_rows <= ctx.cfg.qp_shard_min_rows {
-        return qp::invoke_qp(ctx, req);
+        return invoke_qp_or_degrade(ctx, req);
     }
     // Payload-cap guard: grow S until every shard request AND its
     // worst-case response fit under the synchronous-invocation cap (any
@@ -292,7 +332,21 @@ fn dispatch_qp(ctx: &Arc<SystemCtx>, layout: &PartitionLayout, req: QpRequest) -
     // `invoke_qp`'s item-wave split.
     match cap_bounded_shards(ctx.platform.config.max_payload_bytes, ctx.d, &req.items, shards) {
         Some(shards) => scatter_qp(ctx, layout, req, shards),
-        None => qp::invoke_qp(ctx, req),
+        None => invoke_qp_or_degrade(ctx, req),
+    }
+}
+
+/// Single-QP invocation with graceful degradation: a partition whose
+/// invocation is lost after retries contributes nothing — its items'
+/// coverage drops to zero and the batch continues without it.
+fn invoke_qp_or_degrade(ctx: &Arc<SystemCtx>, req: QpRequest) -> (QpResponse, DispatchCoverage) {
+    let totals: Vec<(usize, usize)> =
+        req.items.iter().map(|it| (it.query_idx, it.local_rows.len())).collect();
+    match qp::invoke_qp(ctx, req) {
+        Ok(resp) => (resp, totals.into_iter().map(|(qi, n)| (qi, n, n)).collect()),
+        Err(_) => {
+            (QpResponse::default(), totals.into_iter().map(|(qi, n)| (qi, 0, n)).collect())
+        }
     }
 }
 
@@ -306,9 +360,10 @@ fn dispatch_qp(ctx: &Arc<SystemCtx>, layout: &PartitionLayout, req: QpRequest) -
 /// the conservative shard-local cut (12 bytes each: row + hamming + lb).
 fn cap_bounded_shards(cap: usize, d: usize, items: &[QpItem], requested: usize) -> Option<usize> {
     let total_rows: usize = items.iter().map(|it| it.local_rows.len()).sum();
-    // request: 32-byte header; per item 33 + 4·|vector| framing + rows
+    // request: 40-byte header (incl. the deadline bits); per item
+    // 33 + 4·|vector| framing + rows
     let req_fixed: usize =
-        32 + items.iter().map(|it| 33 + 4 * it.vector.len() + 4).sum::<usize>();
+        40 + items.iter().map(|it| 33 + 4 * it.vector.len() + 4).sum::<usize>();
     // response: 8-byte header; per item the histogram (d + 2 u32s) and
     // three length-prefixed per-survivor slices
     let resp_fixed: usize = 8 + items.len() * (32 + 4 * (d + 2) + 12);
@@ -326,12 +381,17 @@ fn cap_bounded_shards(cap: usize, d: usize, items: &[QpItem], requested: usize) 
 /// per-shard Hamming histograms *before* applying the request-global
 /// H_perc cutoff, then run the exact single-QP shortlist + refinement
 /// code over the merged survivors — bit-identical results, elastic CPU.
+///
+/// Shards whose budget ran out deliver nothing: the merge runs over the
+/// *surviving* shards' histograms (the contiguous row chunking keeps
+/// concatenated survivors row-ordered even with gaps), and the affected
+/// items' coverage drops by the lost shards' row share.
 fn scatter_qp(
     ctx: &Arc<SystemCtx>,
     layout: &PartitionLayout,
     req: QpRequest,
     shards: usize,
-) -> QpResponse {
+) -> (QpResponse, DispatchCoverage) {
     // the scan decision (prune? keep how many?) comes from the FULL
     // candidate set — a shard must never re-derive it from its sub-range
     let plans: Vec<(bool, usize)> = req
@@ -349,6 +409,7 @@ fn scatter_qp(
             partition: req.partition,
             shard,
             n_shards: shards,
+            deadline: req.deadline,
             items: req
                 .items
                 .iter()
@@ -375,7 +436,7 @@ fn scatter_qp(
     // returns its response plus its modeled completion time (all shards
     // launch at this scatter's virtual instant)
     let vt0 = virtual_now();
-    let outcomes: Vec<(QpShardResponse, f64)> = std::thread::scope(|scope| {
+    let outcomes: Vec<(Option<QpShardResponse>, f64)> = std::thread::scope(|scope| {
         let handles: Vec<_> = shard_reqs
             .iter()
             .map(|sr| {
@@ -389,8 +450,13 @@ fn scatter_qp(
         handles.into_iter().map(|h| h.join().expect("qp shard thread")).collect()
     });
     // feed the Auto-sharding throughput estimator per shard invocation,
-    // normalized per co-resident query (fusion must not inflate the rate)
-    for (sr, (_, modeled_s)) in shard_reqs.iter().zip(&outcomes) {
+    // normalized per co-resident query (fusion must not inflate the
+    // rate); a lost shard never delivered a scan, so it contributes no
+    // throughput sample — only its time burn
+    for (sr, (resp, modeled_s)) in shard_reqs.iter().zip(&outcomes) {
+        if resp.is_none() {
+            continue;
+        }
         let rows: usize = sr.items.iter().map(|it| it.rows.len()).sum();
         ctx.ledger.throughput.record_fused(req.partition, rows, sr.items.len(), *modeled_s);
     }
@@ -399,12 +465,24 @@ fn scatter_qp(
     // completion, so the merge + refinement I/O below lands after it
     set_virtual_now(vt0 + makespan);
 
-    // merge: request-global histogram cutoff per item, then the SAME
-    // shortlist + refinement path as the single-QP handler
+    // merge: request-global histogram cutoff per item over the shards
+    // that delivered, then the SAME shortlist + refinement path as the
+    // single-QP handler. Coverage per item = delivered row share.
     let globals = &layout.globals[req.partition];
     let mut shortlists: Vec<(usize, QueryResult)> = Vec::with_capacity(req.items.len());
+    let mut coverage: DispatchCoverage = Vec::with_capacity(req.items.len());
     for (i, (item, &(pruned, keep))) in req.items.iter().zip(&plans).enumerate() {
-        let parts: Vec<&QpShardItemOut> = responses.iter().map(|r| &r.items[i]).collect();
+        let parts: Vec<&QpShardItemOut> = responses
+            .iter()
+            .filter_map(|r| r.as_ref().map(|resp| &resp.items[i]))
+            .collect();
+        let covered: usize = shard_reqs
+            .iter()
+            .zip(&responses)
+            .filter(|&(_, r)| r.is_some())
+            .map(|(sr, _)| sr.items[i].rows.len())
+            .sum();
+        coverage.push((item.query_idx, covered, item.local_rows.len()));
         let (survivors, lb) = merge_shard_scans(&parts, keep, pruned);
         shortlists.push((i, qp::lb_shortlist(&ctx.cfg, item, globals, &survivors, &lb)));
     }
@@ -417,26 +495,28 @@ fn scatter_qp(
     if extra > 0.0 {
         ctx.ledger.record_runtime(Role::QueryAllocator, ctx.platform.config.memory_qa_mb, extra);
     }
-    QpResponse { results }
+    (QpResponse { results }, coverage)
 }
 
 /// The virtual-completion-time hedge join (see the `coordinator` module
 /// docs). All shards launched at virtual t = 0 and completed at their
 /// modeled times; when the last outstanding shard exceeds the hedge
-/// quantile of its siblings' completion times, a duplicate invocation is
-/// launched at that quantile instant (against the shard's `…-hedge`
-/// pool — the primary's container is still busy on the virtual clock)
-/// and the shard's effective completion becomes min(primary, hedge).
-/// Responses are idempotent, so the join never changes results — only
-/// the modeled makespan and the ledger's hedge counters. Every scatter
-/// records its `(unhedged, hedged)` makespan pair; with hedging off the
-/// two are equal. Returns the responses plus the hedged makespan so the
-/// caller can advance its virtual clock to the scatter's completion.
+/// quantile of its siblings' completion times — or died without
+/// delivering — a duplicate invocation is launched at that quantile
+/// instant (against the shard's `…-hedge` pool — the primary's
+/// container is still busy on the virtual clock) and the shard's
+/// effective completion becomes the winner's. Responses are idempotent,
+/// so the join never changes results — only the modeled makespan, the
+/// ledger's hedge counters, and (when the hedge recovers a dead
+/// primary) the shard's coverage. Every scatter records its
+/// `(unhedged, hedged)` makespan pair; with hedging off the two are
+/// equal. Returns the responses plus the hedged makespan so the caller
+/// can advance its virtual clock to the scatter's completion.
 fn hedged_join(
     ctx: &Arc<SystemCtx>,
     shard_reqs: &[QpShardRequest],
-    outcomes: Vec<(QpShardResponse, f64)>,
-) -> (Vec<QpShardResponse>, f64) {
+    outcomes: Vec<(Option<QpShardResponse>, f64)>,
+) -> (Vec<Option<QpShardResponse>>, f64) {
     let times: Vec<f64> = outcomes.iter().map(|&(_, t)| t).collect();
     // the last outstanding shard: max modeled completion time, ties
     // broken toward the lowest shard index for determinism
@@ -448,7 +528,8 @@ fn hedged_join(
         .expect("scatter with no shards");
     let unhedged = times[straggler];
     let mut hedged = unhedged;
-    let mut responses: Vec<QpShardResponse> = outcomes.into_iter().map(|(r, _)| r).collect();
+    let mut responses: Vec<Option<QpShardResponse>> =
+        outcomes.into_iter().map(|(r, _)| r).collect();
     if let HedgePolicy::Quantile(q) = ctx.cfg.hedge {
         if times.len() >= 2 {
             let mut others: Vec<f64> = times
@@ -459,25 +540,24 @@ fn hedged_join(
                 .collect();
             others.sort_by(|a, b| a.total_cmp(b));
             let t_fire = percentile_sorted(&others, q * 100.0);
-            if unhedged > t_fire {
+            let primary_ok = responses[straggler].is_some();
+            if unhedged > t_fire || !primary_ok {
                 let (hedge_resp, d_h) =
                     qp::invoke_qp_shard(ctx, &shard_reqs[straggler], true);
-                debug_assert_eq!(
-                    hedge_resp, responses[straggler],
-                    "hedge duplicate diverged from the primary shard response"
-                );
-                let hedge_done = t_fire + d_h;
-                // cancel-on-first-response: the QA proceeds at the winner's
-                // completion, but Lambda cannot cancel either copy — the
-                // duplicate's full duration is billed whether it wins or
-                // not, and that duration IS the cost hedging added (the
-                // primary would have run and billed regardless)
-                if hedge_done < unhedged {
+                if let (Some(h), Some(p)) = (&hedge_resp, &responses[straggler]) {
+                    debug_assert_eq!(
+                        h, p,
+                        "hedge duplicate diverged from the primary shard response"
+                    );
+                }
+                let second = others.last().copied().unwrap_or(0.0);
+                let (makespan, wasted_s, use_hedge) =
+                    hedge_accounting(unhedged, primary_ok, t_fire, d_h, hedge_resp.is_some(), second);
+                if use_hedge {
                     responses[straggler] = hedge_resp;
                 }
-                ctx.ledger.record_hedge(d_h);
-                let second = others.last().copied().unwrap_or(0.0);
-                hedged = second.max(unhedged.min(hedge_done));
+                ctx.ledger.record_hedge(wasted_s);
+                hedged = makespan;
             }
         }
     }
@@ -485,13 +565,67 @@ fn hedged_join(
     (responses, hedged)
 }
 
-/// Merge-sort reduce of per-partition results (§2.4.5).
-fn reduce_batch(batch: &PreparedBatch, partials: Vec<QpResponse>) -> Vec<(usize, QueryResult)> {
+/// Bookkeeping for one fired hedge: given the primary's completion (or
+/// death) time, the hedge fire instant and duration, whether each copy
+/// delivered, and the second-latest sibling completion, return
+/// `(hedged makespan, hedge_wasted_s contribution, use hedge response)`.
+///
+/// The invariant this helper pins (and the old inline code violated
+/// when a timeout and a hedge raced on the same shard): of the racing
+/// pair, exactly ONE copy's completion is counted toward the makespan
+/// and exactly ONE copy's burn toward `hedge_wasted_s` — never the same
+/// copy for both, never both copies for either.
+fn hedge_accounting(
+    primary_t: f64,
+    primary_ok: bool,
+    t_fire: f64,
+    d_h: f64,
+    hedge_ok: bool,
+    second: f64,
+) -> (f64, f64, bool) {
+    let hedge_done = t_fire + d_h;
+    match (primary_ok, hedge_ok) {
+        // both delivered — cancel-on-first-response: the winner counts
+        // toward the makespan. Lambda cannot cancel either copy, so the
+        // duplicate's full duration is billed whether it wins or not,
+        // and that duration IS the cost hedging added (the primary
+        // would have run and billed regardless).
+        (true, true) => (second.max(primary_t.min(hedge_done)), d_h, hedge_done < primary_t),
+        // hedge died, primary delivered: the primary's completion is
+        // the makespan contribution, the dead hedge pure waste
+        (true, false) => (second.max(primary_t), d_h, false),
+        // the timeout/hedge race: the primary died (timeout, crash,
+        // budget) and the hedge recovered the shard. The hedge's
+        // completion — not min(primary, hedge) — is what the join
+        // waited for, and the dead primary's burn is the wasted work;
+        // the hedge is the answer, so its duration is NOT waste.
+        (false, true) => (second.max(hedge_done), primary_t, true),
+        // both died: the shard is lost; the join waited out the later
+        // death, and the duplicate's burn is the waste hedging added
+        (false, false) => (second.max(primary_t.max(hedge_done)), d_h, false),
+    }
+}
+
+/// Merge-sort reduce of per-partition results (§2.4.5), plus coverage
+/// aggregation: a query's coverage is the fraction of its candidate
+/// rows (across every partition it visited) that were actually scanned.
+/// Queries below full coverage are tagged degraded with that fraction;
+/// a query with no candidates anywhere is trivially fully covered.
+fn reduce_batch(
+    batch: &PreparedBatch,
+    partials: Vec<(QpResponse, DispatchCoverage)>,
+) -> (Vec<(usize, QueryResult)>, Vec<(usize, f32)>) {
     let mut per_query: std::collections::HashMap<usize, Vec<QueryResult>> =
         batch.query_ids.iter().map(|&(qi, _)| (qi, Vec::new())).collect();
-    for resp in partials {
+    let mut cov: std::collections::HashMap<usize, (usize, usize)> = std::collections::HashMap::new();
+    for (resp, coverage) in partials {
         for (qi, res) in resp.results {
             per_query.entry(qi).or_default().push(res);
+        }
+        for (qi, covered, total) in coverage {
+            let e = cov.entry(qi).or_insert((0, 0));
+            e.0 += covered;
+            e.1 += total;
         }
     }
     let k_of: std::collections::HashMap<usize, usize> = batch.query_ids.iter().copied().collect();
@@ -503,7 +637,13 @@ fn reduce_batch(batch: &PreparedBatch, partials: Vec<QpResponse>) -> Vec<(usize,
         })
         .collect();
     out.sort_by_key(|&(qi, _)| qi);
-    out
+    let mut degraded: Vec<(usize, f32)> = cov
+        .into_iter()
+        .filter(|&(_, (covered, total))| covered < total)
+        .map(|(qi, (covered, total))| (qi, covered as f32 / total as f32))
+        .collect();
+    degraded.sort_by_key(|&(qi, _)| qi);
+    (out, degraded)
 }
 
 #[cfg(test)]
@@ -529,8 +669,35 @@ mod tests {
         assert!(s > 2, "8 KB cap must force more than 2 shards, got {s}");
         // with that S, the modeled per-shard payloads really fit
         let rows_per_shard = 4096usize.div_ceil(s);
-        assert!(32 + 33 + 4 * 16 + 4 * rows_per_shard <= 8 * 1024, "request over cap");
+        assert!(40 + 33 + 4 * 16 + 4 * rows_per_shard <= 8 * 1024, "request over cap");
         assert!(8 + 32 + 4 * 18 + 12 * rows_per_shard <= 8 * 1024, "response over cap");
+    }
+
+    #[test]
+    fn hedge_accounting_counts_exactly_one_copy_per_quantity() {
+        // both delivered, primary wins: legacy bookkeeping exactly
+        let (mk, waste, use_hedge) = hedge_accounting(2.0, true, 1.0, 1.5, true, 1.2);
+        assert_eq!((mk, waste, use_hedge), (2.0, 1.5, false));
+        // both delivered, hedge wins: makespan is the hedge's completion
+        let (mk, waste, use_hedge) = hedge_accounting(5.0, true, 1.0, 1.5, true, 1.2);
+        assert_eq!((mk, waste, use_hedge), (2.5, 1.5, true));
+        // the pinned race: the primary timed out at t=4 and the hedge
+        // delivered at 1.0+1.5=2.5 — the makespan counts the hedge (the
+        // copy the join actually waited for), the waste counts the dead
+        // primary's burn, and NEVER min(4, 2.5) with waste 1.5 (that
+        // would credit the dead copy's time to the makespan AND bill
+        // the delivering copy as waste — both halves wrong)
+        let (mk, waste, use_hedge) = hedge_accounting(4.0, false, 1.0, 1.5, true, 1.2);
+        assert_eq!((mk, waste, use_hedge), (2.5, 4.0, true));
+        // a sibling finishing after the hedge still bounds the makespan
+        let (mk, _, _) = hedge_accounting(4.0, false, 1.0, 1.5, true, 3.0);
+        assert_eq!(mk, 3.0);
+        // hedge died, primary delivered: primary bounds the makespan
+        let (mk, waste, use_hedge) = hedge_accounting(4.0, true, 1.0, 1.5, false, 1.2);
+        assert_eq!((mk, waste, use_hedge), (4.0, 1.5, false));
+        // both died: the join waited out the later death
+        let (mk, waste, use_hedge) = hedge_accounting(4.0, false, 1.0, 6.0, false, 1.2);
+        assert_eq!((mk, waste, use_hedge), (7.0, 6.0, false));
     }
 
     #[test]

@@ -44,6 +44,8 @@ use crate::coordinator::payload::{
 };
 use crate::coordinator::{PartitionFile, SquashConfig, SystemCtx};
 use crate::cost::Role;
+use crate::faas::resilience::Deadline;
+use crate::faas::FaasError;
 use crate::osq::distance::top_k_smallest;
 use crate::runtime::backend::{ScanItem, ScanRequest, ScanScratch};
 use crate::storage::index_files;
@@ -106,8 +108,9 @@ pub(crate) fn finalize_results(
 }
 
 /// Encoded size of a `QpRequest` header / item (see
-/// `QpRequest::to_bytes`: u64 length prefixes + 4-byte elements).
-const QP_REQ_HEADER_BYTES: usize = 16;
+/// `QpRequest::to_bytes`: u64 length prefixes + 4-byte elements; the
+/// header is partition + deadline bits + item count).
+const QP_REQ_HEADER_BYTES: usize = 24;
 fn encoded_item_bytes(it: &QpItem) -> usize {
     8 + (8 + 4 * it.vector.len()) + (8 + 4 * it.local_rows.len()) + 8
 }
@@ -119,7 +122,12 @@ fn encoded_item_bytes(it: &QpItem) -> usize {
 /// exact). A *single item* that alone exceeds the cap cannot be
 /// item-split and panics with advice to enable `--qp-shards`, which
 /// slices requests along the row axis instead.
-pub fn invoke_qp(ctx: &Arc<SystemCtx>, req: QpRequest) -> QpResponse {
+///
+/// `Err` means the partition's scan was lost after the platform's retry
+/// policy ran out (budget exhausted, deadline expired, or the pool's
+/// breaker open): the caller degrades the affected queries' coverage
+/// rather than aborting the batch.
+pub fn invoke_qp(ctx: &Arc<SystemCtx>, req: QpRequest) -> Result<QpResponse, FaasError> {
     let cap = ctx.platform.config.max_payload_bytes;
     // size from the model, not a throwaway serialization: an over-cap
     // request would otherwise be encoded (> cap bytes) only to be
@@ -132,6 +140,7 @@ pub fn invoke_qp(ctx: &Arc<SystemCtx>, req: QpRequest) -> QpResponse {
         return invoke_qp_encoded(ctx, &req, bytes);
     }
     let partition = req.partition;
+    let deadline = req.deadline;
     let mut results = Vec::with_capacity(req.items.len());
     let mut wave: Vec<QpItem> = Vec::new();
     let mut wave_bytes = QP_REQ_HEADER_BYTES;
@@ -145,32 +154,39 @@ pub fn invoke_qp(ctx: &Arc<SystemCtx>, req: QpRequest) -> QpResponse {
             item.local_rows.len(),
         );
         if wave_bytes + item_bytes > cap {
-            let wave_req = QpRequest { partition, items: std::mem::take(&mut wave) };
+            let wave_req = QpRequest { partition, deadline, items: std::mem::take(&mut wave) };
             let bytes = wave_req.to_bytes();
-            results.extend(invoke_qp_encoded(ctx, &wave_req, bytes).results);
+            results.extend(invoke_qp_encoded(ctx, &wave_req, bytes)?.results);
             wave_bytes = QP_REQ_HEADER_BYTES;
         }
         wave_bytes += item_bytes;
         wave.push(item);
     }
     if !wave.is_empty() {
-        let wave_req = QpRequest { partition, items: wave };
+        let wave_req = QpRequest { partition, deadline, items: wave };
         let bytes = wave_req.to_bytes();
-        results.extend(invoke_qp_encoded(ctx, &wave_req, bytes).results);
+        results.extend(invoke_qp_encoded(ctx, &wave_req, bytes)?.results);
     }
-    QpResponse { results }
+    Ok(QpResponse { results })
 }
 
-fn invoke_qp_encoded(ctx: &Arc<SystemCtx>, req: &QpRequest, bytes: Vec<u8>) -> QpResponse {
+fn invoke_qp_encoded(
+    ctx: &Arc<SystemCtx>,
+    req: &QpRequest,
+    bytes: Vec<u8>,
+) -> Result<QpResponse, FaasError> {
     let function = format!("squash-processor-{}", req.partition);
     let ctx2 = ctx.clone();
-    let out = ctx
-        .platform
-        .invoke_retrying(&function, Role::QueryProcessor, &bytes, move |ictx, payload| {
+    let out = ctx.platform.invoke_with_policy(
+        &function,
+        Role::QueryProcessor,
+        &bytes,
+        Deadline::at(req.deadline),
+        move |ictx, payload| {
             let req = QpRequest::from_bytes(payload).expect("qp request decode");
             qp_handler(&ctx2, ictx, req).to_bytes()
-        })
-        .expect("qp invocation");
+        },
+    )?;
     // feed the Auto-sharding throughput estimator: this partition just
     // scanned `rows` candidates in `modeled_s` virtual seconds. A fused
     // request carries one item per co-resident query over one shared
@@ -178,7 +194,7 @@ fn invoke_qp_encoded(ctx: &Arc<SystemCtx>, req: &QpRequest, bytes: Vec<u8>) -> Q
     // rate would inflate with the fusion degree and skew Auto sizing.
     let rows: usize = req.items.iter().map(|it| it.local_rows.len()).sum();
     ctx.ledger.throughput.record_fused(req.partition, rows, req.items.len(), out.modeled_s);
-    QpResponse::from_bytes(&out.response).expect("qp response decode")
+    Ok(QpResponse::from_bytes(&out.response).expect("qp response decode"))
 }
 
 /// Invoke one QP *shard* function synchronously (multi-function scatter;
@@ -191,11 +207,16 @@ fn invoke_qp_encoded(ctx: &Arc<SystemCtx>, req: &QpRequest, bytes: Vec<u8>) -> Q
 /// against the shard's separate `…-hedge` function pool — the duplicate
 /// of the hedged join cannot reuse the primary's container, which is
 /// still busy at hedge-launch time on the virtual clock.
+///
+/// `None` means the shard never delivered — its retry budget or
+/// deadline ran out, or its pool's breaker was open. The returned
+/// seconds are the virtual time the loss burned; the QA merges the
+/// surviving shards and degrades the affected queries' coverage.
 pub fn invoke_qp_shard(
     ctx: &Arc<SystemCtx>,
     req: &QpShardRequest,
     hedge: bool,
-) -> (QpShardResponse, f64) {
+) -> (Option<QpShardResponse>, f64) {
     let suffix = if hedge { "-hedge" } else { "" };
     let function = format!(
         "squash-processor-{}-shard-{}of{}{suffix}",
@@ -203,15 +224,24 @@ pub fn invoke_qp_shard(
     );
     let ctx2 = ctx.clone();
     let bytes = req.to_bytes();
-    let out = ctx
-        .platform
-        .invoke_retrying(&function, Role::QpShard, &bytes, move |ictx, payload| {
+    let out = ctx.platform.invoke_with_policy(
+        &function,
+        Role::QpShard,
+        &bytes,
+        Deadline::at(req.deadline),
+        move |ictx, payload| {
             let req = QpShardRequest::from_bytes(payload).expect("qp shard request decode");
             qp_shard_handler(&ctx2, ictx, req).to_bytes()
-        })
-        .expect("qp shard invocation");
-    let resp = QpShardResponse::from_bytes(&out.response).expect("qp shard response decode");
-    (resp, out.modeled_s)
+        },
+    );
+    match out {
+        Ok(out) => {
+            let resp =
+                QpShardResponse::from_bytes(&out.response).expect("qp shard response decode");
+            (Some(resp), out.modeled_s)
+        }
+        Err(e) => (None, e.modeled_s()),
+    }
 }
 
 /// The QP shard function body: the partial-scan pipeline over this

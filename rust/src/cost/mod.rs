@@ -82,6 +82,26 @@ pub struct CostLedger {
     modeled_mbs_co_micro: AtomicU64,
     modeled_mbs_qa_micro: AtomicU64,
     modeled_mbs_qp_micro: AtomicU64,
+    // resilience layer (retry budgets / timeouts / breakers / degradation)
+    /// retry attempts launched after a retryable failure
+    pub retries: AtomicU64,
+    /// attempts recovered by a timeout: hangs, mid-flight budget
+    /// overruns, and queue waits that ate the whole budget
+    pub timeouts: AtomicU64,
+    /// chaos-injected mid-flight sandbox crashes (billed partial work)
+    pub crashes: AtomicU64,
+    /// response frames that failed their FNV checksum in transit
+    pub corruptions: AtomicU64,
+    /// virtual seconds spent in retry backoff, stored as integer micros
+    /// (excluded from service time like queue delay — backoff is a
+    /// recovery tactic, not work)
+    backoff_wait_micros: AtomicU64,
+    /// circuit-breaker Closed/HalfOpen → Open transitions
+    pub breaker_open_events: AtomicU64,
+    /// requests rejected fast by an open breaker (nothing billed)
+    pub breaker_fast_fails: AtomicU64,
+    /// queries answered with partial coverage (degraded results)
+    pub degraded_queries: AtomicU64,
     /// per-scatter `(unhedged, hedged)` modeled makespans — the virtual
     /// completion time of the slowest shard with and without the hedge
     scatter_makespans: Mutex<Vec<(f64, f64)>>,
@@ -195,6 +215,52 @@ impl CostLedger {
         self.failed_invocations.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One retry attempt launched after a retryable failure.
+    pub fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One attempt ended by a timeout (hang recovered, budget overrun,
+    /// or a queue wait that consumed the whole budget).
+    pub fn record_timeout(&self) {
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One chaos-injected mid-flight crash.
+    pub fn record_crash(&self) {
+        self.crashes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One checksum-detected corrupt response frame.
+    pub fn record_corruption(&self) {
+        self.corruptions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `wait_s` virtual seconds spent backing off before a retry.
+    pub fn record_backoff_wait(&self, wait_s: f64) {
+        self.backoff_wait_micros.fetch_add((wait_s * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Total virtual seconds spent in retry backoff.
+    pub fn backoff_wait_s(&self) -> f64 {
+        self.backoff_wait_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// A circuit breaker tripped open.
+    pub fn record_breaker_open(&self) {
+        self.breaker_open_events.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was rejected fast by an open breaker.
+    pub fn record_breaker_fast_fail(&self) {
+        self.breaker_fast_fails.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A query was answered with partial shard coverage.
+    pub fn record_degraded_query(&self) {
+        self.degraded_queries.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// One hedge fired: a duplicate invocation whose full modeled
     /// duration `wasted_s` is billed win or lose (cancel-on-first-response
     /// only ends the *join*; Lambda keeps billing both copies).
@@ -263,6 +329,8 @@ impl CostLedger {
              hedge_wasted_s={:.6}\n\
              cold_starts={}\n\
              queued={} queue_delay_s={:.6}\n\
+             resilience retries={} timeouts={} crashes={} corruptions={} backoff_wait_s={:.6}\n\
+             breaker opens={} fast_fails={} degraded_queries={}\n\
              modeled_mbs co={:.6} qa={:.6} qp={:.6}\n\
              storage s3_gets={} s3_bytes={} efs_reads={} efs_bytes={} payload_bytes={}\n\
              scatters={} makespan_unhedged p50={:.9} p99={:.9}\n\
@@ -277,6 +345,14 @@ impl CostLedger {
             self.cold_starts.load(Ordering::Relaxed),
             self.queued_invocations.load(Ordering::Relaxed),
             self.queue_delay_s(),
+            self.retries.load(Ordering::Relaxed),
+            self.timeouts.load(Ordering::Relaxed),
+            self.crashes.load(Ordering::Relaxed),
+            self.corruptions.load(Ordering::Relaxed),
+            self.backoff_wait_s(),
+            self.breaker_open_events.load(Ordering::Relaxed),
+            self.breaker_fast_fails.load(Ordering::Relaxed),
+            self.degraded_queries.load(Ordering::Relaxed),
             self.modeled_mb_seconds(Role::Coordinator),
             self.modeled_mb_seconds(Role::QueryAllocator),
             self.modeled_mb_seconds(Role::QueryProcessor),
@@ -521,6 +597,27 @@ mod tests {
         assert!(a.contains("queued=1 queue_delay_s=0.250000"));
         assert!(a.contains("qp=500.000000"), "modeled MB-s missing:\n{a}");
         assert!(!a.contains("3.14"), "wall-clock runtime leaked into the chaos digest:\n{a}");
+    }
+
+    #[test]
+    fn resilience_counters_accumulate_and_digest() {
+        let l = CostLedger::new();
+        l.record_retry();
+        l.record_timeout();
+        l.record_crash();
+        l.record_corruption();
+        l.record_backoff_wait(0.125);
+        l.record_backoff_wait(0.125);
+        l.record_breaker_open();
+        l.record_breaker_fast_fail();
+        l.record_degraded_query();
+        assert!((l.backoff_wait_s() - 0.25).abs() < 1e-9);
+        let s = l.chaos_summary();
+        assert!(
+            s.contains("retries=1 timeouts=1 crashes=1 corruptions=1 backoff_wait_s=0.250000"),
+            "resilience counters missing from the digest:\n{s}"
+        );
+        assert!(s.contains("breaker opens=1 fast_fails=1 degraded_queries=1"), "{s}");
     }
 
     #[test]

@@ -66,8 +66,38 @@
 //! deterministic) — virtual concurrency is modeled by `free_at`, not by
 //! physical thread overlap. With `virtual_pools: false` (the default)
 //! acquisition is byte-identical to the pre-fleet simulator.
+//!
+//! # Request-lifecycle resilience ([`resilience`])
+//!
+//! Three further seeded fault classes extend [`ChaosConfig`]: **hangs**
+//! (the invocation never returns — it burns modeled time until the
+//! caller's timeout fires, or a 60 s watchdog when no timeout is set),
+//! **mid-flight crashes** (the handler ran, the partial work is billed,
+//! the response is lost), and **response corruption** (a byte of the
+//! response frame is flipped in transit; every frame carries an FNV-1a
+//! checksum computed sender-side and verified receiver-side, so the
+//! corruption is *detected*, billed, and surfaced as
+//! [`FaasError::CorruptResponse`]). All three draw from the same
+//! SplitMix streams as the tail model, appended after the existing
+//! draws, so zero-probability configs replay byte-identically.
+//!
+//! [`Platform::invoke_with_policy`] is the resilient entry point: it
+//! debits a [`resilience::Deadline`] on the virtual clock to size each
+//! attempt's timeout (`fn_timeout_s.min(deadline.remaining())`),
+//! retries retryable faults under the configured
+//! [`resilience::RetryPolicy`] (bounded attempts, capped exponential
+//! backoff with seeded jitter — the wait advances the virtual clock and
+//! is ledgered as `backoff_wait_s`), and consults one
+//! [`resilience::CircuitBreaker`] per function pool, failing fast with
+//! [`FaasError::CircuitOpen`] while a pool is sick instead of queueing
+//! doomed work behind it. [`Platform::invoke_retrying`] is the same
+//! loop with no deadline; at the default legacy policy (32 immediate
+//! attempts) it reproduces the pre-resilience behavior exactly, except
+//! that budget exhaustion returns a typed
+//! [`FaasError::RetryBudgetExhausted`] instead of panicking.
 
 pub mod dre;
+pub mod resilience;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -75,10 +105,12 @@ use std::sync::{Arc, Mutex};
 
 use crate::cost::{CostLedger, Role};
 use crate::storage::{
-    advance_virtual_now, take_modeled_extra, take_modeled_total, virtual_now, SimParams,
+    advance_virtual_now, modeled_total, take_modeled_extra, take_modeled_total, virtual_now,
+    SimParams,
 };
 use crate::util::rng::{mix64, Rng};
 use dre::DreStore;
+use resilience::{BreakerConfig, CircuitBreaker, Deadline, RetryPolicy};
 
 /// Deterministic tail-latency / fault-injection parameters. Disabled
 /// (`seed: None`) means zero variance — bit-for-bit the pre-chaos
@@ -99,6 +131,17 @@ pub struct ChaosConfig {
     /// probability the invocation fails during init (billed, container
     /// dropped, [`FaasError::InjectedFailure`] returned)
     pub failure_prob: f64,
+    /// probability the invocation hangs after init: it never returns,
+    /// burning modeled time until the caller's timeout (or the 60 s
+    /// watchdog) fires ([`FaasError::Timeout`])
+    pub hang_prob: f64,
+    /// probability the sandbox crashes mid-flight, after the handler
+    /// ran: partial work billed, response lost
+    /// ([`FaasError::MidflightCrash`])
+    pub crash_prob: f64,
+    /// probability a byte of the response frame flips in transit —
+    /// caught by the FNV checksum ([`FaasError::CorruptResponse`])
+    pub corrupt_prob: f64,
 }
 
 impl Default for ChaosConfig {
@@ -110,18 +153,27 @@ impl Default for ChaosConfig {
 impl ChaosConfig {
     /// Zero-variance configuration (the default).
     pub fn off() -> Self {
-        Self { seed: None, tail_sigma: 0.0, spike_prob: 0.0, spike_s: 0.0, failure_prob: 0.0 }
+        Self {
+            seed: None,
+            tail_sigma: 0.0,
+            spike_prob: 0.0,
+            spike_s: 0.0,
+            failure_prob: 0.0,
+            hang_prob: 0.0,
+            crash_prob: 0.0,
+            corrupt_prob: 0.0,
+        }
     }
 
     /// Enabled with the stock tail shape (σ = 0.35, 2% spikes of 250 ms,
-    /// no failures — failures are opt-in via `failure_prob`).
+    /// no failures — every fault class is opt-in via its probability).
     pub fn with_seed(seed: u64) -> Self {
         Self {
             seed: Some(seed),
             tail_sigma: 0.35,
             spike_prob: 0.02,
             spike_s: 0.25,
-            failure_prob: 0.0,
+            ..Self::off()
         }
     }
 
@@ -145,6 +197,15 @@ impl ChaosConfig {
                 if let Some(p) = env_f64("SQUASH_FAILURE_PROB") {
                     c.failure_prob = p;
                 }
+                if let Some(p) = env_f64("SQUASH_HANG_PROB") {
+                    c.hang_prob = p;
+                }
+                if let Some(p) = env_f64("SQUASH_CRASH_PROB") {
+                    c.crash_prob = p;
+                }
+                if let Some(p) = env_f64("SQUASH_CORRUPT_PROB") {
+                    c.corrupt_prob = p;
+                }
                 c
             }
         }
@@ -164,12 +225,28 @@ pub struct InvocationDraw {
     pub spike_s: f64,
     /// invocation fails during init
     pub fail: bool,
+    /// invocation hangs after init (only a timeout recovers it)
+    pub hang: bool,
+    /// sandbox crashes after the handler ran (billed, response lost)
+    pub crash: bool,
+    /// a response byte flips in transit (checksum-detected)
+    pub corrupt: bool,
+    /// which byte flips (drawn only when `corrupt`; 0 otherwise)
+    pub corrupt_byte: u64,
 }
 
 impl InvocationDraw {
     /// The zero-variance draw.
     pub fn nominal() -> Self {
-        Self { overhead_factor: 1.0, spike_s: 0.0, fail: false }
+        Self {
+            overhead_factor: 1.0,
+            spike_s: 0.0,
+            fail: false,
+            hang: false,
+            crash: false,
+            corrupt: false,
+            corrupt_byte: 0,
+        }
     }
 }
 
@@ -184,8 +261,15 @@ pub struct LatencyModel {
 /// FNV-1a over the function name: a stable, dependency-free string hash
 /// for the per-invocation draw key.
 fn fnv1a64(s: &str) -> u64 {
+    fnv1a64_bytes(s.as_bytes())
+}
+
+/// FNV-1a over raw bytes: the response-frame checksum. Computed
+/// sender-side before transfer and verified receiver-side, so a
+/// chaos-flipped byte is always *detected* rather than silently decoded.
+fn fnv1a64_bytes(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for b in s.bytes() {
+    for &b in bytes {
         h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
     }
     h
@@ -213,7 +297,15 @@ impl LatencyModel {
         let overhead_factor = (self.cfg.tail_sigma * z).exp().max(1.0);
         let spike_s = if rng.f64() < self.cfg.spike_prob { self.cfg.spike_s } else { 0.0 };
         let fail = rng.f64() < self.cfg.failure_prob;
-        InvocationDraw { overhead_factor, spike_s, fail }
+        // the resilience fault classes draw *after* the original stream
+        // (and the corrupt-byte draw is conditional), so configs with
+        // these probabilities at zero replay the pre-resilience tails
+        // byte-identically
+        let hang = rng.f64() < self.cfg.hang_prob;
+        let crash = rng.f64() < self.cfg.crash_prob;
+        let corrupt = rng.f64() < self.cfg.corrupt_prob;
+        let corrupt_byte = if corrupt { rng.next_u64() } else { 0 };
+        InvocationDraw { overhead_factor, spike_s, fail, hang, crash, corrupt, corrupt_byte }
     }
 }
 
@@ -245,10 +337,24 @@ pub struct FaasConfig {
     /// cap, arrivals queue on the earliest-freeing container instead of
     /// cold-starting — the saturation knee of the load curves.
     pub max_containers: usize,
+    /// per-attempt invocation timeout in modeled seconds (∞ = none, the
+    /// default — timeouts then fire only from a request [`Deadline`]).
+    /// `Default` honours `SQUASH_FN_TIMEOUT_S` so CI can force it.
+    pub fn_timeout_s: f64,
+    /// retry budget + backoff for [`Platform::invoke_with_policy`]; the
+    /// default [`RetryPolicy::legacy`] reproduces the pre-resilience
+    /// unbounded-feeling loop (32 immediate attempts)
+    pub retry: RetryPolicy,
+    /// per-function-pool circuit breaker (disabled by default)
+    pub breaker: BreakerConfig,
 }
 
 impl Default for FaasConfig {
     fn default() -> Self {
+        let fn_timeout_s = std::env::var("SQUASH_FN_TIMEOUT_S")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .unwrap_or(f64::INFINITY);
         Self {
             memory_co_mb: 512,
             memory_qa_mb: 1770,
@@ -261,6 +367,9 @@ impl Default for FaasConfig {
             chaos: ChaosConfig::from_env(),
             virtual_pools: false,
             max_containers: 0,
+            fn_timeout_s,
+            retry: RetryPolicy::legacy(),
+            breaker: BreakerConfig::off(),
         }
     }
 }
@@ -310,6 +419,54 @@ pub enum FaasError {
     /// invocations) so callers can advance their virtual clock before
     /// retrying.
     InjectedFailure { function: String, modeled_s: f64 },
+    /// The attempt's timeout fired: either the invocation hung, or its
+    /// modeled duration overran the remaining budget. Billed up to the
+    /// timeout; the sandbox is killed, never repooled.
+    Timeout { function: String, modeled_s: f64 },
+    /// The sandbox crashed after the handler ran: the partial work is
+    /// billed, the response is lost.
+    MidflightCrash { function: String, modeled_s: f64 },
+    /// The response frame failed its FNV checksum: a byte flipped in
+    /// transit. Billed in full (the work ran and was transferred).
+    CorruptResponse { function: String, modeled_s: f64 },
+    /// The function pool's circuit breaker is open: failed fast, nothing
+    /// billed, no container touched.
+    CircuitOpen { function: String },
+    /// The request's [`Deadline`] expired before (or between) attempts.
+    /// `modeled_s` is the modeled time the failed attempts consumed.
+    DeadlineExceeded { function: String, modeled_s: f64 },
+    /// [`RetryPolicy::max_attempts`] retryable failures in a row — the
+    /// typed replacement for the old retry-ceiling panic. Callers degrade
+    /// (or error in strict mode) instead of aborting the process.
+    RetryBudgetExhausted { function: String, attempts: usize, modeled_s: f64 },
+}
+
+impl FaasError {
+    /// Modeled seconds the failed work consumed (0 for fail-fast and
+    /// size-cap errors) — what a caller debits from its budget.
+    pub fn modeled_s(&self) -> f64 {
+        match self {
+            FaasError::InjectedFailure { modeled_s, .. }
+            | FaasError::Timeout { modeled_s, .. }
+            | FaasError::MidflightCrash { modeled_s, .. }
+            | FaasError::CorruptResponse { modeled_s, .. }
+            | FaasError::DeadlineExceeded { modeled_s, .. }
+            | FaasError::RetryBudgetExhausted { modeled_s, .. } => *modeled_s,
+            FaasError::PayloadTooLarge(..) | FaasError::CircuitOpen { .. } => 0.0,
+        }
+    }
+
+    /// Is a fresh attempt worth making? Transient faults are; budget,
+    /// breaker, and size-cap errors are terminal.
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            FaasError::InjectedFailure { .. }
+                | FaasError::Timeout { .. }
+                | FaasError::MidflightCrash { .. }
+                | FaasError::CorruptResponse { .. }
+        )
+    }
 }
 
 impl std::fmt::Display for FaasError {
@@ -320,6 +477,36 @@ impl std::fmt::Display for FaasError {
             }
             FaasError::InjectedFailure { function, modeled_s } => {
                 write!(f, "injected invocation failure of {function} after {modeled_s:.4} modeled s")
+            }
+            FaasError::Timeout { function, modeled_s } => {
+                write!(f, "invocation of {function} timed out after {modeled_s:.4} modeled s")
+            }
+            FaasError::MidflightCrash { function, modeled_s } => {
+                write!(f, "{function} crashed mid-flight after {modeled_s:.4} modeled s")
+            }
+            FaasError::CorruptResponse { function, modeled_s } => {
+                write!(
+                    f,
+                    "response frame from {function} failed its checksum \
+                     after {modeled_s:.4} modeled s"
+                )
+            }
+            FaasError::CircuitOpen { function } => {
+                write!(f, "circuit breaker open for {function}: failing fast")
+            }
+            FaasError::DeadlineExceeded { function, modeled_s } => {
+                write!(
+                    f,
+                    "deadline expired before {function} could complete \
+                     ({modeled_s:.4} modeled s burned)"
+                )
+            }
+            FaasError::RetryBudgetExhausted { function, attempts, modeled_s } => {
+                write!(
+                    f,
+                    "{function}: retry budget exhausted after {attempts} attempts \
+                     ({modeled_s:.4} modeled s burned)"
+                )
             }
         }
     }
@@ -349,6 +536,9 @@ pub struct Platform {
     /// per-function invocation sequence numbers: the deterministic
     /// `invocation_id` stream feeding [`LatencyModel::draw`]
     seq: Mutex<HashMap<String, u64>>,
+    /// per-function-pool circuit breakers (populated lazily, and only
+    /// when `config.breaker.enabled`)
+    breakers: Mutex<HashMap<String, CircuitBreaker>>,
     next_container: AtomicU64,
     pub config: FaasConfig,
     pub params: SimParams,
@@ -358,10 +548,11 @@ pub struct Platform {
     pub cold_invocations: AtomicU64,
 }
 
-/// Retry ceiling for [`Platform::invoke_retrying`]: with any sane
-/// failure probability the chance of this many consecutive injected
-/// failures is negligible, so hitting it means a misconfigured model.
-const MAX_INVOKE_ATTEMPTS: usize = 32;
+/// How long a hung invocation burns on the virtual clock when the caller
+/// set no timeout at all (no `fn_timeout_s`, no deadline): the platform
+/// watchdog every real FaaS provider enforces (Lambda's hard cap scaled
+/// to our modeled workloads).
+const HANG_WATCHDOG_S: f64 = 60.0;
 
 impl Platform {
     pub fn new(config: FaasConfig, params: SimParams, ledger: Arc<CostLedger>) -> Self {
@@ -369,6 +560,7 @@ impl Platform {
         Self {
             pools: Mutex::new(HashMap::new()),
             seq: Mutex::new(HashMap::new()),
+            breakers: Mutex::new(HashMap::new()),
             next_container: AtomicU64::new(0),
             config,
             params,
@@ -404,16 +596,18 @@ impl Platform {
     where
         F: FnOnce(&mut InvocationCtx, &[u8]) -> Vec<u8>,
     {
-        self.invoke_once(function, role, payload, handler).map(|inv| inv.response)
+        self.invoke_once(function, role, payload, self.config.fn_timeout_s, handler)
+            .map(|inv| inv.response)
     }
 
-    /// [`Platform::invoke`] with automatic retry of chaos-injected
-    /// failures (other errors pass through). Each retry is a fresh
-    /// invocation — new sequence number, new chaos draw — and the failed
-    /// attempt's container was dropped at failure time, so the retry can
-    /// never land on the container that just died. The returned
-    /// [`Invocation::modeled_s`] accumulates the failed attempts' modeled
-    /// durations: retries are serial on the virtual clock.
+    /// [`Platform::invoke_with_policy`] with no deadline — the
+    /// plain-retry entry point. At the default legacy policy this is the
+    /// pre-resilience behavior (32 immediate attempts, fresh draws, the
+    /// failed container dropped at failure time), except budget
+    /// exhaustion returns [`FaasError::RetryBudgetExhausted`] instead of
+    /// panicking. The returned [`Invocation::modeled_s`] accumulates the
+    /// failed attempts' modeled durations plus any backoff waits:
+    /// retries are serial on the virtual clock.
     pub fn invoke_retrying<F>(
         &self,
         function: &str,
@@ -424,28 +618,131 @@ impl Platform {
     where
         F: Fn(&mut InvocationCtx, &[u8]) -> Vec<u8>,
     {
+        self.invoke_with_policy(function, role, payload, Deadline::none(), handler)
+    }
+
+    /// The resilient invocation loop (see the module docs): debits
+    /// `deadline` on the virtual clock to size each attempt's timeout,
+    /// retries retryable faults under `config.retry` (bounded attempts,
+    /// deterministic capped-exponential backoff that advances the
+    /// virtual clock), and consults the function pool's circuit breaker
+    /// before every attempt, failing fast while it is open.
+    pub fn invoke_with_policy<F>(
+        &self,
+        function: &str,
+        role: Role,
+        payload: &[u8],
+        deadline: Deadline,
+        handler: F,
+    ) -> Result<Invocation, FaasError>
+    where
+        F: Fn(&mut InvocationCtx, &[u8]) -> Vec<u8>,
+    {
+        let policy = self.config.retry;
+        let jitter_key = mix64(self.config.chaos.seed.unwrap_or(0)) ^ mix64(fnv1a64(function));
         let mut failed_s = 0.0;
-        for _ in 0..MAX_INVOKE_ATTEMPTS {
-            match self.invoke_once(function, role, payload, &handler) {
+        let mut attempts = 0usize;
+        for attempt in 0..policy.max_attempts.max(1) {
+            let now = virtual_now();
+            if deadline.expired(now) {
+                return Err(FaasError::DeadlineExceeded {
+                    function: function.to_string(),
+                    modeled_s: failed_s,
+                });
+            }
+            if !self.breaker_admit(function, now) {
+                self.ledger.record_breaker_fast_fail();
+                return Err(FaasError::CircuitOpen { function: function.to_string() });
+            }
+            let timeout_s = self.config.fn_timeout_s.min(deadline.remaining(now));
+            attempts = attempt + 1;
+            match self.invoke_once(function, role, payload, timeout_s, &handler) {
                 Ok(mut inv) => {
+                    self.breaker_record(function, virtual_now(), false);
                     inv.modeled_s += failed_s;
                     return Ok(inv);
                 }
-                Err(FaasError::InjectedFailure { modeled_s, .. }) => failed_s += modeled_s,
+                Err(e) if e.is_retryable() => {
+                    failed_s += e.modeled_s();
+                    self.breaker_record(function, virtual_now(), true);
+                    if attempt + 1 < policy.max_attempts {
+                        self.ledger.record_retry();
+                        let wait = policy.backoff_s(attempt + 1, jitter_key);
+                        if wait > 0.0 {
+                            advance_virtual_now(wait);
+                            failed_s += wait;
+                            self.ledger.record_backoff_wait(wait);
+                        }
+                    }
+                }
                 Err(e) => return Err(e),
             }
         }
-        panic!(
-            "{function}: {MAX_INVOKE_ATTEMPTS} consecutive injected failures — \
-             chaos failure_prob is too high to make progress"
-        );
+        Err(FaasError::RetryBudgetExhausted {
+            function: function.to_string(),
+            attempts,
+            modeled_s: failed_s,
+        })
     }
 
+    /// Breaker admission check for `function` at virtual time `now`.
+    fn breaker_admit(&self, function: &str, now: f64) -> bool {
+        if !self.config.breaker.enabled {
+            return true;
+        }
+        self.breakers
+            .lock()
+            .unwrap()
+            .entry(function.to_string())
+            .or_insert_with(|| CircuitBreaker::new(self.config.breaker))
+            .admit(now)
+    }
+
+    /// Record an attempt outcome with `function`'s breaker, ledgering
+    /// Closed→Open transitions.
+    fn breaker_record(&self, function: &str, now: f64, failed: bool) {
+        if !self.config.breaker.enabled {
+            return;
+        }
+        let mut map = self.breakers.lock().unwrap();
+        let b = map
+            .entry(function.to_string())
+            .or_insert_with(|| CircuitBreaker::new(self.config.breaker));
+        let opens_before = b.opens;
+        b.record(now, failed);
+        if b.opens > opens_before {
+            self.ledger.record_breaker_open();
+        }
+    }
+
+    /// Is `function`'s circuit breaker currently open? (tests/diagnostics)
+    pub fn breaker_is_open(&self, function: &str) -> bool {
+        self.breakers.lock().unwrap().get(function).map(|b| b.is_open()).unwrap_or(false)
+    }
+
+    /// Bill a failed attempt (AWS bills failed synchronous invocations):
+    /// drain the modeled clocks, record wall + modeled runtime and the
+    /// failure, and return the attempt's modeled duration.
+    fn bill_failed(&self, role: Role, start: &std::time::Instant) -> f64 {
+        let extra = take_modeled_extra();
+        let modeled_s = take_modeled_total();
+        let billed = start.elapsed().as_secs_f64() + extra;
+        self.ledger.record_runtime(role, self.memory_for(role), billed);
+        self.ledger.record_modeled_runtime(role, self.memory_for(role), modeled_s);
+        self.ledger.record_failed_invocation();
+        modeled_s
+    }
+
+    /// One attempt. `timeout_s` is the remaining budget at entry: the
+    /// attempt is killed (billed up to the budget, sandbox dropped) if
+    /// its modeled duration would overrun it, and a hang burns exactly
+    /// the budget before the watchdog fires.
     fn invoke_once<F>(
         &self,
         function: &str,
         role: Role,
         payload: &[u8],
+        timeout_s: f64,
         handler: F,
     ) -> Result<Invocation, FaasError>
     where
@@ -480,6 +777,16 @@ impl Platform {
             advance_virtual_now(queue_delay_s);
             self.ledger.record_queue_delay(queue_delay_s);
         }
+        // the budget left once the container is actually ours; a request
+        // whose wait alone ate the budget abandons before startup —
+        // nothing billed, the container never occupied (queue delay is
+        // excluded from `modeled_s` by convention, so this carries 0)
+        let run_budget = timeout_s - queue_delay_s;
+        if run_budget <= 0.0 {
+            self.pools.lock().unwrap().entry(function.to_string()).or_default().push(container);
+            self.ledger.record_timeout();
+            return Err(FaasError::Timeout { function: function.to_string(), modeled_s: 0.0 });
+        }
         self.ledger.record_invocation(role, cold);
         if cold {
             self.cold_invocations.fetch_add(1, Ordering::Relaxed);
@@ -502,14 +809,26 @@ impl Platform {
         // synchronous invocations, so the duration is billed; the dead
         // container is dropped, never repooled.
         if draw.fail {
-            let extra = take_modeled_extra();
-            let modeled_s = take_modeled_total();
-            let billed = start.elapsed().as_secs_f64() + extra;
-            self.ledger.record_runtime(role, self.memory_for(role), billed);
-            self.ledger.record_modeled_runtime(role, self.memory_for(role), modeled_s);
-            self.ledger.record_failed_invocation();
-            let function = function.to_string();
-            return Err(FaasError::InjectedFailure { function, modeled_s });
+            let modeled_s = self.bill_failed(role, &start);
+            return Err(FaasError::InjectedFailure { function: function.to_string(), modeled_s });
+        }
+
+        // hang: the invocation never answers. It burns the remaining
+        // budget on the virtual clock (or the platform watchdog when no
+        // budget was set), is billed for all of it, and only the
+        // caller's timeout recovers — the sandbox is killed, not
+        // repooled.
+        if draw.hang {
+            let burned = modeled_total();
+            let stall = if run_budget.is_finite() {
+                (run_budget - burned).max(0.0)
+            } else {
+                HANG_WATCHDOG_S
+            };
+            self.params.simulate_latency(stall);
+            let modeled_s = self.bill_failed(role, &start);
+            self.ledger.record_timeout();
+            return Err(FaasError::Timeout { function: function.to_string(), modeled_s });
         }
 
         // INVOKE phase: run the handler
@@ -520,35 +839,77 @@ impl Platform {
             function,
         };
         let response = handler(&mut ctx, payload);
+
+        // mid-flight crash: the handler's work happened and is billed
+        // (AWS bills the partial duration), but the sandbox dies before
+        // the response frame is produced — the response is lost and the
+        // container dropped.
+        if draw.crash {
+            let modeled_s = self.bill_failed(role, &start);
+            self.ledger.record_crash();
+            return Err(FaasError::MidflightCrash { function: function.to_string(), modeled_s });
+        }
+
         // AWS enforces the same cap on synchronous *responses*, and bills
         // the failed invocation's full duration; the produced (rejected)
         // response bytes are still counted, and the container is dropped,
         // not repooled.
         if response.len() > self.config.max_payload_bytes {
-            let extra = take_modeled_extra();
-            let modeled_s = take_modeled_total();
             self.ledger.record_payload(response.len() as u64);
-            let billed = start.elapsed().as_secs_f64() + extra;
-            self.ledger.record_runtime(role, self.memory_for(role), billed);
-            self.ledger.record_modeled_runtime(role, self.memory_for(role), modeled_s);
-            self.ledger.record_failed_invocation();
+            self.bill_failed(role, &start);
             return Err(FaasError::PayloadTooLarge(
                 response.len(),
                 self.config.max_payload_bytes,
             ));
         }
 
-        // response payload transfer
+        // response payload transfer, framed with a sender-side FNV
+        // checksum (verified below, after the wire may have corrupted it)
+        let sent_checksum = fnv1a64_bytes(&response);
         let transfer_out = response.len() as f64 / self.config.payload_bandwidth_bps;
         self.params.simulate_latency(transfer_out);
         self.ledger.record_payload(response.len() as u64);
 
-        // billing: wall duration + modeled-but-unslept latencies
+        // billing inputs: wall duration + modeled-but-unslept latencies
         let extra = take_modeled_extra();
         let modeled_s = take_modeled_total();
         let billed = start.elapsed().as_secs_f64() + extra;
+
+        // the caller's timeout fired mid-flight: the sandbox is killed
+        // at the budget and billed up to it, the finished response is
+        // discarded, and the clock rewinds to the kill point (nothing
+        // after the timeout is observable)
+        if modeled_s > run_budget {
+            advance_virtual_now(run_budget - modeled_s);
+            self.ledger.record_runtime(role, self.memory_for(role), billed);
+            self.ledger.record_modeled_runtime(role, self.memory_for(role), run_budget);
+            self.ledger.record_failed_invocation();
+            self.ledger.record_timeout();
+            return Err(FaasError::Timeout {
+                function: function.to_string(),
+                modeled_s: run_budget,
+            });
+        }
+
         self.ledger.record_runtime(role, self.memory_for(role), billed);
         self.ledger.record_modeled_runtime(role, self.memory_for(role), modeled_s);
+
+        // receiver-side checksum verification: chaos may have flipped a
+        // byte on the wire. Detected → the fully billed invocation is a
+        // failure, its frame discarded, the container dropped.
+        let mut response = response;
+        if draw.corrupt && !response.is_empty() {
+            let idx = (draw.corrupt_byte % response.len() as u64) as usize;
+            response[idx] ^= 0xFF;
+        }
+        if fnv1a64_bytes(&response) != sent_checksum {
+            self.ledger.record_failed_invocation();
+            self.ledger.record_corruption();
+            return Err(FaasError::CorruptResponse {
+                function: function.to_string(),
+                modeled_s,
+            });
+        }
 
         // release container to the pool (warm for the next invocation);
         // fleet mode stamps when it frees up on the virtual timeline
@@ -855,6 +1216,269 @@ mod tests {
             "virtual clock must include the failed attempt: {}",
             inv.modeled_s
         );
+    }
+
+    /// First seed whose draw for `("f", 0)` satisfies `pick`, with the
+    /// fault probabilities of `cfg` — the deterministic way to force one
+    /// specific fault class onto the first invocation.
+    fn seed_where(cfg: ChaosConfig, pick: impl Fn(&InvocationDraw) -> bool) -> u64 {
+        (0..u64::MAX)
+            .find(|&s| pick(&LatencyModel::new(ChaosConfig { seed: Some(s), ..cfg }).draw("f", 0)))
+            .unwrap()
+    }
+
+    #[test]
+    fn new_fault_draws_do_not_perturb_the_legacy_stream() {
+        // append-only draw order: enabling the new fault classes must
+        // leave the original (overhead, spike, fail) stream bit-identical
+        let base = ChaosConfig { failure_prob: 0.2, ..ChaosConfig::with_seed(3) };
+        let plus = ChaosConfig { hang_prob: 0.3, crash_prob: 0.2, corrupt_prob: 0.5, ..base };
+        let (a, b) = (LatencyModel::new(base), LatencyModel::new(plus));
+        let mut fired = (false, false, false);
+        for id in 0..200 {
+            let x = a.draw("f", id);
+            let y = b.draw("f", id);
+            assert_eq!(x.overhead_factor.to_bits(), y.overhead_factor.to_bits());
+            assert_eq!(x.spike_s.to_bits(), y.spike_s.to_bits());
+            assert_eq!(x.fail, y.fail);
+            assert!(!x.hang && !x.crash && !x.corrupt, "zero-prob draws must stay clean");
+            fired = (fired.0 || y.hang, fired.1 || y.crash, fired.2 || y.corrupt);
+        }
+        assert!(fired.0 && fired.1 && fired.2, "the new classes must actually fire: {fired:?}");
+    }
+
+    #[test]
+    fn hang_is_recovered_by_the_timeout_and_billed_up_to_it() {
+        let cfg = ChaosConfig { tail_sigma: 0.0, spike_prob: 0.0, hang_prob: 0.5, ..ChaosConfig::off() };
+        let cfg = ChaosConfig { seed: Some(seed_where(cfg, |d| d.hang)), ..cfg };
+        let ledger = Arc::new(CostLedger::new());
+        let p = Platform::new(
+            FaasConfig { chaos: cfg, fn_timeout_s: 1.5, ..Default::default() },
+            SimParams::instant(),
+            ledger,
+        );
+        crate::storage::set_virtual_now(0.0);
+        let r = p.invoke("f", Role::QueryProcessor, b"x", |_, _| vec![1]);
+        match r {
+            Err(FaasError::Timeout { ref function, modeled_s }) => {
+                assert_eq!(function, "f");
+                assert!((modeled_s - 1.5).abs() < 1e-9, "hang burns exactly the budget: {modeled_s}");
+            }
+            other => panic!("expected timeout, got {other:?}"),
+        }
+        assert_eq!(p.ledger.timeouts.load(Ordering::Relaxed), 1);
+        assert_eq!(p.ledger.failed_invocations.load(Ordering::Relaxed), 1);
+        assert_eq!(p.pool_size("f"), 0, "hung sandbox must be killed, not repooled");
+        assert!((virtual_now() - 1.5).abs() < 1e-9, "the wait happened on the virtual clock");
+        assert!(p.ledger.mb_seconds(Role::QueryProcessor) > 0.0, "billed until the kill");
+
+        // with no timeout anywhere, the platform watchdog bounds the burn
+        let ledger = Arc::new(CostLedger::new());
+        let p = Platform::new(
+            FaasConfig { chaos: cfg, ..Default::default() },
+            SimParams::instant(),
+            ledger,
+        );
+        match p.invoke("f", Role::QueryProcessor, b"x", |_, _| vec![1]) {
+            Err(FaasError::Timeout { modeled_s, .. }) => {
+                assert!(modeled_s >= HANG_WATCHDOG_S, "watchdog burn: {modeled_s}")
+            }
+            other => panic!("expected watchdog timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn midflight_crash_bills_partial_work_and_loses_the_response() {
+        let cfg = ChaosConfig { crash_prob: 0.5, ..ChaosConfig::with_seed(0) };
+        let cfg = ChaosConfig { seed: Some(seed_where(cfg, |d| d.crash && !d.fail)), ..cfg };
+        let p = chaos_platform(cfg);
+        let ran = std::sync::atomic::AtomicBool::new(false);
+        let r = p.invoke("f", Role::QueryProcessor, b"req", |_, _| {
+            ran.store(true, Ordering::Relaxed);
+            vec![0u8; 100]
+        });
+        match r {
+            Err(FaasError::MidflightCrash { ref function, modeled_s }) => {
+                assert_eq!(function, "f");
+                assert!(modeled_s >= p.config.cold_start_s, "partial work takes time");
+            }
+            other => panic!("expected crash, got {other:?}"),
+        }
+        assert!(ran.load(Ordering::Relaxed), "the handler DID run before the crash");
+        assert_eq!(p.ledger.crashes.load(Ordering::Relaxed), 1);
+        assert_eq!(p.ledger.failed_invocations.load(Ordering::Relaxed), 1);
+        assert_eq!(p.pool_size("f"), 0);
+        // the lost response's bytes never hit the wire: only the request
+        assert_eq!(p.ledger.payload_bytes.load(Ordering::Relaxed), 3);
+        assert!(p.ledger.mb_seconds(Role::QueryProcessor) > 0.0, "partial work is billed");
+    }
+
+    #[test]
+    fn corrupt_response_is_detected_by_the_frame_checksum() {
+        let cfg = ChaosConfig { corrupt_prob: 0.5, ..ChaosConfig::with_seed(0) };
+        let cfg = ChaosConfig { seed: Some(seed_where(cfg, |d| d.corrupt && !d.fail)), ..cfg };
+        let p = chaos_platform(cfg);
+        let r = p.invoke("f", Role::QueryProcessor, b"req", |_, _| vec![7u8; 64]);
+        match r {
+            Err(FaasError::CorruptResponse { ref function, modeled_s }) => {
+                assert_eq!(function, "f");
+                assert!(modeled_s > 0.0);
+            }
+            other => panic!("expected corruption, got {other:?}"),
+        }
+        assert_eq!(p.ledger.corruptions.load(Ordering::Relaxed), 1);
+        assert_eq!(p.ledger.failed_invocations.load(Ordering::Relaxed), 1);
+        // the corrupted frame WAS transferred: request + response counted
+        assert_eq!(p.ledger.payload_bytes.load(Ordering::Relaxed), 3 + 64);
+        assert_eq!(p.pool_size("f"), 0, "suspect container dropped");
+        // a retry with a clean draw delivers the uncorrupted frame
+        let inv = p.invoke_retrying("f", Role::QueryProcessor, b"req", |_, _| vec![7u8; 64]);
+        assert_eq!(inv.unwrap().response, vec![7u8; 64]);
+    }
+
+    #[test]
+    fn modeled_overrun_of_the_timeout_kills_the_sandbox_at_the_budget() {
+        let ledger = Arc::new(CostLedger::new());
+        let p = Platform::new(
+            FaasConfig { fn_timeout_s: 0.01, ..Default::default() },
+            SimParams::instant(),
+            ledger,
+        );
+        crate::storage::set_virtual_now(0.0);
+        // the 0.18 s cold start alone overruns a 10 ms budget
+        let r = p.invoke("f", Role::QueryProcessor, b"x", |_, _| vec![1]);
+        match r {
+            Err(FaasError::Timeout { modeled_s, .. }) => {
+                assert!((modeled_s - 0.01).abs() < 1e-12, "billed up to the budget: {modeled_s}")
+            }
+            other => panic!("expected overrun timeout, got {other:?}"),
+        }
+        assert!((virtual_now() - 0.01).abs() < 1e-12, "clock rewound to the kill point");
+        assert_eq!(p.ledger.timeouts.load(Ordering::Relaxed), 1);
+        let billed = p.ledger.modeled_mb_seconds(Role::QueryProcessor) / p.config.memory_qp_mb as f64;
+        assert!((billed - 0.01).abs() < 1e-6, "modeled billing clamped to the budget: {billed}");
+        assert_eq!(p.pool_size("f"), 0);
+    }
+
+    #[test]
+    fn queue_wait_that_eats_the_deadline_abandons_unbilled() {
+        use crate::storage::set_virtual_now;
+        let ledger = Arc::new(CostLedger::new());
+        let p = Platform::new(
+            FaasConfig { virtual_pools: true, max_containers: 1, ..Default::default() },
+            SimParams::instant(),
+            ledger,
+        );
+        set_virtual_now(0.0);
+        p.invoke("f", Role::QueryProcessor, b"x", |_, _| vec![1]).unwrap();
+        // a second arrival at t=0 must wait ≥ the 0.18 s cold start — far
+        // past its 50 ms deadline — so it abandons in the queue and the
+        // retry loop then sees the deadline expired
+        set_virtual_now(0.0);
+        let r = p.invoke_with_policy(
+            "f",
+            Role::QueryProcessor,
+            b"x",
+            Deadline::at(0.05),
+            |_, _| vec![2],
+        );
+        assert!(matches!(r, Err(FaasError::DeadlineExceeded { .. })), "got {r:?}");
+        assert_eq!(p.ledger.timeouts.load(Ordering::Relaxed), 1);
+        assert_eq!(p.ledger.failed_invocations.load(Ordering::Relaxed), 0, "nothing billed");
+        assert_eq!(p.ledger.total_invocations(), 1, "the abandoned wait is not an invocation");
+        assert_eq!(p.pool_size("f"), 1, "the container was never occupied");
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_is_a_typed_error_not_a_panic() {
+        let cfg = ChaosConfig { failure_prob: 1.0, ..ChaosConfig::with_seed(5) };
+        let ledger = Arc::new(CostLedger::new());
+        let p = Platform::new(
+            FaasConfig {
+                chaos: cfg,
+                retry: RetryPolicy { max_attempts: 3, ..RetryPolicy::legacy() },
+                ..Default::default()
+            },
+            SimParams::instant(),
+            ledger,
+        );
+        let err = p.invoke_retrying("f", Role::QueryProcessor, b"x", |_, _| vec![]).unwrap_err();
+        match err {
+            FaasError::RetryBudgetExhausted { ref function, attempts, modeled_s } => {
+                assert_eq!(function, "f");
+                assert_eq!(attempts, 3);
+                assert!(modeled_s >= 3.0 * p.config.cold_start_s, "all attempts burned time");
+            }
+            other => panic!("expected budget exhaustion, got {other:?}"),
+        }
+        assert_eq!(p.ledger.retries.load(Ordering::Relaxed), 2, "2 retries after the first try");
+        assert_eq!(p.ledger.failed_invocations.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn backoff_waits_advance_the_virtual_clock_and_are_ledgered() {
+        use crate::storage::set_virtual_now;
+        let cfg = ChaosConfig { failure_prob: 1.0, ..ChaosConfig::with_seed(5) };
+        let retry = RetryPolicy {
+            max_attempts: 3,
+            base_backoff_s: 0.1,
+            backoff_multiplier: 2.0,
+            max_backoff_s: 10.0,
+            jitter: 0.0,
+        };
+        let ledger = Arc::new(CostLedger::new());
+        let p = Platform::new(
+            FaasConfig { chaos: cfg, retry, ..Default::default() },
+            SimParams::instant(),
+            ledger,
+        );
+        set_virtual_now(0.0);
+        let err = p.invoke_retrying("f", Role::QueryProcessor, b"x", |_, _| vec![]).unwrap_err();
+        let modeled_s = match err {
+            FaasError::RetryBudgetExhausted { modeled_s, .. } => modeled_s,
+            other => panic!("expected budget exhaustion, got {other:?}"),
+        };
+        // waits of 0.1 then 0.2 s between the three attempts
+        assert!((p.ledger.backoff_wait_s() - 0.3).abs() < 1e-6);
+        assert!(modeled_s > 0.3, "burned time includes the backoff waits");
+        assert!((virtual_now() - modeled_s).abs() < 1e-9, "waits happened on the clock");
+    }
+
+    #[test]
+    fn breaker_opens_fails_fast_and_probes_per_function() {
+        use crate::storage::set_virtual_now;
+        let cfg = ChaosConfig { failure_prob: 1.0, ..ChaosConfig::with_seed(9) };
+        let breaker = BreakerConfig {
+            enabled: true,
+            window: 4,
+            min_samples: 2,
+            failure_threshold: 0.5,
+            open_s: 5.0,
+        };
+        let ledger = Arc::new(CostLedger::new());
+        let p = Platform::new(
+            FaasConfig { chaos: cfg, breaker, ..Default::default() },
+            SimParams::instant(),
+            ledger,
+        );
+        set_virtual_now(0.0);
+        // attempts 1+2 fail and trip the breaker; attempt 3 is rejected
+        let err = p.invoke_retrying("f", Role::QueryProcessor, b"x", |_, _| vec![]).unwrap_err();
+        assert!(matches!(err, FaasError::CircuitOpen { .. }), "got {err:?}");
+        assert!(p.breaker_is_open("f"));
+        assert!(!p.breaker_is_open("g"), "breakers are per function pool");
+        assert_eq!(p.ledger.breaker_open_events.load(Ordering::Relaxed), 1);
+        assert_eq!(p.ledger.breaker_fast_fails.load(Ordering::Relaxed), 1);
+        assert_eq!(p.ledger.failed_invocations.load(Ordering::Relaxed), 2, "fast fail bills nothing");
+        // past open_s, half-open admits exactly one probe; it fails for
+        // real, re-trips the breaker, and the next attempt fast-fails
+        set_virtual_now(10.0);
+        let err = p.invoke_retrying("f", Role::QueryProcessor, b"x", |_, _| vec![]).unwrap_err();
+        assert!(matches!(err, FaasError::CircuitOpen { .. }), "got {err:?}");
+        assert!(p.breaker_is_open("f"), "failed probe re-opens");
+        assert_eq!(p.ledger.breaker_open_events.load(Ordering::Relaxed), 2);
+        assert_eq!(p.ledger.breaker_fast_fails.load(Ordering::Relaxed), 2);
+        assert_eq!(p.ledger.failed_invocations.load(Ordering::Relaxed), 3, "one probe ran");
     }
 
     #[test]

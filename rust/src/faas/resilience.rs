@@ -1,0 +1,396 @@
+//! Request-lifecycle resilience primitives: deadlines, retry budgets,
+//! and per-function-pool circuit breakers — all on the deterministic
+//! virtual clock ([`crate::storage::virtual_now`]), so every recovery
+//! decision replays byte-identically under a fixed chaos seed.
+//!
+//! # Deadline debiting
+//!
+//! A [`Deadline`] is an *absolute* point on the virtual timeline. The
+//! client stamps one at batch entry (`SquashConfig::deadline_s`); it
+//! rides in every CO→QA→QP request payload and is re-read at each hop,
+//! so an invocation's timeout is always `deadline.remaining()` — the
+//! budget left *after* everything upstream (queueing, retries, backoff,
+//! sibling stragglers) has already been debited from the shared clock.
+//! `Deadline::none()` (+∞, the default) makes every check a no-op, so
+//! deadline-free runs stay bit-identical to the pre-resilience code.
+//!
+//! # Retry budgets with backoff
+//!
+//! [`RetryPolicy`] bounds `invoke_with_policy`'s loop: at most
+//! `max_attempts` tries per request, with capped exponential backoff
+//! between them. Backoff jitter is drawn from the same SplitMix
+//! construction as the chaos model — keyed by `(chaos seed, function,
+//! attempt)` — never from a wall clock, so a retry storm replays
+//! exactly. [`RetryPolicy::legacy`] (the default) reproduces the
+//! pre-resilience behavior: 32 immediate attempts, no backoff.
+//!
+//! # Breaker state machine
+//!
+//! One [`CircuitBreaker`] per function pool, evaluated on virtual time:
+//!
+//! ```text
+//!          failure rate ≥ threshold over the rolling window
+//!   Closed ───────────────────────────────────────────────▶ Open
+//!     ▲                                                      │
+//!     │ probe succeeds                        now ≥ open_until│
+//!     │                                                      ▼
+//!     └────────────────────────────────────────────────── HalfOpen
+//!                      probe fails → back to Open
+//! ```
+//!
+//! While Open, `admit` returns false and the caller fails fast with
+//! [`super::FaasError::CircuitOpen`] — no container is acquired, nothing
+//! is billed, no doomed work queues behind a sick pool. After `open_s`
+//! virtual seconds one probe invocation is admitted (HalfOpen); its
+//! outcome closes or re-opens the breaker. Disabled (the default) the
+//! breaker admits everything and records nothing.
+
+use crate::util::rng::{mix64, Rng};
+
+/// An absolute virtual-time deadline carried through the request tree.
+/// `INFINITY` means "no deadline" and makes every operation a no-op.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Deadline {
+    /// absolute virtual time (seconds) at which the request expires
+    pub at: f64,
+}
+
+impl Default for Deadline {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl Deadline {
+    /// No deadline: every budget check passes, `remaining` is +∞.
+    pub fn none() -> Self {
+        Self { at: f64::INFINITY }
+    }
+
+    /// Deadline at absolute virtual time `t`.
+    pub fn at(t: f64) -> Self {
+        Self { at: t }
+    }
+
+    /// Deadline `budget_s` virtual seconds after `now`.
+    pub fn in_s(now: f64, budget_s: f64) -> Self {
+        Self { at: now + budget_s }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.at.is_infinite()
+    }
+
+    /// Budget left at virtual time `now` (may be ≤ 0; +∞ when unset).
+    pub fn remaining(&self, now: f64) -> f64 {
+        self.at - now
+    }
+
+    pub fn expired(&self, now: f64) -> bool {
+        now >= self.at
+    }
+
+    /// Wire encoding: the raw bits of the absolute time (`INFINITY`
+    /// round-trips exactly, so "no deadline" survives the hop).
+    pub fn to_bits(&self) -> u64 {
+        self.at.to_bits()
+    }
+
+    pub fn from_bits(bits: u64) -> Self {
+        Self { at: f64::from_bits(bits) }
+    }
+}
+
+/// Bounded-retry policy with capped exponential backoff and seeded
+/// deterministic jitter.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// total attempts per request (first try included); ≥ 1
+    pub max_attempts: usize,
+    /// backoff before retry k (1-based): `base · multiplier^(k-1)`,
+    /// capped at `max_backoff_s`. 0 = immediate retry.
+    pub base_backoff_s: f64,
+    pub backoff_multiplier: f64,
+    pub max_backoff_s: f64,
+    /// jitter fraction in [0, 1]: the drawn wait is
+    /// `backoff · (1 - jitter·u)` with `u` uniform in [0, 1) — "full
+    /// jitter below", never exceeding the deterministic envelope
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self::legacy()
+    }
+}
+
+impl RetryPolicy {
+    /// The pre-resilience behavior, bit-identical: 32 immediate
+    /// attempts, no backoff, no jitter.
+    pub fn legacy() -> Self {
+        Self {
+            max_attempts: 32,
+            base_backoff_s: 0.0,
+            backoff_multiplier: 2.0,
+            max_backoff_s: 0.0,
+            jitter: 0.0,
+        }
+    }
+
+    /// A production-shaped budget: 4 attempts, 25 ms base doubling to a
+    /// 400 ms cap, 50% jitter.
+    pub fn standard() -> Self {
+        Self {
+            max_attempts: 4,
+            base_backoff_s: 0.025,
+            backoff_multiplier: 2.0,
+            max_backoff_s: 0.4,
+            jitter: 0.5,
+        }
+    }
+
+    /// Deterministic backoff before retry `attempt` (1-based). The
+    /// jitter draw is a pure function of `(jitter_key, attempt)`.
+    pub fn backoff_s(&self, attempt: usize, jitter_key: u64) -> f64 {
+        if self.base_backoff_s <= 0.0 || attempt == 0 {
+            return 0.0;
+        }
+        let exp = self.base_backoff_s * self.backoff_multiplier.powi(attempt as i32 - 1);
+        let capped = exp.min(self.max_backoff_s.max(self.base_backoff_s));
+        if self.jitter <= 0.0 {
+            return capped;
+        }
+        let mut rng = Rng::new(mix64(jitter_key) ^ mix64(0xBACC_0FF ^ attempt as u64));
+        capped * (1.0 - self.jitter * rng.f64())
+    }
+}
+
+/// Circuit-breaker configuration. Disabled by default: `admit` always
+/// passes and no state is kept, so the breaker is inert unless opted in.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BreakerConfig {
+    pub enabled: bool,
+    /// rolling outcome window size (most recent N attempts)
+    pub window: usize,
+    /// minimum samples in the window before the breaker may open
+    pub min_samples: usize,
+    /// failure fraction over the window at/above which it opens
+    pub failure_threshold: f64,
+    /// virtual seconds to stay Open before admitting a half-open probe
+    pub open_s: f64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+impl BreakerConfig {
+    pub fn off() -> Self {
+        Self {
+            enabled: false,
+            window: 16,
+            min_samples: 8,
+            failure_threshold: 0.5,
+            open_s: 1.0,
+        }
+    }
+
+    /// Enabled with the stock shape (16-sample window, ≥ 8 samples, 50%
+    /// failure rate opens for 1 virtual second).
+    pub fn on() -> Self {
+        Self { enabled: true, ..Self::off() }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum BreakerState {
+    Closed,
+    Open { until: f64 },
+    /// one probe is in flight; its outcome decides Closed vs Open
+    HalfOpen,
+}
+
+/// Per-function-pool circuit breaker on virtual time (see module docs).
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    state: BreakerState,
+    /// rolling window of recent outcomes (true = failure)
+    window: std::collections::VecDeque<bool>,
+    /// times the breaker transitioned Closed/HalfOpen → Open
+    pub opens: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> Self {
+        Self {
+            cfg,
+            state: BreakerState::Closed,
+            window: std::collections::VecDeque::with_capacity(cfg.window),
+            opens: 0,
+        }
+    }
+
+    /// May a request proceed at virtual time `now`? Open breakers reject
+    /// until `open_s` has elapsed, then admit exactly one probe.
+    pub fn admit(&mut self, now: f64) -> bool {
+        if !self.cfg.enabled {
+            return true;
+        }
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open { until } => {
+                if now >= until {
+                    self.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record an attempt outcome at virtual time `now`.
+    pub fn record(&mut self, now: f64, failed: bool) {
+        if !self.cfg.enabled {
+            return;
+        }
+        match self.state {
+            BreakerState::HalfOpen => {
+                if failed {
+                    self.trip(now);
+                } else {
+                    self.state = BreakerState::Closed;
+                    self.window.clear();
+                }
+            }
+            BreakerState::Closed => {
+                if self.window.len() == self.cfg.window.max(1) {
+                    self.window.pop_front();
+                }
+                self.window.push_back(failed);
+                let n = self.window.len();
+                if n >= self.cfg.min_samples.max(1) {
+                    let failures = self.window.iter().filter(|&&f| f).count();
+                    if failures as f64 / n as f64 >= self.cfg.failure_threshold {
+                        self.trip(now);
+                    }
+                }
+            }
+            // outcomes of requests admitted before the trip land here;
+            // the breaker is already open, nothing more to learn
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    fn trip(&mut self, now: f64) {
+        self.state = BreakerState::Open { until: now + self.cfg.open_s };
+        self.window.clear();
+        self.opens += 1;
+    }
+
+    pub fn is_open(&self) -> bool {
+        matches!(self.state, BreakerState::Open { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_none_never_expires_and_roundtrips() {
+        let d = Deadline::none();
+        assert!(d.is_none());
+        assert!(!d.expired(1e18));
+        assert!(d.remaining(1e18).is_infinite());
+        let rt = Deadline::from_bits(d.to_bits());
+        assert!(rt.is_none());
+        let d = Deadline::in_s(2.0, 0.5);
+        assert_eq!(d.at, 2.5);
+        assert!((d.remaining(2.1) - 0.4).abs() < 1e-12);
+        assert!(!d.expired(2.4));
+        assert!(d.expired(2.5));
+        assert_eq!(Deadline::from_bits(d.to_bits()), d);
+    }
+
+    #[test]
+    fn legacy_policy_is_the_old_loop() {
+        let p = RetryPolicy::legacy();
+        assert_eq!(p.max_attempts, 32);
+        for attempt in 0..40 {
+            assert_eq!(p.backoff_s(attempt, 123), 0.0, "legacy never waits");
+        }
+        assert_eq!(RetryPolicy::default(), p);
+    }
+
+    #[test]
+    fn backoff_grows_caps_and_jitters_deterministically() {
+        let p = RetryPolicy { jitter: 0.0, ..RetryPolicy::standard() };
+        assert_eq!(p.backoff_s(1, 0), 0.025);
+        assert_eq!(p.backoff_s(2, 0), 0.05);
+        assert_eq!(p.backoff_s(3, 0), 0.1);
+        assert_eq!(p.backoff_s(6, 0), 0.4, "capped at max_backoff_s");
+        let j = RetryPolicy::standard();
+        for attempt in 1..8 {
+            let a = j.backoff_s(attempt, 42);
+            let b = j.backoff_s(attempt, 42);
+            assert_eq!(a.to_bits(), b.to_bits(), "jitter must replay");
+            let envelope = p.backoff_s(attempt, 0);
+            assert!(a <= envelope && a >= envelope * 0.5, "full-jitter-below bounds: {a}");
+        }
+        assert_ne!(
+            j.backoff_s(1, 1).to_bits(),
+            j.backoff_s(1, 2).to_bits(),
+            "distinct keys draw distinct jitter"
+        );
+    }
+
+    #[test]
+    fn breaker_disabled_is_inert() {
+        let mut b = CircuitBreaker::new(BreakerConfig::off());
+        for _ in 0..100 {
+            assert!(b.admit(0.0));
+            b.record(0.0, true);
+        }
+        assert!(!b.is_open());
+        assert_eq!(b.opens, 0);
+    }
+
+    #[test]
+    fn breaker_opens_probes_and_recloses() {
+        let cfg = BreakerConfig {
+            enabled: true,
+            window: 4,
+            min_samples: 4,
+            failure_threshold: 0.5,
+            open_s: 1.0,
+        };
+        let mut b = CircuitBreaker::new(cfg);
+        // below min_samples nothing trips
+        b.record(0.0, true);
+        b.record(0.0, true);
+        assert!(b.admit(0.0));
+        // two more failures: 4/4 ≥ 0.5 → Open until t=1
+        b.record(0.0, true);
+        b.record(0.0, true);
+        assert!(b.is_open());
+        assert_eq!(b.opens, 1);
+        assert!(!b.admit(0.5), "open breaker fails fast");
+        // after open_s: one probe admitted (HalfOpen)
+        assert!(b.admit(1.5));
+        // probe fails → re-open
+        b.record(1.5, true);
+        assert!(b.is_open());
+        assert_eq!(b.opens, 2);
+        // next probe succeeds → Closed with a cleared window
+        assert!(b.admit(3.0));
+        b.record(3.0, false);
+        assert!(!b.is_open());
+        // a single new failure can't instantly re-trip (window cleared)
+        b.record(3.0, true);
+        assert!(!b.is_open());
+    }
+}

@@ -17,6 +17,18 @@
 //!                                      one QP invocation per partition).
 //!                                      Writes throughput / p50 / p99 /
 //!                                      cost-per-1k curves to --out.
+//!   resilience [--rates 0,0.02,0.05,0.1,0.2] [--fn-timeout 0.5]
+//!           [--deadline-ms 4000] [--storm-failure-prob 0.35]
+//!           [--out BENCH_resilience.json]
+//!                                      fault-rate sweep per chaos class
+//!                                      (hang / crash / corrupt / mixed)
+//!                                      under the full protection stack
+//!                                      (timeouts, retry budgets with
+//!                                      backoff, circuit breakers,
+//!                                      deadlines), plus the retry-storm
+//!                                      ablation. Writes availability /
+//!                                      coverage / recall / cost curves
+//!                                      to --out.
 //!
 //! Common options: --profile <test|sift|gist|sift10m|deep>, --n <rows>,
 //! --queries <count>, --n-qa <10|20|84|155|258|340>, --backend
@@ -31,15 +43,24 @@
 //! times), --chaos-seed <u64> (deterministic tail-latency / fault
 //! injection; same seed ⇒ same tail), --tail-sigma <f> (lognormal σ of
 //! the chaos overhead jitter), --spike-prob <f> / --failure-prob <f>
-//! (chaos stall and failure injection rates), --time-scale <f>,
-//! --no-dre, --seed <u64>.
+//! (chaos stall and failure injection rates), --hang-prob <f> /
+//! --crash-prob <f> / --corrupt-prob <f> (chaos hang, mid-flight crash
+//! and response-corruption rates), --fn-timeout <s> (per-attempt
+//! invocation timeout; recovers hangs), --retry <legacy|standard>
+//! (retry budget + backoff policy), --breaker <off|on> (per-pool
+//! circuit breakers), --deadline-ms <f> (end-to-end request deadline on
+//! the virtual clock; expired hops degrade instead of running),
+//! --strict (error on partial-coverage results instead of tagging
+//! them), --time-scale <f>, --no-dre, --seed <u64>.
 
 use squash::baselines::server::InstanceType;
 use squash::bench::load::{point_header, point_line, run_sweep, ArrivalProfile, LoadOptions};
+use squash::bench::resilience::{self, ResilienceOptions};
 use squash::bench::{measure_server, measure_squash, measure_system_x, Env, EnvOptions, RunStats};
 use squash::runtime::backend::ScanParallelism;
 use squash::coordinator::tree::TreeConfig;
 use squash::coordinator::{HedgePolicy, QpSharding};
+use squash::faas::resilience::{BreakerConfig, RetryPolicy};
 use squash::faas::ChaosConfig;
 use squash::cost::pricing::Pricing;
 use squash::cost::{server_daily_cost, system_x_query_cost};
@@ -60,9 +81,10 @@ fn main() {
         Some("query") => cmd_query(&args),
         Some("cost") => cmd_cost(&args),
         Some("load") => cmd_load(&args),
+        Some("resilience") => cmd_resilience(&args),
         _ => {
             eprintln!(
-                "usage: squash <info|serve|query|cost|load> [options]   (see doc comment in rust/src/main.rs)"
+                "usage: squash <info|serve|query|cost|load|resilience> [options]   (see doc comment in rust/src/main.rs)"
             );
             2
         }
@@ -112,8 +134,22 @@ fn env_opts(args: &Args) -> EnvOptions {
                     Ok(p) => c.failure_prob = p,
                     Err(e) => eprintln!("{e}; using {}", c.failure_prob),
                 }
+                match args.get_f64("hang-prob", c.hang_prob) {
+                    Ok(p) => c.hang_prob = p,
+                    Err(e) => eprintln!("{e}; using {}", c.hang_prob),
+                }
+                match args.get_f64("crash-prob", c.crash_prob) {
+                    Ok(p) => c.crash_prob = p,
+                    Err(e) => eprintln!("{e}; using {}", c.crash_prob),
+                }
+                match args.get_f64("corrupt-prob", c.corrupt_prob) {
+                    Ok(p) => c.corrupt_prob = p,
+                    Err(e) => eprintln!("{e}; using {}", c.corrupt_prob),
+                }
             } else {
-                for flag in ["tail-sigma", "spike-prob", "failure-prob"] {
+                for flag in
+                    ["tail-sigma", "spike-prob", "failure-prob", "hang-prob", "crash-prob", "corrupt-prob"]
+                {
                     if args.get(flag).is_some() {
                         eprintln!("--{flag} ignored: chaos is disabled (pass --chaos-seed)");
                     }
@@ -129,6 +165,31 @@ fn env_opts(args: &Args) -> EnvOptions {
             // no flag: honour the SQUASH_HEDGE environment override, like
             // the other three parallel/chaos knobs
             None => HedgePolicy::from_env().unwrap_or(HedgePolicy::Off),
+        },
+        fn_timeout_s: args.get_f64("fn-timeout", f64::INFINITY).unwrap_or(f64::INFINITY),
+        retry: match args.get_or("retry", "legacy") {
+            "standard" => RetryPolicy::standard(),
+            "legacy" => RetryPolicy::legacy(),
+            other => {
+                eprintln!("--retry must be legacy|standard, got {other}; using legacy");
+                RetryPolicy::legacy()
+            }
+        },
+        breaker: match args.get_or("breaker", "off") {
+            "on" => BreakerConfig::on(),
+            "off" => BreakerConfig::off(),
+            other => {
+                eprintln!("--breaker must be off|on, got {other}; using off");
+                BreakerConfig::off()
+            }
+        },
+        deadline_s: match args.get_f64("deadline-ms", f64::NAN) {
+            Ok(ms) if ms.is_finite() && ms > 0.0 => Some(ms / 1e3),
+            Ok(_) => None,
+            Err(e) => {
+                eprintln!("{e}; deadline disabled");
+                None
+            }
         },
         seed: args.get_u64("seed", 42).unwrap_or(42),
     }
@@ -158,6 +219,9 @@ fn cmd_serve(args: &Args) -> i32 {
         let tree = TreeConfig::for_n_qa(n_qa).expect("n-qa must be one of 10/20/84/155/258/340");
         env.with_config(|c| c.tree = tree);
     }
+    if args.has_flag("strict") {
+        env.with_config(|c| c.strict = true);
+    }
     let truth_k = if args.has_flag("no-recall") { 0 } else { 10 };
     let stats = measure_squash(&env, "squash", truth_k);
     println!("{}", RunStats::header());
@@ -178,6 +242,14 @@ fn cmd_serve(args: &Args) -> i32 {
             env.ledger.hedged_invocations.load(std::sync::atomic::Ordering::Relaxed),
             env.ledger.hedge_wasted_s() * 1e3,
         );
+    }
+    let degraded = env.ledger.degraded_queries.load(std::sync::atomic::Ordering::Relaxed);
+    if degraded > 0 {
+        println!("degraded: {degraded} queries answered at partial coverage");
+        if env.sys.ctx.cfg.strict {
+            eprintln!("--strict: refusing partial-coverage results");
+            return 1;
+        }
     }
     if args.has_flag("baselines") {
         println!("{}", measure_system_x(&env, truth_k));
@@ -258,6 +330,63 @@ fn cmd_load(args: &Args) -> i32 {
         println!("{}", point_line("fused", &p.stats));
     }
     let out = args.get_or("out", "BENCH_load.json").to_string();
+    match std::fs::write(&out, sweep.json.to_string_pretty()) {
+        Ok(()) => {
+            println!("wrote {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_resilience(args: &Args) -> i32 {
+    let mut opts = env_opts(args);
+    // the sweep measures the virtual clock; real sleeping adds nothing
+    opts.time_scale = args.get_f64("time-scale", 0.0).unwrap_or(0.0);
+    if opts.n_queries == 100 && args.get("queries").is_none() {
+        opts.n_queries = 32;
+    }
+    let rates: Vec<f64> = args
+        .get_or("rates", "0,0.02,0.05,0.1,0.2")
+        .split(',')
+        .filter_map(|s| s.trim().parse::<f64>().ok())
+        .filter(|&r| (0.0..=1.0).contains(&r))
+        .collect();
+    if rates.is_empty() {
+        eprintln!("--rates must be a comma-separated list of probabilities in [0, 1]");
+        return 2;
+    }
+    let defaults = ResilienceOptions::default();
+    let ropts = ResilienceOptions {
+        rates,
+        fn_timeout_s: args.get_f64("fn-timeout", defaults.fn_timeout_s).unwrap_or(defaults.fn_timeout_s),
+        deadline_s: args
+            .get_f64("deadline-ms", defaults.deadline_s * 1e3)
+            .map(|ms| ms / 1e3)
+            .unwrap_or(defaults.deadline_s),
+        storm_failure_prob: args
+            .get_f64("storm-failure-prob", defaults.storm_failure_prob)
+            .unwrap_or(defaults.storm_failure_prob),
+        seed: opts.seed,
+    };
+    eprintln!(
+        "resilience sweep on {} (n={}, {} queries/point, timeout {}s, deadline {}s)...",
+        opts.profile, opts.n, opts.n_queries, ropts.fn_timeout_s, ropts.deadline_s
+    );
+    let sweep = resilience::run_sweep(&opts, &ropts);
+    println!("{}", resilience::point_header());
+    for p in &sweep.points {
+        println!("{}", resilience::point_line(p));
+    }
+    let (pr, un) = (&sweep.storm_protected, &sweep.storm_unprotected);
+    println!(
+        "retry storm at {} injected failure: protected {} invocations vs unprotected {}",
+        ropts.storm_failure_prob, pr.invocations, un.invocations
+    );
+    let out = args.get_or("out", "BENCH_resilience.json").to_string();
     match std::fs::write(&out, sweep.json.to_string_pretty()) {
         Ok(()) => {
             println!("wrote {out}");

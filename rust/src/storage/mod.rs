@@ -77,6 +77,14 @@ pub fn take_modeled_total() -> f64 {
     MODELED_TOTAL.with(|c| c.take())
 }
 
+/// Peek the current thread's modeled-seconds clock *without* resetting
+/// it — how much modeled time the in-flight invocation has consumed so
+/// far. The FaaS timeout path uses this to size the stall a hung
+/// invocation burns before its watchdog fires.
+pub fn modeled_total() -> f64 {
+    MODELED_TOTAL.with(|c| c.get())
+}
+
 /// Current thread's absolute virtual time in modeled seconds (see
 /// VIRTUAL_NOW). Starts at 0 on a fresh thread; parents seed children via
 /// [`set_virtual_now`] when spawning so a scatter's shards all open at

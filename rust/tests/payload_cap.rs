@@ -64,6 +64,7 @@ fn single_qp_config() -> SquashConfig {
 fn multi_item_request(ds: &Dataset) -> QpRequest {
     QpRequest {
         partition: 1,
+        deadline: f64::INFINITY,
         items: (0..12)
             .map(|i| QpItem {
                 query_idx: i,
@@ -84,9 +85,9 @@ fn oversized_qp_request_splits_into_item_waves() {
     let req = multi_item_request(&ds);
     assert!(req.to_bytes().len() > cap, "fixture request must exceed the cap");
 
-    let want = qp::invoke_qp(&big.ctx, req.clone());
+    let want = qp::invoke_qp(&big.ctx, req.clone()).expect("reference invocation");
     let before = tiny.ctx.ledger.invocations_qp.load(Ordering::Relaxed);
-    let got = qp::invoke_qp(&tiny.ctx, req);
+    let got = qp::invoke_qp(&tiny.ctx, req).expect("wave-split invocation");
     let waves = tiny.ctx.ledger.invocations_qp.load(Ordering::Relaxed) - before;
 
     assert_eq!(want, got, "item-wave splitting changed results");
@@ -108,6 +109,7 @@ fn single_item_over_the_cap_fails_with_shard_guidance() {
     // splitting cannot help, only row sharding can
     let req = QpRequest {
         partition: 0,
+        deadline: f64::INFINITY,
         items: vec![QpItem {
             query_idx: 0,
             vector: ds.vectors.row(0).to_vec(),

@@ -1,0 +1,288 @@
+//! Deadline-propagated request lifecycle, end-to-end. Pinned properties:
+//!
+//! 1. **The resilience stack is inert without faults.** With all fault
+//!    probabilities at zero and no deadline, a system running the full
+//!    protection stack (per-attempt timeouts, standard retry budget with
+//!    backoff, per-pool circuit breakers) produces results and a ledger
+//!    chaos digest byte-identical to the all-default system — under a
+//!    quiet clock and under a seeded heavy tail alike.
+//! 2. **Faults degrade recall gracefully, never catastrophically.** Under
+//!    seeded hangs, mid-flight crashes and response corruption (each
+//!    class alone and mixed, sharded and unsharded), the protected system
+//!    never panics, tags partial answers with coverage fractions in
+//!    `[0, 1)`, and holds recall@10 above a pinned floor.
+//! 3. **Budget exhaustion is a typed brownout, not a crash.** Total
+//!    injected failure surfaces as zero-coverage degraded results from
+//!    `run_batch` and as a typed error from `run_batch_strict`; an
+//!    already-expired deadline kills the batch without running it.
+//! 4. **The whole fault lifecycle replays byte-identically.** Two runs
+//!    with the same chaos seed produce identical ledger digests
+//!    (including the new retry / timeout / crash / corruption /
+//!    breaker counters); the digest is written to a file so CI can diff
+//!    two independent processes.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use squash::coordinator::tree::TreeConfig;
+use squash::coordinator::{BuildOptions, QpSharding, SquashConfig, SquashSystem};
+use squash::cost::CostLedger;
+use squash::data::ground_truth::{exact_batch, mean_recall};
+use squash::data::profiles::by_name;
+use squash::data::synthetic::generate;
+use squash::data::workload::{generate_workload, Query, WorkloadOptions};
+use squash::data::Dataset;
+use squash::faas::resilience::{BreakerConfig, RetryPolicy};
+use squash::faas::{ChaosConfig, FaasConfig, Platform};
+use squash::runtime::backend::NativeScanEngine;
+use squash::storage::{FileStore, ObjectStore, SimParams};
+
+fn fixture() -> (Dataset, Vec<Query>) {
+    let ds = generate(by_name("test").unwrap(), 3000, 81);
+    let mut queries = generate_workload(
+        &ds,
+        &WorkloadOptions { n_queries: 10, ..Default::default() },
+        82,
+    )
+    .queries;
+    queries.extend(
+        generate_workload(
+            &ds,
+            &WorkloadOptions { n_queries: 6, selectivity: 1.0, ..Default::default() },
+            83,
+        )
+        .queries,
+    );
+    (ds, queries)
+}
+
+/// Resilience knobs of one scenario, over the chaos model.
+#[derive(Clone, Copy)]
+struct Stack {
+    fn_timeout_s: f64,
+    retry: RetryPolicy,
+    breaker: BreakerConfig,
+    deadline_s: Option<f64>,
+}
+
+impl Stack {
+    /// The all-default (pre-resilience) configuration.
+    fn legacy() -> Self {
+        Self {
+            fn_timeout_s: f64::INFINITY,
+            retry: RetryPolicy::legacy(),
+            breaker: BreakerConfig::off(),
+            deadline_s: None,
+        }
+    }
+
+    /// The full protection stack with a generous timeout and no
+    /// deadline: every mechanism armed, none should fire spuriously.
+    fn protected() -> Self {
+        Self {
+            fn_timeout_s: 30.0,
+            retry: RetryPolicy::standard(),
+            breaker: BreakerConfig::on(),
+            deadline_s: None,
+        }
+    }
+}
+
+fn build_sys(ds: &Dataset, chaos: ChaosConfig, shards: QpSharding, stack: Stack) -> SquashSystem {
+    let cfg = SquashConfig {
+        // single-QA tree: deterministic per-function invocation order
+        tree: TreeConfig::new(1, 1),
+        qp_shards: shards,
+        // low threshold so the small fixture actually scatters
+        qp_shard_min_rows: 8,
+        deadline_s: stack.deadline_s,
+        ..Default::default()
+    };
+    let ledger = Arc::new(CostLedger::new());
+    let params = SimParams::instant();
+    let platform = Arc::new(Platform::new(
+        FaasConfig {
+            chaos,
+            fn_timeout_s: stack.fn_timeout_s,
+            retry: stack.retry,
+            breaker: stack.breaker,
+            ..Default::default()
+        },
+        params.clone(),
+        ledger.clone(),
+    ));
+    let s3 = Arc::new(ObjectStore::new(params.clone(), ledger.clone()));
+    let efs = Arc::new(FileStore::new(params, ledger.clone()));
+    SquashSystem::build(
+        ds,
+        &BuildOptions::default(),
+        cfg,
+        platform,
+        s3,
+        efs,
+        Arc::new(NativeScanEngine::new()),
+    )
+}
+
+fn assert_bit_identical(want: &[Vec<(u64, f32)>], got: &[Vec<(u64, f32)>], label: &str) {
+    assert_eq!(want.len(), got.len(), "{label}: result count");
+    for (qi, (a, b)) in want.iter().zip(got).enumerate() {
+        assert_eq!(a.len(), b.len(), "{label}: query {qi} result length");
+        for (rank, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.0, y.0, "{label}: query {qi} rank {rank} id");
+            assert_eq!(
+                x.1.to_bits(),
+                y.1.to_bits(),
+                "{label}: query {qi} rank {rank} distance not bit-identical"
+            );
+        }
+    }
+}
+
+/// Chaos with the three new fault classes at `rate` (hang / crash /
+/// corrupt picked by name; "mixed" arms all three).
+fn fault_chaos(class: &str, rate: f64, seed: u64) -> ChaosConfig {
+    let mut c = ChaosConfig::with_seed(seed);
+    match class {
+        "hang" => c.hang_prob = rate,
+        "crash" => c.crash_prob = rate,
+        "corrupt" => c.corrupt_prob = rate,
+        "mixed" => {
+            c.hang_prob = rate;
+            c.crash_prob = rate;
+            c.corrupt_prob = rate;
+        }
+        other => panic!("unknown fault class {other}"),
+    }
+    c
+}
+
+#[test]
+fn armed_but_unfired_stack_is_byte_identical_to_the_default_system() {
+    let (ds, queries) = fixture();
+    // quiet clock: no chaos at all
+    let legacy = build_sys(&ds, ChaosConfig::off(), QpSharding::Off, Stack::legacy());
+    let want = legacy.run_batch(&queries);
+    let protected = build_sys(&ds, ChaosConfig::off(), QpSharding::Off, Stack::protected());
+    let got = protected.run_batch(&queries);
+    assert_bit_identical(&want.results, &got.results, "quiet clock");
+    assert!(want.degraded.is_empty() && got.degraded.is_empty());
+    assert_eq!(
+        legacy.ctx.ledger.chaos_summary(),
+        protected.ctx.ledger.chaos_summary(),
+        "armed-but-unfired stack must not move a single ledger counter"
+    );
+
+    // seeded heavy tail, zero fault probabilities: the new fault draws
+    // must not perturb the legacy chaos stream end-to-end either
+    let tail = ChaosConfig::with_seed(7);
+    let legacy = build_sys(&ds, tail, QpSharding::Fixed(3), Stack::legacy());
+    let want = legacy.run_batch(&queries);
+    let protected = build_sys(&ds, tail, QpSharding::Fixed(3), Stack::protected());
+    let got = protected.run_batch(&queries);
+    assert_bit_identical(&want.results, &got.results, "seeded tail");
+    assert_eq!(want.wall_s.to_bits(), got.wall_s.to_bits(), "modeled makespan moved");
+    assert_eq!(
+        legacy.ctx.ledger.chaos_summary(),
+        protected.ctx.ledger.chaos_summary(),
+        "zero-probability fault classes perturbed the seeded tail"
+    );
+}
+
+#[test]
+fn recall_survives_every_fault_class_with_and_without_sharding() {
+    let (ds, queries) = fixture();
+    let truth = exact_batch(&ds, &queries, 2);
+    let clean = build_sys(&ds, ChaosConfig::off(), QpSharding::Off, Stack::legacy());
+    let clean_recall = mean_recall(&truth, &clean.run_batch(&queries).results, 10);
+    assert!(clean_recall > 0.5, "fixture clean recall {clean_recall}");
+
+    let stack = Stack { fn_timeout_s: 1.5, ..Stack::protected() };
+    for class in ["hang", "crash", "corrupt", "mixed"] {
+        for shards in [QpSharding::Off, QpSharding::Fixed(3)] {
+            let label = format!("class={class} shards={shards:?}");
+            let sys = build_sys(&ds, fault_chaos(class, 0.05, 7), shards, stack);
+            let out = sys.run_batch(&queries);
+            assert_eq!(out.results.len(), queries.len(), "{label}: lost result slots");
+            for &(qi, cov) in &out.degraded {
+                assert!(qi < queries.len(), "{label}: degraded index out of range");
+                assert!(
+                    (0.0..1.0).contains(&cov),
+                    "{label}: coverage {cov} outside [0, 1)"
+                );
+            }
+            let recall = mean_recall(&truth, &out.results, 10);
+            assert!(
+                recall >= clean_recall - 0.25,
+                "{label}: recall {recall} collapsed (clean {clean_recall})"
+            );
+            // with a 4-attempt budget at 5% fault rate, most queries
+            // must still come back at full coverage
+            assert!(
+                out.degraded.len() * 2 <= queries.len(),
+                "{label}: {} of {} queries degraded",
+                out.degraded.len(),
+                queries.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn total_failure_is_a_zero_coverage_brownout_and_a_strict_error() {
+    let (ds, queries) = fixture();
+    let chaos = ChaosConfig { failure_prob: 1.0, ..ChaosConfig::with_seed(11) };
+    let stack = Stack { deadline_s: Some(60.0), ..Stack::protected() };
+    let sys = build_sys(&ds, chaos, QpSharding::Off, stack);
+    let out = sys.run_batch(&queries);
+    assert_eq!(out.degraded.len(), queries.len(), "every query must be tagged degraded");
+    for (expect_qi, &(qi, cov)) in out.degraded.iter().enumerate() {
+        assert_eq!(qi, expect_qi, "degraded tags must be sorted and complete");
+        assert_eq!(cov, 0.0, "a fully failed request has zero coverage");
+    }
+    for res in &out.results {
+        assert!(res.is_empty(), "no result rows can survive total failure");
+    }
+    assert!(sys.ctx.ledger.retries.load(Ordering::Relaxed) > 0);
+    assert!(sys.ctx.ledger.degraded_queries.load(Ordering::Relaxed) >= queries.len() as u64);
+
+    let err = sys.run_batch_strict(&queries).expect_err("strict mode must reject a brownout");
+    assert!(err.contains("degraded"), "strict error must name the degradation: {err}");
+}
+
+#[test]
+fn an_expired_deadline_abandons_the_batch_instead_of_running_it() {
+    let (ds, queries) = fixture();
+    // 1 ms end-to-end budget: the CO's cold start alone overruns it
+    let stack = Stack { deadline_s: Some(0.001), ..Stack::protected() };
+    let sys = build_sys(&ds, ChaosConfig::off(), QpSharding::Off, stack);
+    let out = sys.run_batch(&queries);
+    assert_eq!(out.degraded.len(), queries.len());
+    assert!(out.degraded.iter().all(|&(_, cov)| cov == 0.0));
+    assert!(
+        sys.ctx.ledger.timeouts.load(Ordering::Relaxed) > 0,
+        "the deadline must surface as a timeout, not a silent skip"
+    );
+}
+
+#[test]
+fn same_seed_replays_the_fault_lifecycle_byte_identically() {
+    let (ds, queries) = fixture();
+    let run = || {
+        let stack = Stack { fn_timeout_s: 1.5, ..Stack::protected() };
+        let sys = build_sys(&ds, fault_chaos("mixed", 0.08, 7), QpSharding::Fixed(3), stack);
+        let out = sys.run_batch(&queries);
+        (sys.ctx.ledger.chaos_summary(), out.degraded)
+    };
+    let (first, degraded_a) = run();
+    let (second, degraded_b) = run();
+    assert_eq!(
+        first, second,
+        "two runs with the same chaos seed must replay identical resilience ledgers"
+    );
+    assert_eq!(degraded_a, degraded_b, "degraded tags must replay identically");
+    // emit the digest so CI can diff two independent test processes
+    let path = std::env::var("SQUASH_RESILIENCE_LEDGER_OUT")
+        .unwrap_or_else(|_| "resilience_ledger_summary.txt".to_string());
+    std::fs::write(&path, &first).expect("write resilience ledger summary");
+}
