@@ -1,0 +1,72 @@
+//! Keep-alive policy sweep: the cold-start-rate vs idle-GB-s Pareto.
+//! Every policy — never-expire, each fixed TTL, the hybrid histogram —
+//! replays the same seeded open-loop arrival stream over a capped
+//! fleet on the virtual clock, so the only thing that varies between
+//! points is how long released containers stay warm and who pays for
+//! the warmth nobody consumed. Results land in `BENCH_keepalive.json`
+//! (schema: `squash::faas::keepalive` module docs). Fully seeded: the
+//! same invocation replays byte-identical curves.
+//!
+//! Env knobs (CI smoke uses small values): SQUASH_KEEPALIVE_N (dataset
+//! rows), SQUASH_KEEPALIVE_QUERIES (queries per policy),
+//! SQUASH_KEEPALIVE_QPS (offered rate), SQUASH_KEEPALIVE_TTLS
+//! (comma-separated fixed-TTL points, seconds), SQUASH_KEEPALIVE_OUT
+//! (output path).
+
+use squash::bench::keepalive::{dominates, point_header, point_line, run_sweep, KeepaliveOptions};
+use squash::bench::EnvOptions;
+
+fn env_or(name: &str, default: &str) -> String {
+    std::env::var(name).unwrap_or_else(|_| default.to_string())
+}
+
+fn main() {
+    let n: usize = env_or("SQUASH_KEEPALIVE_N", "3000").parse().expect("SQUASH_KEEPALIVE_N");
+    let n_queries: usize =
+        env_or("SQUASH_KEEPALIVE_QUERIES", "96").parse().expect("SQUASH_KEEPALIVE_QUERIES");
+    let qps: f64 = env_or("SQUASH_KEEPALIVE_QPS", "10").parse().expect("SQUASH_KEEPALIVE_QPS");
+    let ttls: Vec<f64> = env_or("SQUASH_KEEPALIVE_TTLS", "0.1,0.5,2,10")
+        .split(',')
+        .map(|s| s.trim().parse().expect("SQUASH_KEEPALIVE_TTLS"))
+        .collect();
+    let out = env_or("SQUASH_KEEPALIVE_OUT", "BENCH_keepalive.json");
+
+    let base = EnvOptions {
+        profile: "test",
+        n,
+        n_queries,
+        time_scale: 0.0, // the sweep measures the virtual clock
+        ..Default::default()
+    };
+    let opts = KeepaliveOptions { qps, ttls, ..Default::default() };
+
+    println!(
+        "=== keep-alive policy sweep ({} qps, fleet cap {}, poisson arrivals) ===",
+        opts.qps, opts.max_containers
+    );
+    println!("{} queries per policy; TTL points {:?}\n", n_queries, opts.ttls);
+    let sweep = run_sweep(&base, &opts);
+    println!("{}", point_header());
+    for p in &sweep.points {
+        println!("{}", point_line(p));
+    }
+
+    // the headline: the learned window vs every fixed TTL on the Pareto
+    if let Some(hybrid) = sweep.points.iter().find(|p| p.policy == "hybrid") {
+        let beaten: Vec<&str> = sweep
+            .points
+            .iter()
+            .filter(|p| p.policy.starts_with("ttl:") && dominates(hybrid, p))
+            .map(|p| p.policy.as_str())
+            .collect();
+        println!(
+            "\nhybrid: cold rate {:.4}, idle {:.4} GB-s — dominates [{}]",
+            hybrid.cold_rate,
+            hybrid.idle_gb_s,
+            beaten.join(", ")
+        );
+    }
+
+    std::fs::write(&out, sweep.json.to_string_pretty()).expect("write BENCH_keepalive.json");
+    println!("wrote {out}");
+}

@@ -1,0 +1,312 @@
+//! Keep-alive policy sweep behind `BENCH_keepalive.json`: the
+//! cold-start-rate vs. idle-GB-s Pareto per policy under the open-loop
+//! load engine.
+//!
+//! Each policy point reuses [`crate::bench::load`] wholesale — the same
+//! seeded arrival process, fusion windowing and capped fleet — on a
+//! fresh environment whose [`crate::faas::FaasConfig::keepalive`] knob
+//! is the only thing that varies, then settles the fleet's idle tails
+//! via [`crate::faas::Platform::settle_idle`] so end-of-run warmth is
+//! billed like mid-run warmth. The two Pareto axes per point:
+//!
+//! * `cold_rate` = cold starts / invocations — what keep-alive buys,
+//! * `idle_gb_s` — wasted warmth the policy paid for (expired windows
+//!   and settled tails; warmth a hit consumes is free on every policy).
+//!
+//! A policy point `a` *dominates* `b` when it is no worse on both axes
+//! and strictly better on at least one ([`dominates`]); the sweep's
+//! headline claim — pinned by `tests/keepalive.rs` — is that the
+//! hybrid-histogram policy dominates at least one fixed-TTL point.
+//! Everything is measured on the virtual clock from seeded draws, so
+//! the whole sweep replays byte-identically: same seed, same JSON. The
+//! emitted document schema is specified in the
+//! [`crate::faas::keepalive`] module docs.
+
+use std::sync::atomic::Ordering;
+
+use crate::bench::load::{self, ArrivalProfile, LoadOptions};
+use crate::bench::{Env, EnvOptions};
+use crate::faas::keepalive::{HybridConfig, KeepAliveConfig};
+use crate::util::json::Json;
+
+/// Keep-alive sweep knobs on top of an [`EnvOptions`] environment.
+#[derive(Clone, Debug)]
+pub struct KeepaliveOptions {
+    /// offered QPS of the (single) load point each policy runs
+    pub qps: f64,
+    /// fixed-TTL policy points to sweep, seconds
+    pub ttls: Vec<f64>,
+    pub arrival: ArrivalProfile,
+    /// fleet cap per function (0 = uncapped)
+    pub max_containers: usize,
+    /// fusion window in modeled milliseconds (0 = fusion off)
+    pub fuse_window_ms: f64,
+    /// arrival-process seed (independent of the dataset seed)
+    pub seed: u64,
+}
+
+impl Default for KeepaliveOptions {
+    fn default() -> Self {
+        Self {
+            qps: 10.0,
+            ttls: vec![0.1, 0.5, 2.0, 10.0],
+            arrival: ArrivalProfile::Poisson,
+            max_containers: 4,
+            fuse_window_ms: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+/// One policy's Pareto point (see the module docs for the axes).
+#[derive(Clone, Debug)]
+pub struct KeepalivePoint {
+    pub policy: String,
+    pub invocations: u64,
+    pub cold_starts: u64,
+    /// cold starts / invocations — the latency axis of the Pareto
+    pub cold_rate: f64,
+    /// billed wasted warmth — the cost axis of the Pareto
+    pub idle_gb_s: f64,
+    pub expired: u64,
+    pub prewarmed: u64,
+    pub prewarm_hits: u64,
+    pub hedges_skipped_cold: u64,
+    pub queued: u64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub modeled_gb_s: f64,
+}
+
+impl KeepalivePoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::str(&self.policy)),
+            ("invocations", Json::num(self.invocations as f64)),
+            ("cold_starts", Json::num(self.cold_starts as f64)),
+            ("cold_rate", Json::num(self.cold_rate)),
+            ("idle_gb_s", Json::num(self.idle_gb_s)),
+            ("expired", Json::num(self.expired as f64)),
+            ("prewarmed", Json::num(self.prewarmed as f64)),
+            ("prewarm_hits", Json::num(self.prewarm_hits as f64)),
+            ("hedges_skipped_cold", Json::num(self.hedges_skipped_cold as f64)),
+            ("queued", Json::num(self.queued as f64)),
+            ("p50_s", Json::num(self.p50_s)),
+            ("p99_s", Json::num(self.p99_s)),
+            ("modeled_gb_s", Json::num(self.modeled_gb_s)),
+        ])
+    }
+}
+
+/// Does point `a` Pareto-dominate point `b` on (cold_rate, idle_gb_s):
+/// no worse on both axes, strictly better on at least one?
+pub fn dominates(a: &KeepalivePoint, b: &KeepalivePoint) -> bool {
+    a.cold_rate <= b.cold_rate
+        && a.idle_gb_s <= b.idle_gb_s
+        && (a.cold_rate < b.cold_rate || a.idle_gb_s < b.idle_gb_s)
+}
+
+/// Deterministic ledger snapshot (counters + virtual-clock quantities
+/// only) so each point reports run deltas, not build-time residue.
+#[derive(Clone, Copy, Debug, Default)]
+struct KaSnapshot {
+    invocations: u64,
+    cold_starts: u64,
+    idle_gb_s: f64,
+    expired: u64,
+    prewarmed: u64,
+    prewarm_hits: u64,
+    hedges_skipped_cold: u64,
+    queued: u64,
+    modeled_mbs: f64,
+}
+
+impl KaSnapshot {
+    fn take(env: &Env) -> Self {
+        let l = &env.ledger;
+        Self {
+            invocations: l.total_invocations(),
+            cold_starts: l.cold_starts.load(Ordering::Relaxed),
+            idle_gb_s: l.idle_gb_s(),
+            expired: l.expired_containers.load(Ordering::Relaxed),
+            prewarmed: l.prewarmed_containers.load(Ordering::Relaxed),
+            prewarm_hits: l.prewarm_cold_starts_avoided.load(Ordering::Relaxed),
+            hedges_skipped_cold: l.hedges_skipped_cold.load(Ordering::Relaxed),
+            queued: l.queued_invocations.load(Ordering::Relaxed),
+            modeled_mbs: l.modeled_mb_seconds_total(),
+        }
+    }
+}
+
+/// Run the load engine once under `policy` and report its Pareto point:
+/// fresh environment, one offered-QPS point, end-of-run idle settlement
+/// at the last completion instant.
+pub fn run_policy_point(
+    base: &EnvOptions,
+    opts: &KeepaliveOptions,
+    policy: KeepAliveConfig,
+) -> KeepalivePoint {
+    let mut env_opts = base.clone();
+    env_opts.virtual_pools = true;
+    env_opts.max_containers = opts.max_containers;
+    env_opts.keepalive = policy.clone();
+    let mut env = Env::setup(&env_opts);
+    load::configure_for_load(&mut env);
+    let lo = LoadOptions {
+        qps: vec![opts.qps],
+        fuse_window_ms: opts.fuse_window_ms,
+        max_containers: opts.max_containers,
+        arrival: opts.arrival,
+        seed: opts.seed,
+    };
+    let before = KaSnapshot::take(&env);
+    let run = load::run_point(&env, opts.qps, &lo);
+    // the run ends at the latest completion (serial dispatch can leave
+    // the clock mid-timeline): settle the still-warm tails there
+    let end = run.outcomes.iter().map(|o| o.completion_s).fold(0.0, f64::max);
+    env.platform.settle_idle(end);
+    let after = KaSnapshot::take(&env);
+    let invocations = after.invocations - before.invocations;
+    let cold_starts = after.cold_starts - before.cold_starts;
+    KeepalivePoint {
+        policy: policy.label(),
+        invocations,
+        cold_starts,
+        cold_rate: cold_starts as f64 / invocations.max(1) as f64,
+        idle_gb_s: after.idle_gb_s - before.idle_gb_s,
+        expired: after.expired - before.expired,
+        prewarmed: after.prewarmed - before.prewarmed,
+        prewarm_hits: after.prewarm_hits - before.prewarm_hits,
+        hedges_skipped_cold: after.hedges_skipped_cold - before.hedges_skipped_cold,
+        queued: after.queued - before.queued,
+        p50_s: run.stats.p50_ms / 1e3,
+        p99_s: run.stats.p99_ms / 1e3,
+        modeled_gb_s: (after.modeled_mbs - before.modeled_mbs) / 1024.0,
+    }
+}
+
+/// The policy list one sweep covers: `never`, each fixed TTL, `hybrid`.
+pub fn sweep_policies(opts: &KeepaliveOptions) -> Vec<KeepAliveConfig> {
+    let mut policies = vec![KeepAliveConfig::NeverExpire];
+    policies.extend(opts.ttls.iter().map(|&t| KeepAliveConfig::FixedTtl { keep_alive_s: t }));
+    policies.push(KeepAliveConfig::Hybrid(HybridConfig::default()));
+    policies
+}
+
+/// The executed sweep: every policy's point plus the assembled
+/// `BENCH_keepalive.json` document.
+pub struct KeepaliveSweep {
+    pub points: Vec<KeepalivePoint>,
+    pub json: Json,
+}
+
+/// Sweep policy × TTL under one arrival profile (see the
+/// [`crate::faas::keepalive`] module docs for the emitted schema).
+pub fn run_sweep(base: &EnvOptions, opts: &KeepaliveOptions) -> KeepaliveSweep {
+    let points: Vec<KeepalivePoint> = sweep_policies(opts)
+        .into_iter()
+        .map(|policy| run_policy_point(base, opts, policy))
+        .collect();
+    let json = Json::obj(vec![
+        ("suite", Json::str("keepalive")),
+        ("seed", Json::num(opts.seed as f64)),
+        ("qps", Json::num(opts.qps)),
+        ("queries", Json::num(base.n_queries as f64)),
+        ("profile", Json::str(base.profile)),
+        ("arrival", Json::str(opts.arrival.name())),
+        ("max_containers", Json::num(opts.max_containers as f64)),
+        ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+    ]);
+    KeepaliveSweep { points, json }
+}
+
+/// Fixed-width table line for one policy point (CLI / bench output).
+pub fn point_line(p: &KeepalivePoint) -> String {
+    format!(
+        "{:<10} {:>7} {:>6} {:>9.4} {:>11.4} {:>7} {:>8} {:>6} {:>9.4} {:>9.4} {:>11.4}",
+        p.policy,
+        p.invocations,
+        p.cold_starts,
+        p.cold_rate,
+        p.idle_gb_s,
+        p.expired,
+        p.prewarmed,
+        p.queued,
+        p.p50_s,
+        p.p99_s,
+        p.modeled_gb_s,
+    )
+}
+
+/// Header matching [`point_line`].
+pub fn point_header() -> String {
+    format!(
+        "{:<10} {:>7} {:>6} {:>9} {:>11} {:>7} {:>8} {:>6} {:>9} {:>9} {:>11}",
+        "policy", "invoc", "cold", "coldrate", "idle_gb_s", "expired", "prewarm", "queue",
+        "p50(s)", "p99(s)", "gb_s"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_base() -> EnvOptions {
+        EnvOptions {
+            profile: "test",
+            n: 1200,
+            n_queries: 12,
+            time_scale: 0.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn never_policy_point_bills_no_idle() {
+        let opts = KeepaliveOptions { qps: 50.0, ..Default::default() };
+        let p = run_policy_point(&small_base(), &opts, KeepAliveConfig::NeverExpire);
+        assert_eq!(p.policy, "never");
+        assert!(p.invocations > 0);
+        assert!(p.cold_starts > 0, "a fresh fleet must cold start");
+        assert_eq!(p.idle_gb_s, 0.0, "disabled engine never bills idle");
+        assert_eq!(p.expired, 0);
+        assert_eq!(p.prewarmed, 0);
+    }
+
+    #[test]
+    fn tiny_ttl_expires_and_bills_idle() {
+        let opts = KeepaliveOptions { qps: 2.0, ..Default::default() };
+        let never = run_policy_point(&small_base(), &opts, KeepAliveConfig::NeverExpire);
+        let ttl =
+            run_policy_point(&small_base(), &opts, KeepAliveConfig::FixedTtl { keep_alive_s: 0.01 });
+        // 2 QPS leaves ~0.5 s gaps: a 10 ms TTL expires nearly every cycle
+        assert!(ttl.expired > 0, "tiny TTL must expire containers");
+        assert!(ttl.idle_gb_s > 0.0, "expiries bill their windows");
+        assert!(
+            ttl.cold_starts > never.cold_starts,
+            "expiring warmth must cost cold starts: {} vs {}",
+            ttl.cold_starts,
+            never.cold_starts
+        );
+        // same arrivals either way: the answer path is policy-independent
+        assert_eq!(ttl.invocations, never.invocations);
+    }
+
+    #[test]
+    fn sweep_replays_byte_identically() {
+        let base = small_base();
+        let opts = KeepaliveOptions {
+            qps: 20.0,
+            ttls: vec![0.05],
+            ..Default::default()
+        };
+        let a = run_sweep(&base, &opts);
+        let b = run_sweep(&base, &opts);
+        assert_eq!(a.points.len(), 3, "never + 1 TTL + hybrid");
+        assert_eq!(
+            a.json.to_string(),
+            b.json.to_string(),
+            "same seed must replay the same sweep"
+        );
+    }
+}

@@ -4,6 +4,7 @@
 //! engine (seeded arrivals, fusion windows, QPS sweeps) lives in
 //! [`load`].
 
+pub mod keepalive;
 pub mod load;
 pub mod resilience;
 
@@ -61,6 +62,9 @@ pub struct EnvOptions {
     pub breaker: crate::faas::resilience::BreakerConfig,
     /// end-to-end request deadline in modeled seconds (None = none)
     pub deadline_s: Option<f64>,
+    /// container keep-alive / prewarm policy (`NeverExpire` = the
+    /// pre-policy platform; `--keepalive never|ttl:<s>|hybrid`)
+    pub keepalive: crate::faas::keepalive::KeepAliveConfig,
     pub seed: u64,
 }
 
@@ -89,6 +93,8 @@ impl Default for EnvOptions {
             retry: crate::faas::resilience::RetryPolicy::legacy(),
             breaker: crate::faas::resilience::BreakerConfig::off(),
             deadline_s: None,
+            // honours SQUASH_KEEPALIVE (the CI knob for whole-suite runs)
+            keepalive: crate::faas::keepalive::KeepAliveConfig::from_env(),
             seed: 42,
         }
     }
@@ -121,6 +127,7 @@ impl Env {
                 fn_timeout_s: opts.fn_timeout_s,
                 retry: opts.retry,
                 breaker: opts.breaker,
+                keepalive: opts.keepalive.clone(),
                 ..Default::default()
             },
             params.clone(),

@@ -512,6 +512,22 @@ fn scatter_qp(
 /// `(unhedged, hedged)` makespan pair; with hedging off the two are
 /// equal. Returns the responses plus the hedged makespan so the caller
 /// can advance its virtual clock to the scatter's completion.
+///
+/// # Hedge gating (warmth + breaker)
+///
+/// Before a duplicate is actually launched, the join consults the
+/// platform about the hedge pool's predicted state at the fire
+/// instant. A hedge is *skipped* — counted under the ledger's
+/// `hedges_skipped_cold`, responses and the unhedged makespan left
+/// untouched — when (a) the hedge pool's circuit breaker is open
+/// (the duplicate would fast-fail without ever delivering), or
+/// (b) the keep-alive policy predicts the pool cold at fire time and
+/// the cold-start-inclusive modeled completion (fire instant +
+/// cold-start + the fastest sibling's duration as an optimistic
+/// service estimate) cannot beat the primary anyway. Both predicates
+/// are degenerate at the defaults (breakers off, keep-alive
+/// `NeverExpire` predicts every pool warm), so the gate is inert
+/// unless those subsystems are opted into.
 fn hedged_join(
     ctx: &Arc<SystemCtx>,
     shard_reqs: &[QpShardRequest],
@@ -542,6 +558,27 @@ fn hedged_join(
             let t_fire = percentile_sorted(&others, q * 100.0);
             let primary_ok = responses[straggler].is_some();
             if unhedged > t_fire || !primary_ok {
+                // warmth + breaker gate (see the doc comment above):
+                // predict the hedge pool's state at the fire instant
+                // before paying for the duplicate
+                let sr = &shard_reqs[straggler];
+                let hedge_fn = format!(
+                    "squash-processor-{}-shard-{}of{}-hedge",
+                    sr.partition, sr.shard, sr.n_shards
+                );
+                let breaker_open = ctx.platform.breaker_is_open(&hedge_fn);
+                let cold_no_win = primary_ok
+                    && ctx.platform.keepalive_enabled()
+                    && !ctx.platform.pool_predicted_warm(&hedge_fn, virtual_now() + t_fire)
+                    && t_fire
+                        + ctx.platform.config.cold_start_s
+                        + others.first().copied().unwrap_or(0.0)
+                        >= unhedged;
+                if breaker_open || cold_no_win {
+                    ctx.ledger.record_hedge_skipped_cold();
+                    ctx.ledger.record_scatter_makespan(unhedged, hedged);
+                    return (responses, hedged);
+                }
                 let (hedge_resp, d_h) =
                     qp::invoke_qp_shard(ctx, &shard_reqs[straggler], true);
                 if let (Some(h), Some(p)) = (&hedge_resp, &responses[straggler]) {

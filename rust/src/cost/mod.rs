@@ -102,6 +102,23 @@ pub struct CostLedger {
     pub breaker_fast_fails: AtomicU64,
     /// queries answered with partial coverage (degraded results)
     pub degraded_queries: AtomicU64,
+    // keep-alive / prewarm policy engine
+    /// GB-seconds of keep-alive warmth the policy paid for and nobody
+    /// used (expired windows and end-of-run tails; warmth a hit
+    /// consumes is free on every policy), stored as integer micro-GB-s
+    idle_gb_micros: AtomicU64,
+    /// containers reclaimed by the keep-alive sweep (DRE evicted)
+    pub expired_containers: AtomicU64,
+    /// policy-requested prewarms that actually executed (each billed as
+    /// a cold-start-length modeled warm-up)
+    pub prewarmed_containers: AtomicU64,
+    /// prewarmed containers that a request then hit warm — cold starts
+    /// the prewarm dodged
+    pub prewarm_cold_starts_avoided: AtomicU64,
+    /// hedges skipped because the hedge pool was predicted cold (or its
+    /// breaker open) and the cold-start-inclusive modeled completion
+    /// could not beat the primary
+    pub hedges_skipped_cold: AtomicU64,
     /// per-scatter `(unhedged, hedged)` modeled makespans — the virtual
     /// completion time of the slowest shard with and without the hedge
     scatter_makespans: Mutex<Vec<(f64, f64)>>,
@@ -261,6 +278,41 @@ impl CostLedger {
         self.degraded_queries.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// `gb_s` GB-seconds of unused keep-alive warmth billed by the
+    /// policy engine (see the `idle_gb_micros` field docs).
+    pub fn record_idle(&self, gb_s: f64) {
+        self.idle_gb_micros.fetch_add((gb_s * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Total billed idle GB-seconds — the cost axis of the keep-alive
+    /// Pareto.
+    pub fn idle_gb_s(&self) -> f64 {
+        self.idle_gb_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// One container reclaimed by the keep-alive sweep.
+    pub fn record_expired_container(&self) {
+        self.expired_containers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One policy-requested prewarm executed.
+    pub fn record_prewarm(&self) {
+        self.prewarmed_containers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request served warm by a prewarmed container — a cold start
+    /// the prewarm avoided.
+    pub fn record_prewarm_hit(&self) {
+        self.prewarm_cold_starts_avoided.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One hedge skipped because its pool was predicted cold or
+    /// breaker-open and the modeled completion could not beat the
+    /// primary.
+    pub fn record_hedge_skipped_cold(&self) {
+        self.hedges_skipped_cold.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// One hedge fired: a duplicate invocation whose full modeled
     /// duration `wasted_s` is billed win or lose (cancel-on-first-response
     /// only ends the *join*; Lambda keeps billing both copies).
@@ -331,6 +383,8 @@ impl CostLedger {
              queued={} queue_delay_s={:.6}\n\
              resilience retries={} timeouts={} crashes={} corruptions={} backoff_wait_s={:.6}\n\
              breaker opens={} fast_fails={} degraded_queries={}\n\
+             keepalive idle_gb_s={:.6} expired={} prewarmed={} prewarm_hits={} \
+             hedges_skipped_cold={}\n\
              modeled_mbs co={:.6} qa={:.6} qp={:.6}\n\
              storage s3_gets={} s3_bytes={} efs_reads={} efs_bytes={} payload_bytes={}\n\
              scatters={} makespan_unhedged p50={:.9} p99={:.9}\n\
@@ -353,6 +407,11 @@ impl CostLedger {
             self.breaker_open_events.load(Ordering::Relaxed),
             self.breaker_fast_fails.load(Ordering::Relaxed),
             self.degraded_queries.load(Ordering::Relaxed),
+            self.idle_gb_s(),
+            self.expired_containers.load(Ordering::Relaxed),
+            self.prewarmed_containers.load(Ordering::Relaxed),
+            self.prewarm_cold_starts_avoided.load(Ordering::Relaxed),
+            self.hedges_skipped_cold.load(Ordering::Relaxed),
             self.modeled_mb_seconds(Role::Coordinator),
             self.modeled_mb_seconds(Role::QueryAllocator),
             self.modeled_mb_seconds(Role::QueryProcessor),
@@ -618,6 +677,34 @@ mod tests {
             "resilience counters missing from the digest:\n{s}"
         );
         assert!(s.contains("breaker opens=1 fast_fails=1 degraded_queries=1"), "{s}");
+    }
+
+    #[test]
+    fn keepalive_counters_accumulate_and_digest() {
+        let l = CostLedger::new();
+        l.record_idle(0.5);
+        l.record_idle(0.75);
+        l.record_expired_container();
+        l.record_prewarm();
+        l.record_prewarm();
+        l.record_prewarm_hit();
+        l.record_hedge_skipped_cold();
+        assert!((l.idle_gb_s() - 1.25).abs() < 1e-9);
+        assert_eq!(l.expired_containers.load(Ordering::Relaxed), 1);
+        assert_eq!(l.prewarmed_containers.load(Ordering::Relaxed), 2);
+        assert_eq!(l.prewarm_cold_starts_avoided.load(Ordering::Relaxed), 1);
+        assert_eq!(l.hedges_skipped_cold.load(Ordering::Relaxed), 1);
+        let s = l.chaos_summary();
+        assert!(
+            s.contains(
+                "keepalive idle_gb_s=1.250000 expired=1 prewarmed=2 prewarm_hits=1 \
+                 hedges_skipped_cold=1"
+            ),
+            "keep-alive counters missing from the digest:\n{s}"
+        );
+        // a fresh ledger digests the buckets at zero (inert default)
+        let z = CostLedger::new().chaos_summary();
+        assert!(z.contains("keepalive idle_gb_s=0.000000 expired=0 prewarmed=0"), "{z}");
     }
 
     #[test]

@@ -1,0 +1,613 @@
+//! Keep-alive / prewarm policy engine: when does an idle container die,
+//! and when is it proactively resurrected?
+//!
+//! The seed platform kept every released container warm forever, so
+//! container retention — the mechanism Data Retention Exploitation
+//! (paper §3.2) monetizes — was free and invisible: no cold-start-rate
+//! vs. idle-cost trade-off existed to measure. This module makes
+//! retention a *policy*, evaluated on the shared virtual clock
+//! ([`crate::storage::virtual_now`]), with the cost side billed to the
+//! ledger.
+//!
+//! # Policy lifecycle
+//!
+//! Every policy answers one question per idle cycle. When a container is
+//! released at virtual time `r`, [`KeepAlivePolicy::window`] returns an
+//! [`IdleWindow`] `{prewarm_s, keep_alive_s}` of offsets from `r`:
+//!
+//! * the container is **warm** (reusable) during
+//!   `[r + prewarm_s, r + keep_alive_s]`,
+//! * with `prewarm_s > 0` the sandbox is torn down at `r` and
+//!   *re-provisioned* at `r + prewarm_s` — a **prewarm**. The rebuilt
+//!   sandbox starts empty: its DRE-retained segment data is gone, so the
+//!   next invocation re-reads (and re-bills) its segments even though it
+//!   dodges the cold-start latency,
+//! * past `r + keep_alive_s` the container is **expired**: the platform
+//!   sweeps it before each pool pick, drops it (evicting its
+//!   [`crate::faas::dre::DreStore`]), and bills the reclaimed window.
+//!
+//! When the next invocation of the function arrives, the platform feeds
+//! the *observed* idle time back via [`KeepAlivePolicy::observe_idle`] —
+//! the learning signal for the histogram policy.
+//!
+//! # Prewarm / idle billing
+//!
+//! Lambda does not charge for organic warmth between invocations, so a
+//! keep-alive window that a warm hit consumes is free — exactly the
+//! pre-policy behavior. What the policy engine *does* bill, to the new
+//! ledger buckets:
+//!
+//! * `idle_gb_s` — GB-seconds of warmth the policy paid for and nobody
+//!   used: the full `[warm-from, keep-alive]` span of every *expired*
+//!   container, and (via [`crate::faas::Platform::settle_idle`]) the
+//!   accrued warm span of containers still pooled when a run ends.
+//!   Warmth that a hit consumes is free on every policy — prewarmed or
+//!   organic — so the bucket is a pure waste metric and the Pareto axes
+//!   stay comparable across policies,
+//! * `prewarmed_containers` — prewarms that actually executed, each
+//!   billed as a cold-start-length modeled warm-up at the function's
+//!   memory,
+//! * `prewarm_cold_starts_avoided` — prewarmed containers that a request
+//!   then hit warm,
+//! * `expired_containers` — containers reclaimed by the sweep.
+//!
+//! An un-fired prewarm (the next request arrived before `prewarm_s`
+//! elapsed) is cancelled and costs nothing.
+//!
+//! # Policies
+//!
+//! * [`NeverExpire`] — the default; byte-identical to the pre-policy
+//!   platform (no sweeps, no stamps, no billing).
+//! * [`FixedTtl`] — warm for a constant `keep_alive_s` after release,
+//!   never prewarms. The classic provider policy.
+//! * [`HybridHistogram`] — the "Serverless in the Wild" policy: a
+//!   per-function histogram of observed idle times predicts a
+//!   `[pre-warm, keep-alive]` window per idle cycle (head-quantile minus
+//!   a margin, tail-quantile plus a margin, clamped to bracket the
+//!   histogram's mode bin). Out-of-bounds idle times are tracked by
+//!   head/tail counters; when the head or tail OOB share exceeds
+//!   `oob_fraction`, when fewer than `min_samples` cycles have been
+//!   seen, or when the in-bin distribution is too dispersed
+//!   (coefficient of variation above `cv_threshold`), the policy falls
+//!   back to a plain fixed-TTL window (`fallback_ttl_s`, no prewarm).
+//!
+//! # `BENCH_keepalive.json` schema
+//!
+//! [`crate::bench::keepalive`] sweeps policy × TTL × arrival profile and
+//! writes one Pareto point per policy:
+//!
+//! ```json
+//! {
+//!   "suite": "keepalive",
+//!   "seed": 42, "qps": 10.0, "queries": 96, "profile": "poisson",
+//!   "points": [
+//!     {"policy": "ttl:0.5", "invocations": 0, "cold_starts": 0,
+//!      "cold_rate": 0.0, "idle_gb_s": 0.0, "expired": 0,
+//!      "prewarmed": 0, "prewarm_hits": 0, "hedges_skipped_cold": 0,
+//!      "queued": 0, "p50_s": 0.0, "p99_s": 0.0, "modeled_gb_s": 0.0}
+//!   ]
+//! }
+//! ```
+//!
+//! `cold_rate` is `cold_starts / invocations`, `idle_gb_s` the billed
+//! idle bucket — the two Pareto axes. Every field is a modeled
+//! (virtual-clock) quantity, so the whole sweep replays byte-identically
+//! by seed.
+
+use std::collections::HashMap;
+
+/// One idle cycle's retention plan, as offsets from the release time.
+/// The container is warm during `[release + prewarm_s,
+/// release + keep_alive_s]`; with `prewarm_s > 0` it is dead (torn down,
+/// DRE evicted) before that.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IdleWindow {
+    /// seconds after release at which the sandbox is (re)provisioned;
+    /// 0 = it simply stays warm from the release instant
+    pub prewarm_s: f64,
+    /// seconds after release at which the sandbox is reclaimed
+    pub keep_alive_s: f64,
+}
+
+impl IdleWindow {
+    /// Warm forever from the release instant (the pre-policy behavior).
+    pub fn never_expire() -> Self {
+        Self { prewarm_s: 0.0, keep_alive_s: f64::INFINITY }
+    }
+
+    /// Warm for `ttl_s` from the release instant, no prewarm.
+    pub fn ttl(ttl_s: f64) -> Self {
+        Self { prewarm_s: 0.0, keep_alive_s: ttl_s.max(0.0) }
+    }
+}
+
+/// A keep-alive policy: pure state machine on the virtual clock. The
+/// platform calls [`KeepAlivePolicy::window`] once per container release
+/// and [`KeepAlivePolicy::observe_idle`] once per observed idle cycle
+/// (warm hit or expiry of a previously released container). Both are
+/// keyed by function name, so per-function state never bleeds across
+/// pools — identical per-function event streams yield identical windows
+/// regardless of how other functions' streams interleave.
+pub trait KeepAlivePolicy: Send {
+    /// Plan the idle cycle starting now for `function` released at
+    /// virtual time `now`.
+    fn window(&mut self, function: &str, now: f64) -> IdleWindow;
+
+    /// Feed back an observed idle duration for `function` (seconds from
+    /// release to the next arrival that resolved the cycle).
+    fn observe_idle(&mut self, function: &str, idle_s: f64);
+
+    /// Short policy label for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Today's behavior: containers never expire. [`KeepAliveConfig`] treats
+/// this as "policy disabled" — the platform takes the pre-policy fast
+/// path and this impl exists for completeness/diagnostics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NeverExpire;
+
+impl KeepAlivePolicy for NeverExpire {
+    fn window(&mut self, _function: &str, _now: f64) -> IdleWindow {
+        IdleWindow::never_expire()
+    }
+    fn observe_idle(&mut self, _function: &str, _idle_s: f64) {}
+    fn name(&self) -> &'static str {
+        "never"
+    }
+}
+
+/// Constant keep-alive after every release; no prewarm.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedTtl {
+    pub keep_alive_s: f64,
+}
+
+impl KeepAlivePolicy for FixedTtl {
+    fn window(&mut self, _function: &str, _now: f64) -> IdleWindow {
+        IdleWindow::ttl(self.keep_alive_s)
+    }
+    fn observe_idle(&mut self, _function: &str, _idle_s: f64) {}
+    fn name(&self) -> &'static str {
+        "ttl"
+    }
+}
+
+/// Shape of the [`HybridHistogram`] policy (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HybridConfig {
+    /// number of histogram bins
+    pub bins: usize,
+    /// width of one bin in seconds
+    pub bin_s: f64,
+    /// idle times below this are head-out-of-bounds (shorter than the
+    /// histogram can resolve)
+    pub head_s: f64,
+    /// observed cycles required before the histogram is trusted
+    pub min_samples: u64,
+    /// head/tail OOB share above which the histogram is distrusted
+    pub oob_fraction: f64,
+    /// in-bin coefficient of variation above which the distribution is
+    /// "too dispersed" and the fixed-TTL fallback applies
+    pub cv_threshold: f64,
+    /// lower quantile of the in-bin mass → prewarm edge
+    pub head_quantile: f64,
+    /// upper quantile of the in-bin mass → keep-alive edge
+    pub tail_quantile: f64,
+    /// safety margin: the prewarm edge is tightened and the keep-alive
+    /// edge padded by this fraction
+    pub margin: f64,
+    /// the fallback fixed-TTL window (no prewarm) used whenever the
+    /// histogram cannot be trusted. Deliberately short: an untrusted
+    /// pool pays (cheap, bounded) cold starts rather than accumulating
+    /// idle-GB-s waste, and the fallback keeps feeding the histogram
+    /// until it earns a learned window
+    pub fallback_ttl_s: f64,
+}
+
+impl Default for HybridConfig {
+    fn default() -> Self {
+        Self {
+            bins: 240,
+            bin_s: 0.05,
+            head_s: 0.01,
+            min_samples: 8,
+            oob_fraction: 0.5,
+            cv_threshold: 1.5,
+            head_quantile: 0.05,
+            tail_quantile: 0.99,
+            margin: 0.15,
+            fallback_ttl_s: 0.1,
+        }
+    }
+}
+
+impl HybridConfig {
+    /// Upper edge of the binnable range.
+    fn range_end(&self) -> f64 {
+        self.head_s + self.bins as f64 * self.bin_s
+    }
+}
+
+/// Per-function idle-time statistics.
+#[derive(Clone, Debug)]
+struct FnHistogram {
+    counts: Vec<u64>,
+    in_bin: u64,
+    head_oob: u64,
+    tail_oob: u64,
+}
+
+impl FnHistogram {
+    fn new(bins: usize) -> Self {
+        Self { counts: vec![0; bins], in_bin: 0, head_oob: 0, tail_oob: 0 }
+    }
+
+    fn total(&self) -> u64 {
+        self.in_bin + self.head_oob + self.tail_oob
+    }
+}
+
+/// Why [`HybridHistogram::window`] chose the window it chose — surfaced
+/// for tests and diagnostics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HybridDecision {
+    /// fewer than `min_samples` observed cycles: fixed-TTL fallback
+    ColdStartHistory,
+    /// head OOB share over `oob_fraction`: cycles too short to resolve,
+    /// fixed-TTL fallback (keep warm from release)
+    HeadOutOfBounds,
+    /// tail OOB share over `oob_fraction`: cycles beyond the histogram
+    /// range, fixed-TTL fallback (the paper hands off to a time-series
+    /// model here; we document the fixed-TTL degradation instead)
+    TailOutOfBounds,
+    /// in-bin coefficient of variation over `cv_threshold`: distribution
+    /// too dispersed to predict, fixed-TTL fallback
+    TooDispersed,
+    /// the histogram was trusted: quantile-derived [pre-warm, keep-alive]
+    Predicted,
+}
+
+/// The "Serverless in the Wild" hybrid-histogram policy. Keeps one
+/// idle-time histogram per function; see the module docs for the
+/// prediction and fallback rules.
+#[derive(Clone, Debug)]
+pub struct HybridHistogram {
+    pub cfg: HybridConfig,
+    fns: HashMap<String, FnHistogram>,
+}
+
+impl HybridHistogram {
+    pub fn new(cfg: HybridConfig) -> Self {
+        Self { cfg, fns: HashMap::new() }
+    }
+
+    /// `(in_bin, head_oob, tail_oob)` sample counts for a function.
+    pub fn sample_counts(&self, function: &str) -> (u64, u64, u64) {
+        self.fns
+            .get(function)
+            .map(|h| (h.in_bin, h.head_oob, h.tail_oob))
+            .unwrap_or((0, 0, 0))
+    }
+
+    /// The `[lo, hi)` edges of the histogram's mode bin (highest count,
+    /// ties to the shortest idle), if any in-bin sample exists.
+    pub fn mode_bin(&self, function: &str) -> Option<(f64, f64)> {
+        let h = self.fns.get(function)?;
+        if h.in_bin == 0 {
+            return None;
+        }
+        let (i, _) = h
+            .counts
+            .iter()
+            .enumerate()
+            .max_by(|(ia, ca), (ib, cb)| ca.cmp(cb).then(ib.cmp(ia)))
+            .expect("bins is non-zero");
+        Some((self.bin_lo(i), self.bin_lo(i) + self.cfg.bin_s))
+    }
+
+    fn bin_lo(&self, i: usize) -> f64 {
+        self.cfg.head_s + i as f64 * self.cfg.bin_s
+    }
+
+    /// Lower edge of the bin holding quantile `q` of the in-bin mass.
+    fn quantile_bin(&self, h: &FnHistogram, q: f64) -> usize {
+        let target = (q * h.in_bin as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in h.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return i;
+            }
+        }
+        h.counts.len() - 1
+    }
+
+    /// The window this policy would emit for `function` right now, plus
+    /// the reason — the pure prediction, no state change.
+    pub fn predict(&self, function: &str) -> (IdleWindow, HybridDecision) {
+        let fallback = IdleWindow::ttl(self.cfg.fallback_ttl_s);
+        let Some(h) = self.fns.get(function) else {
+            return (fallback, HybridDecision::ColdStartHistory);
+        };
+        let total = h.total();
+        if total < self.cfg.min_samples {
+            return (fallback, HybridDecision::ColdStartHistory);
+        }
+        if h.head_oob as f64 > self.cfg.oob_fraction * total as f64 {
+            return (fallback, HybridDecision::HeadOutOfBounds);
+        }
+        if h.tail_oob as f64 > self.cfg.oob_fraction * total as f64 {
+            return (fallback, HybridDecision::TailOutOfBounds);
+        }
+        if h.in_bin == 0 {
+            return (fallback, HybridDecision::ColdStartHistory);
+        }
+        // in-bin moments over bin centers
+        let (mut sum, mut sum_sq) = (0.0f64, 0.0f64);
+        for (i, &c) in h.counts.iter().enumerate() {
+            let x = self.bin_lo(i) + 0.5 * self.cfg.bin_s;
+            sum += c as f64 * x;
+            sum_sq += c as f64 * x * x;
+        }
+        let mean = sum / h.in_bin as f64;
+        let var = (sum_sq / h.in_bin as f64 - mean * mean).max(0.0);
+        if mean > 0.0 && var.sqrt() / mean > self.cfg.cv_threshold {
+            return (fallback, HybridDecision::TooDispersed);
+        }
+        let lo_bin = self.quantile_bin(h, self.cfg.head_quantile);
+        let hi_bin = self.quantile_bin(h, self.cfg.tail_quantile);
+        let (mode_lo, mode_hi) = self.mode_bin(function).expect("in_bin > 0");
+        // quantile edges with margins, clamped so the window always
+        // brackets the mode bin (the property the tests pin). A head
+        // quantile inside the first bin is below the histogram's
+        // resolution: tearing down just to re-provision milliseconds
+        // later buys nothing, so keep the sandbox from the release
+        // instant instead.
+        let prewarm = if lo_bin == 0 {
+            0.0
+        } else {
+            (self.bin_lo(lo_bin) * (1.0 - self.cfg.margin)).min(mode_lo).max(0.0)
+        };
+        let keep = ((self.bin_lo(hi_bin) + self.cfg.bin_s) * (1.0 + self.cfg.margin)).max(mode_hi);
+        (IdleWindow { prewarm_s: prewarm, keep_alive_s: keep }, HybridDecision::Predicted)
+    }
+}
+
+impl KeepAlivePolicy for HybridHistogram {
+    fn window(&mut self, function: &str, _now: f64) -> IdleWindow {
+        self.predict(function).0
+    }
+
+    fn observe_idle(&mut self, function: &str, idle_s: f64) {
+        let cfg = self.cfg;
+        let h = self
+            .fns
+            .entry(function.to_string())
+            .or_insert_with(|| FnHistogram::new(cfg.bins));
+        if idle_s < cfg.head_s {
+            h.head_oob += 1;
+        } else if idle_s >= cfg.range_end() {
+            h.tail_oob += 1;
+        } else {
+            let i = ((idle_s - cfg.head_s) / cfg.bin_s) as usize;
+            h.counts[i.min(cfg.bins - 1)] += 1;
+            h.in_bin += 1;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+}
+
+/// Which policy the platform runs — the [`crate::faas::FaasConfig`]
+/// knob. `NeverExpire` (the default) means "policy disabled": the
+/// platform takes the exact pre-policy code path, so default-config runs
+/// stay byte-identical to the pre-policy simulator.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KeepAliveConfig {
+    NeverExpire,
+    FixedTtl { keep_alive_s: f64 },
+    Hybrid(HybridConfig),
+}
+
+impl Default for KeepAliveConfig {
+    fn default() -> Self {
+        Self::NeverExpire
+    }
+}
+
+impl KeepAliveConfig {
+    /// Is an actual policy (anything but `NeverExpire`) active?
+    pub fn enabled(&self) -> bool {
+        !matches!(self, Self::NeverExpire)
+    }
+
+    /// Instantiate the policy state; `None` when disabled.
+    pub fn build(&self) -> Option<Box<dyn KeepAlivePolicy>> {
+        match self {
+            Self::NeverExpire => None,
+            Self::FixedTtl { keep_alive_s } => {
+                Some(Box::new(FixedTtl { keep_alive_s: *keep_alive_s }))
+            }
+            Self::Hybrid(cfg) => Some(Box::new(HybridHistogram::new(*cfg))),
+        }
+    }
+
+    /// Parse a CLI/env spec: `never`, `ttl:<seconds>`, `hybrid`, or
+    /// `hybrid:<fallback_ttl_s>`.
+    pub fn parse(spec: &str) -> Option<Self> {
+        match spec {
+            "never" | "none" | "" => Some(Self::NeverExpire),
+            "hybrid" => Some(Self::Hybrid(HybridConfig::default())),
+            _ => {
+                if let Some(t) = spec.strip_prefix("ttl:") {
+                    let s = t.parse::<f64>().ok()?;
+                    (s >= 0.0).then_some(Self::FixedTtl { keep_alive_s: s })
+                } else if let Some(t) = spec.strip_prefix("hybrid:") {
+                    let s = t.parse::<f64>().ok()?;
+                    (s >= 0.0).then(|| {
+                        Self::Hybrid(HybridConfig { fallback_ttl_s: s, ..Default::default() })
+                    })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// `SQUASH_KEEPALIVE` from the environment (unset/unparseable =
+    /// `NeverExpire`) — the CI knob for running whole suites under a
+    /// policy.
+    pub fn from_env() -> Self {
+        std::env::var("SQUASH_KEEPALIVE")
+            .ok()
+            .and_then(|v| Self::parse(&v))
+            .unwrap_or(Self::NeverExpire)
+    }
+
+    /// Stable label for bench tables / JSON (`never`, `ttl:0.5`,
+    /// `hybrid`).
+    pub fn label(&self) -> String {
+        match self {
+            Self::NeverExpire => "never".into(),
+            Self::FixedTtl { keep_alive_s } => format!("ttl:{keep_alive_s}"),
+            Self::Hybrid(_) => "hybrid".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_ttl_and_never_expire_windows() {
+        let mut never = NeverExpire;
+        let w = never.window("f", 3.0);
+        assert_eq!(w.prewarm_s, 0.0);
+        assert!(w.keep_alive_s.is_infinite());
+        let mut ttl = FixedTtl { keep_alive_s: 2.5 };
+        assert_eq!(ttl.window("f", 9.0), IdleWindow { prewarm_s: 0.0, keep_alive_s: 2.5 });
+        ttl.observe_idle("f", 100.0); // no-op, still fixed
+        assert_eq!(ttl.window("f", 200.0).keep_alive_s, 2.5);
+    }
+
+    #[test]
+    fn hybrid_falls_back_until_min_samples() {
+        let cfg = HybridConfig::default();
+        let mut h = HybridHistogram::new(cfg);
+        let (w, why) = h.predict("f");
+        assert_eq!(why, HybridDecision::ColdStartHistory);
+        assert_eq!(w, IdleWindow::ttl(cfg.fallback_ttl_s));
+        for _ in 0..cfg.min_samples - 1 {
+            h.observe_idle("f", 1.0);
+        }
+        assert_eq!(h.predict("f").1, HybridDecision::ColdStartHistory);
+        h.observe_idle("f", 1.0);
+        assert_eq!(h.predict("f").1, HybridDecision::Predicted);
+    }
+
+    #[test]
+    fn hybrid_window_brackets_the_mode() {
+        let mut h = HybridHistogram::new(HybridConfig::default());
+        // bimodal-ish: mass at ~0.2 s, mode at ~3.0 s
+        for _ in 0..10 {
+            h.observe_idle("f", 0.2);
+        }
+        for _ in 0..30 {
+            h.observe_idle("f", 3.0);
+        }
+        let (w, why) = h.predict("f");
+        assert_eq!(why, HybridDecision::Predicted);
+        let (mode_lo, mode_hi) = h.mode_bin("f").unwrap();
+        assert!(mode_lo <= 3.0 && 3.0 < mode_hi, "mode bin holds 3.0: {mode_lo}..{mode_hi}");
+        assert!(w.prewarm_s <= mode_lo, "prewarm {} > mode_lo {mode_lo}", w.prewarm_s);
+        assert!(w.keep_alive_s >= mode_hi, "keep {} < mode_hi {mode_hi}", w.keep_alive_s);
+        assert!(w.prewarm_s < w.keep_alive_s);
+    }
+
+    #[test]
+    fn hybrid_oob_counters_trigger_fallbacks() {
+        let cfg = HybridConfig::default();
+        // head: cycles shorter than the histogram resolves
+        let mut h = HybridHistogram::new(cfg);
+        for _ in 0..6 {
+            h.observe_idle("f", 0.001);
+        }
+        for _ in 0..4 {
+            h.observe_idle("f", 1.0);
+        }
+        assert_eq!(h.sample_counts("f"), (4, 6, 0));
+        assert_eq!(h.predict("f").1, HybridDecision::HeadOutOfBounds);
+        // tail: cycles beyond the histogram range
+        let mut h = HybridHistogram::new(cfg);
+        for _ in 0..6 {
+            h.observe_idle("f", cfg.range_end() + 5.0);
+        }
+        for _ in 0..4 {
+            h.observe_idle("f", 1.0);
+        }
+        assert_eq!(h.sample_counts("f"), (4, 0, 6));
+        let (w, why) = h.predict("f");
+        assert_eq!(why, HybridDecision::TailOutOfBounds);
+        assert_eq!(w, IdleWindow::ttl(cfg.fallback_ttl_s));
+    }
+
+    #[test]
+    fn hybrid_dispersion_fallback() {
+        // two far-apart modes → CV above the threshold → fixed-TTL
+        let cfg = HybridConfig { cv_threshold: 0.3, ..Default::default() };
+        let mut h = HybridHistogram::new(cfg);
+        for _ in 0..20 {
+            h.observe_idle("f", 0.1);
+            h.observe_idle("f", 9.0);
+        }
+        assert_eq!(h.predict("f").1, HybridDecision::TooDispersed);
+        // a tight distribution is trusted
+        let mut h = HybridHistogram::new(cfg);
+        for _ in 0..20 {
+            h.observe_idle("f", 1.0);
+        }
+        assert_eq!(h.predict("f").1, HybridDecision::Predicted);
+    }
+
+    #[test]
+    fn hybrid_state_is_per_function() {
+        let mut h = HybridHistogram::new(HybridConfig::default());
+        for _ in 0..20 {
+            h.observe_idle("a", 0.5);
+            h.observe_idle("b", 4.0);
+        }
+        let (wa, _) = h.predict("a");
+        let (wb, _) = h.predict("b");
+        assert!(wa.keep_alive_s < wb.keep_alive_s, "{wa:?} vs {wb:?}");
+        assert_eq!(h.sample_counts("c"), (0, 0, 0));
+    }
+
+    #[test]
+    fn config_parse_round_trips() {
+        assert_eq!(KeepAliveConfig::parse("never"), Some(KeepAliveConfig::NeverExpire));
+        assert_eq!(
+            KeepAliveConfig::parse("ttl:1.5"),
+            Some(KeepAliveConfig::FixedTtl { keep_alive_s: 1.5 })
+        );
+        assert_eq!(
+            KeepAliveConfig::parse("hybrid"),
+            Some(KeepAliveConfig::Hybrid(HybridConfig::default()))
+        );
+        let h = KeepAliveConfig::parse("hybrid:4.0").unwrap();
+        match h {
+            KeepAliveConfig::Hybrid(c) => assert_eq!(c.fallback_ttl_s, 4.0),
+            other => panic!("expected hybrid, got {other:?}"),
+        }
+        assert_eq!(KeepAliveConfig::parse("bogus"), None);
+        assert_eq!(KeepAliveConfig::parse("ttl:-1"), None);
+        assert!(!KeepAliveConfig::NeverExpire.enabled());
+        assert!(KeepAliveConfig::FixedTtl { keep_alive_s: 0.5 }.enabled());
+        assert_eq!(KeepAliveConfig::FixedTtl { keep_alive_s: 0.5 }.label(), "ttl:0.5");
+        assert!(KeepAliveConfig::NeverExpire.build().is_none());
+        assert_eq!(KeepAliveConfig::parse("hybrid").unwrap().build().unwrap().name(), "hybrid");
+    }
+}

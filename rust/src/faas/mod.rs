@@ -95,8 +95,26 @@
 //! attempts) it reproduces the pre-resilience behavior exactly, except
 //! that budget exhaustion returns a typed
 //! [`FaasError::RetryBudgetExhausted`] instead of panicking.
+//!
+//! # Keep-alive / prewarm policies ([`keepalive`])
+//!
+//! With a [`KeepAliveConfig`] other than the default `NeverExpire`, a
+//! released container carries a policy-assigned `[pre-warm, keep-alive]`
+//! window on the virtual clock. Before every pool pick the platform
+//! sweeps containers whose window has closed — dropping them (which
+//! evicts their DRE-retained segment data, so the warmth loss re-bills
+//! the segment I/O on the next cold start) and billing the reclaimed
+//! idle span to the ledger's `idle_gb_s` bucket — and a window with a
+//! non-zero pre-warm offset models a proactive re-provision: billed as a
+//! cold-start-length warm-up, counted under `prewarmed_containers`, with
+//! requests that then hit it warm counted under
+//! `prewarm_cold_starts_avoided`. See the [`keepalive`] module docs for
+//! the policy lifecycle and billing rules. At the default config none of
+//! this machinery runs: acquisition and release stay byte-identical to
+//! the pre-policy simulator.
 
 pub mod dre;
+pub mod keepalive;
 pub mod resilience;
 
 use std::collections::HashMap;
@@ -110,6 +128,7 @@ use crate::storage::{
 };
 use crate::util::rng::{mix64, Rng};
 use dre::DreStore;
+use keepalive::{KeepAliveConfig, KeepAlivePolicy};
 use resilience::{BreakerConfig, CircuitBreaker, Deadline, RetryPolicy};
 
 /// Deterministic tail-latency / fault-injection parameters. Disabled
@@ -347,6 +366,10 @@ pub struct FaasConfig {
     pub retry: RetryPolicy,
     /// per-function-pool circuit breaker (disabled by default)
     pub breaker: BreakerConfig,
+    /// container keep-alive / prewarm policy ([`keepalive`]); the
+    /// default `NeverExpire` disables the engine entirely. `Default`
+    /// honours `SQUASH_KEEPALIVE` so CI can force a policy suite-wide.
+    pub keepalive: KeepAliveConfig,
 }
 
 impl Default for FaasConfig {
@@ -370,6 +393,7 @@ impl Default for FaasConfig {
             fn_timeout_s,
             retry: RetryPolicy::legacy(),
             breaker: BreakerConfig::off(),
+            keepalive: KeepAliveConfig::from_env(),
         }
     }
 }
@@ -384,6 +408,20 @@ pub struct Container {
     /// virtual time at which this container becomes idle again (fleet
     /// mode only; stays 0 when `virtual_pools` is off)
     pub free_at: f64,
+    /// virtual time of the last release — the start of the current idle
+    /// cycle (keep-alive policies only; stays 0 when disabled)
+    pub released_at: f64,
+    /// absolute start of the policy-assigned warm window. Equal to
+    /// `released_at` for plain keep-alive; later for a prewarm cycle
+    /// (the sandbox is dead in between). 0 when the policy is disabled,
+    /// which makes every window check degenerate to "always warm".
+    pub warm_from: f64,
+    /// absolute end of the warm window; the sweep reclaims the container
+    /// past this instant (∞ when the policy is disabled)
+    pub warm_until: f64,
+    /// role of the last invocation served — the memory class the
+    /// keep-alive engine bills idle/prewarm time at
+    pub role: Role,
 }
 
 /// Handler context: what a function sees during one invocation.
@@ -539,6 +577,9 @@ pub struct Platform {
     /// per-function-pool circuit breakers (populated lazily, and only
     /// when `config.breaker.enabled`)
     breakers: Mutex<HashMap<String, CircuitBreaker>>,
+    /// keep-alive policy state; `None` when `config.keepalive` is the
+    /// default `NeverExpire` — the pre-policy fast path
+    keepalive: Option<Mutex<Box<dyn KeepAlivePolicy>>>,
     next_container: AtomicU64,
     pub config: FaasConfig,
     pub params: SimParams,
@@ -557,10 +598,12 @@ const HANG_WATCHDOG_S: f64 = 60.0;
 impl Platform {
     pub fn new(config: FaasConfig, params: SimParams, ledger: Arc<CostLedger>) -> Self {
         let latency = LatencyModel::new(config.chaos);
+        let keepalive = config.keepalive.build().map(Mutex::new);
         Self {
             pools: Mutex::new(HashMap::new()),
             seq: Mutex::new(HashMap::new()),
             breakers: Mutex::new(HashMap::new()),
+            keepalive,
             next_container: AtomicU64::new(0),
             config,
             params,
@@ -760,11 +803,25 @@ impl Platform {
             id
         };
         let draw = self.latency.draw(function, invocation_id);
-        // acquire container (fleet mode contends on the virtual timeline)
+        // acquire container (fleet mode contends on the virtual timeline);
+        // keep-alive policies sweep expired containers before every pick
         let vt = virtual_now();
         let (mut container, cold, queue_delay_s) = {
             let mut pools = self.pools.lock().unwrap();
-            if self.config.virtual_pools {
+            if self.keepalive.is_some() {
+                let pool = pools.entry(function.to_string()).or_default();
+                self.sweep_expired(pool, vt, function, true);
+                if self.config.virtual_pools {
+                    self.acquire_fleet(pool, vt)
+                } else {
+                    // LIFO over warm candidates — identical to the plain
+                    // `pop` below whenever nothing is dead or expired
+                    match pool.iter().rposition(|c| c.warm_from <= vt && vt <= c.warm_until) {
+                        Some(i) => (pool.remove(i), false, 0.0),
+                        None => (self.new_container(), true, 0.0),
+                    }
+                }
+            } else if self.config.virtual_pools {
                 self.acquire_fleet(pools.entry(function.to_string()).or_default(), vt)
             } else {
                 match pools.get_mut(function).and_then(|v| v.pop()) {
@@ -787,6 +844,35 @@ impl Platform {
             self.ledger.record_timeout();
             return Err(FaasError::Timeout { function: function.to_string(), modeled_s: 0.0 });
         }
+        if let Some(ka) = &self.keepalive {
+            if !cold {
+                // the observed idle cycle ends now (0 for a queued
+                // fleet handoff — the container never actually idled)
+                let idle_s = (vt - container.released_at).max(0.0);
+                ka.lock().unwrap().observe_idle(function, idle_s);
+                if container.warm_from > container.released_at && vt >= container.warm_from {
+                    // the prewarm fired at `warm_from`: bill the
+                    // cold-start-length warm-up. The warmth between the
+                    // prewarm and this hit is consumed, so (like organic
+                    // warmth on every policy) it costs nothing — only
+                    // wasted warmth reaches `idle_gb_s`. The rebuilt
+                    // sandbox retained nothing — its DRE data died with
+                    // the old one — so segment reads re-bill below even
+                    // though the cold-start latency was dodged.
+                    let mem = self.memory_for(role);
+                    self.ledger.record_prewarm();
+                    self.ledger.record_modeled_runtime(role, mem, self.config.cold_start_s);
+                    self.ledger.record_prewarm_hit();
+                    container.retained = DreStore::new();
+                    container.invocations = 0;
+                }
+            }
+            // in-use containers are never subject to expiry; the next
+            // release stamps a fresh window
+            container.warm_from = 0.0;
+            container.warm_until = f64::INFINITY;
+        }
+        container.role = role;
         self.ledger.record_invocation(role, cold);
         if cold {
             self.cold_invocations.fetch_add(1, Ordering::Relaxed);
@@ -916,6 +1002,16 @@ impl Platform {
         if self.config.virtual_pools {
             container.free_at = virtual_now();
         }
+        if let Some(ka) = &self.keepalive {
+            // the idle cycle starts here: ask the policy for its
+            // [pre-warm, keep-alive] window, in absolute virtual time
+            let released = virtual_now();
+            let w = ka.lock().unwrap().window(function, released);
+            let prewarm = w.prewarm_s.max(0.0);
+            container.released_at = released;
+            container.warm_from = released + prewarm;
+            container.warm_until = released + w.keep_alive_s.max(prewarm);
+        }
         self.pools.lock().unwrap().entry(function.to_string()).or_default().push(container);
         Ok(Invocation { response, modeled_s, queue_delay_s })
     }
@@ -926,6 +1022,10 @@ impl Platform {
             invocations: 0,
             retained: DreStore::new(),
             free_at: 0.0,
+            released_at: 0.0,
+            warm_from: 0.0,
+            warm_until: f64::INFINITY,
+            role: Role::QueryProcessor,
         }
     }
 
@@ -936,29 +1036,120 @@ impl Platform {
     /// deterministic: selection depends only on `(free_at, id)`, never on
     /// pool insertion order.
     fn acquire_fleet(&self, pool: &mut Vec<Container>, vt: f64) -> (Container, bool, f64) {
+        // with the keep-alive engine off every window is [0, ∞), so the
+        // `warm_from` conditions below degenerate to the pre-policy
+        // behavior; with it on, a dead prewarm-pending sandbox (its
+        // window hasn't opened yet) is neither pickable nor capacity
         let idle = pool
             .iter()
             .enumerate()
-            .filter(|(_, c)| c.free_at <= vt)
+            .filter(|(_, c)| c.free_at <= vt && c.warm_from <= vt)
             .max_by(|(_, a), (_, b)| a.free_at.total_cmp(&b.free_at).then(b.id.cmp(&a.id)))
             .map(|(i, _)| i);
         if let Some(i) = idle {
             return (pool.swap_remove(i), false, 0.0);
         }
         let cap = self.config.max_containers;
-        if cap == 0 || pool.len() < cap {
+        let live = pool.iter().filter(|c| c.free_at > vt || c.warm_from <= vt).count();
+        if cap == 0 || live < cap {
             return (self.new_container(), true, 0.0);
         }
         // everything virtually busy at the cap: queue on the earliest free
         let i = pool
             .iter()
             .enumerate()
+            .filter(|(_, c)| c.free_at > vt || c.warm_from <= vt)
             .min_by(|(_, a), (_, b)| a.free_at.total_cmp(&b.free_at).then(a.id.cmp(&b.id)))
             .map(|(i, _)| i)
-            .expect("a positive cap implies a non-empty pool here");
+            .expect("a positive cap implies a live container here");
         let c = pool.swap_remove(i);
         let delay = (c.free_at - vt).max(0.0);
         (c, false, delay)
+    }
+
+    /// Reclaim every pooled container whose keep-alive window has closed
+    /// (keep-alive policies only): bill its wasted warm span, count the
+    /// expiry, feed the observed idle cycle back to the policy, and drop
+    /// it — which evicts its DRE-retained segment data, so the next cold
+    /// start re-bills the segment reads.
+    fn sweep_expired(&self, pool: &mut Vec<Container>, vt: f64, function: &str, observe: bool) {
+        let mut i = 0;
+        while i < pool.len() {
+            if pool[i].warm_until < vt {
+                let c = pool.swap_remove(i);
+                self.bill_expired(&c, vt);
+                self.ledger.record_expired_container();
+                if observe {
+                    if let Some(ka) = &self.keepalive {
+                        ka.lock().unwrap().observe_idle(function, (vt - c.released_at).max(0.0));
+                    }
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Bill one reclaimed/settled container's keep-alive cost up to
+    /// `now`: the prewarm warm-up if it fired, plus the unused warm span
+    /// `[warm-from, min(now, keep-alive)]` at the container's memory
+    /// class. A window whose prewarm never fired (`now < warm_from`) was
+    /// cancelled and costs nothing.
+    fn bill_expired(&self, c: &Container, now: f64) {
+        if now < c.warm_from {
+            return;
+        }
+        let mem = self.memory_for(c.role);
+        if c.warm_from > c.released_at {
+            self.ledger.record_prewarm();
+            self.ledger.record_modeled_runtime(c.role, mem, self.config.cold_start_s);
+        }
+        let idle_s = (c.warm_until.min(now) - c.warm_from).max(0.0);
+        self.ledger.record_idle(idle_s * mem as f64 / 1024.0);
+    }
+
+    /// End-of-run settlement for keep-alive accounting: bill the idle
+    /// warmth accrued up to `now` by every still-pooled container (the
+    /// tail the sweep never sees, because no further arrival triggers
+    /// it), count the already-expired ones, and drop the fleet. No-op
+    /// when the policy is disabled, keeping default-config runs
+    /// byte-identical to the pre-policy simulator.
+    pub fn settle_idle(&self, now: f64) {
+        if self.keepalive.is_none() {
+            return;
+        }
+        let mut pools = self.pools.lock().unwrap();
+        for pool in pools.values_mut() {
+            for c in pool.drain(..) {
+                self.bill_expired(&c, now);
+                if c.warm_until < now {
+                    self.ledger.record_expired_container();
+                }
+            }
+        }
+    }
+
+    /// Is the keep-alive policy engine active (anything but the default
+    /// `NeverExpire`)?
+    pub fn keepalive_enabled(&self) -> bool {
+        self.keepalive.is_some()
+    }
+
+    /// Predicted warmth of `function`'s pool at virtual time `vt`: does
+    /// any pooled container sit free inside its policy warm window? With
+    /// the policy disabled this degenerates to "any idle container
+    /// pooled" — the pre-policy warmth signal. The hedge gate in
+    /// [`crate::coordinator::qa`] consults this to skip hedges into
+    /// predicted-cold pools.
+    pub fn pool_predicted_warm(&self, function: &str, vt: f64) -> bool {
+        self.pools
+            .lock()
+            .unwrap()
+            .get(function)
+            .map(|pool| {
+                pool.iter().any(|c| c.free_at <= vt && c.warm_from <= vt && vt <= c.warm_until)
+            })
+            .unwrap_or(false)
     }
 
     /// Number of idle containers for a function (tests/diagnostics).
@@ -1588,5 +1779,146 @@ mod tests {
             total
         };
         assert_eq!(run().to_bits(), run().to_bits(), "virtual clock must replay bit-identically");
+    }
+
+    fn keepalive_platform(ka: KeepAliveConfig) -> Platform {
+        let ledger = Arc::new(CostLedger::new());
+        Platform::new(
+            FaasConfig { keepalive: ka, ..Default::default() },
+            SimParams::instant(),
+            ledger,
+        )
+    }
+
+    #[test]
+    fn keepalive_fixed_ttl_expires_bills_idle_and_evicts_dre() {
+        use crate::storage::set_virtual_now;
+        let p = keepalive_platform(KeepAliveConfig::FixedTtl { keep_alive_s: 1.0 });
+        set_virtual_now(0.0);
+        p.invoke("f", Role::QueryProcessor, b"", |ctx, _| {
+            ctx.dre_put("seg", Arc::new(7u32));
+            vec![]
+        })
+        .unwrap();
+        // within the TTL: a warm hit, retention free, DRE intact
+        let released = virtual_now();
+        set_virtual_now(released + 0.5);
+        p.invoke("f", Role::QueryProcessor, b"", |ctx, _| {
+            assert!(ctx.dre_get::<u32>("seg").is_some(), "retained within the TTL");
+            vec![]
+        })
+        .unwrap();
+        assert_eq!(p.ledger.idle_gb_s(), 0.0, "organic warmth is free");
+        // past the TTL: the sweep reclaims the container, bills its full
+        // warm window, and the arrival cold-starts with an empty store
+        let released = virtual_now();
+        set_virtual_now(released + 5.0);
+        p.invoke("f", Role::QueryProcessor, b"", |ctx, _| {
+            assert!(ctx.dre_get::<u32>("seg").is_none(), "expiry evicts DRE");
+            vec![]
+        })
+        .unwrap();
+        assert_eq!(p.cold_invocations.load(Ordering::Relaxed), 2);
+        assert_eq!(p.warm_invocations.load(Ordering::Relaxed), 1);
+        assert_eq!(p.ledger.expired_containers.load(Ordering::Relaxed), 1);
+        let want = 1.0 * p.config.memory_qp_mb as f64 / 1024.0;
+        assert!((p.ledger.idle_gb_s() - want).abs() < 1e-6, "got {}", p.ledger.idle_gb_s());
+    }
+
+    #[test]
+    fn keepalive_huge_ttl_is_byte_identical_to_disabled() {
+        use crate::storage::set_virtual_now;
+        let run = |ka: KeepAliveConfig| {
+            let p = keepalive_platform(ka);
+            set_virtual_now(0.0);
+            for i in 0..6u8 {
+                let t = virtual_now();
+                set_virtual_now(t + 0.25 * i as f64);
+                p.invoke("f", Role::QueryProcessor, &[i], |_, payload| payload.to_vec())
+                    .unwrap();
+            }
+            (p.ledger.chaos_summary(), virtual_now().to_bits())
+        };
+        let base = run(KeepAliveConfig::NeverExpire);
+        let ttl = run(KeepAliveConfig::FixedTtl { keep_alive_s: 1e9 });
+        assert_eq!(base, ttl, "a TTL longer than the run must be inert");
+    }
+
+    #[test]
+    fn keepalive_hybrid_prewarm_bills_warmup_and_evicts_dre() {
+        use crate::storage::set_virtual_now;
+        // a fallback TTL above the 0.5 s cycle gap so the warm-up hits
+        // stay warm while the histogram learns
+        let p = keepalive_platform(KeepAliveConfig::Hybrid(keepalive::HybridConfig {
+            fallback_ttl_s: 2.0,
+            ..Default::default()
+        }));
+        set_virtual_now(0.0);
+        p.invoke("f", Role::QueryProcessor, b"", |ctx, _| {
+            ctx.dre_put("seg", Arc::new(1u8));
+            vec![]
+        })
+        .unwrap();
+        // feed `min_samples` identical ~0.5 s idle cycles; while learning
+        // the 2 s fallback TTL keeps every hit warm and free
+        for _ in 0..8 {
+            let released = virtual_now();
+            set_virtual_now(released + 0.5);
+            p.invoke("f", Role::QueryProcessor, b"", |_, _| vec![]).unwrap();
+        }
+        assert_eq!(p.cold_invocations.load(Ordering::Relaxed), 1);
+        assert_eq!(p.ledger.prewarmed_containers.load(Ordering::Relaxed), 0);
+        // the trusted histogram now predicts a prewarm edge below the
+        // 0.5 s mode: the next arrival lands past it — no cold-start
+        // latency, but the rebuilt sandbox lost its DRE data and the
+        // warm-up itself was billed as a cold-start-length modeled run
+        let modeled_before = p.ledger.modeled_mb_seconds(Role::QueryProcessor);
+        let released = virtual_now();
+        set_virtual_now(released + 0.5);
+        p.invoke("f", Role::QueryProcessor, b"", |ctx, _| {
+            assert!(ctx.dre_get::<u8>("seg").is_none(), "prewarm rebuilt the sandbox");
+            vec![]
+        })
+        .unwrap();
+        assert_eq!(p.cold_invocations.load(Ordering::Relaxed), 1, "latency-warm via prewarm");
+        assert_eq!(p.ledger.prewarmed_containers.load(Ordering::Relaxed), 1);
+        assert_eq!(p.ledger.prewarm_cold_starts_avoided.load(Ordering::Relaxed), 1);
+        let warmup_mbs = p.config.cold_start_s * p.config.memory_qp_mb as f64;
+        assert!(
+            p.ledger.modeled_mb_seconds(Role::QueryProcessor) - modeled_before >= warmup_mbs,
+            "the prewarm warm-up is billed"
+        );
+        assert_eq!(p.ledger.idle_gb_s(), 0.0, "consumed warmth is free, like organic warmth");
+    }
+
+    #[test]
+    fn keepalive_settle_idle_bills_the_end_of_run_tail() {
+        use crate::storage::set_virtual_now;
+        let p = keepalive_platform(KeepAliveConfig::FixedTtl { keep_alive_s: 1.0 });
+        set_virtual_now(0.0);
+        p.invoke("f", Role::QueryProcessor, b"", |_, _| vec![]).unwrap();
+        let released = virtual_now();
+        // the run ends 0.4 s later: the container is still warm — settle
+        // bills the 0.4 s tail (not the full TTL) and drains the fleet
+        p.settle_idle(released + 0.4);
+        assert_eq!(p.ledger.expired_containers.load(Ordering::Relaxed), 0);
+        let want = 0.4 * p.config.memory_qp_mb as f64 / 1024.0;
+        assert!((p.ledger.idle_gb_s() - want).abs() < 1e-6, "got {}", p.ledger.idle_gb_s());
+        assert_eq!(p.pool_size("f"), 0, "settlement drains the pools");
+    }
+
+    #[test]
+    fn keepalive_pool_predicted_warm_tracks_the_policy_window() {
+        use crate::storage::set_virtual_now;
+        let p = keepalive_platform(KeepAliveConfig::FixedTtl { keep_alive_s: 1.0 });
+        assert!(p.keepalive_enabled());
+        assert!(!p.pool_predicted_warm("f", 0.0), "no container yet");
+        set_virtual_now(0.0);
+        p.invoke("f", Role::QueryProcessor, b"", |_, _| vec![]).unwrap();
+        let released = virtual_now();
+        assert!(p.pool_predicted_warm("f", released + 0.5), "inside the TTL");
+        assert!(!p.pool_predicted_warm("f", released + 1.5), "past the TTL");
+        let q = keepalive_platform(KeepAliveConfig::NeverExpire);
+        assert!(!q.keepalive_enabled(), "NeverExpire means engine off");
     }
 }

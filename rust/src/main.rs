@@ -17,6 +17,17 @@
 //!                                      one QP invocation per partition).
 //!                                      Writes throughput / p50 / p99 /
 //!                                      cost-per-1k curves to --out.
+//!   keepalive [--qps 10] [--ttls 0.1,0.5,2,10] [--arrival poisson|trace]
+//!           [--max-containers 4] [--fuse-window 0]
+//!           [--out BENCH_keepalive.json]
+//!                                      keep-alive policy sweep over the
+//!                                      load engine: never-expire, each
+//!                                      fixed TTL and the hybrid
+//!                                      histogram policy run the same
+//!                                      seeded arrival stream, and each
+//!                                      policy lands one point on the
+//!                                      cold-start-rate vs idle-GB-s
+//!                                      Pareto written to --out.
 //!   resilience [--rates 0,0.02,0.05,0.1,0.2] [--fn-timeout 0.5]
 //!           [--deadline-ms 4000] [--storm-failure-prob 0.35]
 //!           [--out BENCH_resilience.json]
@@ -50,13 +61,18 @@
 //! (retry budget + backoff policy), --breaker <off|on> (per-pool
 //! circuit breakers), --deadline-ms <f> (end-to-end request deadline on
 //! the virtual clock; expired hops degrade instead of running),
+//! --keepalive <never|ttl:<s>|hybrid[:<ttl>]> (container keep-alive /
+//! pre-warm policy; `never` is the pre-policy platform, and the
+//! SQUASH_KEEPALIVE environment variable is the fallback),
 //! --strict (error on partial-coverage results instead of tagging
 //! them), --time-scale <f>, --no-dre, --seed <u64>.
 
 use squash::baselines::server::InstanceType;
+use squash::bench::keepalive::{self, KeepaliveOptions};
 use squash::bench::load::{point_header, point_line, run_sweep, ArrivalProfile, LoadOptions};
 use squash::bench::resilience::{self, ResilienceOptions};
 use squash::bench::{measure_server, measure_squash, measure_system_x, Env, EnvOptions, RunStats};
+use squash::faas::keepalive::KeepAliveConfig;
 use squash::runtime::backend::ScanParallelism;
 use squash::coordinator::tree::TreeConfig;
 use squash::coordinator::{HedgePolicy, QpSharding};
@@ -81,10 +97,11 @@ fn main() {
         Some("query") => cmd_query(&args),
         Some("cost") => cmd_cost(&args),
         Some("load") => cmd_load(&args),
+        Some("keepalive") => cmd_keepalive(&args),
         Some("resilience") => cmd_resilience(&args),
         _ => {
             eprintln!(
-                "usage: squash <info|serve|query|cost|load|resilience> [options]   (see doc comment in rust/src/main.rs)"
+                "usage: squash <info|serve|query|cost|load|keepalive|resilience> [options]   (see doc comment in rust/src/main.rs)"
             );
             2
         }
@@ -190,6 +207,14 @@ fn env_opts(args: &Args) -> EnvOptions {
                 eprintln!("{e}; deadline disabled");
                 None
             }
+        },
+        keepalive: match args.get("keepalive") {
+            Some(spec) => KeepAliveConfig::parse(spec).unwrap_or_else(|| {
+                eprintln!("--keepalive must be never|ttl:<s>|hybrid[:<ttl>]; using never");
+                KeepAliveConfig::NeverExpire
+            }),
+            // no flag: honour the SQUASH_KEEPALIVE environment override
+            None => KeepAliveConfig::from_env(),
         },
         seed: args.get_u64("seed", 42).unwrap_or(42),
     }
@@ -330,6 +355,62 @@ fn cmd_load(args: &Args) -> i32 {
         println!("{}", point_line("fused", &p.stats));
     }
     let out = args.get_or("out", "BENCH_load.json").to_string();
+    match std::fs::write(&out, sweep.json.to_string_pretty()) {
+        Ok(()) => {
+            println!("wrote {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_keepalive(args: &Args) -> i32 {
+    let mut opts = env_opts(args);
+    // the sweep measures the virtual clock; real sleeping adds nothing
+    opts.time_scale = args.get_f64("time-scale", 0.0).unwrap_or(0.0);
+    if opts.n_queries == 100 && args.get("queries").is_none() {
+        opts.n_queries = 96;
+    }
+    let defaults = KeepaliveOptions::default();
+    let ttls: Vec<f64> = args
+        .get_or("ttls", "0.1,0.5,2,10")
+        .split(',')
+        .filter_map(|s| s.trim().parse::<f64>().ok())
+        .filter(|&t| t > 0.0)
+        .collect();
+    if ttls.is_empty() {
+        eprintln!("--ttls must be a comma-separated list of positive seconds");
+        return 2;
+    }
+    let Some(arrival) = ArrivalProfile::from_name(args.get_or("arrival", "poisson")) else {
+        eprintln!("--arrival must be poisson|trace");
+        return 2;
+    };
+    let kopts = KeepaliveOptions {
+        qps: args.get_f64("qps", defaults.qps).unwrap_or(defaults.qps),
+        ttls,
+        arrival,
+        max_containers: args
+            .get_usize("max-containers", defaults.max_containers)
+            .unwrap_or(defaults.max_containers),
+        fuse_window_ms: args
+            .get_f64("fuse-window", defaults.fuse_window_ms)
+            .unwrap_or(defaults.fuse_window_ms),
+        seed: opts.seed,
+    };
+    eprintln!(
+        "keep-alive sweep on {} (n={}, {} queries/policy, {} qps, fleet cap {}, {} arrivals)...",
+        opts.profile, opts.n, opts.n_queries, kopts.qps, kopts.max_containers, arrival.name()
+    );
+    let sweep = keepalive::run_sweep(&opts, &kopts);
+    println!("{}", keepalive::point_header());
+    for p in &sweep.points {
+        println!("{}", keepalive::point_line(p));
+    }
+    let out = args.get_or("out", "BENCH_keepalive.json").to_string();
     match std::fs::write(&out, sweep.json.to_string_pretty()) {
         Ok(()) => {
             println!("wrote {out}");

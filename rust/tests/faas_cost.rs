@@ -5,6 +5,7 @@ use std::sync::atomic::Ordering;
 
 use squash::bench::{measure_squash, Env, EnvOptions};
 use squash::coordinator::tree::TreeConfig;
+use squash::faas::keepalive::KeepAliveConfig;
 
 fn env(dre: bool, seed: u64) -> Env {
     Env::setup(&EnvOptions {
@@ -111,6 +112,34 @@ fn cost_report_total_consistency() {
     assert!(r.c_run > 0.0 && r.c_invoc > 0.0);
     // per-query cost is total / queries
     assert!((stats.cost_per_query - r.total() / 24.0).abs() < 1e-12);
+}
+
+#[test]
+fn keepalive_buckets_stay_zero_without_a_policy() {
+    // keep-alive pinned to NeverExpire explicitly, so this invariant is
+    // hermetic under the CI job's SQUASH_KEEPALIVE environment override
+    let e = Env::setup(&EnvOptions {
+        profile: "test",
+        n: 2000,
+        n_queries: 24,
+        time_scale: 0.0,
+        keepalive: KeepAliveConfig::NeverExpire,
+        ..Default::default()
+    });
+    let _ = measure_squash(&e, "x", 0);
+    let l = &e.ledger;
+    assert_eq!(l.idle_gb_s(), 0.0, "no policy, no idle billing");
+    assert_eq!(l.expired_containers.load(Ordering::Relaxed), 0);
+    assert_eq!(l.prewarmed_containers.load(Ordering::Relaxed), 0);
+    assert_eq!(l.prewarm_cold_starts_avoided.load(Ordering::Relaxed), 0);
+    assert_eq!(l.hedges_skipped_cold.load(Ordering::Relaxed), 0);
+    // the digest carries the keep-alive line even when inert, so policy
+    // regressions surface in the CI ledger-digest diffs
+    assert!(
+        l.chaos_summary().contains("keepalive idle_gb_s=0.000000 expired=0"),
+        "inert keep-alive digest line missing:\n{}",
+        l.chaos_summary()
+    );
 }
 
 #[test]

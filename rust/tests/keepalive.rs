@@ -1,0 +1,533 @@
+//! Keep-alive & prewarm policy engine, pinned determinism-first.
+//! Properties:
+//!
+//! 1. **Disabled-or-inert policies are byte-identical to the pre-policy
+//!    platform.** `NeverExpire` and a `FixedTtl` longer than any run
+//!    replay the chaos/scatter and load-engine suites bit-for-bit —
+//!    identical results, identical ledger digests. The policy engine is
+//!    invisible until a window can actually expire.
+//! 2. **Enabled policies are deterministic.** Two runs of the same
+//!    seeded load point under the same policy produce identical ledger
+//!    digests; the digest is written to a file so CI can diff two
+//!    independent processes (the chaos-harness pattern).
+//! 3. **Policies move time and cost, never answers.** Recall@10 floors
+//!    hold under `FixedTtl` and `HybridHistogram` with a 3-way scatter
+//!    and chaos seed 7, and recall is bit-identical to the quiet run.
+//! 4. **The hybrid histogram honors its contract.** Property tests: the
+//!    predicted window brackets the observed idle mode; OOB counters and
+//!    dispersion trigger the documented fixed-TTL fallbacks; identical
+//!    per-function streams yield identical windows under any
+//!    interleaving.
+//! 5. **Expiry evicts DRE.** A TTL that reclaims every idle container
+//!    forces segment re-reads: strictly more billed I/O than the
+//!    retained run.
+//! 6. **Hedges respect pool warmth.** A hedge whose cold-start-inclusive
+//!    completion cannot beat the primary is skipped, counted under
+//!    `hedges_skipped_cold`, and the merged result is unchanged.
+//! 7. **The Pareto headline.** Under the load engine the hybrid policy
+//!    strictly dominates at least one fixed-TTL point on the
+//!    (cold-start-rate, idle-GB-s) Pareto, and the sweep replays
+//!    byte-identically.
+//!
+//! Every `EnvOptions` here pins `keepalive` explicitly, so the suite is
+//! hermetic under the CI job's `SQUASH_KEEPALIVE` environment override.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use squash::bench::keepalive::{dominates, run_sweep, KeepaliveOptions};
+use squash::bench::load::{configure_for_load, run_point, ArrivalProfile, LoadOptions};
+use squash::bench::{measure_squash, Env, EnvOptions};
+use squash::coordinator::tree::TreeConfig;
+use squash::coordinator::{BuildOptions, HedgePolicy, QpSharding, SquashConfig, SquashSystem};
+use squash::cost::CostLedger;
+use squash::data::profiles::by_name;
+use squash::data::synthetic::generate;
+use squash::data::workload::{generate_workload, WorkloadOptions};
+use squash::faas::keepalive::{
+    HybridConfig, HybridDecision, HybridHistogram, IdleWindow, KeepAliveConfig, KeepAlivePolicy,
+};
+use squash::faas::{ChaosConfig, FaasConfig, Platform};
+use squash::runtime::backend::NativeScanEngine;
+use squash::storage::{FileStore, ObjectStore, SimParams};
+use squash::util::prop;
+
+/// A TTL no run in this suite can outlive: behaviorally `NeverExpire`.
+const HUGE_TTL: f64 = 1e9;
+
+fn base_opts(keepalive: KeepAliveConfig) -> EnvOptions {
+    EnvOptions {
+        profile: "test",
+        n: 1500,
+        n_queries: 24,
+        time_scale: 0.0,
+        keepalive,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// 1. inert policies are byte-identical to the pre-policy platform
+// ---------------------------------------------------------------------
+
+#[test]
+fn inert_policies_replay_the_chaos_scatter_suite_byte_identically() {
+    let run = |keepalive: KeepAliveConfig| {
+        let opts = EnvOptions {
+            n: 2000,
+            seed: 2024,
+            chaos: ChaosConfig::with_seed(7),
+            hedge: HedgePolicy::parse("p95").unwrap(),
+            qp_sharding: QpSharding::Fixed(3),
+            ..base_opts(keepalive)
+        };
+        let mut env = Env::setup(&opts);
+        // single-QA tree: per-function invocation order — hence the
+        // per-function chaos draw sequence in the ledger digest — is only
+        // deterministic without parallel QAs (same rationale as chaos.rs);
+        // low scatter threshold so the small fixture actually scatters
+        env.with_config(|c| {
+            c.tree = TreeConfig::new(1, 1);
+            c.qp_shard_min_rows = 8;
+        });
+        let recall = measure_squash(&env, "keepalive-inert", 10).recall;
+        assert!(env.ledger.qp_shard_invocations() > 0, "fixture must scatter");
+        (recall.to_bits(), env.ledger.chaos_summary())
+    };
+    let disabled = run(KeepAliveConfig::NeverExpire);
+    let huge_ttl = run(KeepAliveConfig::FixedTtl { keep_alive_s: HUGE_TTL });
+    assert_eq!(
+        disabled, huge_ttl,
+        "a TTL longer than the run must be byte-identical to the disabled engine"
+    );
+}
+
+#[test]
+fn inert_policies_replay_the_load_engine_byte_identically() {
+    let lopts = LoadOptions {
+        qps: vec![200.0],
+        fuse_window_ms: 2.0,
+        max_containers: 2,
+        arrival: ArrivalProfile::Poisson,
+        seed: 42,
+    };
+    let run = |keepalive: KeepAliveConfig| {
+        let mut o = base_opts(keepalive);
+        o.virtual_pools = true;
+        o.max_containers = lopts.max_containers;
+        let mut env = Env::setup(&o);
+        configure_for_load(&mut env);
+        let point = run_point(&env, 200.0, &lopts);
+        (point, env.ledger.chaos_summary())
+    };
+    let (a, digest_a) = run(KeepAliveConfig::NeverExpire);
+    let (b, digest_b) = run(KeepAliveConfig::FixedTtl { keep_alive_s: HUGE_TTL });
+    assert_eq!(digest_a, digest_b, "inert TTL must not move the fleet ledger");
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits(), "arrival moved");
+        assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits(), "latency moved");
+        assert_eq!(x.result, y.result, "results moved");
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. enabled policies are deterministic (CI double-run digest diff)
+// ---------------------------------------------------------------------
+
+#[test]
+fn enabled_policies_replay_the_ledger_byte_identically() {
+    let run = |keepalive: KeepAliveConfig| {
+        let lopts = LoadOptions {
+            qps: vec![20.0],
+            fuse_window_ms: 0.0,
+            max_containers: 4,
+            arrival: ArrivalProfile::Poisson,
+            seed: 42,
+        };
+        let mut o = EnvOptions { n: 1200, n_queries: 16, ..base_opts(keepalive) };
+        o.virtual_pools = true;
+        o.max_containers = lopts.max_containers;
+        let mut env = Env::setup(&o);
+        configure_for_load(&mut env);
+        let point = run_point(&env, 20.0, &lopts);
+        let end = point.outcomes.iter().map(|q| q.completion_s).fold(0.0, f64::max);
+        env.platform.settle_idle(end);
+        env.ledger.chaos_summary()
+    };
+    let digest = || {
+        format!(
+            "ttl:0.05\n{}\nhybrid\n{}",
+            run(KeepAliveConfig::FixedTtl { keep_alive_s: 0.05 }),
+            run(KeepAliveConfig::Hybrid(HybridConfig::default()))
+        )
+    };
+    let first = digest();
+    let second = digest();
+    assert_eq!(first, second, "enabled policies must replay the ledger byte-identically");
+    // emit the digest so CI can diff two independent test processes
+    let path = std::env::var("SQUASH_KEEPALIVE_LEDGER_OUT")
+        .unwrap_or_else(|_| "keepalive_ledger_summary.txt".to_string());
+    std::fs::write(&path, &first).expect("write keepalive ledger summary");
+}
+
+// ---------------------------------------------------------------------
+// 3. recall floors under enabled policies (chaos + scatter)
+// ---------------------------------------------------------------------
+
+#[test]
+fn recall_floors_hold_under_keepalive_policies() {
+    let recall_bits = |keepalive: KeepAliveConfig| {
+        let opts = EnvOptions {
+            n: 2000,
+            seed: 2024,
+            chaos: ChaosConfig::with_seed(7),
+            qp_sharding: QpSharding::Fixed(3),
+            ..base_opts(keepalive)
+        };
+        let mut env = Env::setup(&opts);
+        env.with_config(|c| c.qp_shard_min_rows = 8);
+        let r = measure_squash(&env, "keepalive-recall", 10).recall;
+        assert!(r >= 0.80, "recall@10 under keep-alive fell to {r}");
+        r.to_bits()
+    };
+    let quiet = recall_bits(KeepAliveConfig::NeverExpire);
+    // an aggressive TTL (everything expires, everything re-reads) and the
+    // learning policy: retention moves cost, never answers
+    assert_eq!(
+        recall_bits(KeepAliveConfig::FixedTtl { keep_alive_s: 0.001 }),
+        quiet,
+        "fixed-TTL expiry altered accuracy"
+    );
+    assert_eq!(
+        recall_bits(KeepAliveConfig::Hybrid(HybridConfig::default())),
+        quiet,
+        "hybrid policy altered accuracy"
+    );
+}
+
+// ---------------------------------------------------------------------
+// 4. hybrid-histogram property tests
+// ---------------------------------------------------------------------
+
+#[test]
+fn hybrid_window_brackets_the_observed_idle_mode() {
+    prop::check("hybrid-brackets-mode", 100, |g| {
+        let cfg = HybridConfig::default();
+        let mut h = HybridHistogram::new(cfg);
+        let center = g.f32_in(0.2, 8.0) as f64;
+        let n = g.usize_in(10, 40);
+        for _ in 0..n {
+            // a tight cluster: trusted (low CV), fully in-bin
+            h.observe_idle("f", center + g.f32_in(-0.1, 0.1) as f64);
+        }
+        let (w, why) = h.predict("f");
+        if why != HybridDecision::Predicted {
+            return Err(format!("tight cluster not trusted: {why:?}"));
+        }
+        let (mode_lo, mode_hi) = h.mode_bin("f").expect("in-bin samples exist");
+        if w.prewarm_s > mode_lo {
+            return Err(format!("prewarm {} above mode_lo {mode_lo}", w.prewarm_s));
+        }
+        if w.keep_alive_s < mode_hi {
+            return Err(format!("keep {} below mode_hi {mode_hi}", w.keep_alive_s));
+        }
+        if w.prewarm_s >= w.keep_alive_s {
+            return Err(format!("degenerate window {w:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hybrid_oob_and_dispersion_trigger_the_documented_fallbacks() {
+    prop::check("hybrid-fallbacks", 50, |g| {
+        let cfg = HybridConfig::default();
+        let fallback = IdleWindow::ttl(cfg.fallback_ttl_s);
+        let expect = |h: &HybridHistogram, want: HybridDecision| -> Result<(), String> {
+            let (w, why) = h.predict("f");
+            if why != want {
+                return Err(format!("expected {want:?}, got {why:?}"));
+            }
+            if w != fallback {
+                return Err(format!("fallback window {w:?} != ttl({})", cfg.fallback_ttl_s));
+            }
+            Ok(())
+        };
+
+        // fewer than min_samples cycles: cold history
+        let mut h = HybridHistogram::new(cfg);
+        for _ in 0..g.usize_in(0, cfg.min_samples as usize - 1) {
+            h.observe_idle("f", g.f32_in(0.05, 10.0) as f64);
+        }
+        expect(&h, HybridDecision::ColdStartHistory)?;
+
+        // a majority of cycles below the head resolution
+        let mut h = HybridHistogram::new(cfg);
+        let n_oob = g.usize_in(8, 20);
+        for _ in 0..n_oob {
+            h.observe_idle("f", g.f32_in(0.0, 0.009) as f64);
+        }
+        for _ in 0..g.usize_in(0, n_oob - 1) {
+            h.observe_idle("f", g.f32_in(0.05, 10.0) as f64);
+        }
+        expect(&h, HybridDecision::HeadOutOfBounds)?;
+
+        // a majority of cycles beyond the histogram range
+        let mut h = HybridHistogram::new(cfg);
+        let n_oob = g.usize_in(8, 20);
+        for _ in 0..n_oob {
+            h.observe_idle("f", cfg.head_s + cfg.bins as f64 * cfg.bin_s + g.f32_in(0.5, 40.0) as f64);
+        }
+        for _ in 0..g.usize_in(0, n_oob - 1) {
+            h.observe_idle("f", g.f32_in(0.05, 10.0) as f64);
+        }
+        expect(&h, HybridDecision::TailOutOfBounds)?;
+
+        // heavy mass near zero plus a far tail: CV over the threshold
+        let mut h = HybridHistogram::new(cfg);
+        for _ in 0..g.usize_in(8, 30) {
+            h.observe_idle("f", g.f32_in(0.02, 0.08) as f64);
+        }
+        h.observe_idle("f", g.f32_in(10.0, 11.5) as f64);
+        expect(&h, HybridDecision::TooDispersed)
+    });
+}
+
+#[test]
+fn identical_per_function_streams_predict_identical_windows_under_any_interleaving() {
+    prop::check("hybrid-interleaving-invariance", 50, |g| {
+        let cfg = HybridConfig::default();
+        // two functions with independent streams (any mix of in-bin,
+        // head-OOB and tail-OOB values)
+        let stream = |g: &mut prop::Gen, n: usize| -> Vec<f64> {
+            (0..n).map(|_| g.f32_in(0.0, 14.0) as f64).collect()
+        };
+        let na = g.usize_in(8, 40);
+        let a = stream(g, na);
+        let nb = g.usize_in(8, 40);
+        let b = stream(g, nb);
+
+        // reference: each stream fed alone, in order
+        let mut reference = HybridHistogram::new(cfg);
+        for &x in &a {
+            reference.observe_idle("a", x);
+        }
+        for &x in &b {
+            reference.observe_idle("b", x);
+        }
+
+        // shuffled merged feed: per-function state must not bleed
+        let mut merged: Vec<(&str, f64)> = a
+            .iter()
+            .map(|&x| ("a", x))
+            .chain(b.iter().map(|&x| ("b", x)))
+            .collect();
+        g.rng.shuffle(&mut merged);
+        let mut interleaved = HybridHistogram::new(cfg);
+        for &(f, x) in &merged {
+            interleaved.observe_idle(f, x);
+        }
+
+        for f in ["a", "b"] {
+            if interleaved.sample_counts(f) != reference.sample_counts(f) {
+                return Err(format!("sample counts diverged for {f}"));
+            }
+            let (wr, whyr) = reference.predict(f);
+            let (wi, whyi) = interleaved.predict(f);
+            if whyi != whyr || wi != wr {
+                return Err(format!(
+                    "windows diverged for {f}: {wi:?}/{whyi:?} vs {wr:?}/{whyr:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// 5. expiry evicts DRE: segment reads re-bill
+// ---------------------------------------------------------------------
+
+#[test]
+fn expiry_evicts_dre_and_rebills_segment_reads() {
+    let env_with = |keepalive: KeepAliveConfig| {
+        Env::setup(&EnvOptions { n: 2000, seed: 3, ..base_opts(keepalive) })
+    };
+    // retained baseline: warm runs reuse DRE-retained segments
+    let never = env_with(KeepAliveConfig::NeverExpire);
+    let _ = measure_squash(&never, "cold", 0);
+    let warm_retained = measure_squash(&never, "warm", 0);
+
+    // a TTL below every inter-invocation gap: each release expires, the
+    // sweep evicts its DRE store, and warm-run reads come back
+    let ttl = env_with(KeepAliveConfig::FixedTtl { keep_alive_s: 1e-6 });
+    let cold_expiring = measure_squash(&ttl, "cold", 0);
+    let warm_expiring = measure_squash(&ttl, "warm", 0);
+    assert!(
+        ttl.ledger.expired_containers.load(Ordering::Relaxed) > 0,
+        "a sub-gap TTL must expire containers"
+    );
+    assert!(ttl.ledger.idle_gb_s() > 0.0, "expired windows bill idle");
+    assert!(
+        warm_expiring.cost.s3_gets * 2 >= cold_expiring.cost.s3_gets,
+        "expiry must keep re-fetching segments: warm {} vs cold {}",
+        warm_expiring.cost.s3_gets,
+        cold_expiring.cost.s3_gets
+    );
+    assert!(
+        warm_expiring.cost.s3_gets > warm_retained.cost.s3_gets,
+        "evicted DRE must re-bill reads the retained run skipped: {} vs {}",
+        warm_expiring.cost.s3_gets,
+        warm_retained.cost.s3_gets
+    );
+}
+
+// ---------------------------------------------------------------------
+// 6. hedge gating on predicted pool warmth
+// ---------------------------------------------------------------------
+
+/// The chaos-harness fixture (single-QA tree, low scatter threshold)
+/// with a policy knob and a cold start so long no hedge can win against
+/// it. Hedging starts `Off` so a warm-up batch can populate every
+/// primary pool without firing hedges; the test swaps in the p95 policy
+/// for the measured batch.
+fn hedge_sys(ds: &squash::data::Dataset, keepalive: KeepAliveConfig) -> SquashSystem {
+    let cfg = SquashConfig {
+        tree: TreeConfig::new(1, 1),
+        qp_shards: QpSharding::Fixed(3),
+        qp_shard_min_rows: 8,
+        hedge: HedgePolicy::Off,
+        ..Default::default()
+    };
+    let chaos = ChaosConfig {
+        tail_sigma: 0.6,
+        spike_prob: 0.25,
+        spike_s: 0.5,
+        ..ChaosConfig::with_seed(7)
+    };
+    let ledger = Arc::new(CostLedger::new());
+    let params = SimParams::instant();
+    let platform = Arc::new(Platform::new(
+        FaasConfig { chaos, keepalive, cold_start_s: 10.0, ..Default::default() },
+        params.clone(),
+        ledger.clone(),
+    ));
+    let s3 = Arc::new(ObjectStore::new(params.clone(), ledger.clone()));
+    let efs = Arc::new(FileStore::new(params, ledger.clone()));
+    SquashSystem::build(
+        ds,
+        &BuildOptions::default(),
+        cfg,
+        platform,
+        s3,
+        efs,
+        Arc::new(NativeScanEngine::new()),
+    )
+}
+
+#[test]
+fn hedges_into_predicted_cold_pools_are_skipped_without_changing_results() {
+    let ds = generate(by_name("test").unwrap(), 3000, 71);
+    let queries = generate_workload(
+        &ds,
+        &WorkloadOptions { n_queries: 16, ..Default::default() },
+        72,
+    )
+    .queries;
+    // warm-up with hedging off, then measure under p95: every primary
+    // pool is warm for the measured batch, while the dedicated `-hedge`
+    // pools stay empty — a warmth-aware gate must veto every hedge (a
+    // 10 s cold start never beats a warm straggler's excess)
+    let run = |keepalive: KeepAliveConfig| {
+        let mut sys = hedge_sys(&ds, keepalive);
+        sys.run_batch(&queries);
+        let mut ctx = (*sys.ctx).clone_shallow();
+        ctx.cfg.hedge = HedgePolicy::parse("p95").unwrap();
+        sys.ctx = Arc::new(ctx);
+        let results = sys.run_batch(&queries).results;
+        (results, sys)
+    };
+
+    // engine off: the gate is inert, hedges fire as before
+    let (want, baseline) = run(KeepAliveConfig::NeverExpire);
+    let fired = baseline.ctx.ledger.hedged_invocations.load(Ordering::Relaxed);
+    assert!(fired > 0, "this tail must fire hedges with the gate inert");
+    assert_eq!(baseline.ctx.ledger.hedges_skipped_cold.load(Ordering::Relaxed), 0);
+
+    // engine on with an inert-huge TTL: the primary pools behave exactly
+    // like the baseline, but warmth is now *predicted*, and the empty
+    // hedge pools predict cold — every candidate the inert run hedged
+    // is skipped instead
+    let (got, gated) = run(KeepAliveConfig::FixedTtl { keep_alive_s: HUGE_TTL });
+    let skipped = gated.ctx.ledger.hedges_skipped_cold.load(Ordering::Relaxed);
+    assert_eq!(
+        gated.ctx.ledger.hedged_invocations.load(Ordering::Relaxed),
+        0,
+        "no hedge can win against a 10 s cold start"
+    );
+    assert_eq!(
+        skipped, fired,
+        "the gate must skip exactly the candidates the inert run hedged"
+    );
+    // the merged answer is exactly the primary path's answer
+    assert_eq!(want.len(), got.len());
+    for (qi, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(a.len(), b.len(), "query {qi} result length");
+        for (rank, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.0, y.0, "query {qi} rank {rank} id");
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "query {qi} rank {rank} distance");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 7. the Pareto headline: hybrid dominates a fixed TTL, byte-replayable
+// ---------------------------------------------------------------------
+
+#[test]
+fn hybrid_dominates_a_fixed_ttl_point_and_the_sweep_replays() {
+    let base = EnvOptions { n: 1200, n_queries: 96, ..base_opts(KeepAliveConfig::NeverExpire) };
+    let opts = KeepaliveOptions {
+        qps: 10.0,
+        ttls: vec![0.1, 0.6, 3.0],
+        arrival: ArrivalProfile::Poisson,
+        max_containers: 4,
+        fuse_window_ms: 0.0,
+        seed: 42,
+    };
+    let sweep = run_sweep(&base, &opts);
+    assert_eq!(sweep.points.len(), 5, "never + 3 TTLs + hybrid");
+
+    let never = &sweep.points[0];
+    assert_eq!(never.policy, "never");
+    assert_eq!(never.idle_gb_s, 0.0, "the disabled engine never bills idle");
+
+    let hybrid = sweep.points.iter().find(|p| p.policy == "hybrid").expect("hybrid point");
+    assert!(hybrid.invocations > 0);
+    let dominated: Vec<&str> = sweep
+        .points
+        .iter()
+        .filter(|p| p.policy.starts_with("ttl:") && dominates(hybrid, p))
+        .map(|p| p.policy.as_str())
+        .collect();
+    assert!(
+        !dominated.is_empty(),
+        "hybrid (cold_rate {:.4}, idle {:.4}) must dominate at least one fixed-TTL point: {:?}",
+        hybrid.cold_rate,
+        hybrid.idle_gb_s,
+        sweep
+            .points
+            .iter()
+            .map(|p| format!("{} cold_rate={:.4} idle={:.4}", p.policy, p.cold_rate, p.idle_gb_s))
+            .collect::<Vec<_>>()
+    );
+
+    // the whole sweep replays byte-identically by seed
+    let replay = run_sweep(&base, &opts);
+    assert_eq!(
+        sweep.json.to_string(),
+        replay.json.to_string(),
+        "same seed must replay the same BENCH_keepalive.json"
+    );
+}
