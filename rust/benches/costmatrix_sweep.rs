@@ -1,0 +1,108 @@
+//! Bang-for-the-buck instance-cost matrix: kernel class × QP memory
+//! tier × shard count, every cell an open-loop workload point priced by
+//! the deterministic ledger. Kernel rows are *modeled* compute-model
+//! classes (`bench::costmatrix` module docs), so the emitted
+//! `BENCH_costmatrix.json` — avx512 rows included — is byte-identical
+//! on any host at the same seed. Per workload point the sweep names the
+//! cheapest configuration meeting the p99 SLO and the fastest
+//! configuration per dollar (minimum p99 × cost product).
+//!
+//! Env knobs (CI smoke uses small values): SQUASH_COSTMATRIX_N (dataset
+//! rows), SQUASH_COSTMATRIX_QUERIES (queries per cell),
+//! SQUASH_COSTMATRIX_KERNELS / SQUASH_COSTMATRIX_MEMORY /
+//! SQUASH_COSTMATRIX_SHARDS / SQUASH_COSTMATRIX_QPS (comma-separated
+//! axes), SQUASH_COSTMATRIX_SLO_MS (p99 SLO),
+//! SQUASH_COSTMATRIX_OUT (output path).
+
+use squash::bench::costmatrix::{row_header, row_line, run_matrix, CostMatrixOptions};
+use squash::bench::EnvOptions;
+use squash::osq::simd::KernelKind;
+
+fn env_or(name: &str, default: &str) -> String {
+    std::env::var(name).unwrap_or_else(|_| default.to_string())
+}
+
+fn main() {
+    let n: usize = env_or("SQUASH_COSTMATRIX_N", "3000").parse().expect("SQUASH_COSTMATRIX_N");
+    let n_queries: usize =
+        env_or("SQUASH_COSTMATRIX_QUERIES", "48").parse().expect("SQUASH_COSTMATRIX_QUERIES");
+    let kernels: Vec<KernelKind> = env_or("SQUASH_COSTMATRIX_KERNELS", "scalar,avx2,avx512")
+        .split(',')
+        .map(|s| KernelKind::parse(s).expect("SQUASH_COSTMATRIX_KERNELS"))
+        .collect();
+    let memory_tiers_mb: Vec<u32> = env_or("SQUASH_COSTMATRIX_MEMORY", "886,1770,3538")
+        .split(',')
+        .map(|s| s.trim().parse().expect("SQUASH_COSTMATRIX_MEMORY"))
+        .collect();
+    let shards: Vec<usize> = env_or("SQUASH_COSTMATRIX_SHARDS", "1,3")
+        .split(',')
+        .map(|s| s.trim().parse().expect("SQUASH_COSTMATRIX_SHARDS"))
+        .collect();
+    let qps: Vec<f64> = env_or("SQUASH_COSTMATRIX_QPS", "25,100")
+        .split(',')
+        .map(|s| s.trim().parse().expect("SQUASH_COSTMATRIX_QPS"))
+        .collect();
+    let slo_p99_ms: f64 =
+        env_or("SQUASH_COSTMATRIX_SLO_MS", "250").parse().expect("SQUASH_COSTMATRIX_SLO_MS");
+    let out = env_or("SQUASH_COSTMATRIX_OUT", "BENCH_costmatrix.json");
+
+    let base = EnvOptions {
+        profile: "test",
+        n,
+        n_queries,
+        time_scale: 0.0, // the sweep measures the virtual clock
+        ..Default::default()
+    };
+    let opts =
+        CostMatrixOptions { kernels, memory_tiers_mb, shards, qps, slo_p99_ms, ..Default::default() };
+
+    println!(
+        "=== instance-cost matrix ({} kernels x {} tiers x {} shard counts x {} loads, \
+         {} queries per cell) ===\n",
+        opts.kernels.len(),
+        opts.memory_tiers_mb.len(),
+        opts.shards.len(),
+        opts.qps.len(),
+        n_queries,
+    );
+    let matrix = run_matrix(&base, &opts);
+    println!("{}", row_header());
+    for r in &matrix.rows {
+        println!("{}", row_line(r));
+    }
+    println!();
+    for p in &matrix.picks {
+        match &p.cheapest_within_slo {
+            Some(r) => println!(
+                "qps {:>7.1}: cheapest within {:.0} ms SLO: {} @ {} MB x{} shards \
+                 (p99 {:.2} ms, ${:.6}/1k)",
+                p.offered_qps,
+                opts.slo_p99_ms,
+                r.config.kernel.name(),
+                r.config.memory_mb,
+                r.config.qp_shards,
+                r.p99_ms,
+                r.cost_per_1k_queries,
+            ),
+            None => println!(
+                "qps {:>7.1}: no configuration meets the {:.0} ms p99 SLO",
+                p.offered_qps, opts.slo_p99_ms
+            ),
+        }
+        if let Some(r) = &p.best_latency_per_dollar {
+            println!(
+                "qps {:>7.1}: fastest per dollar: {} @ {} MB x{} shards \
+                 (p99 {:.2} ms, ${:.6}/1k)",
+                p.offered_qps,
+                r.config.kernel.name(),
+                r.config.memory_mb,
+                r.config.qp_shards,
+                r.p99_ms,
+                r.cost_per_1k_queries,
+            );
+        }
+    }
+
+    std::fs::write(&out, matrix.json.to_string_pretty()).expect("write BENCH_costmatrix.json");
+    println!("wrote {out}");
+}

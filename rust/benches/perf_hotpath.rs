@@ -24,7 +24,7 @@ use squash::data::synthetic::generate;
 use squash::osq::binary::select_by_hamming_with_ties;
 use squash::osq::distance::AdcTable;
 use squash::osq::quantizer::{OsqIndex, OsqOptions};
-use squash::osq::simd::Kernels;
+use squash::osq::simd::{KernelKind, Kernels};
 use squash::runtime::backend::{
     NativeScanEngine, ScanEngine, ScanItem, ScanParallelism, ScanRequest, ScanScratch,
     XlaScanEngine,
@@ -73,24 +73,24 @@ fn main() {
     });
     println!("{r}   => {:.1} Mvec/s", n as f64 * r.per_sec() / 1e6);
     json_rows.push(json_row("hamming_scan_hist_scalar", &r));
-    let kernels = Kernels::detect();
-    if kernels != Kernels::scalar() {
-        let r = bench_fn(
-            &format!("hamming scan+hist {} (20k x 128d)", kernels.name()),
-            T,
-            || {
-                kernels.hamming_scan_hist(
-                    &idx.binary,
-                    black_box(&qw),
-                    black_box(&rows32),
-                    &mut h,
-                    &mut hist,
-                );
-                black_box(&h);
-            },
-        );
+    // one row per kernel rung the host supports (avx512 hosts get an
+    // extra row beyond avx2), each labelled by its runtime name
+    for k in Kernels::available() {
+        if k.kind == KernelKind::Scalar {
+            continue;
+        }
+        let r = bench_fn(&format!("hamming scan+hist {} (20k x 128d)", k.name()), T, || {
+            k.hamming_scan_hist(
+                &idx.binary,
+                black_box(&qw),
+                black_box(&rows32),
+                &mut h,
+                &mut hist,
+            );
+            black_box(&h);
+        });
         println!("{r}   => {:.1} Mvec/s", n as f64 * r.per_sec() / 1e6);
-        json_rows.push(json_row(&format!("hamming_scan_hist_{}", kernels.name()), &r));
+        json_rows.push(json_row(&format!("hamming_scan_hist_{}", k.name()), &r));
     }
 
     // 2. ADC LUT build (fresh alloc vs scratch rebuild)
@@ -125,9 +125,12 @@ fn main() {
         n as f64 * r_blocked.per_sec() / 1e6
     );
     json_rows.push(json_row("lb_scan_blocked_scalar", &r_blocked));
-    if kernels != Kernels::scalar() {
-        let r = bench_fn(&format!("LB scan blocked {} (20k x 128d)", kernels.name()), T, || {
-            kernels.lb_sq_scan_blocked(
+    for k in Kernels::available() {
+        if k.kind == KernelKind::Scalar {
+            continue;
+        }
+        let r = bench_fn(&format!("LB scan blocked {} (20k x 128d)", k.name()), T, || {
+            k.lb_sq_scan_blocked(
                 &idx,
                 black_box(&lut),
                 black_box(&rows32),
@@ -140,10 +143,10 @@ fn main() {
         println!(
             "{r}   => {:.1} Mvec/s ({} vs scalar: {:.2}x)",
             n as f64 * r.per_sec() / 1e6,
-            kernels.name(),
+            k.name(),
             r_blocked.mean_s / r.mean_s
         );
-        json_rows.push(json_row(&format!("lb_scan_blocked_{}", kernels.name()), &r));
+        json_rows.push(json_row(&format!("lb_scan_blocked_{}", k.name()), &r));
     }
     let r_fused = bench_fn("LB scan fused-col (20k x 128d)", T, || {
         idx.lb_sq_scan(black_box(&lut), black_box(&rows), &mut acc);
@@ -209,10 +212,14 @@ fn main() {
         (0..n_queries).map(|i| ds.vectors.row(37 * i + 11).to_vec()).collect();
     let frames: Vec<Vec<f32>> = queries.iter().map(|v| idx.query_frame(v)).collect();
     let keep = (n as f64 * 0.10).ceil() as usize;
-    let configs: [(&str, &NativeScanEngine); 3] = [
-        ("scalar      ", &scalar_engine),
-        ("simd        ", &simd_engine),
-        ("simd+sharded", &sharded_engine),
+    // labels carry the *runtime* kernel class (avx512 / avx2 / neon),
+    // not a hardcoded "simd" — BENCH_hotpath.json rows stay comparable
+    // across hosts with different ISAs
+    let kernel_label = simd_engine.kernel_name();
+    let configs: [(String, &NativeScanEngine); 3] = [
+        (format!("{:<12}", "scalar"), &scalar_engine),
+        (format!("{kernel_label:<12}"), &simd_engine),
+        (format!("{:<12}", format!("{kernel_label}+sharded")), &sharded_engine),
     ];
     // bit-identity cross-check before the clock starts
     let make_req = |prune: bool| ScanRequest {
@@ -238,7 +245,7 @@ fn main() {
             }
         }
     }
-    let mut speedups: Vec<(&str, Json)> = Vec::new();
+    let mut speedups: Vec<(String, Json)> = Vec::new();
     for (label, tag, prune) in
         [("pruned 10%", "pruned", true), ("prune off ", "noprune", false)]
     {
@@ -286,15 +293,7 @@ fn main() {
             } else {
                 let s = scalar_mean / r.mean_s;
                 println!("    {cname} vs batched-scalar ({label}): {s:.2}x");
-                speedups.push((
-                    match (cname, prune) {
-                        ("simd", true) => "simd_vs_scalar_pruned",
-                        ("simd", false) => "simd_vs_scalar_noprune",
-                        ("simd+sharded", true) => "sharded_vs_scalar_pruned",
-                        _ => "sharded_vs_scalar_noprune",
-                    },
-                    Json::num(s),
-                ));
+                speedups.push((format!("{cname}_vs_scalar_{tag}"), Json::num(s)));
             }
         }
     }
@@ -338,7 +337,8 @@ fn main() {
          invocation overhead is real compute here)",
         r_single.mean_s / r_scatter.mean_s
     );
-    speedups.push(("qp_scatter3_vs_single", Json::num(r_single.mean_s / r_scatter.mean_s)));
+    speedups
+        .push(("qp_scatter3_vs_single".to_string(), Json::num(r_single.mean_s / r_scatter.mean_s)));
 
     // 7c. hedged scatter under the deterministic tail model: seeded
     //     lognormal jitter + cold-start-class spikes on every invocation;
@@ -402,7 +402,9 @@ fn main() {
         ("kernel", Json::str(simd_engine.kernel_name())),
         ("shards", Json::num(sharded_engine.shards() as f64)),
         ("results", Json::Arr(json_rows)),
-        ("speedups", Json::obj(speedups)),
+        // runtime-named keys (e.g. "avx512_vs_scalar_pruned") — build
+        // the map directly rather than through the &str-keyed helper
+        ("speedups", Json::Obj(speedups.into_iter().collect())),
         ("hedge_ablation", hedge_ablation),
     ]);
     match std::fs::write("BENCH_hotpath.json", report.to_string_pretty()) {

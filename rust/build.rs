@@ -1,0 +1,43 @@
+//! Build probe for the AVX-512 kernel rung.
+//!
+//! The `std::arch` AVX-512 intrinsics (`_mm512_*`, including
+//! `_mm512_popcnt_epi64` from AVX512-VPOPCNTDQ) stabilized in Rust
+//! 1.89. This crate stays dependency-free and must build on older
+//! toolchains, so instead of a hard `rustc` floor the build script
+//! probes the compiler version and only emits the `squash_avx512` cfg
+//! when the intrinsics are available. On older compilers the AVX-512
+//! rung silently compiles out and `Kernels::detect` tops out at AVX2 —
+//! the same graceful degradation as running on a host without the ISA.
+//!
+//! `cargo:rustc-check-cfg` (stable since 1.80) registers the custom
+//! cfg so `#[cfg(squash_avx512)]` passes `unexpected_cfgs` lints under
+//! `clippy --all-targets -- -D warnings`.
+
+use std::process::Command;
+
+fn rustc_minor_version() -> Option<u32> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (…)" — take the second whitespace field, split on
+    // '.', parse the minor. Tolerates nightly/beta suffixes.
+    let version = text.split_whitespace().nth(1)?;
+    let mut parts = version.split('.');
+    let major: u32 = parts.next()?.parse().ok()?;
+    if major != 1 {
+        // Hypothetical 2.x is newer than anything we gate on.
+        return Some(u32::MAX);
+    }
+    parts.next()?.trim_end_matches(|c: char| !c.is_ascii_digit()).parse().ok()
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    let minor = rustc_minor_version();
+    if minor.map_or(false, |m| m >= 80) {
+        println!("cargo:rustc-check-cfg=cfg(squash_avx512)");
+    }
+    if minor.map_or(false, |m| m >= 89) {
+        println!("cargo:rustc-cfg=squash_avx512");
+    }
+}

@@ -1,0 +1,388 @@
+//! Bang-for-the-buck instance-cost matrix: kernel class × QP memory
+//! tier × shard count, priced against [`crate::cost::pricing`].
+//!
+//! The load engine ([`super::load`]) answers "what happens as offered
+//! load rises?" at one fixed deployment shape. This sweep holds the
+//! workload fixed and varies the *deployment*: which scan kernel class
+//! the QP fleet is modeled to run, how much memory (and therefore
+//! Lambda vCPU — see [`crate::cost::compute`]) each QP gets, and how
+//! many QP shard functions each request scatters over. Every
+//! configuration runs the same seeded open-loop workload points and
+//! reports modeled p99 latency plus deterministic cost per 1000
+//! queries; per workload point the sweep then names
+//!
+//! * the **cheapest configuration meeting the p99 SLO** — the
+//!   provisioning answer ("what do I deploy?"), and
+//! * the **fastest configuration per dollar** (minimum p99 × cost
+//!   product) — the efficiency frontier point, which can differ when a
+//!   config undercuts the SLO winner on latency for slightly more money.
+//!
+//! The kernel axis uses [`ComputeModel`]'s *what-if* override
+//! (`kernel: Some(class)`), never the host's real engine: scan results
+//! are bit-identical across kernel classes, so the matrix — including
+//! its avx512 rows — is a property of the model and the seed, not of
+//! the build machine. A CI scalar host and an AVX-512 workstation emit
+//! byte-identical `BENCH_costmatrix.json` documents.
+//!
+//! # `BENCH_costmatrix.json` schema
+//!
+//! ```json
+//! {
+//!   "bench": "costmatrix",
+//!   "profile": "test", "n": 3000, "queries": 48, "seed": 42,
+//!   "slo_p99_ms": 250.0, "scalar_rows_per_s": 2000000.0,
+//!   "max_containers": 4,
+//!   "rows": [
+//!     { "kernel": "avx512", "memory_mb": 1770, "qp_shards": 3,
+//!       "offered_qps": 25, "p99_ms": 41.2, "mean_ms": 18.3,
+//!       "achieved_qps": 24.8, "cold_starts": 9,
+//!       "cost_per_1k_queries": 0.0034, "p99_cost_product": 0.14 } ],
+//!   "picks": [
+//!     { "offered_qps": 25,
+//!       "cheapest_within_slo": { "kernel": "scalar", "memory_mb": 886,
+//!                                "qp_shards": 1, ... } | null,
+//!       "best_latency_per_dollar": { ... } } ]
+//! }
+//! ```
+//!
+//! `rows` is ordered kernel-major, then memory tier, then shard count,
+//! then offered QPS — a deterministic order for digest-style diffing.
+//! `cheapest_within_slo` is `null` when no configuration meets the SLO
+//! at that load point (the sweep's honest "scale up or relax the SLO"
+//! signal).
+
+use crate::bench::load::{run_point, ArrivalProfile, LoadOptions, LoadPoint};
+use crate::bench::{Env, EnvOptions};
+use crate::cost::compute::ComputeModel;
+use crate::osq::simd::KernelKind;
+use crate::util::json::Json;
+
+/// One deployment configuration on the matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MatrixConfig {
+    /// modeled kernel class (compute-model what-if, not the host engine)
+    pub kernel: KernelKind,
+    /// QP / QP-shard memory tier in MB (the vCPU axis)
+    pub memory_mb: u32,
+    /// fixed QP shard fan-out per partition (1 = no scatter)
+    pub qp_shards: usize,
+}
+
+/// One measured (configuration, workload point) cell.
+#[derive(Clone, Debug)]
+pub struct MatrixRow {
+    pub config: MatrixConfig,
+    pub offered_qps: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub achieved_qps: f64,
+    pub cold_starts: u64,
+    pub cost_per_1k_queries: f64,
+}
+
+impl MatrixRow {
+    /// p99 × cost product: lower = more latency per dollar. The
+    /// "fastest per dollar" pick minimizes this.
+    pub fn p99_cost_product(&self) -> f64 {
+        self.p99_ms * self.cost_per_1k_queries
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kernel", Json::str(self.config.kernel.name())),
+            ("memory_mb", Json::num(self.config.memory_mb as f64)),
+            ("qp_shards", Json::num(self.config.qp_shards as f64)),
+            ("offered_qps", Json::num(self.offered_qps)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("achieved_qps", Json::num(self.achieved_qps)),
+            ("cold_starts", Json::num(self.cold_starts as f64)),
+            ("cost_per_1k_queries", Json::num(self.cost_per_1k_queries)),
+            ("p99_cost_product", Json::num(self.p99_cost_product())),
+        ])
+    }
+}
+
+/// Matrix axes + workload knobs on top of an [`EnvOptions`] base.
+#[derive(Clone, Debug)]
+pub struct CostMatrixOptions {
+    /// kernel-class axis (modeled; host-independent)
+    pub kernels: Vec<KernelKind>,
+    /// QP memory tiers in MB (the Lambda vCPU axis)
+    pub memory_tiers_mb: Vec<u32>,
+    /// fixed QP shard counts
+    pub shards: Vec<usize>,
+    /// offered-QPS workload points, ascending
+    pub qps: Vec<f64>,
+    /// the p99 latency SLO configurations must meet (modeled ms)
+    pub slo_p99_ms: f64,
+    /// modeled scalar scan rate anchoring the compute model (rows/s at
+    /// one vCPU); see [`crate::cost::compute::DEFAULT_SCALAR_ROWS_PER_S`]
+    pub scalar_rows_per_s: f64,
+    /// fleet cap per function for the open-loop points
+    pub max_containers: usize,
+    /// arrival-process seed
+    pub seed: u64,
+}
+
+impl Default for CostMatrixOptions {
+    fn default() -> Self {
+        Self {
+            kernels: vec![KernelKind::Scalar, KernelKind::Avx2, KernelKind::Avx512],
+            memory_tiers_mb: vec![886, 1770, 3538],
+            shards: vec![1, 3],
+            qps: vec![25.0, 100.0],
+            slo_p99_ms: 250.0,
+            scalar_rows_per_s: crate::cost::compute::DEFAULT_SCALAR_ROWS_PER_S,
+            max_containers: 4,
+            seed: 42,
+        }
+    }
+}
+
+/// Per-workload-point winners over a set of measured rows.
+#[derive(Clone, Debug)]
+pub struct PointPicks {
+    pub offered_qps: f64,
+    /// cheapest row with `p99_ms <= slo_p99_ms` (None: nothing meets it)
+    pub cheapest_within_slo: Option<MatrixRow>,
+    /// row minimizing the p99 × cost product
+    pub best_latency_per_dollar: Option<MatrixRow>,
+}
+
+/// Select both winners for one offered-QPS point. Pure selection logic
+/// over already-measured rows, split out so tests can pin it without
+/// running environments. Ties break toward the earlier row, i.e. the
+/// deterministic matrix order.
+pub fn pick_for_point(rows: &[MatrixRow], offered_qps: f64, slo_p99_ms: f64) -> PointPicks {
+    let at_point: Vec<&MatrixRow> =
+        rows.iter().filter(|r| r.offered_qps == offered_qps).collect();
+    let cheapest_within_slo = at_point
+        .iter()
+        .filter(|r| r.p99_ms <= slo_p99_ms)
+        .min_by(|a, b| a.cost_per_1k_queries.total_cmp(&b.cost_per_1k_queries))
+        .map(|r| (*r).clone());
+    let best_latency_per_dollar = at_point
+        .iter()
+        .min_by(|a, b| a.p99_cost_product().total_cmp(&b.p99_cost_product()))
+        .map(|r| (*r).clone());
+    PointPicks { offered_qps, cheapest_within_slo, best_latency_per_dollar }
+}
+
+/// Build the fresh environment for one matrix configuration: fleet mode,
+/// compute model enabled at the config's what-if kernel class, QP memory
+/// pinned to the tier, fixed shard fan-out.
+fn config_env(base: &EnvOptions, cfg: MatrixConfig, opts: &CostMatrixOptions) -> Env {
+    let mut env_opts = base.clone();
+    env_opts.virtual_pools = true;
+    env_opts.max_containers = opts.max_containers;
+    env_opts.compute =
+        ComputeModel { scalar_rows_per_s: opts.scalar_rows_per_s, kernel: Some(cfg.kernel) };
+    env_opts.memory_qp_mb = Some(cfg.memory_mb);
+    env_opts.qp_sharding = if cfg.qp_shards <= 1 {
+        crate::coordinator::QpSharding::Off
+    } else {
+        crate::coordinator::QpSharding::Fixed(cfg.qp_shards)
+    };
+    let mut env = Env::setup(&env_opts);
+    super::load::configure_for_load(&mut env);
+    env
+}
+
+/// The assembled sweep: every measured cell plus per-point winners and
+/// the `BENCH_costmatrix.json` document.
+pub struct CostMatrixOutput {
+    pub rows: Vec<MatrixRow>,
+    pub picks: Vec<PointPicks>,
+    pub json: Json,
+}
+
+/// Run the full matrix (see the module docs for the emitted schema).
+/// Each (configuration, QPS) cell runs on a fresh environment — fresh
+/// ledger, fresh fleet — so cells are independent and the sweep order
+/// cannot leak state; rows come out kernel-major, then tier, then
+/// shards, then QPS.
+pub fn run_matrix(base: &EnvOptions, opts: &CostMatrixOptions) -> CostMatrixOutput {
+    let load_opts = LoadOptions {
+        qps: opts.qps.clone(),
+        fuse_window_ms: 0.0,
+        max_containers: opts.max_containers,
+        arrival: ArrivalProfile::Poisson,
+        seed: opts.seed,
+    };
+    let mut rows = Vec::new();
+    for &kernel in &opts.kernels {
+        for &memory_mb in &opts.memory_tiers_mb {
+            for &qp_shards in &opts.shards {
+                let cfg = MatrixConfig { kernel, memory_mb, qp_shards };
+                for &qps in &opts.qps {
+                    let env = config_env(base, cfg, opts);
+                    let p: LoadPoint = run_point(&env, qps, &load_opts).stats;
+                    rows.push(MatrixRow {
+                        config: cfg,
+                        offered_qps: qps,
+                        p99_ms: p.p99_ms,
+                        mean_ms: p.mean_ms,
+                        achieved_qps: p.achieved_qps,
+                        cold_starts: p.cold_starts,
+                        cost_per_1k_queries: p.cost_per_1k_queries,
+                    });
+                }
+            }
+        }
+    }
+    let picks: Vec<PointPicks> =
+        opts.qps.iter().map(|&q| pick_for_point(&rows, q, opts.slo_p99_ms)).collect();
+    let pick_json = |r: &Option<MatrixRow>| match r {
+        Some(r) => r.to_json(),
+        None => Json::Null,
+    };
+    let json = Json::obj(vec![
+        ("bench", Json::str("costmatrix")),
+        ("profile", Json::str(base.profile)),
+        ("n", Json::num(base.n as f64)),
+        ("queries", Json::num(base.n_queries as f64)),
+        ("seed", Json::num(opts.seed as f64)),
+        ("slo_p99_ms", Json::num(opts.slo_p99_ms)),
+        ("scalar_rows_per_s", Json::num(opts.scalar_rows_per_s)),
+        ("max_containers", Json::num(opts.max_containers as f64)),
+        ("rows", Json::Arr(rows.iter().map(|r| r.to_json()).collect())),
+        (
+            "picks",
+            Json::Arr(
+                picks
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("offered_qps", Json::num(p.offered_qps)),
+                            ("cheapest_within_slo", pick_json(&p.cheapest_within_slo)),
+                            ("best_latency_per_dollar", pick_json(&p.best_latency_per_dollar)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    CostMatrixOutput { rows, picks, json }
+}
+
+/// Fixed-width table line for one matrix row (CLI / bench output).
+pub fn row_line(r: &MatrixRow) -> String {
+    format!(
+        "{:<8} {:>7} {:>7} {:>9.1} {:>9.2} {:>9.2} {:>6} {:>12.6} {:>12.4}",
+        r.config.kernel.name(),
+        r.config.memory_mb,
+        r.config.qp_shards,
+        r.offered_qps,
+        r.p99_ms,
+        r.mean_ms,
+        r.cold_starts,
+        r.cost_per_1k_queries,
+        r.p99_cost_product(),
+    )
+}
+
+/// Header matching [`row_line`].
+pub fn row_header() -> String {
+    format!(
+        "{:<8} {:>7} {:>7} {:>9} {:>9} {:>9} {:>6} {:>12} {:>12}",
+        "kernel", "mem", "shards", "offered", "p99(ms)", "mean(ms)", "cold", "$/1k", "p99x$"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(kernel: KernelKind, mem: u32, qps: f64, p99: f64, cost: f64) -> MatrixRow {
+        MatrixRow {
+            config: MatrixConfig { kernel, memory_mb: mem, qp_shards: 1 },
+            offered_qps: qps,
+            p99_ms: p99,
+            mean_ms: p99 / 2.0,
+            achieved_qps: qps,
+            cold_starts: 0,
+            cost_per_1k_queries: cost,
+        }
+    }
+
+    #[test]
+    fn picks_cheapest_meeting_slo_and_best_product() {
+        let rows = vec![
+            // meets SLO, expensive
+            row(KernelKind::Avx512, 3538, 25.0, 40.0, 0.010),
+            // meets SLO, cheapest → cheapest_within_slo
+            row(KernelKind::Scalar, 886, 25.0, 90.0, 0.002),
+            // misses SLO but tiny product → best_latency_per_dollar can
+            // still differ from the SLO winner
+            row(KernelKind::Avx2, 1770, 25.0, 120.0, 0.001),
+            // different workload point, must be ignored
+            row(KernelKind::Scalar, 886, 100.0, 30.0, 0.0001),
+        ];
+        let p = pick_for_point(&rows, 25.0, 100.0);
+        let slo = p.cheapest_within_slo.expect("two rows meet the SLO");
+        assert_eq!(slo.config.kernel, KernelKind::Scalar);
+        assert_eq!(slo.config.memory_mb, 886);
+        let best = p.best_latency_per_dollar.expect("non-empty point");
+        assert_eq!(best.config.kernel, KernelKind::Avx2, "min p99×cost is the avx2 row");
+        // SLO impossible → honest null
+        let strict = pick_for_point(&rows, 25.0, 10.0);
+        assert!(strict.cheapest_within_slo.is_none());
+        assert!(strict.best_latency_per_dollar.is_some());
+    }
+
+    #[test]
+    fn matrix_runs_and_replays_byte_identically() {
+        let base = EnvOptions {
+            profile: "test",
+            n: 1200,
+            n_queries: 8,
+            time_scale: 0.0,
+            ..Default::default()
+        };
+        let opts = CostMatrixOptions {
+            kernels: vec![KernelKind::Scalar, KernelKind::Avx512],
+            memory_tiers_mb: vec![886, 3538],
+            shards: vec![1],
+            qps: vec![500.0],
+            slo_p99_ms: 1e9, // everything qualifies: pin the pick exists
+            scalar_rows_per_s: 1.0e5,
+            max_containers: 2,
+            seed: 7,
+        };
+        let a = run_matrix(&base, &opts);
+        let b = run_matrix(&base, &opts);
+        assert_eq!(a.rows.len(), 4);
+        // same seed ⇒ byte-identical document (the replay criterion); the
+        // kernel axis is modeled, so this holds on any host
+        assert_eq!(a.json.to_string_pretty(), b.json.to_string_pretty());
+        // the modeled kernel ladder must actually move latency: at equal
+        // tier, the avx512 row's p99 is no worse than scalar's
+        let p99 = |k: KernelKind, mem: u32| {
+            a.rows
+                .iter()
+                .find(|r| r.config.kernel == k && r.config.memory_mb == mem)
+                .expect("row present")
+                .p99_ms
+        };
+        assert!(
+            p99(KernelKind::Avx512, 886) <= p99(KernelKind::Scalar, 886),
+            "modeled avx512 must not be slower than scalar at the same tier"
+        );
+        // and the memory axis must move cost: a bigger tier bills more
+        // MB-seconds per query at the same kernel
+        let cost = |k: KernelKind, mem: u32| {
+            a.rows
+                .iter()
+                .find(|r| r.config.kernel == k && r.config.memory_mb == mem)
+                .expect("row present")
+                .cost_per_1k_queries
+        };
+        assert!(
+            cost(KernelKind::Scalar, 3538) != cost(KernelKind::Scalar, 886),
+            "memory tier must be visible in cost"
+        );
+        assert!(a.picks[0].cheapest_within_slo.is_some());
+        assert!(a.picks[0].best_latency_per_dollar.is_some());
+    }
+}

@@ -4,6 +4,7 @@
 //! engine (seeded arrivals, fusion windows, QPS sweeps) lives in
 //! [`load`].
 
+pub mod costmatrix;
 pub mod keepalive;
 pub mod load;
 pub mod resilience;
@@ -20,8 +21,10 @@ use crate::data::profiles::{by_name, Profile};
 use crate::data::synthetic::generate;
 use crate::data::workload::{generate_workload, Query, WorkloadOptions};
 use crate::data::Dataset;
+use crate::cost::compute::ComputeModel;
 use crate::faas::{FaasConfig, Platform};
-use crate::runtime::backend::{select_engine, ScanEngine, ScanParallelism};
+use crate::osq::simd::{KernelKind, Kernels};
+use crate::runtime::backend::{select_engine_with, ScanEngine, ScanParallelism};
 use crate::runtime::Engine;
 use crate::storage::{FileStore, ObjectStore, SimParams};
 use crate::util::stats::LatencySummary;
@@ -65,6 +68,15 @@ pub struct EnvOptions {
     /// container keep-alive / prewarm policy (`NeverExpire` = the
     /// pre-policy platform; `--keepalive never|ttl:<s>|hybrid`)
     pub keepalive: crate::faas::keepalive::KeepAliveConfig,
+    /// force a specific scan-kernel class (`--kernel`, errors if the
+    /// host lacks the ISA); `None` = auto-detect (honours SQUASH_KERNEL)
+    pub kernel: Option<KernelKind>,
+    /// memory-tier-aware modeled scan compute (off by default — every
+    /// pre-existing digest stays byte-identical)
+    pub compute: ComputeModel,
+    /// override the QP/QP-shard memory tier in MB (`None` = FaasConfig
+    /// default); the costmatrix sweep's tier axis
+    pub memory_qp_mb: Option<u32>,
     pub seed: u64,
 }
 
@@ -95,6 +107,10 @@ impl Default for EnvOptions {
             deadline_s: None,
             // honours SQUASH_KEEPALIVE (the CI knob for whole-suite runs)
             keepalive: crate::faas::keepalive::KeepAliveConfig::from_env(),
+            kernel: None,
+            // honours SQUASH_COMPUTE_RPS / SQUASH_COMPUTE_KERNEL
+            compute: ComputeModel::from_env(),
+            memory_qp_mb: None,
             seed: 42,
         }
     }
@@ -118,26 +134,31 @@ impl Env {
         let ds = generate(profile, opts.n, opts.seed);
         let ledger = Arc::new(CostLedger::new());
         let params = SimParams { time_scale: opts.time_scale, ..Default::default() };
-        let platform = Arc::new(Platform::new(
-            FaasConfig {
-                dre_enabled: opts.dre,
-                chaos: opts.chaos,
-                virtual_pools: opts.virtual_pools,
-                max_containers: opts.max_containers,
-                fn_timeout_s: opts.fn_timeout_s,
-                retry: opts.retry,
-                breaker: opts.breaker,
-                keepalive: opts.keepalive.clone(),
-                ..Default::default()
-            },
-            params.clone(),
-            ledger.clone(),
-        ));
+        let mut faas_cfg = FaasConfig {
+            dre_enabled: opts.dre,
+            chaos: opts.chaos,
+            virtual_pools: opts.virtual_pools,
+            max_containers: opts.max_containers,
+            fn_timeout_s: opts.fn_timeout_s,
+            retry: opts.retry,
+            breaker: opts.breaker,
+            keepalive: opts.keepalive.clone(),
+            compute: opts.compute,
+            ..Default::default()
+        };
+        if let Some(mb) = opts.memory_qp_mb {
+            faas_cfg.memory_qp_mb = mb;
+        }
+        let platform = Arc::new(Platform::new(faas_cfg, params.clone(), ledger.clone()));
         let s3 = Arc::new(ObjectStore::new(params.clone(), ledger.clone()));
         let efs = Arc::new(FileStore::new(params, ledger.clone()));
         let pjrt_engine = Engine::load_default().ok().map(Arc::new);
+        let kernels = match opts.kernel {
+            Some(k) => Kernels::forced(k).unwrap_or_else(|e| panic!("--kernel: {e}")),
+            None => Kernels::detect(),
+        };
         let engine: Arc<dyn ScanEngine> =
-            select_engine(&opts.backend, pjrt_engine, profile.d, opts.scan_parallelism);
+            select_engine_with(&opts.backend, pjrt_engine, profile.d, opts.scan_parallelism, kernels);
         let mut cfg = SquashConfig::for_profile(profile);
         cfg.qp_shards = opts.qp_sharding;
         cfg.hedge = opts.hedge;

@@ -286,6 +286,13 @@ pub fn qp_shard_handler(
             lb: p.lb.to_vec(),
         });
     });
+
+    // modeled scan compute at the shard's memory tier (no-op unless the
+    // compute model is enabled) — injected inside the handler so it
+    // lands in this invocation's modeled duration
+    let total_rows: usize = req.items.iter().map(|it| it.rows.len()).sum();
+    ctx.platform.simulate_compute(Role::QpShard, total_rows, ctx.engine.kernel_kind());
+
     QpShardResponse { items: out }
 }
 
@@ -330,6 +337,13 @@ pub fn qp_handler(
     ctx.engine.scan_batch(idx, &scan_req, &mut scratch, &mut |i, survivors, lb| {
         shortlists.push((i, lb_shortlist(&ctx.cfg, &req.items[i], &file.globals, survivors, lb)));
     });
+
+    // modeled scan compute at the QP's memory tier (no-op unless the
+    // compute model is enabled) — injected inside the handler so it
+    // lands in this invocation's modeled duration and, via the ledger's
+    // throughput samples, in `QpSharding::Auto`'s rows/s estimates
+    let total_rows: usize = req.items.iter().map(|it| it.local_rows.len()).sum();
+    ctx.platform.simulate_compute(Role::QueryProcessor, total_rows, ctx.engine.kernel_kind());
 
     // ---- optional post-refinement (§2.4.5), request-wide ---------------
     QpResponse { results: finalize_results(ctx, &req, shortlists) }

@@ -1,0 +1,198 @@
+//! Memory-tier-aware modeled scan compute ("Bang for the Buck",
+//! PAPERS.md).
+//!
+//! Lambda allocates vCPU **proportionally to configured memory** — one
+//! full vCPU per [`MB_PER_VCPU`] ≈ 1769 MB, fractionally throttled
+//! below that, up to 6 vCPUs at 10240 MB. The platform's modeled
+//! durations historically covered startup, payload transfer and storage
+//! I/O only, implicitly assuming one fixed compute tier; that makes
+//! every memory size look equally fast and the cheapest configuration
+//! trivially the smallest one. [`ComputeModel`] closes the gap: given a
+//! candidate-row count, the QP's memory tier and the engine's
+//! [`KernelKind`], it produces a deterministic modeled scan duration
+//!
+//! ```text
+//! scan_s = rows / (scalar_rows_per_s · kernel_speedup · vcpus(memory))
+//! ```
+//!
+//! which `Platform::simulate_compute` injects into the virtual clock
+//! inside the QP handlers. From that single injection point the
+//! duration flows everywhere modeled time already flows: per-invocation
+//! `modeled_s` (so `ThroughputBook` EWMAs become tier-aware and
+//! `QpSharding::Auto` sizes shards against tier-scaled rates),
+//! `CostLedger` modeled MB-seconds (so cost-per-query rises with both
+//! the tier's MB *and* its seconds), load-engine latency quantiles, and
+//! the keep-alive Pareto axes.
+//!
+//! **Off by default** (`scalar_rows_per_s == 0.0`): every existing
+//! digest, load curve and keep-alive sweep stays byte-identical unless
+//! a bench or test opts in. `bench::costmatrix` is the primary
+//! consumer.
+//!
+//! The `kernel` override decouples the *modeled* kernel class from the
+//! *running* engine: scan results are bit-identical across kernel
+//! classes, so a cost sweep can model the avx512 row on a host that
+//! only has AVX2 (or in CI's scalar job) and still replay
+//! byte-identically by seed — the matrix is a property of the model,
+//! not of the build machine.
+
+use crate::osq::simd::KernelKind;
+
+/// Lambda's memory-to-vCPU exchange rate: 1769 MB of configured memory
+/// buys one full vCPU (AWS documented ratio; 10240 MB ⇒ ~5.79 vCPUs).
+pub const MB_PER_VCPU: f64 = 1769.0;
+
+/// vCPUs Lambda allocates at 10240 MB, the largest configurable size.
+pub const MAX_VCPUS: f64 = 6.0;
+
+/// Modeled single-vCPU scalar scan rate used by the costmatrix default:
+/// a deliberately round, hardware-agnostic anchor (candidate rows per
+/// second through the fused Hamming + LB pipeline). Sweeps that want
+/// host-calibrated numbers measure their own and pass it explicitly.
+pub const DEFAULT_SCALAR_ROWS_PER_S: f64 = 2.0e6;
+
+/// Relative speedup of each kernel class over scalar at equal vCPU —
+/// the modeled counterpart of the `perf_hotpath` ablation ladder
+/// (scalar 1×, NEON ~2×, AVX2 ~4× via 8-lane LB + Mula popcount,
+/// AVX-512 ~6×: twice AVX2's Hamming lanes with native VPOPCNTQ, but
+/// the LB side shares AVX2's gather throughput, so sub-8×).
+pub fn kernel_speedup(kind: KernelKind) -> f64 {
+    match kind {
+        KernelKind::Scalar => 1.0,
+        KernelKind::Neon => 2.0,
+        KernelKind::Avx2 => 4.0,
+        KernelKind::Avx512 => 6.0,
+    }
+}
+
+/// Deterministic modeled scan-compute parameters. `Copy`, embedded in
+/// `FaasConfig`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComputeModel {
+    /// Modeled scalar-kernel scan throughput (candidate rows/s) at one
+    /// full vCPU. `0.0` disables compute modeling entirely — the
+    /// pre-existing behavior, and the default.
+    pub scalar_rows_per_s: f64,
+    /// Model durations as this kernel class regardless of what the
+    /// engine actually runs (what-if rows in the cost matrix). `None`
+    /// asks the engine for its real class.
+    pub kernel: Option<KernelKind>,
+}
+
+impl Default for ComputeModel {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+impl ComputeModel {
+    /// Compute modeling disabled (zero injected seconds everywhere).
+    pub fn off() -> Self {
+        Self { scalar_rows_per_s: 0.0, kernel: None }
+    }
+
+    /// Enabled at a given scalar-reference rate, engine-reported kernel.
+    pub fn enabled(scalar_rows_per_s: f64) -> Self {
+        Self { scalar_rows_per_s, kernel: None }
+    }
+
+    /// Environment defaults: `SQUASH_COMPUTE_RPS` (scalar rows/s; unset
+    /// or 0 = off) and `SQUASH_COMPUTE_KERNEL` (modeled kernel class
+    /// override; unparsable values are ignored).
+    pub fn from_env() -> Self {
+        let scalar_rows_per_s = std::env::var("SQUASH_COMPUTE_RPS")
+            .ok()
+            .and_then(|v| v.trim().parse::<f64>().ok())
+            .filter(|v| v.is_finite() && *v > 0.0)
+            .unwrap_or(0.0);
+        let kernel = std::env::var("SQUASH_COMPUTE_KERNEL")
+            .ok()
+            .and_then(|v| KernelKind::parse(&v));
+        Self { scalar_rows_per_s, kernel }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.scalar_rows_per_s > 0.0
+    }
+
+    /// vCPUs the tier buys: fractional below [`MB_PER_VCPU`] (Lambda
+    /// throttles CPU time proportionally), capped at [`MAX_VCPUS`].
+    pub fn vcpus(memory_mb: u32) -> f64 {
+        (memory_mb as f64 / MB_PER_VCPU).min(MAX_VCPUS)
+    }
+
+    /// Modeled seconds to scan `rows` candidate rows at `memory_mb`
+    /// with `engine_kernel` (or the configured what-if class). Zero when
+    /// the model is off or there is nothing to scan.
+    pub fn scan_seconds(&self, rows: usize, memory_mb: u32, engine_kernel: KernelKind) -> f64 {
+        if !self.is_enabled() || rows == 0 || memory_mb == 0 {
+            return 0.0;
+        }
+        let kind = self.kernel.unwrap_or(engine_kernel);
+        let rate = self.scalar_rows_per_s * kernel_speedup(kind) * Self::vcpus(memory_mb);
+        rows as f64 / rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_by_default_injects_nothing() {
+        // The Default impl consults the environment; the test suite runs
+        // without SQUASH_COMPUTE_RPS, so both paths must be inert. (CI
+        // jobs that set the variable pin their expectations explicitly.)
+        if std::env::var("SQUASH_COMPUTE_RPS").is_err() {
+            assert!(!ComputeModel::default().is_enabled());
+        }
+        let off = ComputeModel::off();
+        assert!(!off.is_enabled());
+        assert_eq!(off.scan_seconds(1_000_000, 1770, KernelKind::Avx2), 0.0);
+    }
+
+    #[test]
+    fn scales_with_memory_tier_and_kernel_class() {
+        let m = ComputeModel::enabled(1.0e6);
+        let full = m.scan_seconds(1_000_000, 1769, KernelKind::Scalar);
+        assert!((full - 1.0).abs() < 1e-9, "1M rows at 1M rows/s·vcpu, 1 vCPU: {full}");
+        // half the memory ⇒ half the vCPU ⇒ twice the duration
+        let half = m.scan_seconds(1_000_000, 1769 / 2, KernelKind::Scalar);
+        assert!(half > full * 1.99 && half < full * 2.01, "{half} vs {full}");
+        // kernel ladder strictly speeds things up at a fixed tier
+        let scalar = m.scan_seconds(500_000, 1770, KernelKind::Scalar);
+        let neon = m.scan_seconds(500_000, 1770, KernelKind::Neon);
+        let avx2 = m.scan_seconds(500_000, 1770, KernelKind::Avx2);
+        let avx512 = m.scan_seconds(500_000, 1770, KernelKind::Avx512);
+        assert!(scalar > neon && neon > avx2 && avx2 > avx512);
+        // vCPU allocation caps at the 10240 MB ceiling
+        assert_eq!(
+            m.scan_seconds(1000, 20_000, KernelKind::Scalar),
+            m.scan_seconds(1000, 11_000, KernelKind::Scalar),
+        );
+    }
+
+    #[test]
+    fn kernel_override_models_a_what_if_class() {
+        let engine_real = KernelKind::Scalar;
+        let m = ComputeModel { scalar_rows_per_s: 1.0e6, kernel: Some(KernelKind::Avx512) };
+        let forced = m.scan_seconds(600_000, 1770, engine_real);
+        let real = ComputeModel::enabled(1.0e6).scan_seconds(600_000, 1770, engine_real);
+        assert!(
+            forced < real,
+            "modeling avx512 on a scalar engine must be faster than scalar: {forced} vs {real}"
+        );
+        // the override is exactly the speedup ratio — deterministic math
+        let ratio = real / forced;
+        assert!((ratio - kernel_speedup(KernelKind::Avx512)).abs() < 1e-9, "{ratio}");
+    }
+
+    #[test]
+    fn determinism_same_inputs_same_bits() {
+        let m = ComputeModel { scalar_rows_per_s: 2.5e6, kernel: Some(KernelKind::Avx2) };
+        let a = m.scan_seconds(123_457, 886, KernelKind::Scalar);
+        let b = m.scan_seconds(123_457, 886, KernelKind::Scalar);
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert!(a > 0.0);
+    }
+}

@@ -11,6 +11,7 @@
 //! All accounting flows through [`CostLedger`], which every simulated
 //! component (FaaS platform, object store, file store) updates.
 
+pub mod compute;
 pub mod pricing;
 pub mod throughput;
 

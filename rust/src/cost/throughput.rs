@@ -9,6 +9,16 @@
 //! combination of observed rates, so it is always bracketed by the
 //! fastest and slowest sample seen — the "monotone-sane" property pinned
 //! by `tests/autotune.rs`.
+//!
+//! **Memory-tier awareness.** The book itself is unit-agnostic: it
+//! learns whatever rate the samples carry. When the platform's
+//! [`ComputeModel`](crate::cost::compute::ComputeModel) is enabled, the
+//! QP handlers inject tier- and kernel-scaled scan seconds into each
+//! invocation's modeled duration, so the samples — and therefore the
+//! EWMA and every `QpSharding::Auto` decision sized from it — reflect
+//! the configured `memory_qp_mb` tier and kernel class instead of an
+//! implicit fixed tier. A QP fleet at half the memory observes half the
+//! rows/s and Auto responds with proportionally more shards.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -139,6 +149,23 @@ mod tests {
         assert!((b.rows_per_s(1).unwrap() - 10_000.0).abs() < 1e-6);
         assert_eq!(b.rows_per_s(2), None);
         assert_eq!(b.partitions_observed(), 2);
+    }
+
+    #[test]
+    fn tier_scaled_samples_shift_the_estimate() {
+        // with the compute model on, a bigger memory tier produces
+        // shorter modeled scans ⇒ the book learns a faster rate, in the
+        // same ratio as the tiers' vCPU allocations
+        use crate::cost::compute::ComputeModel;
+        use crate::osq::simd::KernelKind;
+        let m = ComputeModel::enabled(1.0e6);
+        let big = ThroughputBook::default();
+        let small = ThroughputBook::default();
+        let rows = 100_000;
+        big.record(0, rows, m.scan_seconds(rows, 3538, KernelKind::Scalar));
+        small.record(0, rows, m.scan_seconds(rows, 886, KernelKind::Scalar));
+        let ratio = big.rows_per_s(0).unwrap() / small.rows_per_s(0).unwrap();
+        assert!((ratio - 3538.0 / 886.0).abs() < 1e-6, "tier ratio off: {ratio}");
     }
 
     #[test]

@@ -121,7 +121,9 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::cost::compute::ComputeModel;
 use crate::cost::{CostLedger, Role};
+use crate::osq::simd::KernelKind;
 use crate::storage::{
     advance_virtual_now, modeled_total, take_modeled_extra, take_modeled_total, virtual_now,
     SimParams,
@@ -370,6 +372,12 @@ pub struct FaasConfig {
     /// default `NeverExpire` disables the engine entirely. `Default`
     /// honours `SQUASH_KEEPALIVE` so CI can force a policy suite-wide.
     pub keepalive: KeepAliveConfig,
+    /// memory-tier- and kernel-class-scaled modeled scan compute
+    /// ([`crate::cost::compute::ComputeModel`]); disabled by default —
+    /// modeled durations then cover startup + payload + storage only,
+    /// byte-identical to the pre-compute-model platform. `Default`
+    /// honours `SQUASH_COMPUTE_RPS` / `SQUASH_COMPUTE_KERNEL`.
+    pub compute: ComputeModel,
 }
 
 impl Default for FaasConfig {
@@ -394,6 +402,7 @@ impl Default for FaasConfig {
             retry: RetryPolicy::legacy(),
             breaker: BreakerConfig::off(),
             keepalive: KeepAliveConfig::from_env(),
+            compute: ComputeModel::from_env(),
         }
     }
 }
@@ -622,6 +631,23 @@ impl Platform {
             // one runs the same scan kernels over a row sub-range
             Role::QueryProcessor | Role::QpShard => self.config.memory_qp_mb,
         }
+    }
+
+    /// Inject the modeled scan-compute duration for `rows` candidate
+    /// rows at `role`'s memory tier with `engine_kernel` into the
+    /// virtual clock (see [`crate::cost::compute::ComputeModel`]). Must
+    /// be called from *inside* a handler, so the seconds drain into that
+    /// invocation's `modeled_s` — and from there into throughput
+    /// samples, modeled MB-seconds and latency quantiles. A no-op (zero
+    /// seconds, no clock advance) when the model is disabled, keeping
+    /// every default-config digest byte-identical. Returns the injected
+    /// seconds.
+    pub fn simulate_compute(&self, role: Role, rows: usize, engine_kernel: KernelKind) -> f64 {
+        let s = self.config.compute.scan_seconds(rows, self.memory_for(role), engine_kernel);
+        if s > 0.0 {
+            self.params.simulate_latency(s);
+        }
+        s
     }
 
     /// Synchronously invoke `function`: acquire a container (warm if one
@@ -1206,6 +1232,39 @@ mod tests {
         assert_eq!(p.cold_invocations.load(Ordering::Relaxed), 1);
         assert_eq!(p.warm_invocations.load(Ordering::Relaxed), 2);
         assert_eq!(p.pool_size("f"), 1);
+    }
+
+    #[test]
+    fn simulate_compute_flows_into_modeled_runtime() {
+        use crate::cost::compute::ComputeModel;
+        let run = |compute: ComputeModel| {
+            let ledger = Arc::new(CostLedger::new());
+            let p = Platform::new(
+                FaasConfig { compute, ..Default::default() },
+                SimParams::instant(),
+                ledger,
+            );
+            let mut injected = 0.0;
+            p.invoke("f", Role::QueryProcessor, b"", |_, _| {
+                injected = p.simulate_compute(Role::QueryProcessor, 1_000_000, KernelKind::Scalar);
+                vec![]
+            })
+            .unwrap();
+            (injected, p.ledger.modeled_mb_seconds(Role::QueryProcessor))
+        };
+        // default-off: zero injected seconds, pre-compute-model billing
+        let (off_s, off_mbs) = run(ComputeModel::off());
+        assert_eq!(off_s, 0.0);
+        // enabled: the injected scan seconds land in THIS invocation's
+        // modeled MB-seconds at the QP tier
+        let (on_s, on_mbs) = run(ComputeModel::enabled(1.0e6));
+        assert!(on_s > 0.9 && on_s < 1.1, "1M rows at ~1M rows/s: {on_s}");
+        let want = 1770.0 * on_s;
+        assert!(
+            (on_mbs - off_mbs - want).abs() < 1e-3,
+            "modeled MB-s delta {} != injected {want}",
+            on_mbs - off_mbs
+        );
     }
 
     #[test]

@@ -28,6 +28,23 @@
 //!                                      policy lands one point on the
 //!                                      cold-start-rate vs idle-GB-s
 //!                                      Pareto written to --out.
+//!   costmatrix [--kernels scalar,avx2,avx512] [--memory 886,1770,3538]
+//!           [--shards 1,3] [--qps 25,100] [--slo-ms 250]
+//!           [--rows-per-s 2000000] [--max-containers 4]
+//!           [--out BENCH_costmatrix.json]
+//!                                      bang-for-the-buck instance-cost
+//!                                      matrix: kernel class × QP memory
+//!                                      tier × shard count, each cell an
+//!                                      open-loop workload point priced
+//!                                      by the ledger. Kernel rows are
+//!                                      *modeled* (compute-model what-if
+//!                                      classes), so the avx512 row — and
+//!                                      the whole document — is
+//!                                      byte-identical on any host at the
+//!                                      same seed. Reports the cheapest
+//!                                      config meeting the p99 SLO and
+//!                                      the fastest per dollar (min
+//!                                      p99 × cost) per workload point.
 //!   resilience [--rates 0,0.02,0.05,0.1,0.2] [--fn-timeout 0.5]
 //!           [--deadline-ms 4000] [--storm-failure-prob 0.35]
 //!           [--out BENCH_resilience.json]
@@ -43,7 +60,10 @@
 //!
 //! Common options: --profile <test|sift|gist|sift10m|deep>, --n <rows>,
 //! --queries <count>, --n-qa <10|20|84|155|258|340>, --backend
-//! <native|scalar|xla|auto>, --scan-threads <off|auto|N> (shard each
+//! <native|scalar|xla|auto>, --kernel <scalar|avx2|avx512|neon> (force
+//! the native backend's scan-kernel class; errors if the host lacks the
+//! ISA — the SQUASH_KERNEL environment variable is the fallback),
+//! --scan-threads <off|auto|N> (shard each
 //! QP scan's candidate rows across N worker threads *inside* one QP
 //! function), --qp-shards <off|auto|N> (scatter each large partition
 //! request across N separate QP *functions*, merged bit-identically at
@@ -68,8 +88,10 @@
 //! them), --time-scale <f>, --no-dre, --seed <u64>.
 
 use squash::baselines::server::InstanceType;
+use squash::bench::costmatrix::{self, CostMatrixOptions};
 use squash::bench::keepalive::{self, KeepaliveOptions};
 use squash::bench::load::{point_header, point_line, run_sweep, ArrivalProfile, LoadOptions};
+use squash::osq::simd::{KernelKind, Kernels};
 use squash::bench::resilience::{self, ResilienceOptions};
 use squash::bench::{measure_server, measure_squash, measure_system_x, Env, EnvOptions, RunStats};
 use squash::faas::keepalive::KeepAliveConfig;
@@ -99,9 +121,10 @@ fn main() {
         Some("load") => cmd_load(&args),
         Some("keepalive") => cmd_keepalive(&args),
         Some("resilience") => cmd_resilience(&args),
+        Some("costmatrix") => cmd_costmatrix(&args),
         _ => {
             eprintln!(
-                "usage: squash <info|serve|query|cost|load|keepalive|resilience> [options]   (see doc comment in rust/src/main.rs)"
+                "usage: squash <info|serve|query|cost|load|keepalive|resilience|costmatrix> [options]   (see doc comment in rust/src/main.rs)"
             );
             2
         }
@@ -216,6 +239,28 @@ fn env_opts(args: &Args) -> EnvOptions {
             // no flag: honour the SQUASH_KEEPALIVE environment override
             None => KeepAliveConfig::from_env(),
         },
+        // --kernel forces the native backend's scan-kernel class and
+        // refuses to run on a host lacking the ISA: a forced kernel that
+        // silently fell back would invalidate any perf numbers measured
+        // under it. No flag: Kernels::detect() (honours SQUASH_KERNEL).
+        kernel: match args.get("kernel") {
+            Some(spec) => match KernelKind::parse(spec) {
+                Some(k) => {
+                    if let Err(e) = Kernels::forced(k) {
+                        eprintln!("--kernel: {e}");
+                        std::process::exit(2);
+                    }
+                    Some(k)
+                }
+                None => {
+                    eprintln!("--kernel must be scalar|avx2|avx512|neon, got {spec}");
+                    std::process::exit(2);
+                }
+            },
+            None => None,
+        },
+        compute: squash::cost::compute::ComputeModel::from_env(),
+        memory_qp_mb: None,
         seed: args.get_u64("seed", 42).unwrap_or(42),
     }
 }
@@ -469,6 +514,123 @@ fn cmd_resilience(args: &Args) -> i32 {
     );
     let out = args.get_or("out", "BENCH_resilience.json").to_string();
     match std::fs::write(&out, sweep.json.to_string_pretty()) {
+        Ok(()) => {
+            println!("wrote {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_costmatrix(args: &Args) -> i32 {
+    let mut opts = env_opts(args);
+    // the sweep measures the virtual clock; real sleeping adds nothing
+    opts.time_scale = args.get_f64("time-scale", 0.0).unwrap_or(0.0);
+    if opts.n_queries == 100 && args.get("queries").is_none() {
+        opts.n_queries = 48;
+    }
+    let defaults = CostMatrixOptions::default();
+    let mut kernels = Vec::new();
+    for spec in args.get_or("kernels", "scalar,avx2,avx512").split(',') {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            continue;
+        }
+        // matrix kernels are *modeled* classes — availability on this
+        // host is deliberately not required (see bench::costmatrix)
+        match KernelKind::parse(spec) {
+            Some(k) => kernels.push(k),
+            None => {
+                eprintln!("--kernels: unknown class {spec} (expected scalar|avx2|avx512|neon)");
+                return 2;
+            }
+        }
+    }
+    let memory_tiers_mb: Vec<u32> = args
+        .get_or("memory", "886,1770,3538")
+        .split(',')
+        .filter_map(|s| s.trim().parse::<u32>().ok())
+        .filter(|&m| m > 0)
+        .collect();
+    let shards: Vec<usize> = args
+        .get_or("shards", "1,3")
+        .split(',')
+        .filter_map(|s| s.trim().parse::<usize>().ok())
+        .filter(|&s| s > 0)
+        .collect();
+    let qps: Vec<f64> = args
+        .get_or("qps", "25,100")
+        .split(',')
+        .filter_map(|s| s.trim().parse::<f64>().ok())
+        .filter(|&q| q > 0.0)
+        .collect();
+    if kernels.is_empty() || memory_tiers_mb.is_empty() || shards.is_empty() || qps.is_empty() {
+        eprintln!("--kernels/--memory/--shards/--qps must each name at least one point");
+        return 2;
+    }
+    let mopts = CostMatrixOptions {
+        kernels,
+        memory_tiers_mb,
+        shards,
+        qps,
+        slo_p99_ms: args.get_f64("slo-ms", defaults.slo_p99_ms).unwrap_or(defaults.slo_p99_ms),
+        scalar_rows_per_s: args
+            .get_f64("rows-per-s", defaults.scalar_rows_per_s)
+            .unwrap_or(defaults.scalar_rows_per_s),
+        max_containers: args
+            .get_usize("max-containers", defaults.max_containers)
+            .unwrap_or(defaults.max_containers),
+        seed: opts.seed,
+    };
+    eprintln!(
+        "cost matrix on {} (n={}, {} queries/cell, {} kernels x {} tiers x {} shard counts x {} loads)...",
+        opts.profile,
+        opts.n,
+        opts.n_queries,
+        mopts.kernels.len(),
+        mopts.memory_tiers_mb.len(),
+        mopts.shards.len(),
+        mopts.qps.len(),
+    );
+    let matrix = costmatrix::run_matrix(&opts, &mopts);
+    println!("{}", costmatrix::row_header());
+    for r in &matrix.rows {
+        println!("{}", costmatrix::row_line(r));
+    }
+    for p in &matrix.picks {
+        match &p.cheapest_within_slo {
+            Some(r) => println!(
+                "qps {:>7.1}: cheapest within {:.0} ms SLO: {} @ {} MB x{} shards (p99 {:.2} ms, ${:.6}/1k)",
+                p.offered_qps,
+                mopts.slo_p99_ms,
+                r.config.kernel.name(),
+                r.config.memory_mb,
+                r.config.qp_shards,
+                r.p99_ms,
+                r.cost_per_1k_queries,
+            ),
+            None => println!(
+                "qps {:>7.1}: no configuration meets the {:.0} ms p99 SLO",
+                p.offered_qps, mopts.slo_p99_ms
+            ),
+        }
+        if let Some(r) = &p.best_latency_per_dollar {
+            println!(
+                "qps {:>7.1}: fastest per dollar: {} @ {} MB x{} shards (p99 {:.2} ms, ${:.6}/1k)",
+                p.offered_qps,
+                r.config.kernel.name(),
+                r.config.memory_mb,
+                r.config.qp_shards,
+                r.p99_ms,
+                r.cost_per_1k_queries,
+            );
+        }
+    }
+    let out = args.get_or("out", "BENCH_costmatrix.json").to_string();
+    match std::fs::write(&out, matrix.json.to_string_pretty()) {
         Ok(()) => {
             println!("wrote {out}");
             0

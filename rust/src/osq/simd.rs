@@ -3,11 +3,34 @@
 //!
 //! The two QP hot loops — the fused Hamming XOR+POPCNT scan
 //! ([`BinaryIndex::hamming_scan_hist`]) and the blocked columnar LB
-//! gather ([`OsqIndex::lb_sq_scan_blocked`]) — each get an AVX2
-//! (`std::arch::x86_64`) and a NEON (`std::arch::aarch64`)
-//! implementation here. "Bang for the Buck" (PAPERS.md) shows these scan
-//! kernels dominate cost/performance for quantized search on commodity
-//! cloud CPUs, which is exactly the hardware class a QP Lambda runs on.
+//! gather ([`OsqIndex::lb_sq_scan_blocked`]) — each get an AVX-512
+//! (`std::arch::x86_64`, toolchain-gated), an AVX2 and a NEON
+//! (`std::arch::aarch64`) implementation here. "Bang for the Buck"
+//! (PAPERS.md) shows these scan kernels dominate cost/performance for
+//! quantized search on commodity cloud CPUs, which is exactly the
+//! hardware class a QP Lambda runs on.
+//!
+//! # The ISA ladder
+//!
+//! Detection walks down a strict ladder and stops at the first rung the
+//! host (and toolchain) supports:
+//!
+//! 1. **AVX-512** (`avx512f` + `avx512vpopcntdq` + `avx2`, x86_64):
+//!    8 candidates per Hamming step via the native `VPOPCNTQ` lane
+//!    popcount, 16 candidates per LB step. Also gated on the
+//!    `squash_avx512` cfg emitted by `build.rs` — the `_mm512_*`
+//!    intrinsics stabilized in Rust 1.89, and on older toolchains the
+//!    rung compiles out entirely (detection then tops out at AVX2,
+//!    indistinguishable from running on a host without the ISA).
+//! 2. **AVX2** (x86_64): 4 candidates per Hamming step via the Mula
+//!    nibble-LUT popcount, 8 candidates per LB step.
+//! 3. **NEON** (aarch64 baseline): `vcnt` popcount, 4-lane accumulate.
+//! 4. **Scalar**: portable Rust, always available, the semantic oracle.
+//!
+//! A `SQUASH_KERNEL=scalar|avx2|avx512|neon` environment override (and
+//! the `--kernel` CLI flag via [`Kernels::forced_by_name`]) pins the
+//! rung explicitly for CI digest jobs and benches; forcing a rung the
+//! host or toolchain cannot run is an error, never a silent fallback.
 //!
 //! # Dispatch strategy
 //!
@@ -17,7 +40,7 @@
 //! kernel call is a direct match on that enum — no per-call `cpuid`, no
 //! function-pointer indirection the optimizer can't see through. The
 //! scalar code in `osq::binary` / `osq::quantizer` is the portable
-//! fallback and the semantic oracle: property tests pin both SIMD paths
+//! fallback and the semantic oracle: property tests pin every SIMD path
 //! **bit-identical** to it (`--no-default-features` compiles the scalar
 //! path only).
 //!
@@ -35,7 +58,11 @@
 //! * Every `#[target_feature(enable = "avx2")]` function is only
 //!   reachable through [`Kernels`] whose `KernelKind::Avx2` variant is
 //!   only constructed after `is_x86_feature_detected!("avx2")` returned
-//!   true (NEON is part of the aarch64 baseline target).
+//!   true; the AVX-512 functions additionally require
+//!   `is_x86_feature_detected!("avx512f")` and `("avx512vpopcntdq")`
+//!   (NEON is part of the aarch64 baseline target). The forced-kernel
+//!   path runs the same availability check and errors instead of
+//!   constructing an unrunnable variant.
 //! * The AVX2 window gather (`_mm256_i32gather_epi32`, scale 1) reads 4
 //!   bytes at `block + k*G + seg` for the 8 rows of one step; it is only
 //!   issued under the `seg + 4 <= G` guard, so the furthest read ends at
@@ -49,6 +76,24 @@
 //!   index would panic too, just later and per-row).
 //! * Unaligned vector loads/stores use the `loadu`/`storeu` variants
 //!   exclusively; nothing here assumes alignment.
+//!
+//! # AVX-512 safety argument
+//!
+//! The AVX-512 Hamming kernel uses only full-width lane arithmetic
+//! (`_mm512_set_epi64` / `_mm512_xor_si512` / `_mm512_popcnt_epi64` /
+//! `_mm512_add_epi64`) — no masked loads, no gathers — so the only
+//! memory accesses are ordinary safe slice indexing plus a transmute of
+//! the accumulator register to `[u64; 8]` (lane 0 is the lowest 64 bits
+//! = the *last* `_mm512_set_epi64` argument, so array order == candidate
+//! order). The AVX-512 LB kernel deliberately does **not** use the
+//! 512-bit gather instructions: it widens to 16 candidates per step by
+//! issuing two *independent* 8-lane AVX2 gather chains (the exact
+//! encodings proven by the AVX2 kernel, under the same `seg + 4 <= G` /
+//! `mask < m1` guards), which keeps two gathers in flight per iteration
+//! while staying on 256-bit vectors — avoiding the AVX-512
+//! license-based frequency downclock that 512-bit memory ops trigger on
+//! several server parts. Its `#[target_feature]` set therefore enables
+//! `avx2,avx512f`, all guaranteed by the detection ladder above.
 
 use crate::osq::binary::BinaryIndex;
 use crate::osq::distance::AdcTable;
@@ -56,18 +101,94 @@ use crate::osq::quantizer::OsqIndex;
 use crate::osq::segment::DimAccessor;
 
 /// Which kernel implementation a scan engine dispatches to.
+///
+/// Every variant exists on every build (so names parse everywhere and
+/// error messages stay uniform); whether a variant is *runnable* is a
+/// separate question answered by [`KernelKind::is_available`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KernelKind {
     /// Portable scalar/auto-vectorized Rust (always available; the oracle).
     Scalar,
     /// AVX2 + nibble-LUT popcount (x86_64, runtime-detected).
     Avx2,
+    /// AVX-512 VPOPCNTDQ popcount + dual-gather LB (x86_64,
+    /// runtime-detected, needs a Rust >= 1.89 toolchain).
+    Avx512,
     /// NEON `vcnt` popcount + vectorized accumulate (aarch64 baseline).
     Neon,
 }
 
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Avx512 => "avx512",
+            KernelKind::Neon => "neon",
+        }
+    }
+
+    /// Parse a kernel-class name (`SQUASH_KERNEL` / `--kernel` values).
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelKind::Scalar),
+            "avx2" => Some(KernelKind::Avx2),
+            "avx512" => Some(KernelKind::Avx512),
+            "neon" => Some(KernelKind::Neon),
+            _ => None,
+        }
+    }
+
+    /// Can this host (arch + runtime features + toolchain) run the rung?
+    pub fn is_available(self) -> bool {
+        match self {
+            KernelKind::Scalar => true,
+            KernelKind::Avx2 => {
+                #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+                {
+                    false
+                }
+            }
+            KernelKind::Avx512 => {
+                #[cfg(all(feature = "simd", target_arch = "x86_64", squash_avx512))]
+                {
+                    std::arch::is_x86_feature_detected!("avx512f")
+                        && std::arch::is_x86_feature_detected!("avx512vpopcntdq")
+                        && std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(all(feature = "simd", target_arch = "x86_64", squash_avx512)))]
+                {
+                    false
+                }
+            }
+            KernelKind::Neon => {
+                #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(all(feature = "simd", target_arch = "aarch64")))]
+                {
+                    false
+                }
+            }
+        }
+    }
+}
+
 /// Detect the best available kernel once (engine construction time).
+/// Pure hardware/toolchain detection — the `SQUASH_KERNEL` override
+/// lives in [`Kernels::detect`].
 pub fn detect() -> KernelKind {
+    #[cfg(all(feature = "simd", target_arch = "x86_64", squash_avx512))]
+    {
+        if KernelKind::Avx512.is_available() {
+            return KernelKind::Avx512;
+        }
+    }
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     {
         if std::arch::is_x86_feature_detected!("avx2") {
@@ -97,8 +218,19 @@ impl Default for Kernels {
 }
 
 impl Kernels {
-    /// Runtime-detected best kernels for this CPU.
+    /// Runtime-detected best kernels for this CPU, honoring the
+    /// `SQUASH_KERNEL` environment override. Forcing an unavailable ISA
+    /// via the environment panics with the reason — a digest job pinned
+    /// to `SQUASH_KERNEL=avx512` on a host without the ISA must fail
+    /// loudly, not silently measure a different kernel.
     pub fn detect() -> Self {
+        if let Ok(name) = std::env::var("SQUASH_KERNEL") {
+            let name = name.trim().to_string();
+            if !name.is_empty() {
+                return Self::forced_by_name(&name)
+                    .unwrap_or_else(|e| panic!("SQUASH_KERNEL: {e}"));
+            }
+        }
         Self { kind: detect() }
     }
 
@@ -107,12 +239,44 @@ impl Kernels {
         Self { kind: KernelKind::Scalar }
     }
 
-    pub fn name(&self) -> &'static str {
-        match self.kind {
-            KernelKind::Scalar => "scalar",
-            KernelKind::Avx2 => "avx2",
-            KernelKind::Neon => "neon",
+    /// Force a specific kernel class; errors if this host (or the
+    /// compiling toolchain) cannot run it.
+    pub fn forced(kind: KernelKind) -> Result<Self, String> {
+        if kind.is_available() {
+            Ok(Self { kind })
+        } else {
+            Err(format!(
+                "kernel class '{}' is not available on this host \
+                 (detected best: '{}')",
+                kind.name(),
+                detect().name(),
+            ))
         }
+    }
+
+    /// [`Kernels::forced`] from a `--kernel` / `SQUASH_KERNEL` string.
+    pub fn forced_by_name(name: &str) -> Result<Self, String> {
+        match KernelKind::parse(name) {
+            Some(kind) => Self::forced(kind),
+            None => Err(format!(
+                "unknown kernel class '{name}' (expected scalar|avx2|avx512|neon)"
+            )),
+        }
+    }
+
+    /// Every kernel class this host can run, scalar first, ascending
+    /// the ISA ladder. Benches and equivalence tests sweep this instead
+    /// of testing only the single detected-best rung.
+    pub fn available() -> Vec<Kernels> {
+        [KernelKind::Scalar, KernelKind::Neon, KernelKind::Avx2, KernelKind::Avx512]
+            .into_iter()
+            .filter(|k| k.is_available())
+            .map(|kind| Kernels { kind })
+            .collect()
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.kind.name()
     }
 
     /// Fused Hamming scan + cutoff histogram — dispatched variant of
@@ -126,6 +290,12 @@ impl Kernels {
         hist: &mut Vec<usize>,
     ) {
         match self.kind {
+            #[cfg(all(feature = "simd", target_arch = "x86_64", squash_avx512))]
+            // SAFETY: Avx512 is only constructed after runtime detection
+            // (avx512f + avx512vpopcntdq), in detect() and forced() alike.
+            KernelKind::Avx512 => unsafe {
+                avx512::hamming_scan_hist(bin, q_words, rows, out, hist)
+            },
             #[cfg(all(feature = "simd", target_arch = "x86_64"))]
             // SAFETY: Avx2 is only constructed after runtime detection.
             KernelKind::Avx2 => unsafe {
@@ -152,6 +322,11 @@ impl Kernels {
         acc: &mut Vec<f32>,
     ) {
         match self.kind {
+            #[cfg(all(feature = "simd", target_arch = "x86_64", squash_avx512))]
+            // SAFETY: Avx512 is only constructed after runtime detection.
+            KernelKind::Avx512 => unsafe {
+                avx512::lb_sq_scan_blocked(idx, lut, rows, accessors, block, acc)
+            },
             #[cfg(all(feature = "simd", target_arch = "x86_64"))]
             // SAFETY: Avx2 is only constructed after runtime detection.
             KernelKind::Avx2 => unsafe {
@@ -168,8 +343,8 @@ impl Kernels {
 }
 
 /// Gather one [`crate::osq::quantizer::LB_BLOCK_ROWS`]-sized block of
-/// packed rows into the contiguous scratch buffer (shared by the AVX2
-/// and NEON blocked kernels; the scalar kernel has its own inline copy).
+/// packed rows into the contiguous scratch buffer (shared by the SIMD
+/// blocked kernels; the scalar kernel has its own inline copy).
 #[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
 #[inline]
 fn gather_block(packed: &[u8], g: usize, block_rows: &[u32], block: &mut Vec<u8>) {
@@ -357,6 +532,201 @@ mod avx2 {
 }
 
 // ---------------------------------------------------------------------
+// AVX-512 (x86_64, Rust >= 1.89 via the build.rs `squash_avx512` cfg)
+// ---------------------------------------------------------------------
+#[cfg(all(feature = "simd", target_arch = "x86_64", squash_avx512))]
+mod avx512 {
+    use super::*;
+    use crate::osq::binary::hamming_words;
+    use crate::osq::quantizer::LB_BLOCK_ROWS;
+    use std::arch::x86_64::*;
+
+    /// 8 candidates per step: code words one-per-64-bit-lane, XOR
+    /// against the broadcast query word, native `VPOPCNTQ` lane
+    /// popcount (`_mm512_popcnt_epi64`), lane accumulate. Integer
+    /// throughout — exactly the scalar result, at twice the AVX2 lane
+    /// width with no shuffle-LUT popcount emulation.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX512F + AVX512VPOPCNTDQ are available.
+    #[target_feature(enable = "avx512f,avx512vpopcntdq")]
+    pub unsafe fn hamming_scan_hist(
+        bin: &BinaryIndex,
+        q_words: &[u64],
+        rows: &[u32],
+        out: &mut Vec<u32>,
+        hist: &mut Vec<usize>,
+    ) {
+        out.clear();
+        out.reserve(rows.len());
+        hist.clear();
+        hist.resize(bin.d + 2, 0);
+        let words = bin.words;
+        let codes: &[u64] = &bin.codes;
+        let mut octets = rows.chunks_exact(8);
+        for oct in octets.by_ref() {
+            let b0 = oct[0] as usize * words;
+            let b1 = oct[1] as usize * words;
+            let b2 = oct[2] as usize * words;
+            let b3 = oct[3] as usize * words;
+            let b4 = oct[4] as usize * words;
+            let b5 = oct[5] as usize * words;
+            let b6 = oct[6] as usize * words;
+            let b7 = oct[7] as usize * words;
+            let mut acc = _mm512_setzero_si512();
+            for (w, &qw) in q_words.iter().enumerate() {
+                // set_epi64 lists lanes high-to-low: candidate 0 is the
+                // LAST argument (lane 0).
+                let v = _mm512_set_epi64(
+                    codes[b7 + w] as i64,
+                    codes[b6 + w] as i64,
+                    codes[b5 + w] as i64,
+                    codes[b4 + w] as i64,
+                    codes[b3 + w] as i64,
+                    codes[b2 + w] as i64,
+                    codes[b1 + w] as i64,
+                    codes[b0 + w] as i64,
+                );
+                let x = _mm512_xor_si512(v, _mm512_set1_epi64(qw as i64));
+                acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(x));
+            }
+            // SAFETY: __m512i and [u64; 8] are both 64 plain bytes; lane
+            // 0 (lowest 64 bits) lands at index 0 == candidate 0.
+            let h8: [u64; 8] = std::mem::transmute(acc);
+            for &h in &h8 {
+                hist[(h as usize).min(bin.d + 1)] += 1;
+                out.push(h as u32);
+            }
+        }
+        for &r in octets.remainder() {
+            let h = hamming_words(q_words, bin.row(r as usize));
+            hist[(h as usize).min(bin.d + 1)] += 1;
+            out.push(h);
+        }
+    }
+
+    /// Blocked columnar LB scan, 16 candidates per step per dimension:
+    /// two independent 8-lane AVX2 gather chains per iteration (window
+    /// gather → shift/mask → LUT gather → accumulate), then an 8-lane
+    /// step, then the scalar tail. See the module-level "AVX-512 safety
+    /// argument" for why this deliberately stays on 256-bit gathers.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2 + AVX512F are available. Bounds arguments
+    /// are identical to the AVX2 kernel: each 8-lane half is guarded by
+    /// `k + 8 <= nb` (resp. `k + 16 <= nb` covering both halves) and
+    /// `seg + 4 <= g`.
+    #[target_feature(enable = "avx2,avx512f")]
+    pub unsafe fn lb_sq_scan_blocked(
+        idx: &OsqIndex,
+        lut: &AdcTable,
+        rows: &[u32],
+        accessors: &[DimAccessor],
+        block: &mut Vec<u8>,
+        acc: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(accessors.len(), idx.d);
+        acc.clear();
+        acc.resize(rows.len(), 0.0);
+        let g = idx.layout.segments_per_vector();
+        let m1 = lut.m1;
+        // Same up-front guard as the AVX2 kernel: the LUT gather has no
+        // bounds check, so every possible code must index inside the
+        // m1-row column.
+        for a in accessors {
+            assert!((a.mask as usize) < m1, "dimension mask {} overflows LUT rows {m1}", a.mask);
+        }
+        let packed: &[u8] = &idx.packed;
+        let row_offsets = _mm256_setr_epi32(
+            0,
+            g as i32,
+            2 * g as i32,
+            3 * g as i32,
+            4 * g as i32,
+            5 * g as i32,
+            6 * g as i32,
+            7 * g as i32,
+        );
+        for (block_rows, block_acc) in
+            rows.chunks(LB_BLOCK_ROWS).zip(acc.chunks_mut(LB_BLOCK_ROWS))
+        {
+            gather_block(packed, g, block_rows, block);
+            let nb = block_rows.len();
+            let base = block.as_ptr();
+            for (j, a) in accessors.iter().enumerate() {
+                if a.mask == 0 {
+                    continue; // zero-bit dims carry no code, LB contribution 0
+                }
+                let seg = a.seg as usize;
+                let shift = a.shift;
+                let mask = a.mask;
+                let lut_col = &lut.table[j * m1..(j + 1) * m1];
+                if seg + 4 <= g {
+                    let shift_cnt = _mm_cvtsi32_si128(shift as i32);
+                    let mask_v = _mm256_set1_epi32(mask as i32);
+                    let mut k = 0usize;
+                    while k + 16 <= nb {
+                        // SAFETY: the two halves read [k*g+seg,
+                        // (k+15)*g+seg+4) ⊂ block because k+16 <= nb and
+                        // seg+4 <= g; the chains share no registers, so
+                        // both gathers issue back-to-back.
+                        let win_lo = _mm256_i32gather_epi32::<1>(
+                            base.add(k * g + seg) as *const i32,
+                            row_offsets,
+                        );
+                        let win_hi = _mm256_i32gather_epi32::<1>(
+                            base.add((k + 8) * g + seg) as *const i32,
+                            row_offsets,
+                        );
+                        let code_lo =
+                            _mm256_and_si256(_mm256_srl_epi32(win_lo, shift_cnt), mask_v);
+                        let code_hi =
+                            _mm256_and_si256(_mm256_srl_epi32(win_hi, shift_cnt), mask_v);
+                        // SAFETY: code <= mask < m1 (asserted up front)
+                        let vals_lo = _mm256_i32gather_ps::<4>(lut_col.as_ptr(), code_lo);
+                        let vals_hi = _mm256_i32gather_ps::<4>(lut_col.as_ptr(), code_hi);
+                        let p_lo = block_acc.as_mut_ptr().add(k);
+                        let p_hi = block_acc.as_mut_ptr().add(k + 8);
+                        _mm256_storeu_ps(p_lo, _mm256_add_ps(_mm256_loadu_ps(p_lo), vals_lo));
+                        _mm256_storeu_ps(p_hi, _mm256_add_ps(_mm256_loadu_ps(p_hi), vals_hi));
+                        k += 16;
+                    }
+                    while k + 8 <= nb {
+                        // SAFETY: same bounds as the AVX2 kernel's step.
+                        let win = _mm256_i32gather_epi32::<1>(
+                            base.add(k * g + seg) as *const i32,
+                            row_offsets,
+                        );
+                        let code =
+                            _mm256_and_si256(_mm256_srl_epi32(win, shift_cnt), mask_v);
+                        let vals = _mm256_i32gather_ps::<4>(lut_col.as_ptr(), code);
+                        let accp = block_acc.as_mut_ptr().add(k);
+                        _mm256_storeu_ps(accp, _mm256_add_ps(_mm256_loadu_ps(accp), vals));
+                        k += 8;
+                    }
+                    for t in k..nb {
+                        let brow = &block[t * g..(t + 1) * g];
+                        let window =
+                            u32::from_le_bytes(brow[seg..seg + 4].try_into().unwrap());
+                        block_acc[t] += lut_col[((window >> shift) & mask) as usize];
+                    }
+                } else {
+                    // safe tail path (code window overruns the row end) —
+                    // identical to the scalar kernel's else-branch
+                    for (out, brow) in block_acc.iter_mut().zip(block.chunks_exact(g)) {
+                        let mut window = 0u32;
+                        for (t, &byte) in brow[seg..].iter().enumerate() {
+                            window |= (byte as u32) << (8 * t);
+                        }
+                        *out += lut_col[((window >> shift) & mask) as usize];
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // NEON (aarch64)
 // ---------------------------------------------------------------------
 #[cfg(all(feature = "simd", target_arch = "aarch64"))]
@@ -511,76 +881,120 @@ mod tests {
     }
 
     #[test]
+    fn available_walks_the_ladder() {
+        let avail = Kernels::available();
+        assert_eq!(avail[0].kind, KernelKind::Scalar, "scalar is always rung 0");
+        // Every available rung must be individually forceable…
+        for k in &avail {
+            assert_eq!(Kernels::forced(k.kind).unwrap(), *k);
+        }
+        // …and the detected-best rung must be among them (unless the
+        // ambient SQUASH_KERNEL override pins something else — detect()
+        // honors it, so only check hardware detection here).
+        assert!(avail.iter().any(|k| k.kind == super::detect()));
+    }
+
+    #[test]
+    fn forced_kernel_parse_and_errors() {
+        assert_eq!(KernelKind::parse("AVX512"), Some(KernelKind::Avx512));
+        assert_eq!(KernelKind::parse(" scalar "), Some(KernelKind::Scalar));
+        assert_eq!(KernelKind::parse("sse9"), None);
+        assert!(Kernels::forced_by_name("quantum").unwrap_err().contains("unknown"));
+        // Exactly one of NEON / AVX2 can be available (different arches),
+        // so at least one forced request must error on any host.
+        let neon = Kernels::forced(KernelKind::Neon);
+        let avx2 = Kernels::forced(KernelKind::Avx2);
+        assert!(
+            neon.is_err() || avx2.is_err(),
+            "NEON and AVX2 cannot both be available on one arch"
+        );
+        // Forcing scalar always works: the override fallback path.
+        assert_eq!(Kernels::forced_by_name("scalar").unwrap(), Kernels::scalar());
+    }
+
+    #[test]
     fn prop_simd_hamming_bit_identical_to_scalar() {
-        let simd = Kernels::detect();
         let scalar = Kernels::scalar();
-        // non-multiple-of-lane dims: stress the 64-bit word padding, the
-        // 4-candidate quad remainder, and odd word counts (NEON tail)
-        prop::check("simd-hamming-vs-scalar", 40, |g| {
-            let d = g.choose(&[1usize, 7, 37, 64, 65, 96, 128, 130, 190]);
-            let n = g.usize_in(1, 300);
-            let mut rng = Rng::new(g.seed ^ 0xA5);
-            let m = awkward_matrix(n, d, &mut rng);
-            let bin = crate::osq::binary::BinaryIndex::build(&m);
-            let q: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
-            let qw = bin.encode_query(&q);
-            let rows: Vec<u32> = (0..n as u32).filter(|_| g.bool()).collect();
-            let (mut h_simd, mut hist_simd) = (vec![9u32; 3], vec![9usize; 3]);
-            let (mut h_ref, mut hist_ref) = (Vec::new(), Vec::new());
-            simd.hamming_scan_hist(&bin, &qw, &rows, &mut h_simd, &mut hist_simd);
-            scalar.hamming_scan_hist(&bin, &qw, &rows, &mut h_ref, &mut hist_ref);
-            if h_simd != h_ref {
-                return Err(format!("distances diverge ({})", simd.name()));
+        // every rung this host can run, not just the detected best —
+        // the avx512 host must also keep its avx2 rung honest
+        for simd in Kernels::available() {
+            if simd.kind == KernelKind::Scalar {
+                continue;
             }
-            if hist_simd != hist_ref {
-                return Err(format!("histograms diverge ({})", simd.name()));
-            }
-            Ok(())
-        });
+            // non-multiple-of-lane dims: stress the 64-bit word padding,
+            // the 4/8-candidate step remainder, and odd word counts
+            prop::check("simd-hamming-vs-scalar", 40, |g| {
+                let d = g.choose(&[1usize, 7, 37, 64, 65, 96, 128, 130, 190]);
+                let n = g.usize_in(1, 300);
+                let mut rng = Rng::new(g.seed ^ 0xA5);
+                let m = awkward_matrix(n, d, &mut rng);
+                let bin = crate::osq::binary::BinaryIndex::build(&m);
+                let q: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                let qw = bin.encode_query(&q);
+                let rows: Vec<u32> = (0..n as u32).filter(|_| g.bool()).collect();
+                let (mut h_simd, mut hist_simd) = (vec![9u32; 3], vec![9usize; 3]);
+                let (mut h_ref, mut hist_ref) = (Vec::new(), Vec::new());
+                simd.hamming_scan_hist(&bin, &qw, &rows, &mut h_simd, &mut hist_simd);
+                scalar.hamming_scan_hist(&bin, &qw, &rows, &mut h_ref, &mut hist_ref);
+                if h_simd != h_ref {
+                    return Err(format!("distances diverge ({})", simd.name()));
+                }
+                if hist_simd != hist_ref {
+                    return Err(format!("histograms diverge ({})", simd.name()));
+                }
+                Ok(())
+            });
+        }
     }
 
     #[test]
     fn prop_simd_lb_bit_identical_to_scalar() {
-        let simd = Kernels::detect();
         let scalar = Kernels::scalar();
-        prop::check("simd-lb-vs-scalar", 25, |g| {
-            let d = g.choose(&[3usize, 11, 16, 29, 64, 96]);
-            let n = g.usize_in(2, 400);
-            let mut rng = Rng::new(g.seed ^ 0x5A);
-            let m = awkward_matrix(n, d, &mut rng);
-            let use_klt = g.bool();
-            let idx = OsqIndex::build(
-                &m,
-                &OsqOptions { use_klt, ..Default::default() },
-                &mut rng,
-            );
-            let q = m.row(g.usize_in(0, n - 1)).to_vec();
-            let lut = idx.adc_table(&idx.query_frame(&q));
-            let accessors = idx.layout.dim_accessors();
-            // duplicated, unsorted rows straddling the 8-lane step and the
-            // 256-row block boundary
-            let mut rows: Vec<u32> = (0..n as u32).rev().filter(|_| g.bool()).collect();
-            if n > 1 {
-                rows.push(1);
-                rows.push(1);
+        for simd in Kernels::available() {
+            if simd.kind == KernelKind::Scalar {
+                continue;
             }
-            let (mut blk_a, mut acc_a) = (Vec::new(), Vec::new());
-            let (mut blk_b, mut acc_b) = (Vec::new(), Vec::new());
-            simd.lb_sq_scan_blocked(&idx, &lut, &rows, &accessors, &mut blk_a, &mut acc_a);
-            scalar.lb_sq_scan_blocked(&idx, &lut, &rows, &accessors, &mut blk_b, &mut acc_b);
-            if acc_a.len() != acc_b.len() {
-                return Err("length mismatch".into());
-            }
-            for (i, (x, y)) in acc_a.iter().zip(&acc_b).enumerate() {
-                if x.to_bits() != y.to_bits() {
-                    return Err(format!(
-                        "row {i}: {} gives {x}, scalar gives {y} (bits differ)",
-                        simd.name()
-                    ));
+            prop::check("simd-lb-vs-scalar", 25, |g| {
+                let d = g.choose(&[3usize, 11, 16, 29, 64, 96]);
+                let n = g.usize_in(2, 400);
+                let mut rng = Rng::new(g.seed ^ 0x5A);
+                let m = awkward_matrix(n, d, &mut rng);
+                let use_klt = g.bool();
+                let idx = OsqIndex::build(
+                    &m,
+                    &OsqOptions { use_klt, ..Default::default() },
+                    &mut rng,
+                );
+                let q = m.row(g.usize_in(0, n - 1)).to_vec();
+                let lut = idx.adc_table(&idx.query_frame(&q));
+                let accessors = idx.layout.dim_accessors();
+                // duplicated, unsorted rows straddling the 8/16-lane step
+                // and the 256-row block boundary
+                let mut rows: Vec<u32> =
+                    (0..n as u32).rev().filter(|_| g.bool()).collect();
+                if n > 1 {
+                    rows.push(1);
+                    rows.push(1);
                 }
-            }
-            Ok(())
-        });
+                let (mut blk_a, mut acc_a) = (Vec::new(), Vec::new());
+                let (mut blk_b, mut acc_b) = (Vec::new(), Vec::new());
+                simd.lb_sq_scan_blocked(&idx, &lut, &rows, &accessors, &mut blk_a, &mut acc_a);
+                scalar
+                    .lb_sq_scan_blocked(&idx, &lut, &rows, &accessors, &mut blk_b, &mut acc_b);
+                if acc_a.len() != acc_b.len() {
+                    return Err("length mismatch".into());
+                }
+                for (i, (x, y)) in acc_a.iter().zip(&acc_b).enumerate() {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!(
+                            "row {i}: {} gives {x}, scalar gives {y} (bits differ)",
+                            simd.name()
+                        ));
+                    }
+                }
+                Ok(())
+            });
+        }
     }
 
     #[test]
@@ -589,10 +1003,12 @@ mod tests {
         let m = awkward_matrix(10, 33, &mut rng);
         let bin = crate::osq::binary::BinaryIndex::build(&m);
         let qw = bin.encode_query(m.row(0));
-        let (mut h, mut hist) = (vec![1u32], vec![1usize]);
-        Kernels::detect().hamming_scan_hist(&bin, &qw, &[], &mut h, &mut hist);
-        assert!(h.is_empty());
-        assert_eq!(hist.len(), 35);
-        assert!(hist.iter().all(|&c| c == 0));
+        for kernels in Kernels::available() {
+            let (mut h, mut hist) = (vec![1u32], vec![1usize]);
+            kernels.hamming_scan_hist(&bin, &qw, &[], &mut h, &mut hist);
+            assert!(h.is_empty());
+            assert_eq!(hist.len(), 35);
+            assert!(hist.iter().all(|&c| c == 0));
+        }
     }
 }

@@ -43,7 +43,7 @@ use crate::osq::binary::{hamming_cutoff, hamming_histogram};
 use crate::osq::distance::AdcTable;
 use crate::osq::quantizer::OsqIndex;
 use crate::osq::segment::DimAccessor;
-use crate::osq::simd::Kernels;
+use crate::osq::simd::{KernelKind, Kernels};
 use crate::runtime::Engine;
 use crate::util::threadpool::{num_cpus, ThreadPool};
 
@@ -134,6 +134,13 @@ pub struct PartialScan<'a> {
 /// Abstract QP hot-spot compute over whole per-partition batches.
 pub trait ScanEngine: Send + Sync {
     fn name(&self) -> &'static str;
+
+    /// Which instruction-set kernel class this engine scans with — the
+    /// compute model keys modeled scan durations on it. Engines without
+    /// a CPU kernel notion (the XLA path) report `Scalar`.
+    fn kernel_kind(&self) -> KernelKind {
+        KernelKind::Scalar
+    }
 
     /// Prepare per-partition state in `scratch`. Call once before
     /// `scan_batch` whenever the target partition changes.
@@ -404,6 +411,10 @@ impl NativeScanEngine {
 impl ScanEngine for NativeScanEngine {
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn kernel_kind(&self) -> KernelKind {
+        self.kernels.kind
     }
 
     fn begin_partition(&self, idx: &OsqIndex, scratch: &mut ScanScratch) {
@@ -714,8 +725,22 @@ pub fn select_engine(
     d: usize,
     parallelism: ScanParallelism,
 ) -> Arc<dyn ScanEngine> {
+    select_engine_with(name, engine, d, parallelism, Kernels::detect())
+}
+
+/// [`select_engine`] with an explicit kernel class for the native
+/// engines (the `--kernel` / `SQUASH_KERNEL` override, pre-validated by
+/// `Kernels::forced`). The "scalar" backend name still pins the scalar
+/// oracle regardless of `kernels`.
+pub fn select_engine_with(
+    name: &str,
+    engine: Option<Arc<Engine>>,
+    d: usize,
+    parallelism: ScanParallelism,
+    kernels: Kernels,
+) -> Arc<dyn ScanEngine> {
     match name {
-        "native" => Arc::new(NativeScanEngine::with_parallelism(parallelism)),
+        "native" => Arc::new(NativeScanEngine::with_options(kernels, parallelism)),
         "scalar" => Arc::new(NativeScanEngine::with_options(Kernels::scalar(), parallelism)),
         "xla" => {
             let engine = engine.expect("xla engine requested but no PJRT engine loaded");
@@ -724,7 +749,7 @@ pub fn select_engine(
         }
         _ => match engine {
             Some(e) if e.supports(d) => Arc::new(XlaScanEngine::new(e)),
-            _ => Arc::new(NativeScanEngine::with_parallelism(parallelism)),
+            _ => Arc::new(NativeScanEngine::with_options(kernels, parallelism)),
         },
     }
 }

@@ -6,10 +6,10 @@
 
 use squash::data::profiles::by_name;
 use squash::data::synthetic::generate;
-use squash::osq::simd::Kernels;
+use squash::osq::simd::{KernelKind, Kernels};
 use squash::runtime::backend::{
-    NativeScanEngine, ScanEngine, ScanItem, ScanParallelism, ScanRequest, ScanScratch,
-    MIN_ROWS_PER_SHARD,
+    select_engine_with, NativeScanEngine, ScanEngine, ScanItem, ScanParallelism, ScanRequest,
+    ScanScratch, MIN_ROWS_PER_SHARD,
 };
 use squash::util::rng::Rng;
 
@@ -156,6 +156,116 @@ fn simd_engine_matches_scalar_engine_on_requests() {
             );
         }
     }
+}
+
+#[test]
+fn every_available_kernel_matches_scalar_across_thread_counts() {
+    // the full rung ladder the host supports (scalar always; avx512
+    // hosts get a third x86 rung) crossed with the scan-thread knob:
+    // every combination must be bit-identical to the serial scalar scan
+    let (ds, idx) = build_fixture();
+    let n = ds.vectors.n();
+    let mut rng = Rng::new(55);
+    let queries: Vec<Vec<f32>> =
+        (0..6).map(|_| ds.vectors.row(rng.gen_range(n)).to_vec()).collect();
+    let frames: Vec<Vec<f32>> = queries.iter().map(|q| idx.query_frame(q)).collect();
+    let row_sets: Vec<Vec<u32>> = vec![
+        (0..n as u32).collect(),
+        (0..n as u32).filter(|r| r % 7 != 2).collect(),
+        (0..97u32).collect(), // below every SIMD block size
+    ];
+    let items = build_items(&queries, &frames, &row_sets);
+    let req = ScanRequest { items };
+
+    let scalar = NativeScanEngine::scalar();
+    let mut s_scratch = ScanScratch::new();
+    scalar.begin_partition(&idx, &mut s_scratch);
+    let want = run(&scalar, &idx, &req, &mut s_scratch);
+
+    for kernels in Kernels::available() {
+        for threads in [ScanParallelism::Serial, ScanParallelism::Threads(3)] {
+            let engine = NativeScanEngine::with_options(kernels, threads);
+            assert_eq!(engine.kernel_kind(), kernels.kind);
+            let mut scratch = ScanScratch::new();
+            engine.begin_partition(&idx, &mut scratch);
+            let got = run(&engine, &idx, &req, &mut scratch);
+            assert_eq!(got.len(), want.len());
+            for ((gi, gs, glb), (_, ws, wlb)) in got.iter().zip(&want) {
+                assert_eq!(
+                    gs,
+                    ws,
+                    "item {gi} survivors ({} kernels, {threads:?})",
+                    kernels.name()
+                );
+                for (a, b) in glb.iter().zip(wlb) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "item {gi}: {} x {threads:?} LB not bit-identical to scalar",
+                        kernels.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn e2e_results_identical_across_kernels_and_qp_shards() {
+    // end-to-end (CO → QA → QP on the simulated platform): forcing any
+    // available kernel class and any QP scatter width must reproduce the
+    // scalar unsharded answers exactly — kernels and shards are pure
+    // performance knobs all the way up the stack
+    use squash::bench::{Env, EnvOptions};
+    use squash::coordinator::QpSharding;
+    let run_env = |kernel: Option<KernelKind>, sharding: QpSharding| {
+        let mut env = Env::setup(&EnvOptions {
+            profile: "test",
+            n: 1500,
+            n_queries: 8,
+            time_scale: 0.0,
+            qp_sharding: sharding,
+            kernel,
+            ..Default::default()
+        });
+        env.with_config(|c| c.qp_shard_min_rows = 64);
+        env.sys.run_batch(&env.queries).results
+    };
+    let want = run_env(Some(KernelKind::Scalar), QpSharding::Off);
+    for kernels in Kernels::available() {
+        for sharding in [QpSharding::Off, QpSharding::Fixed(2)] {
+            let got = run_env(Some(kernels.kind), sharding);
+            assert_eq!(
+                got,
+                want,
+                "kernel {} x {sharding:?} diverges from scalar/unsharded",
+                kernels.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn forced_kernel_and_fallback_paths() {
+    // forcing scalar succeeds everywhere and the engine reports it —
+    // the SQUASH_KERNEL=scalar / --kernel scalar fallback contract
+    let forced = Kernels::forced(KernelKind::Scalar).expect("scalar is always available");
+    let engine = NativeScanEngine::with_options(forced, ScanParallelism::Serial);
+    assert_eq!(engine.kernel_name(), "scalar");
+    assert_eq!(engine.kernel_kind(), KernelKind::Scalar);
+    // unknown class names error (the CLI override path turns this into
+    // exit(2) instead of silently running a different kernel)
+    let err = Kernels::forced_by_name("sse9").unwrap_err();
+    assert!(err.contains("unknown"), "unexpected error text: {err}");
+    // no host has both NEON and AVX2: forcing an unavailable class must
+    // error rather than silently fall back
+    let neon = Kernels::forced(KernelKind::Neon);
+    let avx2 = Kernels::forced(KernelKind::Avx2);
+    assert!(neon.is_err() || avx2.is_err());
+    // the engine-selection seam threads a forced bank through unchanged
+    let eng = select_engine_with("native", None, 16, ScanParallelism::Serial, Kernels::scalar());
+    assert_eq!(eng.kernel_kind(), KernelKind::Scalar);
+    assert_eq!(eng.name(), "native");
 }
 
 #[test]
