@@ -8,9 +8,13 @@
 //!
 //! Env knobs (CI smoke uses small values): SQUASH_LOAD_N (dataset rows),
 //! SQUASH_LOAD_QUERIES (queries per point), SQUASH_LOAD_QPS
-//! (comma-separated sweep points), SQUASH_LOAD_OUT (output path).
+//! (comma-separated sweep points), SQUASH_LOAD_OUT (output path),
+//! SQUASH_LOAD_SCHED (des|serial), SQUASH_LOAD_CLIENTS (closed-loop
+//! client count, 0 = open loop), SQUASH_LOAD_THINK_MS (mean exponential
+//! think time per client), SQUASH_LOAD_FUSE_MAX_GROUP (fusion admission
+//! cap, 0 = uncapped).
 
-use squash::bench::load::{point_header, point_line, run_sweep, LoadOptions};
+use squash::bench::load::{point_header, point_line, run_sweep, LoadOptions, Scheduler};
 use squash::bench::EnvOptions;
 
 fn env_or(name: &str, default: &str) -> String {
@@ -26,6 +30,15 @@ fn main() {
         .map(|s| s.trim().parse().expect("SQUASH_LOAD_QPS"))
         .collect();
     let out = env_or("SQUASH_LOAD_OUT", "BENCH_load.json");
+    let sched = Scheduler::from_name(&env_or("SQUASH_LOAD_SCHED", "des"))
+        .expect("SQUASH_LOAD_SCHED must be des or serial");
+    let clients: usize =
+        env_or("SQUASH_LOAD_CLIENTS", "0").parse().expect("SQUASH_LOAD_CLIENTS");
+    let think_ms: f64 =
+        env_or("SQUASH_LOAD_THINK_MS", "0").parse().expect("SQUASH_LOAD_THINK_MS");
+    let fuse_max_group: usize = env_or("SQUASH_LOAD_FUSE_MAX_GROUP", "0")
+        .parse()
+        .expect("SQUASH_LOAD_FUSE_MAX_GROUP");
 
     let base = EnvOptions {
         profile: "test",
@@ -34,9 +47,21 @@ fn main() {
         time_scale: 0.0, // the sweep measures the virtual clock
         ..Default::default()
     };
-    let opts = LoadOptions { qps, ..Default::default() };
+    let opts =
+        LoadOptions { qps, sched, clients, think_ms, fuse_max_group, ..Default::default() };
 
-    println!("=== open-loop load sweep (fleet cap {}, poisson arrivals) ===", opts.max_containers);
+    if opts.clients > 0 {
+        println!(
+            "=== closed-loop load sweep ({} clients, think {} ms, fleet cap {}) ===",
+            opts.clients, opts.think_ms, opts.max_containers
+        );
+    } else {
+        println!(
+            "=== open-loop load sweep (fleet cap {}, poisson arrivals, {} scheduler) ===",
+            opts.max_containers,
+            opts.sched.name()
+        );
+    }
     println!("fusion window: {} ms; {} queries per point\n", opts.fuse_window_ms, n_queries);
     let sweep = run_sweep(&base, &opts);
     println!("{}", point_header());

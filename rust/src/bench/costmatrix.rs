@@ -203,12 +203,15 @@ pub struct CostMatrixOutput {
 /// cannot leak state; rows come out kernel-major, then tier, then
 /// shards, then QPS.
 pub fn run_matrix(base: &EnvOptions, opts: &CostMatrixOptions) -> CostMatrixOutput {
+    // open loop through the default DES scheduler (dispatch-identical
+    // to the retired serial engine, so every cell's digest is unchanged)
     let load_opts = LoadOptions {
         qps: opts.qps.clone(),
         fuse_window_ms: 0.0,
         max_containers: opts.max_containers,
         arrival: ArrivalProfile::Poisson,
         seed: opts.seed,
+        ..LoadOptions::default()
     };
     let mut rows = Vec::new();
     for &kernel in &opts.kernels {

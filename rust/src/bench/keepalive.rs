@@ -152,12 +152,15 @@ pub fn run_policy_point(
     env_opts.keepalive = policy.clone();
     let mut env = Env::setup(&env_opts);
     load::configure_for_load(&mut env);
+    // open loop through the default DES scheduler (dispatch-identical
+    // to the retired serial engine, so policy digests are unchanged)
     let lo = LoadOptions {
         qps: vec![opts.qps],
         fuse_window_ms: opts.fuse_window_ms,
         max_containers: opts.max_containers,
         arrival: opts.arrival,
         seed: opts.seed,
+        ..LoadOptions::default()
     };
     let before = KaSnapshot::take(&env);
     let run = load::run_point(&env, opts.qps, &lo);

@@ -1,6 +1,6 @@
-//! Open-loop concurrent traffic engine: seeded arrival processes, the
-//! cross-request fusion window, and the QPS sweep behind
-//! `BENCH_load.json`.
+//! Concurrent traffic engine: seeded arrival processes (open- and
+//! closed-loop), the cross-request fusion window, and the QPS sweep
+//! behind `BENCH_load.json`.
 //!
 //! The batch harness in [`crate::bench`] answers "how fast is one batch?";
 //! this module answers "what happens to latency, cost and cold starts as
@@ -11,21 +11,66 @@
 //! co-resident queries arriving within `--fuse-window` modeled
 //! milliseconds are coalesced into one coordinator batch, which the QA
 //! turns into a single QP invocation per partition (shared gather blocks,
-//! one LUT rebuild, one coalesced refinement read). Fusion moves
-//! invocation counts and modeled time, never answers: each fused query's
-//! results stay bit-identical to its unfused run.
+//! one LUT rebuild, one coalesced refinement read). A `--fuse-max-group`
+//! admission cap bounds the hold-time tax: a group that fills the cap
+//! dispatches on its last member's arrival instead of waiting out the
+//! window. Fusion moves invocation counts and modeled time, never
+//! answers: each fused query's results stay bit-identical to its
+//! unfused run.
 //!
-//! # Modeling approximation
+//! # The event-calendar scheduler
 //!
-//! The engine is a serial discrete-event approximation: queries (or fused
-//! groups) are executed one after another in arrival order, with the
-//! virtual clock rewound to each group's dispatch instant and container
-//! contention resolved through per-container `free_at` stamps. Requests
-//! therefore only contend with containers created by *earlier* arrivals —
-//! a container cold-started by a later query can never serve an earlier
-//! one, so cold starts are slightly over-estimated right at the knee.
-//! This keeps the whole sweep single-timeline-deterministic: the same
-//! seed replays to a byte-identical ledger digest.
+//! The engine is a discrete-event simulator ([`Scheduler::Des`], the
+//! default): a seeded binary-heap calendar of `{Arrival, WindowClose,
+//! Completion}` events over the shared virtual clock. Same-instant ties
+//! break by `(time, class, insertion seq)` with
+//! `Arrival < Completion < WindowClose`, so a query arriving at exactly
+//! `open + window` joins the group *before* the window closes, and a
+//! zero-think closed-loop arrival spawned by a same-instant completion
+//! precedes the close too — every pop is deterministic, so the same seed
+//! replays to a byte-identical ledger digest. Fleet contention resolves
+//! at event time: each group dispatch rewinds the clock to its own
+//! instant and `Platform::acquire_fleet` answers with whatever
+//! `free_at` stamps earlier *events* left behind.
+//!
+//! Two traffic modes drive the calendar:
+//! * **open loop** (the default): all arrival instants are drawn up
+//!   front from the [`ArrivalProfile`]; offered load is independent of
+//!   system speed, which is what produces the hockey-stick.
+//! * **closed loop** (`--clients N --think-ms T`): each of N clients
+//!   owns every N-th query of the workload and issues its next one a
+//!   seeded exponential think time after its previous query's
+//!   `Completion` event — arrivals *react* to service times, the
+//!   classic saturation-benchmark shape. Closed-loop traffic is
+//!   inexpressible in the retired serial engine, and is the reason the
+//!   calendar exists.
+//!
+//! # Remaining approximation
+//!
+//! A dispatched group still executes as one atomic `run_batch` call
+//! between events: the sub-request events inside it (per-shard
+//! completions, retries, hedges) play out on the virtual clock within
+//! the call and do not interleave with other groups' events. At group
+//! granularity, open-loop dispatch instants are monotone non-decreasing
+//! (a window close at `open + window` precedes the next group's opening
+//! arrival; a cap-filled group dispatches on its last member's
+//! arrival), so the calendar executes the *exact same* dispatch
+//! sequence as the serial arrival-order engine — kept for one release
+//! behind `--sched serial` — and the two replay byte-identical ledger
+//! digests at any contention level; the equivalence suite in
+//! `tests/load_engine.rs` pins this. In particular the serial engine's
+//! knee-side cold-start estimate is confirmed, not worsened: per seed,
+//! DES cold starts are ≤ the serial count.
+//!
+//! # Deadline-aware admission (shedding)
+//!
+//! With `--shed` and a finite `--deadline-ms`, the CO sheds a request
+//! whose remaining deadline budget cannot cover the warm-path estimate
+//! from the `ThroughputBook` rows/s EWMA — before any invocation is
+//! paid for (see `SquashConfig::shed`). Shed requests degrade to zero
+//! coverage, are never cached, bill to
+//! `CostLedger::{shed_requests, shed_saved_s}`, and surface per point
+//! in the `shed` column below.
 //!
 //! # `BENCH_load.json` schema
 //!
@@ -34,6 +79,7 @@
 //!   "bench": "load",
 //!   "profile": "test", "n": 3000, "queries": 64, "seed": 42,
 //!   "arrival": "poisson", "fuse_window_ms": 2.0, "max_containers": 4,
+//!   "sched": "des", "clients": 0, "think_ms": 0.0, "fuse_max_group": 0,
 //!   "modes": [
 //!     { "mode": "unfused",
 //!       "points": [
@@ -44,12 +90,17 @@
 //!           "queued": 31, "queue_delay_s": 0.18,
 //!           "fused_groups": 64, "max_group_size": 1,
 //!           "cost_per_1k_queries": 0.0021,
-//!           "degraded": 0, "availability": 1.0,
+//!           "degraded": 0, "shed": 0, "availability": 1.0,
 //!           "mean_coverage": 1.0 } ] },
 //!     { "mode": "fused", "points": [ ... ] }
 //!   ]
 //! }
 //! ```
+//!
+//! Schema additions over the serial-era document: the top level carries
+//! the scheduler tag (`sched`: `"des"` | `"serial"`) and the traffic-mode
+//! knobs (`clients`, `think_ms`, `fuse_max_group`); each point carries
+//! `shed` — the number of CO waves dropped by deadline-aware admission.
 //!
 //! Each point is measured on a fresh environment (fresh ledger, fresh
 //! fleet), so points are independent and the sweep order cannot leak
@@ -59,9 +110,13 @@
 //! the ledger's *modeled* (virtual-clock) MB-second buckets plus the
 //! deterministic invocation / S3 / EFS counters, never from wall time.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
 use crate::bench::{Env, EnvOptions};
 use crate::coordinator::payload::QueryResult;
 use crate::coordinator::tree::TreeConfig;
+use crate::data::workload::Query;
 use crate::storage::{set_virtual_now, virtual_now};
 use crate::util::json::Json;
 use crate::util::rng::{mix64, Rng};
@@ -92,6 +147,35 @@ impl ArrivalProfile {
         match self {
             Self::Poisson => "poisson",
             Self::Trace => "trace",
+        }
+    }
+}
+
+/// Which engine executes a sweep point (see the module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Scheduler {
+    /// The event-calendar discrete-event scheduler: open- and
+    /// closed-loop traffic, fusion caps, contention at event time.
+    #[default]
+    Des,
+    /// The retired serial arrival-order engine (`--sched serial`, kept
+    /// for one release as the equivalence baseline). Open-loop only.
+    Serial,
+}
+
+impl Scheduler {
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "des" => Some(Self::Des),
+            "serial" => Some(Self::Serial),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Des => "des",
+            Self::Serial => "serial",
         }
     }
 }
@@ -135,19 +219,35 @@ pub fn arrival_times(profile: ArrivalProfile, n: usize, qps: f64, seed: u64) -> 
 /// Fusion groups over ascending arrivals: each group opens at its first
 /// member's arrival and admits every query arriving within `window_s`;
 /// it dispatches when the window closes (`open + window_s`), so members
-/// pay the hold time — the honest cost side of the fusion tradeoff. A
-/// zero window degenerates to one group per query dispatched on arrival.
-/// Returns `(start, end_exclusive, dispatch_t)` index ranges.
-pub fn fuse_groups(arrivals: &[f64], window_s: f64) -> Vec<(usize, usize, f64)> {
+/// pay the hold time — the honest cost side of the fusion tradeoff. The
+/// `max_group` admission cap (0 = uncapped) bounds that tax: a group
+/// that fills the cap dispatches *early*, on its last member's arrival,
+/// instead of waiting out the window. A zero window (or a cap of 1)
+/// degenerates to one group per query dispatched on arrival. Returns
+/// `(start, end_exclusive, dispatch_t)` index ranges; dispatch instants
+/// are monotone non-decreasing (a cap-filled dispatch at
+/// `arrivals[j-1]` precedes the next group's opening arrival, a
+/// window-closed one at `open + window_s` precedes it strictly), which
+/// is what makes the DES and serial engines execute identical dispatch
+/// sequences in open loop.
+pub fn fuse_groups(arrivals: &[f64], window_s: f64, max_group: usize) -> Vec<(usize, usize, f64)> {
     let mut groups = Vec::new();
     let mut i = 0;
     while i < arrivals.len() {
         let open = arrivals[i];
         let mut j = i + 1;
-        while j < arrivals.len() && arrivals[j] <= open + window_s {
+        while j < arrivals.len()
+            && arrivals[j] <= open + window_s
+            && (max_group == 0 || j - i < max_group)
+        {
             j += 1;
         }
-        groups.push((i, j, open + window_s));
+        let dispatch = if max_group != 0 && j - i == max_group {
+            arrivals[j - 1] // cap filled: dispatch on the filling arrival
+        } else {
+            open + window_s
+        };
+        groups.push((i, j, dispatch));
         i = j;
     }
     groups
@@ -187,6 +287,9 @@ pub struct LoadPoint {
     pub cost_per_1k_queries: f64,
     /// queries answered at partial coverage (brownout, not blackout)
     pub degraded: u64,
+    /// CO waves dropped by deadline-aware admission (`--shed`; the
+    /// dropped queries also count under `degraded` at zero coverage)
+    pub shed: u64,
     /// fraction of queries answered at full coverage
     pub availability: f64,
     /// mean coverage fraction over all queries (1.0 = no degradation)
@@ -211,6 +314,7 @@ impl LoadPoint {
             ("max_group_size", Json::num(self.max_group_size as f64)),
             ("cost_per_1k_queries", Json::num(self.cost_per_1k_queries)),
             ("degraded", Json::num(self.degraded as f64)),
+            ("shed", Json::num(self.shed as f64)),
             ("availability", Json::num(self.availability)),
             ("mean_coverage", Json::num(self.mean_coverage)),
         ])
@@ -235,6 +339,19 @@ pub struct LoadOptions {
     /// starts scale with load)
     pub max_containers: usize,
     pub arrival: ArrivalProfile,
+    /// which engine runs the point (`--sched des|serial`)
+    pub sched: Scheduler,
+    /// closed-loop clients (`--clients`; 0 = open loop). Requires the
+    /// DES scheduler: closed-loop arrivals depend on completions, which
+    /// the serial arrival-order engine cannot express.
+    pub clients: usize,
+    /// mean think time between a closed-loop client's completion and
+    /// its next query, in modeled milliseconds (`--think-ms`; gaps are
+    /// seeded exponential draws)
+    pub think_ms: f64,
+    /// fusion admission cap (`--fuse-max-group`; 0 = uncapped): a group
+    /// dispatches early once it holds this many queries
+    pub fuse_max_group: usize,
     /// arrival-process seed (independent of the dataset seed)
     pub seed: u64,
 }
@@ -246,6 +363,10 @@ impl Default for LoadOptions {
             fuse_window_ms: 2.0,
             max_containers: 4,
             arrival: ArrivalProfile::Poisson,
+            sched: Scheduler::Des,
+            clients: 0,
+            think_ms: 0.0,
+            fuse_max_group: 0,
             seed: 42,
         }
     }
@@ -275,6 +396,7 @@ struct DetSnapshot {
     modeled_mbs: f64,
     s3_gets: u64,
     efs_bytes: u64,
+    shed: u64,
 }
 
 impl DetSnapshot {
@@ -289,52 +411,271 @@ impl DetSnapshot {
             modeled_mbs: l.modeled_mb_seconds_total(),
             s3_gets: l.s3_gets.load(Ordering::Relaxed),
             efs_bytes: l.efs_bytes.load(Ordering::Relaxed),
+            shed: l.shed_requests.load(Ordering::Relaxed),
         }
     }
 }
 
-/// Execute one offered-QPS point over the env's workload: seeded
-/// arrivals, fusion windowing, serial dispatch over the virtual clock.
+/// Execute one offered-QPS point over the env's workload with the
+/// configured [`Scheduler`] (see the module docs).
 pub fn run_point(env: &Env, offered_qps: f64, opts: &LoadOptions) -> PointRun {
+    match opts.sched {
+        Scheduler::Des => run_point_des(env, offered_qps, opts),
+        Scheduler::Serial => run_point_serial(env, offered_qps, opts),
+    }
+}
+
+/// The retired serial arrival-order engine (`--sched serial`): fusion
+/// groups precomputed over the whole arrival vector, dispatched one
+/// after another. Open-loop only; kept one release as the DES
+/// equivalence baseline.
+fn run_point_serial(env: &Env, offered_qps: f64, opts: &LoadOptions) -> PointRun {
+    assert!(opts.clients == 0, "closed-loop clients require --sched des");
     let queries = &env.queries;
     let arrivals = arrival_times(opts.arrival, queries.len(), offered_qps, opts.seed);
     let window_s = opts.fuse_window_ms / 1e3;
-    let groups = fuse_groups(&arrivals, window_s);
+    let groups = fuse_groups(&arrivals, window_s, opts.fuse_max_group);
 
     let before = DetSnapshot::take(env);
     let mut outcomes: Vec<Option<QueryOutcome>> = vec![None; queries.len()];
     for &(start, end, dispatch_t) in &groups {
-        // open-loop semantics: the group enters the system at its own
-        // dispatch instant regardless of where earlier work left the
-        // clock — busy containers are represented by `free_at` stamps,
-        // so rewinding is safe and queueing emerges in the fleet
-        set_virtual_now(dispatch_t);
-        let out = env.sys.run_batch(&queries[start..end]);
-        let completion = virtual_now();
-        // group-local degraded tags → per-query coverage fractions
-        let mut coverages = vec![1.0f32; end - start];
-        for &(local, cov) in &out.degraded {
-            coverages[local] = cov;
+        let members: Vec<usize> = (start..end).collect();
+        dispatch_group(env, &members, dispatch_t, &arrivals, &mut outcomes);
+    }
+    let after = DetSnapshot::take(env);
+
+    let outcomes: Vec<QueryOutcome> =
+        outcomes.into_iter().map(|o| o.expect("every query ran")).collect();
+    let max_group = groups.iter().map(|&(s, e, _)| e - s).max().unwrap_or(0);
+    assemble_point(env, offered_qps, outcomes, groups.len(), max_group, before, after)
+}
+
+/// Calendar tie classes: at one instant, arrivals join the open group
+/// first, completions spawn their closed-loop successors next, and only
+/// then does a fusion window close — so a query arriving at exactly
+/// `open + window` (or spawned by a same-instant completion with zero
+/// think) makes it into the group, matching `fuse_groups`' `<=` window.
+const CLASS_ARRIVAL: u8 = 0;
+const CLASS_COMPLETION: u8 = 1;
+const CLASS_WINDOW: u8 = 2;
+
+#[derive(Clone, Debug)]
+enum EventKind {
+    /// query `q` arrives and joins (or opens) the fusion group
+    Arrival { query: usize },
+    /// the fusion window of the group opened under this epoch expires;
+    /// stale once the group dispatched early through the admission cap
+    WindowClose { epoch: u64 },
+    /// a dispatched group completed; closed-loop clients whose queries
+    /// rode it draw their think times here
+    Completion { members: Vec<usize> },
+}
+
+/// One calendar entry, ordered by `(t, class, seq)`. `seq` is the
+/// insertion counter: unique, so the ordering is total and every heap
+/// pop — and therefore every replay — is deterministic.
+#[derive(Clone, Debug)]
+struct CalEvent {
+    t: f64,
+    class: u8,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl CalEvent {
+    fn key_cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .total_cmp(&other.t)
+            .then(self.class.cmp(&other.class))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialEq for CalEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.key_cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for CalEvent {}
+impl PartialOrd for CalEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for CalEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key_cmp(other)
+    }
+}
+
+/// The seeded binary-heap event calendar.
+struct Calendar {
+    heap: BinaryHeap<Reverse<CalEvent>>,
+    seq: u64,
+}
+
+impl Calendar {
+    fn new() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    fn push(&mut self, t: f64, class: u8, kind: EventKind) {
+        self.heap.push(Reverse(CalEvent { t, class, seq: self.seq, kind }));
+        self.seq += 1;
+    }
+
+    fn pop(&mut self) -> Option<CalEvent> {
+        self.heap.pop().map(|Reverse(ev)| ev)
+    }
+}
+
+/// Seeded exponential think-time draw (mean `think_ms`), in seconds.
+fn think_draw(rng: &mut Rng, think_ms: f64) -> f64 {
+    if think_ms <= 0.0 {
+        return 0.0;
+    }
+    -(1.0 - rng.f64()).ln() * think_ms / 1e3
+}
+
+/// Dispatch one fused group at instant `t`: rewind the clock, run the
+/// batch (busy containers are `free_at` stamps, so rewinding is safe
+/// and queueing emerges in the fleet), record per-member outcomes.
+/// Returns the group's modeled completion instant.
+fn dispatch_group(
+    env: &Env,
+    members: &[usize],
+    t: f64,
+    arrival_of: &[f64],
+    outcomes: &mut [Option<QueryOutcome>],
+) -> f64 {
+    set_virtual_now(t);
+    let batch: Vec<Query> = members.iter().map(|&q| env.queries[q].clone()).collect();
+    let out = env.sys.run_batch(&batch);
+    let completion = virtual_now();
+    // group-local degraded tags → per-query coverage fractions
+    let mut coverages = vec![1.0f32; members.len()];
+    for &(local, cov) in &out.degraded {
+        coverages[local] = cov;
+    }
+    for (off, result) in out.results.into_iter().enumerate() {
+        let q = members[off];
+        outcomes[q] = Some(QueryOutcome {
+            arrival_s: arrival_of[q],
+            completion_s: completion,
+            latency_s: completion - arrival_of[q],
+            coverage: coverages[off],
+            result,
+        });
+    }
+    completion
+}
+
+/// The event-calendar engine (`--sched des`, the default). Open loop
+/// seeds the calendar with every arrival up front; closed loop seeds
+/// one opening arrival per client and lets `Completion` events spawn
+/// the rest. Either way the main loop is the textbook DES shape: pop
+/// the earliest event, react, push successors.
+fn run_point_des(env: &Env, offered_qps: f64, opts: &LoadOptions) -> PointRun {
+    let n = env.queries.len();
+    let window_s = opts.fuse_window_ms / 1e3;
+    let cap = opts.fuse_max_group;
+    // closed loop: client c owns queries c, c+N, c+2N, … — every client
+    // gets work even when N doesn't divide the workload
+    let clients = opts.clients.min(n);
+
+    let before = DetSnapshot::take(env);
+    let mut cal = Calendar::new();
+    let mut arrival_of = vec![0.0f64; n];
+    let mut client_rng: Vec<Rng> = Vec::with_capacity(clients);
+    if clients > 0 {
+        for c in 0..clients {
+            // per-client stream, decorrelated across clients and sweep
+            // points exactly like the open-loop arrival stream
+            let mut rng = Rng::new(
+                mix64(opts.seed) ^ mix64(offered_qps.to_bits()) ^ mix64(0xC11E47 + c as u64),
+            );
+            let t = think_draw(&mut rng, opts.think_ms);
+            arrival_of[c] = t;
+            cal.push(t, CLASS_ARRIVAL, EventKind::Arrival { query: c });
+            client_rng.push(rng);
         }
-        for (off, result) in out.results.into_iter().enumerate() {
-            let i = start + off;
-            outcomes[i] = Some(QueryOutcome {
-                arrival_s: arrivals[i],
-                completion_s: completion,
-                latency_s: completion - arrivals[i],
-                coverage: coverages[off],
-                result,
-            });
+    } else {
+        let arrivals = arrival_times(opts.arrival, n, offered_qps, opts.seed);
+        for (q, &t) in arrivals.iter().enumerate() {
+            arrival_of[q] = t;
+            cal.push(t, CLASS_ARRIVAL, EventKind::Arrival { query: q });
+        }
+    }
+
+    let mut outcomes: Vec<Option<QueryOutcome>> = vec![None; n];
+    // the open fusion group; `epoch` invalidates a scheduled
+    // `WindowClose` whose group already dispatched through the cap
+    let mut pending: Vec<usize> = Vec::new();
+    let mut epoch = 0u64;
+    let mut fused_groups = 0usize;
+    let mut max_group = 0usize;
+
+    while let Some(ev) = cal.pop() {
+        let mut dispatch_now = false;
+        match ev.kind {
+            EventKind::Arrival { query } => {
+                if pending.is_empty() {
+                    epoch += 1;
+                    if window_s > 0.0 && cap != 1 {
+                        cal.push(ev.t + window_s, CLASS_WINDOW, EventKind::WindowClose { epoch });
+                    }
+                }
+                pending.push(query);
+                // cap filled (or no window at all): dispatch on arrival
+                dispatch_now = (cap != 0 && pending.len() >= cap) || window_s <= 0.0;
+            }
+            EventKind::WindowClose { epoch: e } => {
+                dispatch_now = e == epoch && !pending.is_empty();
+            }
+            EventKind::Completion { members } => {
+                // closed loop: each member's client thinks, then issues
+                // its next query; open loop completions are bookkeeping
+                for q in members {
+                    let c = q % clients.max(1);
+                    let next = q + clients;
+                    if clients > 0 && next < n {
+                        let t = ev.t + think_draw(&mut client_rng[c], opts.think_ms);
+                        arrival_of[next] = t;
+                        cal.push(t, CLASS_ARRIVAL, EventKind::Arrival { query: next });
+                    }
+                }
+            }
+        }
+        if dispatch_now {
+            let members = std::mem::take(&mut pending);
+            fused_groups += 1;
+            max_group = max_group.max(members.len());
+            let completion = dispatch_group(env, &members, ev.t, &arrival_of, &mut outcomes);
+            cal.push(completion, CLASS_COMPLETION, EventKind::Completion { members });
         }
     }
     let after = DetSnapshot::take(env);
 
     let outcomes: Vec<QueryOutcome> =
         outcomes.into_iter().map(|o| o.expect("every query ran")).collect();
+    assemble_point(env, offered_qps, outcomes, fused_groups, max_group, before, after)
+}
+
+/// Shared per-point aggregation over recorded outcomes + ledger deltas.
+fn assemble_point(
+    env: &Env,
+    offered_qps: f64,
+    outcomes: Vec<QueryOutcome>,
+    fused_groups: usize,
+    max_group_size: usize,
+    before: DetSnapshot,
+    after: DetSnapshot,
+) -> PointRun {
     let mut lat_ms: Vec<f64> = outcomes.iter().map(|o| o.latency_s * 1e3).collect();
     lat_ms.sort_by(|a, b| a.total_cmp(b));
+    let first_arrival = outcomes.iter().map(|o| o.arrival_s).fold(f64::INFINITY, f64::min);
     let span_s = outcomes.iter().map(|o| o.completion_s).fold(0.0, f64::max)
-        - arrivals.first().copied().unwrap_or(0.0);
+        - if first_arrival.is_finite() { first_arrival } else { 0.0 };
 
     let p = &env.pricing;
     let cost = (after.invocations - before.invocations) as f64 * p.lambda_per_invocation
@@ -344,7 +685,7 @@ pub fn run_point(env: &Env, offered_qps: f64, opts: &LoadOptions) -> PointRun {
 
     let stats = LoadPoint {
         offered_qps,
-        achieved_qps: queries.len() as f64 / span_s.max(1e-9),
+        achieved_qps: outcomes.len() as f64 / span_s.max(1e-9),
         mean_ms: crate::util::stats::mean(&lat_ms),
         p50_ms: percentile_sorted(&lat_ms, 50.0),
         p90_ms: percentile_sorted(&lat_ms, 90.0),
@@ -354,10 +695,11 @@ pub fn run_point(env: &Env, offered_qps: f64, opts: &LoadOptions) -> PointRun {
         cold_starts: after.cold_starts - before.cold_starts,
         queued: after.queued - before.queued,
         queue_delay_s: after.queue_delay_s - before.queue_delay_s,
-        fused_groups: groups.len(),
-        max_group_size: groups.iter().map(|&(s, e, _)| e - s).max().unwrap_or(0),
-        cost_per_1k_queries: cost / queries.len().max(1) as f64 * 1e3,
+        fused_groups,
+        max_group_size,
+        cost_per_1k_queries: cost / outcomes.len().max(1) as f64 * 1e3,
         degraded: outcomes.iter().filter(|o| o.coverage < 1.0).count() as u64,
+        shed: after.shed - before.shed,
         availability: outcomes.iter().filter(|o| o.coverage >= 1.0).count() as f64
             / outcomes.len().max(1) as f64,
         mean_coverage: outcomes.iter().map(|o| o.coverage as f64).sum::<f64>()
@@ -418,6 +760,10 @@ pub fn run_sweep(base: &EnvOptions, opts: &LoadOptions) -> SweepOutput {
         ("arrival", Json::str(opts.arrival.name())),
         ("fuse_window_ms", Json::num(opts.fuse_window_ms)),
         ("max_containers", Json::num(opts.max_containers as f64)),
+        ("sched", Json::str(opts.sched.name())),
+        ("clients", Json::num(opts.clients as f64)),
+        ("think_ms", Json::num(opts.think_ms)),
+        ("fuse_max_group", Json::num(opts.fuse_max_group as f64)),
         (
             "modes",
             Json::Arr(vec![mode_json("unfused", &unfused), mode_json("fused", &fused)]),
@@ -429,7 +775,7 @@ pub fn run_sweep(base: &EnvOptions, opts: &LoadOptions) -> SweepOutput {
 /// Fixed-width table line for one sweep point (CLI / bench output).
 pub fn point_line(mode: &str, p: &LoadPoint) -> String {
     format!(
-        "{:<8} {:>9.1} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>7} {:>6} {:>6} {:>6} {:>12.6}",
+        "{:<8} {:>9.1} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>7} {:>6} {:>6} {:>6} {:>5} {:>12.6}",
         mode,
         p.offered_qps,
         p.achieved_qps,
@@ -440,6 +786,7 @@ pub fn point_line(mode: &str, p: &LoadPoint) -> String {
         p.cold_starts,
         p.queued,
         p.max_group_size,
+        p.shed,
         p.cost_per_1k_queries,
     )
 }
@@ -447,9 +794,9 @@ pub fn point_line(mode: &str, p: &LoadPoint) -> String {
 /// Header matching [`point_line`].
 pub fn point_header() -> String {
     format!(
-        "{:<8} {:>9} {:>9} {:>9} {:>9} {:>9} {:>7} {:>6} {:>6} {:>6} {:>12}",
+        "{:<8} {:>9} {:>9} {:>9} {:>9} {:>9} {:>7} {:>6} {:>6} {:>6} {:>5} {:>12}",
         "mode", "offered", "achieved", "p50(ms)", "p99(ms)", "max(ms)", "invoc", "cold", "queue",
-        "group", "$/1k"
+        "group", "shed", "$/1k"
     )
 }
 
@@ -492,18 +839,65 @@ mod tests {
         // dyadic instants so window sums compare exactly
         let arrivals = [0.0, 0.125, 0.1875, 1.0, 1.25, 4.0];
         // zero window: every query alone, dispatched on arrival
-        let solo = fuse_groups(&arrivals, 0.0);
+        let solo = fuse_groups(&arrivals, 0.0, 0);
         assert_eq!(solo.len(), arrivals.len());
         for (g, &(s, e, d)) in solo.iter().enumerate() {
             assert_eq!((s, e), (g, g + 1));
             assert_eq!(d, arrivals[g]);
         }
         // 0.25s window: the boundary arrival at exactly open+window joins
-        let fused = fuse_groups(&arrivals, 0.25);
+        let fused = fuse_groups(&arrivals, 0.25, 0);
         assert_eq!(fused, vec![(0, 3, 0.25), (3, 5, 1.25), (5, 6, 4.25)]);
         // groups partition the index range
         let covered: usize = fused.iter().map(|&(s, e, _)| e - s).sum();
         assert_eq!(covered, arrivals.len());
+    }
+
+    #[test]
+    fn fuse_groups_admission_cap_dispatches_early() {
+        let arrivals = [0.0, 0.125, 0.1875, 1.0, 1.25, 4.0];
+        // cap 2 over the 0.25s window: the first group fills at 0.125
+        // and dispatches there instead of waiting for 0.25; the third
+        // query opens its own group and waits out its window
+        let capped = fuse_groups(&arrivals, 0.25, 2);
+        assert_eq!(
+            capped,
+            vec![(0, 2, 0.125), (2, 3, 0.1875 + 0.25), (3, 5, 1.25), (5, 6, 4.25)]
+        );
+        assert!(capped.iter().all(|&(s, e, _)| e - s <= 2), "cap violated");
+        // cap 1 degenerates to dispatch-on-arrival even with a window
+        let solo = fuse_groups(&arrivals, 0.25, 1);
+        assert_eq!(solo.len(), arrivals.len());
+        for (g, &(s, e, d)) in solo.iter().enumerate() {
+            assert_eq!((s, e), (g, g + 1));
+            assert_eq!(d, arrivals[g]);
+        }
+        // dispatch instants stay monotone (the DES ≡ serial invariant)
+        for w in capped.windows(2) {
+            assert!(w[0].2 <= w[1].2, "cap broke dispatch monotonicity");
+        }
+    }
+
+    #[test]
+    fn calendar_orders_by_time_class_seq() {
+        let mut cal = Calendar::new();
+        cal.push(2.0, CLASS_ARRIVAL, EventKind::Arrival { query: 0 });
+        cal.push(1.0, CLASS_WINDOW, EventKind::WindowClose { epoch: 1 });
+        // same instant as the window close: arrival joins first, then
+        // the completion, then the close
+        cal.push(1.0, CLASS_ARRIVAL, EventKind::Arrival { query: 1 });
+        cal.push(1.0, CLASS_COMPLETION, EventKind::Completion { members: vec![2] });
+        let classes: Vec<(f64, u8)> = std::iter::from_fn(|| cal.pop().map(|e| (e.t, e.class)))
+            .collect();
+        assert_eq!(
+            classes,
+            vec![
+                (1.0, CLASS_ARRIVAL),
+                (1.0, CLASS_COMPLETION),
+                (1.0, CLASS_WINDOW),
+                (2.0, CLASS_ARRIVAL)
+            ]
+        );
     }
 
     #[test]
@@ -545,6 +939,118 @@ mod tests {
         // fusion must not change any query's answer
         for (a, b) in fused.outcomes.iter().zip(&unfused.outcomes) {
             assert_eq!(a.result, b.result, "fusion changed a query result");
+        }
+    }
+
+    #[test]
+    fn des_open_loop_matches_serial_under_contention() {
+        let base = EnvOptions {
+            profile: "test",
+            n: 1200,
+            n_queries: 12,
+            time_scale: 0.0,
+            ..Default::default()
+        };
+        // knee-side shape: 2000 QPS against a 2-container fleet with a
+        // real fusion window — contention, queueing and cold starts all
+        // active, and the two engines must still agree exactly
+        let opts = LoadOptions {
+            qps: vec![2000.0],
+            fuse_window_ms: 5.0,
+            max_containers: 2,
+            ..Default::default()
+        };
+        let run = |sched: Scheduler| {
+            let o = LoadOptions { sched, ..opts.clone() };
+            let env = point_env(&base, &o);
+            run_point(&env, 2000.0, &o)
+        };
+        let des = run(Scheduler::Des);
+        let serial = run(Scheduler::Serial);
+        assert_eq!(des.outcomes.len(), serial.outcomes.len());
+        for (a, b) in des.outcomes.iter().zip(&serial.outcomes) {
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+            assert_eq!(a.completion_s.to_bits(), b.completion_s.to_bits());
+            assert_eq!(a.result, b.result);
+        }
+        assert_eq!(des.stats.invocations, serial.stats.invocations);
+        assert_eq!(des.stats.cold_starts, serial.stats.cold_starts);
+        assert_eq!(des.stats.queued, serial.stats.queued);
+        assert_eq!(des.stats.queue_delay_s.to_bits(), serial.stats.queue_delay_s.to_bits());
+        assert_eq!(des.stats.fused_groups, serial.stats.fused_groups);
+        assert_eq!(des.stats.max_group_size, serial.stats.max_group_size);
+    }
+
+    #[test]
+    fn fusion_cap_respected_and_results_bit_identical() {
+        let base = EnvOptions {
+            profile: "test",
+            n: 1200,
+            n_queries: 12,
+            time_scale: 0.0,
+            ..Default::default()
+        };
+        let opts = LoadOptions {
+            qps: vec![2000.0],
+            fuse_window_ms: 5.0,
+            max_containers: 2,
+            ..Default::default()
+        };
+        let run = |fuse_max_group: usize| {
+            let o = LoadOptions { fuse_max_group, ..opts.clone() };
+            let env = point_env(&base, &o);
+            run_point(&env, 2000.0, &o)
+        };
+        let uncapped = run(0);
+        assert!(uncapped.stats.max_group_size > 2, "fixture never fuses past 2");
+        let capped = run(2);
+        assert!(capped.stats.max_group_size <= 2, "--fuse-max-group violated");
+        assert!(capped.stats.fused_groups > uncapped.stats.fused_groups);
+        // the cap moves hold time and grouping, never answers — and a
+        // capped query can only dispatch earlier, never later
+        for (a, b) in capped.outcomes.iter().zip(&uncapped.outcomes) {
+            assert_eq!(a.result, b.result, "admission cap changed a query result");
+        }
+    }
+
+    #[test]
+    fn closed_loop_clients_are_deterministic_and_self_paced() {
+        let base = EnvOptions {
+            profile: "test",
+            n: 1200,
+            n_queries: 12,
+            time_scale: 0.0,
+            ..Default::default()
+        };
+        let opts = LoadOptions {
+            qps: vec![100.0],
+            fuse_window_ms: 0.0,
+            max_containers: 2,
+            clients: 3,
+            think_ms: 5.0,
+            ..Default::default()
+        };
+        let run = || {
+            let env = point_env(&base, &opts);
+            run_point(&env, 100.0, &opts)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.outcomes.len(), 12, "every query must run in closed loop");
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
+            assert_eq!(x.result, y.result);
+        }
+        // the closed-loop invariant: a client's next query arrives only
+        // after its previous one completed (plus think time)
+        for q in 0..12 - opts.clients {
+            let (prev, next) = (&a.outcomes[q], &a.outcomes[q + opts.clients]);
+            assert!(
+                next.arrival_s >= prev.completion_s,
+                "client issued query {} before query {q} completed",
+                q + opts.clients
+            );
         }
     }
 }

@@ -65,6 +65,10 @@ pub struct EnvOptions {
     pub breaker: crate::faas::resilience::BreakerConfig,
     /// end-to-end request deadline in modeled seconds (None = none)
     pub deadline_s: Option<f64>,
+    /// deadline-aware admission at the CO (`--shed`): shed waves whose
+    /// remaining budget cannot cover the warm-path estimate (inert
+    /// without a finite deadline; see `SquashConfig::shed`)
+    pub shed: bool,
     /// container keep-alive / prewarm policy (`NeverExpire` = the
     /// pre-policy platform; `--keepalive never|ttl:<s>|hybrid`)
     pub keepalive: crate::faas::keepalive::KeepAliveConfig,
@@ -105,6 +109,8 @@ impl Default for EnvOptions {
             retry: crate::faas::resilience::RetryPolicy::legacy(),
             breaker: crate::faas::resilience::BreakerConfig::off(),
             deadline_s: None,
+            // honours SQUASH_SHED (the CI knob for the shedding suite)
+            shed: std::env::var("SQUASH_SHED").ok().is_some_and(|v| v == "1"),
             // honours SQUASH_KEEPALIVE (the CI knob for whole-suite runs)
             keepalive: crate::faas::keepalive::KeepAliveConfig::from_env(),
             kernel: None,
@@ -163,6 +169,7 @@ impl Env {
         cfg.qp_shards = opts.qp_sharding;
         cfg.hedge = opts.hedge;
         cfg.deadline_s = opts.deadline_s;
+        cfg.shed = opts.shed;
         let sys = SquashSystem::build(
             &ds,
             &BuildOptions::for_profile(profile),
@@ -208,6 +215,7 @@ impl crate::coordinator::SystemCtx {
             ds_name: self.ds_name.clone(),
             d: self.d,
             n_partitions: self.n_partitions,
+            n_rows: self.n_rows,
             t: self.t,
         }
     }

@@ -286,6 +286,15 @@ pub struct SquashConfig {
     /// batches via [`SquashSystem::run_batch_strict`] instead of
     /// accepting tagged results.
     pub strict: bool,
+    /// `--shed`: deadline-aware admission at the CO. A request (wave)
+    /// whose remaining deadline budget cannot cover even the optimistic
+    /// warm-path estimate ([`qp::warm_path_estimate_s`], from the
+    /// `ThroughputBook` rows/s EWMA) is shed *before any invocation* —
+    /// degraded to zero coverage, never cached, billed to
+    /// `CostLedger::{shed_requests, shed_saved_s}`. Off by default (and
+    /// inert without a finite `deadline_s` or before the book's first
+    /// sample), so every pre-existing digest stays byte-identical.
+    pub shed: bool,
 }
 
 impl Default for SquashConfig {
@@ -314,6 +323,7 @@ impl Default for SquashConfig {
             hedge: HedgePolicy::from_env().unwrap_or(HedgePolicy::Off),
             deadline_s: None,
             strict: false,
+            shed: false,
         }
     }
 }
@@ -350,6 +360,9 @@ pub struct SystemCtx {
     pub ds_name: String,
     pub d: usize,
     pub n_partitions: usize,
+    /// dataset rows (deadline-aware admission sizes its warm-path
+    /// estimate from `n_rows / n_partitions`)
+    pub n_rows: usize,
     /// resolved threshold T
     pub t: f32,
 }
@@ -483,6 +496,7 @@ impl SquashSystem {
             ds_name: ds.name.clone(),
             d: ds.d(),
             n_partitions: layout.p,
+            n_rows: ds.n(),
             t,
         });
         Self { ctx }
@@ -536,6 +550,23 @@ impl SquashSystem {
                 .max(1)
                 .min(live_idx.len());
             for wave in live_idx.chunks(max_wave) {
+                // deadline-aware admission (`--shed`): if the remaining
+                // budget cannot cover even the optimistic warm-path
+                // estimate, shedding now saves the whole doomed wave's
+                // invocations. Requires an opted-in config, a finite
+                // deadline, and at least one throughput sample.
+                if ctx.cfg.shed && deadline.is_finite() {
+                    if let Some(est) = qp::warm_path_estimate_s(&ctx) {
+                        if deadline - virtual_now() < est {
+                            ctx.ledger.record_shed(est);
+                            for &global in wave {
+                                degraded.push((global, 0.0));
+                                ctx.ledger.record_degraded_query();
+                            }
+                            continue;
+                        }
+                    }
+                }
                 let live: Vec<Query> = wave.iter().map(|&i| queries[i].clone()).collect();
                 let response = self.invoke_coordinator(&live, deadline);
                 let wave_degraded: std::collections::HashSet<usize> =

@@ -528,6 +528,18 @@ fn scatter_qp(
 /// are degenerate at the defaults (breakers off, keep-alive
 /// `NeverExpire` predicts every pool warm), so the gate is inert
 /// unless those subsystems are opted into.
+///
+/// One exception to (a): when the open window has elapsed
+/// ([`crate::faas::resilience::CircuitBreaker::probe_ready`]), the
+/// breaker's next admit will be the half-open probe — and a half-open
+/// probe normally *risks a live request*. A hedge duplicate is the one
+/// request that is free to risk: its primary is already in flight, so
+/// if the probe fast-fails or dies the join falls back to the primary
+/// and no coverage is lost. The gate therefore lets the probe ride the
+/// hedge instead of skipping it, counted under the ledger's
+/// `breaker_probe_hedges`. No virtual time passes between this check
+/// and the duplicate's `breaker_admit`, so probe readiness here
+/// guarantees the hedge IS the probe.
 fn hedged_join(
     ctx: &Arc<SystemCtx>,
     shard_reqs: &[QpShardRequest],
@@ -567,6 +579,11 @@ fn hedged_join(
                     sr.partition, sr.shard, sr.n_shards
                 );
                 let breaker_open = ctx.platform.breaker_is_open(&hedge_fn);
+                // half-open probe rides the hedge: the open window has
+                // elapsed, so the duplicate doubles as the breaker's
+                // probe instead of risking a live request later
+                let probe_rides =
+                    breaker_open && ctx.platform.breaker_probe_ready(&hedge_fn, virtual_now());
                 let cold_no_win = primary_ok
                     && ctx.platform.keepalive_enabled()
                     && !ctx.platform.pool_predicted_warm(&hedge_fn, virtual_now() + t_fire)
@@ -574,10 +591,13 @@ fn hedged_join(
                         + ctx.platform.config.cold_start_s
                         + others.first().copied().unwrap_or(0.0)
                         >= unhedged;
-                if breaker_open || cold_no_win {
+                if (breaker_open && !probe_rides) || cold_no_win {
                     ctx.ledger.record_hedge_skipped_cold();
                     ctx.ledger.record_scatter_makespan(unhedged, hedged);
                     return (responses, hedged);
+                }
+                if probe_rides {
+                    ctx.ledger.record_breaker_probe_hedge();
                 }
                 let (hedge_resp, d_h) =
                     qp::invoke_qp_shard(ctx, &shard_reqs[straggler], true);

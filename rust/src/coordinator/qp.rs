@@ -107,6 +107,22 @@ pub(crate) fn finalize_results(
     }
 }
 
+/// Optimistic warm-path latency estimate for one CO wave — the input to
+/// deadline-aware admission (`SquashConfig::shed`, gated in
+/// `SquashSystem::run_batch`): one warm function startup plus a single
+/// partition's candidate share (`n_rows / n_partitions`) scanned at the
+/// *best* rows/s the `ThroughputBook` has observed anywhere
+/// ([`crate::cost::throughput::ThroughputBook::best_rows_per_s`]).
+/// Deliberately a floor — no cold start, no tree fan-out, no refinement
+/// I/O, and the fastest partition's rate — so a request shed against it
+/// could not have met its deadline under any schedule. `None` before
+/// the book's first sample: admission never sheds on zero knowledge.
+pub fn warm_path_estimate_s(ctx: &SystemCtx) -> Option<f64> {
+    let rps = ctx.ledger.throughput.best_rows_per_s()?;
+    let rows_per_partition = ctx.n_rows as f64 / ctx.n_partitions.max(1) as f64;
+    Some(ctx.platform.config.warm_start_s + rows_per_partition / rps)
+}
+
 /// Encoded size of a `QpRequest` header / item (see
 /// `QpRequest::to_bytes`: u64 length prefixes + 4-byte elements; the
 /// header is partition + deadline bits + item count).

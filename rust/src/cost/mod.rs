@@ -103,6 +103,16 @@ pub struct CostLedger {
     pub breaker_fast_fails: AtomicU64,
     /// queries answered with partial coverage (degraded results)
     pub degraded_queries: AtomicU64,
+    /// requests shed by deadline-aware admission at the CO: the
+    /// remaining deadline budget could not cover even the warm-path
+    /// estimate, so nothing was invoked and nothing billed
+    pub shed_requests: AtomicU64,
+    /// modeled seconds of doomed work the shed requests did NOT burn
+    /// (the warm-path estimate at shed time), stored as integer micros
+    shed_saved_micros: AtomicU64,
+    /// half-open breaker probes that rode an already-launched hedge
+    /// duplicate instead of risking a live request
+    pub breaker_probe_hedges: AtomicU64,
     // keep-alive / prewarm policy engine
     /// GB-seconds of keep-alive warmth the policy paid for and nobody
     /// used (expired windows and end-of-run tails; warmth a hit
@@ -279,6 +289,24 @@ impl CostLedger {
         self.degraded_queries.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One request shed by deadline-aware admission: `saved_s` modeled
+    /// seconds of doomed warm-path work were never launched.
+    pub fn record_shed(&self, saved_s: f64) {
+        self.shed_requests.fetch_add(1, Ordering::Relaxed);
+        self.shed_saved_micros.fetch_add((saved_s * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Total modeled seconds of doomed work admission shedding avoided.
+    pub fn shed_saved_s(&self) -> f64 {
+        self.shed_saved_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// One half-open breaker probe rode an already-launched hedge
+    /// duplicate instead of risking a live request.
+    pub fn record_breaker_probe_hedge(&self) {
+        self.breaker_probe_hedges.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// `gb_s` GB-seconds of unused keep-alive warmth billed by the
     /// policy engine (see the `idle_gb_micros` field docs).
     pub fn record_idle(&self, gb_s: f64) {
@@ -384,6 +412,7 @@ impl CostLedger {
              queued={} queue_delay_s={:.6}\n\
              resilience retries={} timeouts={} crashes={} corruptions={} backoff_wait_s={:.6}\n\
              breaker opens={} fast_fails={} degraded_queries={}\n\
+             admission shed={} shed_saved_s={:.6} probe_hedges={}\n\
              keepalive idle_gb_s={:.6} expired={} prewarmed={} prewarm_hits={} \
              hedges_skipped_cold={}\n\
              modeled_mbs co={:.6} qa={:.6} qp={:.6}\n\
@@ -408,6 +437,9 @@ impl CostLedger {
             self.breaker_open_events.load(Ordering::Relaxed),
             self.breaker_fast_fails.load(Ordering::Relaxed),
             self.degraded_queries.load(Ordering::Relaxed),
+            self.shed_requests.load(Ordering::Relaxed),
+            self.shed_saved_s(),
+            self.breaker_probe_hedges.load(Ordering::Relaxed),
             self.idle_gb_s(),
             self.expired_containers.load(Ordering::Relaxed),
             self.prewarmed_containers.load(Ordering::Relaxed),
@@ -678,6 +710,25 @@ mod tests {
             "resilience counters missing from the digest:\n{s}"
         );
         assert!(s.contains("breaker opens=1 fast_fails=1 degraded_queries=1"), "{s}");
+    }
+
+    #[test]
+    fn admission_counters_accumulate_and_digest() {
+        let l = CostLedger::new();
+        l.record_shed(0.5);
+        l.record_shed(0.25);
+        l.record_breaker_probe_hedge();
+        assert_eq!(l.shed_requests.load(Ordering::Relaxed), 2);
+        assert!((l.shed_saved_s() - 0.75).abs() < 1e-9);
+        assert_eq!(l.breaker_probe_hedges.load(Ordering::Relaxed), 1);
+        let s = l.chaos_summary();
+        assert!(
+            s.contains("admission shed=2 shed_saved_s=0.750000 probe_hedges=1"),
+            "admission counters missing from the digest:\n{s}"
+        );
+        // a fresh ledger digests the buckets at zero (inert default)
+        let z = CostLedger::new().chaos_summary();
+        assert!(z.contains("admission shed=0 shed_saved_s=0.000000 probe_hedges=0"), "{z}");
     }
 
     #[test]

@@ -107,6 +107,21 @@ impl ThroughputBook {
     pub fn partitions_observed(&self) -> usize {
         self.per_partition.lock().unwrap().len()
     }
+
+    /// The fastest per-partition rows/s estimate across the book, or
+    /// `None` before any sample. Deadline-aware admission uses this as
+    /// an *optimistic* service-rate floor: a request that cannot finish
+    /// even at the best observed rate certainly cannot finish at its
+    /// own partition's rate, so shedding on it never drops a request
+    /// that could have met its deadline.
+    pub fn best_rows_per_s(&self) -> Option<f64> {
+        self.per_partition
+            .lock()
+            .unwrap()
+            .values()
+            .filter_map(|e| e.value())
+            .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v))))
+    }
 }
 
 #[cfg(test)]
@@ -149,6 +164,15 @@ mod tests {
         assert!((b.rows_per_s(1).unwrap() - 10_000.0).abs() < 1e-6);
         assert_eq!(b.rows_per_s(2), None);
         assert_eq!(b.partitions_observed(), 2);
+    }
+
+    #[test]
+    fn best_rate_is_the_max_over_partitions() {
+        let b = ThroughputBook::default();
+        assert_eq!(b.best_rows_per_s(), None);
+        b.record(0, 1000, 0.01); // 100k rows/s
+        b.record(1, 1000, 0.1); // 10k rows/s
+        assert!((b.best_rows_per_s().unwrap() - 100_000.0).abs() < 1e-6);
     }
 
     #[test]

@@ -789,6 +789,15 @@ impl Platform {
         self.breakers.lock().unwrap().get(function).map(|b| b.is_open()).unwrap_or(false)
     }
 
+    /// Would `function`'s open breaker admit its half-open probe at
+    /// virtual time `now`? A pure peek (no transition), so the hedge
+    /// join can let the probe ride an already-launched duplicate instead
+    /// of risking a live request — the subsequent invocation's own
+    /// `breaker_admit` performs the actual Open → HalfOpen transition.
+    pub fn breaker_probe_ready(&self, function: &str, now: f64) -> bool {
+        self.breakers.lock().unwrap().get(function).map(|b| b.probe_ready(now)).unwrap_or(false)
+    }
+
     /// Bill a failed attempt (AWS bills failed synchronous invocations):
     /// drain the modeled clocks, record wall + modeled runtime and the
     /// failure, and return the attempt's modeled duration.
@@ -876,7 +885,13 @@ impl Platform {
                 // fleet handoff — the container never actually idled)
                 let idle_s = (vt - container.released_at).max(0.0);
                 ka.lock().unwrap().observe_idle(function, idle_s);
-                if container.warm_from > container.released_at && vt >= container.warm_from {
+                // `vt` is the pre-queue arrival instant: a queued fleet
+                // handoff onto a prewarm-pending container lands exactly
+                // at the prewarm edge, so the fire check must include
+                // the wait (no-op whenever queue_delay_s is 0)
+                if container.warm_from > container.released_at
+                    && vt + queue_delay_s >= container.warm_from
+                {
                     // the prewarm fired at `warm_from`: bill the
                     // cold-start-length warm-up. The warmth between the
                     // prewarm and this hit is consumed, so (like organic
@@ -1057,15 +1072,21 @@ impl Platform {
 
     /// Fleet-mode acquisition (see the module docs): take an idle
     /// container — the most recently freed, ties to lowest id — else cold
-    /// start while under `max_containers`, else queue on the
-    /// earliest-freeing container and report the wait. Fully
-    /// deterministic: selection depends only on `(free_at, id)`, never on
+    /// start while under `max_containers`, else queue on the container
+    /// that becomes ready first and report the wait. Fully deterministic:
+    /// selection depends only on `(free_at, warm_from, id)`, never on
     /// pool insertion order.
+    ///
+    /// A mid-prewarm container (released, its policy window not yet open:
+    /// `free_at <= vt < warm_from`) is not *idle* — the sandbox rebuild
+    /// hasn't fired — but it still holds a fleet slot: the sweep already
+    /// reclaimed everything expired, so every pooled container is either
+    /// virtually busy or prewarm-pending and counts against the cap. Its
+    /// ready instant is the prewarm edge `warm_from`, where the queued
+    /// handoff consumes the warmth (billed as a prewarm in
+    /// `invoke_once`). With the keep-alive engine off every window is
+    /// [0, ∞) and all of this degenerates to the pre-policy behavior.
     fn acquire_fleet(&self, pool: &mut Vec<Container>, vt: f64) -> (Container, bool, f64) {
-        // with the keep-alive engine off every window is [0, ∞), so the
-        // `warm_from` conditions below degenerate to the pre-policy
-        // behavior; with it on, a dead prewarm-pending sandbox (its
-        // window hasn't opened yet) is neither pickable nor capacity
         let idle = pool
             .iter()
             .enumerate()
@@ -1076,20 +1097,24 @@ impl Platform {
             return (pool.swap_remove(i), false, 0.0);
         }
         let cap = self.config.max_containers;
-        let live = pool.iter().filter(|c| c.free_at > vt || c.warm_from <= vt).count();
-        if cap == 0 || live < cap {
+        if cap == 0 || pool.len() < cap {
             return (self.new_container(), true, 0.0);
         }
-        // everything virtually busy at the cap: queue on the earliest free
+        // every slot busy or prewarm-pending at the cap: queue on the
+        // earliest-ready container (free for busy, prewarm edge for
+        // pending — a busy container with a pending prewarm readies at
+        // the later of the two)
         let i = pool
             .iter()
             .enumerate()
-            .filter(|(_, c)| c.free_at > vt || c.warm_from <= vt)
-            .min_by(|(_, a), (_, b)| a.free_at.total_cmp(&b.free_at).then(a.id.cmp(&b.id)))
+            .min_by(|(_, a), (_, b)| {
+                let (ra, rb) = (a.free_at.max(a.warm_from), b.free_at.max(b.warm_from));
+                ra.total_cmp(&rb).then(a.id.cmp(&b.id))
+            })
             .map(|(i, _)| i)
-            .expect("a positive cap implies a live container here");
+            .expect("a positive cap implies a pooled container here");
         let c = pool.swap_remove(i);
-        let delay = (c.free_at - vt).max(0.0);
+        let delay = (c.free_at.max(c.warm_from) - vt).max(0.0);
         (c, false, delay)
     }
 
@@ -1181,6 +1206,13 @@ impl Platform {
     /// Number of idle containers for a function (tests/diagnostics).
     pub fn pool_size(&self, function: &str) -> usize {
         self.pools.lock().unwrap().get(function).map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Largest single-function pool (tests/diagnostics): in fleet mode
+    /// every pooled container occupies a slot, so this never exceeding
+    /// `max_containers` is the fleet-cap invariant the load engine pins.
+    pub fn max_pool_size(&self) -> usize {
+        self.pools.lock().unwrap().values().map(|v| v.len()).max().unwrap_or(0)
     }
 
     /// Distinct function pools whose name starts with `prefix`
@@ -1822,6 +1854,67 @@ mod tests {
         assert_eq!(p.cold_invocations.load(Ordering::Relaxed), 2);
         assert_eq!(p.warm_invocations.load(Ordering::Relaxed), 1);
         assert_eq!(p.pool_size("f"), 2);
+    }
+
+    #[test]
+    fn fleet_cap_counts_mid_prewarm_containers() {
+        let p = fleet_platform(1);
+        let mut c = p.new_container();
+        c.released_at = 0.0;
+        c.free_at = 0.0;
+        c.warm_from = 1.0;
+        c.warm_until = 2.0;
+        let id = c.id;
+        let mut pool = vec![c];
+        // at vt=0.5 the only container is mid-prewarm: not idle (its
+        // window hasn't opened yet) but it still holds the single fleet
+        // slot, so the arrival queues on the prewarm edge instead of
+        // cold-starting a second container past the cap
+        let (picked, cold, delay) = p.acquire_fleet(&mut pool, 0.5);
+        assert!(!cold, "a mid-prewarm container occupies the only fleet slot");
+        assert_eq!(picked.id, id);
+        assert_eq!(delay.to_bits(), 0.5f64.to_bits(), "ready at the warm_from=1.0 edge");
+        assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn fleet_queued_prewarm_handoff_bills_the_warmup() {
+        use crate::storage::set_virtual_now;
+        let ledger = Arc::new(CostLedger::new());
+        let p = Platform::new(
+            FaasConfig {
+                virtual_pools: true,
+                max_containers: 1,
+                keepalive: KeepAliveConfig::FixedTtl { keep_alive_s: 10.0 },
+                ..Default::default()
+            },
+            SimParams::instant(),
+            ledger,
+        );
+        // hand-craft the single slot as prewarm-pending: released at
+        // t=0, sandbox rebuild due at t=1, window open through t=10
+        let mut c = p.new_container();
+        c.released_at = 0.0;
+        c.free_at = 0.0;
+        c.warm_from = 1.0;
+        c.warm_until = 10.0;
+        p.pools.lock().unwrap().insert("f".to_string(), vec![c]);
+        set_virtual_now(0.5);
+        let inv = p.invoke_retrying("f", Role::QueryProcessor, b"", |_, _| vec![]).unwrap();
+        // the wait runs to the prewarm edge, and the handoff consumes
+        // the prewarmed warmth: no cold start, warm-up billed
+        assert_eq!(inv.queue_delay_s.to_bits(), 0.5f64.to_bits());
+        assert_eq!(p.cold_invocations.load(Ordering::Relaxed), 0);
+        assert_eq!(p.warm_invocations.load(Ordering::Relaxed), 1);
+        assert_eq!(p.ledger.prewarmed_containers.load(Ordering::Relaxed), 1);
+        assert_eq!(p.ledger.prewarm_cold_starts_avoided.load(Ordering::Relaxed), 1);
+        assert!((p.ledger.queue_delay_s() - 0.5).abs() < 1e-9);
+        let warmup_mbs = p.config.cold_start_s * p.config.memory_qp_mb as f64;
+        assert!(
+            p.ledger.modeled_mb_seconds(Role::QueryProcessor) >= warmup_mbs,
+            "the consumed prewarm must bill its cold-start-length warm-up"
+        );
+        assert_eq!(p.max_pool_size(), 1, "the cap held through the prewarm window");
     }
 
     #[test]

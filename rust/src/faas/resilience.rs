@@ -294,6 +294,15 @@ impl CircuitBreaker {
     pub fn is_open(&self) -> bool {
         matches!(self.state, BreakerState::Open { .. })
     }
+
+    /// Would [`CircuitBreaker::admit`] at `now` transition this Open
+    /// breaker to its half-open probe? A pure peek — no state changes —
+    /// so callers can decide *how* to spend the probe (e.g. ride it on a
+    /// hedge duplicate) before admitting anything. False while Closed or
+    /// HalfOpen: no probe is pending there.
+    pub fn probe_ready(&self, now: f64) -> bool {
+        matches!(self.state, BreakerState::Open { until } if now >= until)
+    }
 }
 
 #[cfg(test)]
@@ -392,5 +401,27 @@ mod tests {
         // a single new failure can't instantly re-trip (window cleared)
         b.record(3.0, true);
         assert!(!b.is_open());
+    }
+
+    #[test]
+    fn probe_ready_peeks_without_transitioning() {
+        let cfg = BreakerConfig {
+            enabled: true,
+            window: 2,
+            min_samples: 2,
+            failure_threshold: 0.5,
+            open_s: 1.0,
+        };
+        let mut b = CircuitBreaker::new(cfg);
+        assert!(!b.probe_ready(0.0), "closed breaker has no pending probe");
+        b.record(0.0, true);
+        b.record(0.0, true);
+        assert!(b.is_open());
+        assert!(!b.probe_ready(0.5), "still inside the open window");
+        assert!(b.probe_ready(1.5), "open window elapsed: a probe is due");
+        // the peek must not consume the probe: admit still transitions
+        assert!(b.is_open(), "probe_ready left the state untouched");
+        assert!(b.admit(1.5));
+        assert!(!b.probe_ready(1.5), "half-open: the probe is in flight");
     }
 }

@@ -7,16 +7,26 @@
 //!   query   --predicate "a0<50 & a2>10" [...]   single hybrid query demo
 //!   cost    [--volume 100000]          daily-cost model comparison (Fig 8)
 //!   load    [--qps 20,50,100,200,400] [--fuse-window 2] [--max-containers 4]
-//!           [--arrival poisson|trace] [--out BENCH_load.json]
-//!                                      open-loop QPS sweep over the virtual
-//!                                      clock: seeded arrivals contend for a
-//!                                      capped container fleet, with a
+//!           [--arrival poisson|trace] [--sched des|serial] [--clients N]
+//!           [--think-ms 50] [--fuse-max-group 0] [--out BENCH_load.json]
+//!                                      QPS sweep over the virtual clock,
+//!                                      driven by the event-calendar DES
+//!                                      scheduler (--sched serial keeps the
+//!                                      retired arrival-order engine for one
+//!                                      release): seeded arrivals contend for
+//!                                      a capped container fleet, with a
 //!                                      fused-vs-unfused ablation of the
 //!                                      cross-request fusion window (modeled
 //!                                      ms; co-resident queries coalesce into
-//!                                      one QP invocation per partition).
-//!                                      Writes throughput / p50 / p99 /
-//!                                      cost-per-1k curves to --out.
+//!                                      one QP invocation per partition;
+//!                                      --fuse-max-group caps a group and
+//!                                      dispatches it early when it fills).
+//!                                      --clients N switches to closed-loop
+//!                                      traffic: each client issues its next
+//!                                      query a seeded exponential think time
+//!                                      (--think-ms mean) after its previous
+//!                                      completion. Writes throughput / p50 /
+//!                                      p99 / cost-per-1k curves to --out.
 //!   keepalive [--qps 10] [--ttls 0.1,0.5,2,10] [--arrival poisson|trace]
 //!           [--max-containers 4] [--fuse-window 0]
 //!           [--out BENCH_keepalive.json]
@@ -81,6 +91,10 @@
 //! (retry budget + backoff policy), --breaker <off|on> (per-pool
 //! circuit breakers), --deadline-ms <f> (end-to-end request deadline on
 //! the virtual clock; expired hops degrade instead of running),
+//! --shed (deadline-aware admission: the CO sheds a request whose
+//! remaining deadline budget cannot cover the learned warm-path
+//! estimate, before any invocation is billed; needs --deadline-ms, and
+//! the SQUASH_SHED=1 environment variable is the fallback),
 //! --keepalive <never|ttl:<s>|hybrid[:<ttl>]> (container keep-alive /
 //! pre-warm policy; `never` is the pre-policy platform, and the
 //! SQUASH_KEEPALIVE environment variable is the fallback),
@@ -90,7 +104,9 @@
 use squash::baselines::server::InstanceType;
 use squash::bench::costmatrix::{self, CostMatrixOptions};
 use squash::bench::keepalive::{self, KeepaliveOptions};
-use squash::bench::load::{point_header, point_line, run_sweep, ArrivalProfile, LoadOptions};
+use squash::bench::load::{
+    point_header, point_line, run_sweep, ArrivalProfile, LoadOptions, Scheduler,
+};
 use squash::osq::simd::{KernelKind, Kernels};
 use squash::bench::resilience::{self, ResilienceOptions};
 use squash::bench::{measure_server, measure_squash, measure_system_x, Env, EnvOptions, RunStats};
@@ -231,6 +247,9 @@ fn env_opts(args: &Args) -> EnvOptions {
                 None
             }
         },
+        // --shed flag; SQUASH_SHED=1 is the environment fallback
+        shed: args.has_flag("shed")
+            || std::env::var("SQUASH_SHED").ok().is_some_and(|v| v == "1"),
         keepalive: match args.get("keepalive") {
             Some(spec) => KeepAliveConfig::parse(spec).unwrap_or_else(|| {
                 eprintln!("--keepalive must be never|ttl:<s>|hybrid[:<ttl>]; using never");
@@ -375,21 +394,41 @@ fn cmd_load(args: &Args) -> i32 {
         eprintln!("--arrival must be poisson|trace");
         return 2;
     };
+    let Some(sched) = Scheduler::from_name(args.get_or("sched", "des")) else {
+        eprintln!("--sched must be des|serial");
+        return 2;
+    };
+    let clients = args.get_usize("clients", 0).unwrap_or(0);
+    if clients > 0 && sched == Scheduler::Serial {
+        eprintln!("--clients (closed-loop traffic) requires --sched des");
+        return 2;
+    }
     let lopts = LoadOptions {
         qps,
         fuse_window_ms: args.get_f64("fuse-window", 2.0).unwrap_or(2.0),
         max_containers: args.get_usize("max-containers", 4).unwrap_or(4),
         arrival,
+        sched,
+        clients,
+        think_ms: args.get_f64("think-ms", 50.0).unwrap_or(50.0),
+        fuse_max_group: args.get_usize("fuse-max-group", 0).unwrap_or(0),
         seed: opts.seed,
     };
     eprintln!(
-        "load sweep on {} (n={}, {} queries/point, fleet cap {}, window {} ms, {} arrivals)...",
+        "load sweep on {} (n={}, {} queries/point, fleet cap {}, window {} ms, {} arrivals, \
+         {} scheduler{})...",
         opts.profile,
         opts.n,
         opts.n_queries,
         lopts.max_containers,
         lopts.fuse_window_ms,
-        arrival.name()
+        arrival.name(),
+        sched.name(),
+        if clients > 0 {
+            format!(", {} closed-loop clients @ {} ms think", clients, lopts.think_ms)
+        } else {
+            String::new()
+        },
     );
     let sweep = run_sweep(&opts, &lopts);
     println!("{}", point_header());

@@ -110,6 +110,7 @@ fn inert_policies_replay_the_load_engine_byte_identically() {
         max_containers: 2,
         arrival: ArrivalProfile::Poisson,
         seed: 42,
+        ..LoadOptions::default()
     };
     let run = |keepalive: KeepAliveConfig| {
         let mut o = base_opts(keepalive);
@@ -144,6 +145,7 @@ fn enabled_policies_replay_the_ledger_byte_identically() {
             max_containers: 4,
             arrival: ArrivalProfile::Poisson,
             seed: 42,
+            ..LoadOptions::default()
         };
         let mut o = EnvOptions { n: 1200, n_queries: 16, ..base_opts(keepalive) };
         o.virtual_pools = true;

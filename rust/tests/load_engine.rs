@@ -1,4 +1,4 @@
-//! Open-loop traffic engine, end-to-end. Pinned properties:
+//! Traffic engine, end-to-end. Pinned properties:
 //!
 //! 1. **Seeded arrivals replay byte-identically.** Two runs of the same
 //!    sweep point produce bit-equal per-query latencies and identical
@@ -13,8 +13,25 @@
 //! 4. **Fusion pays off under overload.** At the heaviest swept load the
 //!    fused configuration sustains strictly higher throughput than the
 //!    unfused one — the amortized invocations buy real completions.
+//! 5. **The DES calendar is the serial engine, replayed.** For open-loop
+//!    traffic the event-calendar scheduler executes the identical
+//!    dispatch sequence as the retired serial engine, so their ledger
+//!    digests are byte-equal below the knee and DES never pays more
+//!    cold starts than serial past it.
+//! 6. **The fleet cap is an invariant, not a guideline.** However hard
+//!    the calendar drives the fleet, no function pool ever holds more
+//!    containers than `max_containers`.
+//! 7. **Closed-loop clients are seeded.** `--clients N --think-ms T`
+//!    replays byte-identically; a different seed draws a different
+//!    timeline.
+//! 8. **Shed waves are billed, never cached.** Deadline-aware admission
+//!    bills every saved wave to the `shed` ledger buckets, degrades the
+//!    member queries, leaves the result cache untouched, and replays
+//!    byte-identically.
 
-use squash::bench::load::{configure_for_load, run_point, ArrivalProfile, LoadOptions, PointRun};
+use squash::bench::load::{
+    configure_for_load, run_point, ArrivalProfile, LoadOptions, PointRun, Scheduler,
+};
 use squash::bench::{Env, EnvOptions};
 use squash::coordinator::QpSharding;
 use squash::faas::ChaosConfig;
@@ -36,6 +53,7 @@ fn load_opts(fuse_window_ms: f64) -> LoadOptions {
         max_containers: 2,
         arrival: ArrivalProfile::Poisson,
         seed: 42,
+        ..LoadOptions::default()
     }
 }
 
@@ -176,4 +194,137 @@ fn fusion_sustains_higher_throughput_under_overload() {
         fused.stats.achieved_qps,
         unfused.stats.achieved_qps
     );
+}
+
+#[test]
+fn des_and_serial_replay_identical_digests_without_contention() {
+    let base = base_opts();
+    // well below the knee of a 2-container fleet: nothing queues, so the
+    // calendar's contention resolution has nothing to reorder
+    let qps = 50.0;
+    let des = load_opts(2.0);
+    let serial = LoadOptions { sched: Scheduler::Serial, ..load_opts(2.0) };
+    let (d, digest_d) = run(&base, &des, qps);
+    let (s, digest_s) = run(&base, &serial, qps);
+    assert_eq!(
+        digest_d, digest_s,
+        "zero-contention DES must replay the serial engine's ledger byte-identically"
+    );
+    assert_eq!(d.stats.queued, s.stats.queued, "queueing diverged between the engines");
+    for (x, y) in d.outcomes.iter().zip(&s.outcomes) {
+        assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits(), "arrival diverged");
+        assert_eq!(x.completion_s.to_bits(), y.completion_s.to_bits(), "completion diverged");
+        assert_eq!(x.result, y.result, "results diverged");
+    }
+}
+
+#[test]
+fn knee_side_des_cold_starts_never_exceed_serial() {
+    let base = base_opts();
+    // far past the knee: the capped fleet queues hard and every container
+    // acquisition is contended
+    let qps = 3200.0;
+    for seed in [42, 43, 44] {
+        let des = LoadOptions { seed, ..load_opts(0.0) };
+        let serial = LoadOptions { sched: Scheduler::Serial, seed, ..load_opts(0.0) };
+        let (d, _) = run(&base, &des, qps);
+        let (s, _) = run(&base, &serial, qps);
+        assert!(d.stats.queued > 0, "seed {seed}: the knee-side point must queue");
+        assert!(
+            d.stats.cold_starts <= s.stats.cold_starts,
+            "seed {seed}: DES paid more cold starts than serial ({} vs {})",
+            d.stats.cold_starts,
+            s.stats.cold_starts
+        );
+    }
+}
+
+#[test]
+fn des_never_exceeds_the_fleet_cap() {
+    let base = base_opts();
+    let opts = load_opts(0.0);
+    let env = load_env(&base, &opts);
+    let point = run_point(&env, 3200.0, &opts);
+    assert!(point.stats.queued > 0, "the knee-side point must actually contend for the fleet");
+    let peak = env.platform.max_pool_size();
+    assert!(
+        peak <= opts.max_containers,
+        "fleet cap violated: {} containers pooled under a cap of {}",
+        peak,
+        opts.max_containers
+    );
+}
+
+#[test]
+fn closed_loop_clients_replay_byte_identically() {
+    let base = base_opts();
+    let opts = LoadOptions { clients: 4, think_ms: 5.0, ..load_opts(0.0) };
+    let (a, digest_a) = run(&base, &opts, 200.0);
+    let (b, digest_b) = run(&base, &opts, 200.0);
+    assert_eq!(digest_a, digest_b, "closed-loop runs must replay the ledger byte-identically");
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits(), "arrival not replayed");
+        assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits(), "latency not replayed");
+        assert_eq!(x.result, y.result, "results not replayed");
+    }
+    // each client is self-paced: its next query arrives only after its
+    // previous one completed (plus think time)
+    let clients = opts.clients;
+    for (q, o) in a.outcomes.iter().enumerate() {
+        if q + clients < a.outcomes.len() {
+            assert!(
+                a.outcomes[q + clients].arrival_s >= o.completion_s,
+                "client {} issued query {} before query {} completed",
+                q % clients,
+                q + clients,
+                q
+            );
+        }
+    }
+    let (_, digest_c) = run(&base, &LoadOptions { seed: 43, ..opts }, 200.0);
+    assert_ne!(digest_a, digest_c, "distinct seeds should draw distinct closed-loop timelines");
+}
+
+/// One full shedding run: warm the `ThroughputBook` (and the result
+/// cache) with the first workload query under no deadline, then clamp
+/// the deadline below the warm-path estimate and drive the point. Every
+/// uncached wave must shed at admission.
+fn shed_run(shed: bool) -> (PointRun, usize, String) {
+    let base = EnvOptions { shed, ..base_opts() };
+    let opts = load_opts(0.0);
+    let mut env = load_env(&base, &opts);
+    env.with_config(|c| c.use_cache = true);
+    env.sys.run_batch(&env.queries[..1]);
+    // a 1 ms budget can never cover the ≥ warm_start_s estimate
+    env.with_config(|c| c.deadline_s = Some(0.001));
+    let point = run_point(&env, 200.0, &opts);
+    let cached = env.sys.ctx.cache.len();
+    (point, cached, env.ledger.chaos_summary())
+}
+
+#[test]
+fn shedding_bills_saved_waves_and_never_caches() {
+    let (point, cached, digest_a) = shed_run(true);
+    // query 0 answers from the warmed cache and bypasses admission; every
+    // other query dispatches alone (window 0) and its wave is shed
+    let expect = base_opts().n_queries as u64 - 1;
+    assert_eq!(
+        point.stats.shed, expect,
+        "every uncached wave should shed under a 1 ms deadline (shed {} of {expect})",
+        point.stats.shed
+    );
+    assert!(point.stats.availability < 1.0, "shed queries must count as degraded");
+    assert_eq!(cached, 1, "shed queries must never be cached (warmup entry only)");
+    assert_eq!(
+        point.stats.invocations, 0,
+        "shedding happens before any invocation; the point should bill none"
+    );
+    // the whole recipe replays byte-identically, shed buckets included
+    let (_, _, digest_b) = shed_run(true);
+    assert_eq!(digest_a, digest_b, "shedding runs must replay the ledger byte-identically");
+    // shedding is opt-in: the same doomed deadline without --shed runs
+    // (and degrades) every wave instead of saving it
+    let (control, _, _) = shed_run(false);
+    assert_eq!(control.stats.shed, 0, "without --shed nothing may be billed as shed");
+    assert!(control.stats.invocations > 0, "without --shed the doomed waves still invoke");
 }
